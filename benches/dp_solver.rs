@@ -1,0 +1,63 @@
+//! Bench: the DP solver itself (§3.3 "the dynamic programming can finish
+//! within a minute"). Times `solve_tokens` and the exact joint solver at
+//! paper scale across granularities, and reports the ε-grid/pruning
+//! statistics.
+
+use std::time::Instant;
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::solver::dp::solve_tokens;
+use terapipe::solver::joint::{solve_joint_analytic, JointOpts};
+use terapipe::util::Stats;
+
+fn main() {
+    println!("# DP solver runtime (paper budget: under one minute at L=2048)");
+    let setting = presets::setting(9); // deepest pipeline: K=96
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let l = setting.model.seq_len;
+    let k = setting.parallel.pipeline_stages;
+
+    println!("\n## single-sequence token DP, setting (9), K={k}, L={l}");
+    println!("| granularity | eps (ms) | candidates | DPs run | slices | wall (ms, mean ± std of 5) |");
+    for (g, eps) in [(64u32, 0.1f64), (32, 0.1), (16, 0.1), (8, 0.1), (8, 0.0)] {
+        let mut wall = Vec::new();
+        let mut last = None;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let r = solve_tokens(&base, l, k, g, eps);
+            wall.push(t0.elapsed().as_secs_f64() * 1e3);
+            last = Some(r);
+        }
+        let (scheme, stats) = last.unwrap();
+        let s = Stats::from_samples(&wall);
+        println!(
+            "| {g} | {eps} | {} | {} | {} | {} |",
+            stats.candidates,
+            stats.dps_run,
+            scheme.num_slices(),
+            s.pm()
+        );
+    }
+
+    println!("\n## exact joint batch+token DP (knapsack over Algorithm-1 totals)");
+    println!("| setting | B/pipe | granularity | wall (ms) |");
+    for id in [5u32, 8, 9] {
+        let st = presets::setting(id);
+        let b = AnalyticModel::from_setting(&st, 1);
+        let opts = JointOpts {
+            granularity: 16,
+            eps_ms: 0.1,
+            max_microbatch: Some(8),
+        };
+        let t0 = Instant::now();
+        let j = solve_joint_analytic(&b, st.batch_per_pipeline(), st.model.seq_len, st.parallel.pipeline_stages, &opts);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "| ({id}) | {} | 16 | {ms:.0} | -> {}",
+            st.batch_per_pipeline(),
+            &j.notation()[..j.notation().len().min(60)]
+        );
+        assert!(ms < 60_000.0, "paper budget exceeded");
+    }
+}

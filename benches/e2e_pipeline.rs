@@ -1,0 +1,121 @@
+//! Bench: end-to-end real-execution pipeline — per-step wall time of the
+//! threaded PJRT coordinator under different slicings, on this machine.
+//!
+//! This is the real-hardware analogue of Fig. 5/6: the same trade-off
+//! (too few slices → bubbles; too many → per-slice overhead) measured on
+//! the actual three-layer stack instead of the simulator. Single-core CPU
+//! numbers — the *ordering*, not the magnitudes, is the signal.
+
+use std::path::PathBuf;
+
+use terapipe::coordinator::{Trainer, TrainConfig};
+use terapipe::data::{synthetic_corpus, Batcher};
+use terapipe::runtime::tensor::HostTensor;
+use terapipe::runtime::{stage_exe_names, StageRuntime};
+use terapipe::util::Stats;
+
+/// §Perf L3 microbench: one stage_fwd call via (a) the naive path that
+/// deep-clones the parameter tensors into the input vec per call (the
+/// pre-optimization coordinator), vs (b) borrowed host tensors, vs
+/// (c) cached parameter literals (current hot path). Isolates the two
+/// optimization iterations recorded in EXPERIMENTS.md §Perf.
+fn hot_path_microbench(dir: &PathBuf) {
+    let manifest = terapipe::runtime::manifest::Manifest::load(dir).unwrap();
+    let m = manifest.model.clone();
+    let rt = StageRuntime::load(dir, &stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets)).unwrap();
+    let params = rt.manifest.load_init(&rt.manifest.init_stages[0]).unwrap();
+    let len = *manifest.buckets.iter().max().unwrap();
+    let exe = format!("stage_fwd_s{len}");
+    let h = HostTensor::zeros_f32(&[m.batch, len, m.hidden]);
+    let kv = HostTensor::zeros_f32(&m.kv_shape());
+    let off = HostTensor::scalar_i32(0);
+    let param_lits: Vec<xla::Literal> = params.iter().map(|p| p.to_literal().unwrap()).collect();
+    let reps = 10;
+
+    let time = |f: &mut dyn FnMut()| -> Stats {
+        f(); // warm-up
+        let samples: Vec<f64> = (0..reps)
+            .map(|_| terapipe::util::time_ms(|| f()).1)
+            .collect();
+        Stats::from_samples(&samples)
+    };
+
+    let mut naive = || {
+        let mut inputs: Vec<HostTensor> = params.clone();
+        inputs.push(h.clone());
+        inputs.push(kv.clone());
+        inputs.push(kv.clone());
+        inputs.push(off.clone());
+        rt.run(&exe, &inputs).unwrap();
+    };
+    let mut borrowed = || {
+        let mut inputs: Vec<&HostTensor> = params.iter().collect();
+        inputs.extend([&h, &kv, &kv, &off]);
+        rt.run_refs(&exe, &inputs).unwrap();
+    };
+    let mut cached = || {
+        let h_l = h.to_literal().unwrap();
+        let k_l = kv.to_literal().unwrap();
+        let v_l = kv.to_literal().unwrap();
+        let o_l = off.to_literal().unwrap();
+        let mut args: Vec<&xla::Literal> = param_lits.iter().collect();
+        args.extend([&h_l, &k_l, &v_l, &o_l]);
+        rt.run_literal_refs(&exe, &args).unwrap();
+    };
+
+    println!("\n## hot-path microbench ({exe}, mean ± std of {reps})");
+    println!("| variant | ms |");
+    println!("| clone params per call (before) | {} |", time(&mut naive).pm());
+    println!("| borrowed host tensors (iter 1) | {} |", time(&mut borrowed).pm());
+    println!("| cached param literals (iter 2) | {} |", time(&mut cached).pm());
+}
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    hot_path_microbench(&dir);
+    let steps = 6usize; // first step is warm-up, stats over the rest
+
+    println!("# e2e pipelined training step time vs slicing (real PJRT stack)");
+    println!("| slicing | slices | step ms (mean ± std of {}) | tok/s |", steps - 1);
+    for slicing in [
+        vec![128usize],
+        vec![64, 64],
+        vec![64, 32, 32],
+        vec![64, 32, 16, 16],
+        vec![32, 32, 32, 32],
+        vec![16; 8],
+    ] {
+        let cfg = TrainConfig {
+            slicing: slicing.clone(),
+            microbatches: 1,
+            steps,
+            lr: 1e-3,
+            seed: 0,
+        };
+        let mut t = match Trainer::new(&dir, cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("| {slicing:?} | - | unavailable: {e} | - |");
+                continue;
+            }
+        };
+        let m = t.manifest.model.clone();
+        let corpus = synthetic_corpus(1 << 15, 3);
+        let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 1);
+        let reports = t.train(|| batcher.next_batch(), |_| {}).unwrap();
+        let times: Vec<f64> = reports[1..].iter().map(|r| r.wall_ms).collect();
+        let s = Stats::from_samples(&times);
+        let toks = m.batch * m.seq_len;
+        println!(
+            "| {:?} | {} | {} | {:.0} |",
+            slicing,
+            slicing.len(),
+            s.pm(),
+            toks as f64 / (s.mean / 1e3)
+        );
+    }
+}

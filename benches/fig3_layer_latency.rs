@@ -1,0 +1,55 @@
+//! Bench: Fig. 3 — single-layer forward latency & throughput vs token
+//! count (the saturation knee that motivates coarse-enough slices).
+//!
+//! Prints the analytic V100 curve for GPT3-1B (the paper's measurement)
+//! plus, when `artifacts/` is built, the *measured* curve of the real
+//! stage_fwd executable on this machine's CPU PJRT — same shape, different
+//! hardware.
+
+use terapipe::config::presets;
+use terapipe::experiments::fig3_curve;
+use terapipe::runtime::tensor::HostTensor;
+use terapipe::runtime::{stage_exe_names, StageRuntime};
+use terapipe::util::Stats;
+
+fn main() {
+    println!("# Fig. 3 — per-layer forward time / throughput vs #tokens");
+    println!("\n## analytic V100, GPT3-1B layer (paper's setting)");
+    println!("| tokens | fwd ms | tokens/ms |");
+    for (t, ms, tp) in fig3_curve(&presets::gpt3_1b(), 2048) {
+        println!("| {t} | {ms:.3} | {tp:.1} |");
+    }
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(measured curve skipped: run `make artifacts` first)");
+        return;
+    }
+    println!("\n## measured on this machine (CPU PJRT, real stage_fwd executable)");
+    let manifest = terapipe::runtime::manifest::Manifest::load(&dir).unwrap();
+    let m = manifest.model.clone();
+    let rt = StageRuntime::load(
+        &dir,
+        &stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets),
+    )
+    .unwrap();
+    let params = rt.manifest.load_init(&rt.manifest.init_stages[0]).unwrap();
+    println!("| tokens | fwd ms (mean ± std of 10) | tokens/ms |");
+    for &len in &manifest.buckets {
+        let mut samples = Vec::new();
+        for _ in 0..10 {
+            let kv = HostTensor::zeros_f32(&m.kv_shape());
+            let h = HostTensor::zeros_f32(&[m.batch, len, m.hidden]);
+            let mut inputs: Vec<HostTensor> = params.clone();
+            inputs.push(h);
+            inputs.push(kv.clone());
+            inputs.push(kv);
+            inputs.push(HostTensor::scalar_i32(0));
+            let (_, ms) =
+                terapipe::util::time_ms(|| rt.run(&format!("stage_fwd_s{len}"), &inputs).unwrap());
+            samples.push(ms);
+        }
+        let s = Stats::from_samples(&samples);
+        println!("| {len} | {} | {:.1} |", s.pm(), len as f64 / s.mean);
+    }
+}

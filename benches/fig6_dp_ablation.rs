@@ -1,0 +1,37 @@
+//! Bench: Fig. 6 / Table 3 — the DP ablation: uniform #slices sweep vs
+//! the DP scheme on GPT3-44B setting (8) (1..16 slices) and GPT3-175B
+//! setting (9) (1..128 slices), as in the paper.
+
+use terapipe::experiments::fig6_rows;
+use terapipe::solver::joint::JointOpts;
+
+fn main() {
+    let opts = JointOpts {
+        granularity: 16,
+        eps_ms: 0.1,
+        max_microbatch: Some(4),
+    };
+    for (setting, max_slices, paper_gain) in [(8u32, 16u32, 1.12), (9, 128, 1.04)] {
+        println!("\n# Fig. 6({}) — setting ({setting})", if setting == 8 { 'a' } else { 'b' });
+        println!("| algorithm | scheme | latency (s) | TFLOPs/GPU |");
+        let rows = fig6_rows(setting, max_slices, &opts);
+        for (label, scheme, lat, tf) in &rows {
+            let short = if scheme.len() > 44 {
+                format!("{}…", &scheme[..43])
+            } else {
+                scheme.clone()
+            };
+            println!("| {label} | {short} | {lat:.3} | {tf:.4} |");
+        }
+        let dp = rows.last().unwrap().2;
+        let best_uniform = rows[..rows.len() - 1]
+            .iter()
+            .map(|r| r.2)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "DP vs best uniform: {:.3}x faster (paper: {:.2}x)",
+            best_uniform / dp,
+            paper_gain
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: Fig. 7 / Table 4 — GPT3-13B setting (5) with sequence length
+//! 2048 → 8192 (batch shrinking 32 → 2 to fit memory, per the paper).
+//! The reproduced claim: the TeraPipe speedup *grows* with sequence
+//! length (paper: 1.40x → 2.76x → 4.97x → 7.83x).
+
+use terapipe::experiments::fig7_rows;
+use terapipe::solver::joint::JointOpts;
+
+fn main() {
+    let opts = JointOpts {
+        granularity: 16,
+        eps_ms: 0.1,
+        max_microbatch: Some(4),
+    };
+    println!("# Fig. 7 / Table 4 — sequence-length sweep, GPT3-13B setting (5)");
+    println!("| L | B | w/o TeraPipe (s) | w/ TeraPipe (s) | speedup | paper speedup | w/ scheme |");
+    let paper = [1.40, 2.76, 4.97, 7.83];
+    let batches = [32, 8, 4, 2];
+    for (((l, g, t, sp, scheme), p), b) in fig7_rows(&opts).into_iter().zip(paper).zip(batches) {
+        let short = if scheme.len() > 40 {
+            format!("{}…", &scheme[..39])
+        } else {
+            scheme
+        };
+        println!("| {l} | {b} | {g:.3} | {t:.3} | {sp:.2}x | {p:.2}x | {short} |");
+    }
+}

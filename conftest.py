@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root
+by putting the python/ package dir on sys.path (the canonical invocation
+is `cd python && python -m pytest tests/`, which the Makefile uses)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,53 @@
+//! Reproduce the paper's full evaluation sweep in one run: Fig. 3, Fig. 5
+//! (all Table 1 settings), Fig. 6 ablations, Fig. 7 sequence-length sweep
+//! and the Appendix A memory study — printed as markdown tables with the
+//! paper's published numbers alongside.
+//!
+//! ```bash
+//! cargo run --release --example paper_sweep
+//! ```
+
+use terapipe::config::presets;
+use terapipe::experiments as exp;
+use terapipe::solver::joint::JointOpts;
+
+fn main() {
+    let opts = JointOpts {
+        granularity: 16,
+        eps_ms: 0.1,
+        max_microbatch: Some(8),
+    };
+
+    println!("# TeraPipe evaluation sweep (simulated 48×p3.16xlarge testbed)\n");
+
+    println!("## Fig. 3 — GPT3-1B single-layer fwd curve (analytic V100)");
+    println!("| tokens | fwd ms | tokens/ms |");
+    for (t, ms, tp) in exp::fig3_curve(&presets::gpt3_1b(), 2048) {
+        println!("| {t} | {ms:.3} | {tp:.1} |");
+    }
+
+    println!("\n## Fig. 5 / Table 2 — all ten settings");
+    let rows = exp::fig5_all(&opts);
+    print!("{}", exp::render_fig5(&rows));
+
+    for (setting, max_slices) in [(8u32, 16u32), (9, 128)] {
+        println!("\n## Fig. 6 — uniform vs DP, setting ({setting})");
+        println!("| algorithm | latency (s) | TFLOPs/GPU |");
+        for (label, _, lat, tf) in exp::fig6_rows(setting, max_slices, &opts) {
+            println!("| {label} | {lat:.3} | {tf:.4} |");
+        }
+    }
+
+    println!("\n## Fig. 7 / Table 4 — sequence length sweep (GPT3-13B, setting 5)");
+    println!("| L | w/o (s) | w/ (s) | speedup | paper |");
+    let paper = [1.40, 2.76, 4.97, 7.83];
+    for ((l, g, t, sp, _), p) in exp::fig7_rows(&opts).into_iter().zip(paper) {
+        println!("| {l} | {g:.3} | {t:.3} | {sp:.2}x | {p:.2}x |");
+    }
+
+    println!("\n## Appendix A — memory-capped pipelines");
+    println!("| schedule | makespan |");
+    for (label, ms) in exp::appendix_a_rows() {
+        println!("| {label} | {ms:.1} |");
+    }
+}

@@ -1,0 +1,75 @@
+//! Quickstart: solve a TeraPipe slicing for a paper setting and inspect
+//! the schedule.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the core API end to end: pick a Table 1 setting, build the
+//! analytic cost model, run the §3.3 token DP and the §3.4 joint
+//! batch+token DP, then execute both the GPipe baseline and the TeraPipe
+//! plan on the discrete-event simulator and print the timelines.
+
+use terapipe::config::presets;
+use terapipe::experiments::AnalyticPhase;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::sim::engine::simulate;
+use terapipe::sim::schedule::build_plan;
+use terapipe::sim::trace;
+use terapipe::solver::dp::solve_tokens;
+use terapipe::solver::joint::{gpipe_plan, solve_joint_analytic, JointOpts};
+
+fn main() {
+    // 1. A paper setting: GPT3-44B on 384 GPUs, 48 pipeline stages (row 8).
+    let setting = presets::setting(8);
+    let k = setting.parallel.pipeline_stages;
+    let l = setting.model.seq_len;
+    let b = setting.batch_per_pipeline();
+    println!(
+        "setting (8): {} — K={k} stages, L={l}, {} sequences/pipeline\n",
+        setting.model.name, b
+    );
+
+    // 2. Cost model (Eq. 4/9): per-cell slice latency t(i, j).
+    let model = AnalyticModel::from_setting(&setting, 1);
+
+    // 3. Token-dimension DP (Algorithm 1 + t_max enumeration, §3.3).
+    let (scheme, stats) = solve_tokens(&model, l, k, 16, 0.1);
+    println!("single-sequence DP scheme: {}", scheme.notation());
+    println!(
+        "  Eq.5 latency {:.1} ms ({} slices; {} t_max candidates, {} DPs after pruning)\n",
+        scheme.latency_ms,
+        scheme.num_slices(),
+        stats.candidates,
+        stats.dps_run
+    );
+
+    // 4. Joint batch+token plan (§3.4) vs the GPipe baseline.
+    let opts = JointOpts { granularity: 16, eps_ms: 0.1, max_microbatch: Some(8) };
+    let tera = solve_joint_analytic(&model, b, l, k, &opts);
+    let gpipe = gpipe_plan(&|m| model.with_microbatch(m), b, l, k);
+    println!("TeraPipe plan: {}", tera.notation());
+    println!("GPipe baseline: {}\n", gpipe.notation());
+
+    // 5. Execute both schedules on the discrete-event simulator.
+    let cost = AnalyticPhase { base: &model };
+    let g = simulate(&build_plan(&cost, &gpipe, k as usize, None, true)).unwrap();
+    let t = simulate(&build_plan(&cost, &tera, k as usize, None, true)).unwrap();
+    println!(
+        "GPipe:    {:>8.1} ms/iter, {:>4.1}% bubbles",
+        g.makespan_ms,
+        100.0 * g.bubble_fraction
+    );
+    println!(
+        "TeraPipe: {:>8.1} ms/iter, {:>4.1}% bubbles  →  {:.2}x speedup",
+        t.makespan_ms,
+        100.0 * t.bubble_fraction,
+        g.makespan_ms / t.makespan_ms
+    );
+
+    // 6. Fig. 2-style timeline of the first stages (token slices visibly
+    // overlapping across stages).
+    println!("\nTeraPipe timeline (stages 0–7 of {k}):");
+    let spans: Vec<_> = t.trace.iter().filter(|s| s.stage < 8).cloned().collect();
+    print!("{}", trace::ascii(&spans, 8, 100));
+}

@@ -1,0 +1,75 @@
+//! End-to-end validation driver (system-prompt mandate): train a small
+//! GPT across real pipeline stages — AOT JAX/Pallas executables under a
+//! threaded rust PJRT coordinator — on a synthetic corpus, and log the
+//! loss curve. Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e -- [steps]
+//! ```
+//!
+//! Every step is a full synchronous update: token slices pipelined
+//! forward, context-gradient-accumulated backward, Adam on every stage.
+//! The run also demonstrates TeraPipe's correctness claim live: we train
+//! the same model twice — unsliced vs DP-sliced — and print both curves
+//! (they match to fp32 noise).
+
+use std::path::PathBuf;
+
+use terapipe::coordinator::{train, TrainConfig};
+use terapipe::data::synthetic_corpus;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built: run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let corpus = synthetic_corpus(1 << 16, 7);
+
+    let run = |label: &str, slicing: Vec<usize>| -> Vec<f64> {
+        println!("\n=== {label}: slicing {slicing:?}, {steps} steps ===");
+        let cfg = TrainConfig {
+            slicing,
+            microbatches: 1,
+            steps,
+            lr: 1e-3,
+            seed: 42,
+        };
+        let reports = train(&dir, cfg, &corpus, |r| {
+            if r.step < 3 || r.step % 20 == 0 || r.step == steps - 1 {
+                println!(
+                    "step {:>4}  loss {:.4}  {:>7.1} ms  {:>6.0} tok/s",
+                    r.step,
+                    r.loss,
+                    r.wall_ms,
+                    r.tokens as f64 / (r.wall_ms / 1e3)
+                );
+            }
+        })
+        .expect("training failed");
+        reports.iter().map(|r| r.loss).collect()
+    };
+
+    // TeraPipe token-sliced training (front-loaded DP-style scheme).
+    let sliced = run("TeraPipe (token slices)", vec![64, 32, 16, 16]);
+    // Unsliced baseline — same math, bubblier schedule.
+    let unsliced = run("unsliced baseline", vec![128]);
+
+    println!("\n=== synchronous-equivalence check (paper §4) ===");
+    let mut max_diff = 0f64;
+    for (a, b) in sliced.iter().zip(&unsliced) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    println!(
+        "max per-step loss difference sliced-vs-unsliced: {max_diff:.2e} {}",
+        if max_diff < 5e-3 { "(identical training dynamics ✓)" } else { "(UNEXPECTED divergence!)" }
+    );
+    println!(
+        "loss curve: {:.4} -> {:.4} over {} steps (byte-level LM, ln(256)≈5.55 at init)",
+        sliced.first().unwrap(),
+        sliced.last().unwrap(),
+        sliced.len()
+    );
+}

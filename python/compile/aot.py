@@ -1,0 +1,284 @@
+"""AOT compile path: lower every executable to HLO *text* + write manifest.
+
+Python runs exactly once (`make artifacts`); after that the rust binary is
+self-contained. For each slice-length bucket S in `--buckets` we lower
+
+  embed_fwd_s{S}, embed_bwd_s{S}   — first pipeline stage only
+  stage_fwd_s{S}, stage_bwd_s{S}   — every cell (stages share structure;
+                                     parameters are runtime inputs)
+  head_fwd_s{S},  head_bwd_s{S}    — last pipeline stage only
+
+plus slice-independent `adam_embed`, `adam_stage`, `adam_head`.
+
+Interchange is HLO TEXT, not `.serialize()`: jax>=0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (what the `xla` 0.1.6
+crate links) rejects (`proto.id() <= INT_MAX`); the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Also written:
+  artifacts/manifest.json     — model dims, buckets, per-executable input/
+                                output names+shapes+dtypes (flat, in HLO
+                                parameter order), parameter specs
+  artifacts/init/*.bin        — deterministic initial parameters, raw f32
+                                little-endian, one file per tensor, so the
+                                rust coordinator and the python oracle start
+                                from bit-identical weights
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts [dims…]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(shape=()):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def spec_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Lowerer:
+    """Lowers flat-argument functions and records their manifest entries."""
+
+    def __init__(self, d: M.ModelDims, out_dir: str):
+        self.d = d
+        self.out_dir = out_dir
+        self.executables = {}
+
+    def lower(self, name, fn, in_specs, out_names, donate_argnums=()):
+        """in_specs: [(name, ShapeDtypeStruct)] in HLO parameter order."""
+        args = [s for _, s in in_specs]
+        # keep_unused: the rust runtime feeds every manifest input, so the
+        # HLO parameter list must match even when a value is algebraically
+        # unused (e.g. embed_bwd never reads the embedding tables).
+        lowered = jax.jit(
+            fn, donate_argnums=donate_argnums, keep_unused=True
+        ).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        assert len(outs) == len(out_names), (name, len(outs), len(out_names))
+        self.executables[name] = {
+            "inputs": [spec_entry(n, s) for n, s in in_specs],
+            "outputs": [spec_entry(n, s) for n, s in zip(out_names, outs)],
+        }
+        print(f"  lowered {name}: {len(text)} chars, "
+              f"{len(in_specs)} inputs, {len(outs)} outputs")
+
+
+def build_all(d: M.ModelDims, buckets, out_dir: str, seed: int):
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+    lw = Lowerer(d, out_dir)
+
+    b, t, nh, hd, nl = d.batch, d.seq_len, d.num_heads, d.head_dim, d.layers_per_stage
+    stage_specs = M.stage_param_specs(d)
+    embed_specs = M.embed_param_specs(d)
+    head_specs = M.head_param_specs(d)
+    n_sp = len(stage_specs)
+
+    kv_shape = (nl, b, t, nh, hd)
+
+    for s in buckets:
+        kv_new = (nl, b, s, nh, hd)
+
+        # ---- embed ----
+        def embed_fwd_flat(tok_emb, pos_emb, tokens, pos_offset):
+            return M.embed_fwd((tok_emb, pos_emb), tokens, pos_offset, d)
+
+        lw.lower(
+            f"embed_fwd_s{s}", embed_fwd_flat,
+            [(n, f32(sh)) for n, sh in embed_specs]
+            + [("tokens", i32((b, s))), ("pos_offset", i32())],
+            ["h"],
+        )
+
+        def embed_bwd_flat(tok_emb, pos_emb, tokens, pos_offset, g_h):
+            return M.embed_bwd((tok_emb, pos_emb), tokens, pos_offset, g_h, d)
+
+        lw.lower(
+            f"embed_bwd_s{s}", embed_bwd_flat,
+            [(n, f32(sh)) for n, sh in embed_specs]
+            + [("tokens", i32((b, s))), ("pos_offset", i32()), ("g_h", f32((b, s, d.hidden)))],
+            [f"g_{n}" for n, _ in embed_specs],
+        )
+
+        # ---- stage ----
+        def stage_fwd_flat(*args):
+            params, (h, kc, vc, cl) = args[:n_sp], args[n_sp:]
+            return M.stage_fwd(params, h, kc, vc, cl, d)
+
+        lw.lower(
+            f"stage_fwd_s{s}", stage_fwd_flat,
+            [(n, f32(sh)) for n, sh in stage_specs]
+            + [("h", f32((b, s, d.hidden))), ("k_ctx", f32(kv_shape)),
+               ("v_ctx", f32(kv_shape)), ("ctx_len", i32())],
+            ["h_out", "k_new", "v_new"],
+        )
+
+        def stage_bwd_flat(*args):
+            params = args[:n_sp]
+            h, kc, vc, cl, g_h, g_k, g_v = args[n_sp:]
+            return M.stage_bwd(params, h, kc, vc, cl, g_h, g_k, g_v, d)
+
+        lw.lower(
+            f"stage_bwd_s{s}", stage_bwd_flat,
+            [(n, f32(sh)) for n, sh in stage_specs]
+            + [("h", f32((b, s, d.hidden))), ("k_ctx", f32(kv_shape)),
+               ("v_ctx", f32(kv_shape)), ("ctx_len", i32()),
+               ("g_hout", f32((b, s, d.hidden))), ("g_knew", f32(kv_new)),
+               ("g_vnew", f32(kv_new))],
+            [f"g_{n}" for n, _ in stage_specs] + ["g_h", "g_kctx", "g_vctx"],
+        )
+
+        # ---- head ----
+        def head_fwd_flat(*args):
+            params, (h, targets) = args[:4], args[4:]
+            return M.head_fwd(params, h, targets, d)
+
+        lw.lower(
+            f"head_fwd_s{s}", head_fwd_flat,
+            [(n, f32(sh)) for n, sh in head_specs]
+            + [("h", f32((b, s, d.hidden))), ("targets", i32((b, s)))],
+            ["loss_sum"],
+        )
+
+        def head_bwd_flat(*args):
+            params, (h, targets) = args[:4], args[4:]
+            return M.head_bwd(params, h, targets, d)
+
+        lw.lower(
+            f"head_bwd_s{s}", head_bwd_flat,
+            [(n, f32(sh)) for n, sh in head_specs]
+            + [("h", f32((b, s, d.hidden))), ("targets", i32((b, s)))],
+            [f"g_{n}" for n, _ in head_specs] + ["g_h"],
+        )
+
+    # ---- optimizers (slice independent). Donate params/m/v so PJRT can
+    # update in place. ----
+    for group, specs in (("embed", embed_specs), ("stage", stage_specs), ("head", head_specs)):
+        n = len(specs)
+
+        def adam_flat(*args, _n=n):
+            params, grads = args[:_n], args[_n : 2 * _n]
+            m, v = args[2 * _n : 3 * _n], args[3 * _n : 4 * _n]
+            step, lr = args[4 * _n], args[4 * _n + 1]
+            return M.adam_step(params, grads, m, v, step, lr)
+
+        in_specs = (
+            [(nm, f32(sh)) for nm, sh in specs]
+            + [(f"g_{nm}", f32(sh)) for nm, sh in specs]
+            + [(f"m_{nm}", f32(sh)) for nm, sh in specs]
+            + [(f"v_{nm}", f32(sh)) for nm, sh in specs]
+            + [("step", i32()), ("lr", f32(()))]
+        )
+        out_names = (
+            [nm for nm, _ in specs]
+            + [f"m_{nm}" for nm, _ in specs]
+            + [f"v_{nm}" for nm, _ in specs]
+        )
+        donate = tuple(range(n)) + tuple(range(2 * n, 4 * n))
+        lw.lower(f"adam_{group}", adam_flat, in_specs, out_names, donate_argnums=donate)
+
+    # ---- initial parameters ----
+    embed, stages, head = M.init_params(d, seed=seed)
+
+    def dump(prefix, names_shapes, arrays):
+        files = []
+        for (nm, sh), arr in zip(names_shapes, arrays):
+            assert tuple(arr.shape) == tuple(sh), (nm, arr.shape, sh)
+            fname = f"{prefix}.{nm}.bin"
+            np.asarray(arr, dtype="<f4").tofile(os.path.join(out_dir, "init", fname))
+            files.append({"name": nm, "shape": list(sh), "file": f"init/{fname}"})
+        return files
+
+    init_index = {
+        "embed": dump("embed", embed_specs, embed),
+        "head": dump("head", head_specs, head),
+        "stages": [
+            dump(f"stage{k}", stage_specs, stages[k]) for k in range(d.num_stages)
+        ],
+    }
+
+    manifest = {
+        "model": {
+            "vocab": d.vocab, "hidden": d.hidden, "num_heads": d.num_heads,
+            "layers_per_stage": d.layers_per_stage, "num_stages": d.num_stages,
+            "seq_len": d.seq_len, "batch": d.batch, "block_ctx": d.block_ctx,
+            "seed": seed,
+        },
+        "buckets": list(buckets),
+        "param_groups": {
+            "embed": [{"name": n, "shape": list(sh)} for n, sh in embed_specs],
+            "stage": [{"name": n, "shape": list(sh)} for n, sh in stage_specs],
+            "head": [{"name": n, "shape": list(sh)} for n, sh in head_specs],
+        },
+        "init": init_index,
+        "executables": lw.executables,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(lw.executables)} executables to {out_dir}")
+
+
+def parse_args(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--vocab", type=int, default=256)
+    p.add_argument("--hidden", type=int, default=128)
+    p.add_argument("--heads", type=int, default=4)
+    p.add_argument("--layers-per-stage", type=int, default=2)
+    p.add_argument("--num-stages", type=int, default=2)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--block-ctx", type=int, default=128)
+    p.add_argument("--buckets", default="16,32,64,128")
+    p.add_argument("--seed", type=int, default=0)
+    return p.parse_args(argv)
+
+
+def main(argv=None):
+    a = parse_args(argv)
+    d = M.ModelDims(
+        vocab=a.vocab, hidden=a.hidden, num_heads=a.heads,
+        layers_per_stage=a.layers_per_stage, num_stages=a.num_stages,
+        seq_len=a.seq_len, batch=a.batch, block_ctx=a.block_ctx,
+    )
+    buckets = sorted({int(x) for x in a.buckets.split(",")})
+    assert all(bk <= d.seq_len for bk in buckets), "bucket larger than seq_len"
+    print(f"lowering {d} buckets={buckets} -> {a.out_dir}")
+    build_all(d, buckets, a.out_dir, a.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Pure-jnp correctness oracles for the TeraPipe compute path.
+
+These are the ground truth against which (a) the Pallas slice-attention
+kernel and (b) the AOT-lowered stage executables are validated. Everything
+here is written in the most obvious possible jnp, with no tiling, masking
+tricks, or numerical shortcuts beyond a numerically-stable softmax.
+
+Conventions (shared with model.py and the rust coordinator):
+  * A *slice* is `s` consecutive token positions of one training sequence
+    (the paper's `s_i`, Sec 3.2).
+  * The *context* is the `ctx_len` positions strictly before the slice.
+  * K/V buffers are padded to a fixed `L_max` so all HLO shapes are static;
+    positions `>= ctx_len + s` in the buffer are padding and must not
+    influence the result (tested).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal_offset: int = 0):
+    """Plain softmax attention with a causal mask.
+
+    q: [S, D] queries for global positions [causal_offset, causal_offset+S).
+    k, v: [T, D] keys/values for global positions [0, T).
+    Query i may attend to key j iff j <= causal_offset + i.
+    """
+    s, d = q.shape
+    t = k.shape[0]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    q_pos = causal_offset + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = k_pos <= q_pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return probs @ v
+
+
+def slice_attention_ref(q, k_buf, v_buf, ctx_len):
+    """Oracle for the Pallas slice-attention kernel.
+
+    q:            [S, D]   queries of the current slice.
+    k_buf, v_buf: [T, D]   padded buffer; [0, ctx_len) is real context,
+                           [ctx_len, ctx_len+S) holds this slice's keys,
+                           the rest is padding.
+    Query i (global position ctx_len+i) attends to buffer positions
+    j <= ctx_len + i.  `ctx_len` may be a python int or a traced scalar.
+    """
+    s, d = q.shape
+    t = k_buf.shape[0]
+    scores = (q @ k_buf.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    q_pos = ctx_len + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = k_pos <= q_pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return probs @ v_buf
+
+
+def mha_slice_ref(q, k_buf, v_buf, ctx_len):
+    """Multi-head version. q: [S, NH, HD]; k_buf, v_buf: [T, NH, HD]."""
+    s, nh, hd = q.shape
+    outs = [
+        slice_attention_ref(q[:, h, :], k_buf[:, h, :], v_buf[:, h, :], ctx_len)
+        for h in range(nh)
+    ]
+    return jnp.stack(outs, axis=1)
+
+
+def layer_norm_ref(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu_ref(x):
+    # tanh approximation, matching model.py
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def softmax_xent_ref(logits, targets):
+    """Sum (not mean) of token cross-entropies. logits [N, V], targets [N]."""
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.sum(logz - gold)

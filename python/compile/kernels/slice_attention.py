@@ -1,0 +1,226 @@
+"""L1 — Pallas slice-attention kernel (the TeraPipe compute hot-spot).
+
+TeraPipe's unit of pipelined work is a *token slice*: `S` consecutive
+positions of one sequence, attending causally to (a) the `ctx_len` tokens
+produced by earlier slices on the same stage and (b) themselves. This
+kernel computes exactly that — softmax attention of a resident Q block
+against a padded K/V buffer — as a flash-attention-style streaming kernel.
+
+Hardware adaptation (paper targets V100 threadblocks — DESIGN.md §3):
+  * The slice's Q block (S × D) stays resident in VMEM for the whole
+    kernel; context K/V stream through in `block_ctx`-sized tiles via
+    `BlockSpec` index maps — the HBM↔VMEM schedule that replaces the GPU
+    threadblock loop over the context.
+  * An online running-max / running-denominator accumulation keeps VMEM at
+    O(S·(block_ctx + D)) instead of O(S·L).
+  * The S×D·block_ctx matmuls are the MXU-shaped inner loop; on a real TPU
+    S, D, block_ctx would be padded to multiples of the 128×128 systolic
+    array (see DESIGN.md §Perf for the VMEM/MXU estimate).
+
+The kernel MUST run with interpret=True here: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against `ref.slice_attention_ref` by pytest (hypothesis sweep
+over shapes) — that is the correctness signal; interpret-mode wallclock is
+meaningless and never used.
+
+Buffer layout (shared with model.py / the rust coordinator):
+  k_buf/v_buf have length T >= ctx_len + S. [0, ctx_len) is real context,
+  [ctx_len, ctx_len + S) is this slice's own K/V (already scattered in by
+  the caller), and everything after is padding. Query i sits at global
+  position ctx_len + i and may attend to buffer positions j <= ctx_len + i,
+  which simultaneously enforces causality within the slice and excludes
+  the padding tail.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _slice_attn_kernel(ctx_len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_ctx: int, num_ctx_blocks: int):
+    """Grid = (num_heads, num_ctx_blocks); the ctx-block axis is sequential.
+
+    o_ref accumulates the *unnormalized* weighted sum across ctx blocks;
+    m_ref / l_ref hold the running row max and softmax denominator. On the
+    final ctx block, o_ref is normalized in place.
+    """
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [S, D] — resident across all ctx blocks of this head
+    k = k_ref[0]  # [block_ctx, D] — the streamed tile
+    v = v_ref[0]  # [block_ctx, D]
+    s, d = q.shape
+
+    scale = jax.lax.rsqrt(jnp.asarray(d, jnp.float32))
+    scores = (q @ k.T) * scale  # [S, block_ctx] — MXU-shaped
+
+    # Causal + padding mask: query i is global position ctx_len + i; this
+    # tile covers buffer positions [kb*block_ctx, (kb+1)*block_ctx).
+    ctx_len = ctx_len_ref[0]
+    q_pos = ctx_len + jax.lax.broadcasted_iota(jnp.int32, (s, block_ctx), 0)
+    k_pos = kb * block_ctx + jax.lax.broadcasted_iota(jnp.int32, (s, block_ctx), 1)
+    mask = k_pos <= q_pos
+
+    m_prev = m_ref[0]  # [S]
+    l_prev = l_ref[0]
+    acc_prev = o_ref[0]
+
+    block_max = jnp.max(jnp.where(mask, scores, NEG_INF), axis=-1)  # [S]
+    m_new = jnp.maximum(m_prev, block_max)
+    # `mask` multiplies probabilities directly so a fully-masked tile
+    # contributes exactly zero (exp(NEG_INF - m) underflow is not relied on).
+    p = jnp.where(mask, jnp.exp(scores - m_new[:, None]), 0.0)  # [S, block_ctx]
+    alpha = jnp.exp(m_prev - m_new)  # [S]
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * alpha[:, None] + p @ v
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = acc_new
+
+    @pl.when(kb == num_ctx_blocks - 1)
+    def _finalize():
+        # Every query row has at least one valid key (itself), so l > 0.
+        o_ref[0] = o_ref[0] / l_ref[0][:, None]
+
+
+def _slice_attention_dense(q, k_buf, v_buf, ctx_len):
+    """Dense jnp formulation (all heads at once). Used only to derive the
+    backward pass of the custom_vjp below; forward runs the Pallas kernel."""
+    s, nh, d = q.shape
+    t = k_buf.shape[0]
+    scores = jnp.einsum("snd,tnd->nst", q, k_buf) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    q_pos = ctx_len + jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = (k_pos <= q_pos)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    scores = scores - jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("nst,tnd->snd", probs, v_buf)
+
+
+def _slice_attention_fwd_impl(q, k_buf, v_buf, ctx_len, block_ctx: int):
+    s, nh, d = q.shape
+    t = k_buf.shape[0]
+    bc = min(block_ctx, t)
+    if t % bc != 0:
+        raise ValueError(f"buffer length {t} not divisible by block_ctx {bc}")
+    num_ctx_blocks = t // bc
+
+    # Head-major layout so the grid's leading axis walks heads.
+    qh = jnp.transpose(q, (1, 0, 2))  # [NH, S, D]
+    kh = jnp.transpose(k_buf, (1, 0, 2))  # [NH, T, D]
+    vh = jnp.transpose(v_buf, (1, 0, 2))
+    ctx = jnp.reshape(jnp.asarray(ctx_len, jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _slice_attn_kernel, block_ctx=bc, num_ctx_blocks=num_ctx_blocks
+    )
+    out, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(nh, num_ctx_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, kb: (0,)),  # ctx_len: broadcast
+            pl.BlockSpec((1, s, d), lambda h, kb: (h, 0, 0)),  # q: resident
+            pl.BlockSpec((1, bc, d), lambda h, kb: (h, kb, 0)),  # k tile
+            pl.BlockSpec((1, bc, d), lambda h, kb: (h, kb, 0)),  # v tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, d), lambda h, kb: (h, 0, 0)),  # o: revisited
+            pl.BlockSpec((1, s), lambda h, kb: (h, 0)),  # running max
+            pl.BlockSpec((1, s), lambda h, kb: (h, 0)),  # running denom
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nh, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((nh, s), jnp.float32),
+            jax.ShapeDtypeStruct((nh, s), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ctx, qh, kh, vh)
+    return jnp.transpose(out, (1, 0, 2))  # back to [S, NH, D]
+
+
+# pallas_call is not differentiable (even under interpret=True), so the
+# kernel is paired with an analytic backward derived from the dense jnp
+# formulation — the standard flash-attention custom_vjp pattern. Both paths
+# are validated against ref.py by pytest.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _slice_attention_cvjp(q, k_buf, v_buf, ctx_len, block_ctx):
+    return _slice_attention_fwd_impl(q, k_buf, v_buf, ctx_len, block_ctx)
+
+
+def _cvjp_fwd(q, k_buf, v_buf, ctx_len, block_ctx):
+    out = _slice_attention_fwd_impl(q, k_buf, v_buf, ctx_len, block_ctx)
+    return out, (q, k_buf, v_buf, ctx_len)
+
+
+def _cvjp_bwd(block_ctx, res, g):
+    import numpy as np
+
+    q, k_buf, v_buf, ctx_len = res
+    _, vjp = jax.vjp(_slice_attention_dense, q, k_buf, v_buf, ctx_len)
+    gq, gk, gv, _ = vjp(g)
+    # integer primal → float0 cotangent
+    g_ctx = np.zeros(np.shape(ctx_len), jax.dtypes.float0)
+    return gq, gk, gv, g_ctx
+
+
+_slice_attention_cvjp.defvjp(_cvjp_fwd, _cvjp_bwd)
+
+
+def slice_attention(q, k_buf, v_buf, ctx_len, *, block_ctx: int = 64):
+    """Flash-style causal slice attention (single sequence).
+
+    Args:
+      q:            [S, NH, D] float32 — queries of the current slice.
+      k_buf, v_buf: [T, NH, D] float32 — padded K/V buffer (see module doc).
+      ctx_len:      scalar int32 (may be traced) — #real context positions.
+      block_ctx:    K/V tile length streamed per grid step; must divide T.
+
+    Returns: [S, NH, D] float32 attention output. Differentiable in
+    q/k_buf/v_buf via the custom VJP above.
+    """
+    return _slice_attention_cvjp(q, k_buf, v_buf, jnp.asarray(ctx_len, jnp.int32), block_ctx)
+
+
+def slice_attention_batched(q, k_buf, v_buf, ctx_len, *, block_ctx: int = 64):
+    """vmap over a leading batch axis. q: [B, S, NH, D]; bufs [B, T, NH, D]."""
+    fn = functools.partial(slice_attention, block_ctx=block_ctx)
+    return jax.vmap(fn, in_axes=(0, 0, 0, None))(q, k_buf, v_buf, ctx_len)
+
+
+def vmem_estimate_bytes(s: int, d: int, block_ctx: int) -> int:
+    """Static VMEM footprint estimate for DESIGN.md §Perf (fp32 bytes).
+
+    Resident: Q (S·D), K/V tile (2·block_ctx·D), scores/p (S·block_ctx),
+    accumulator (S·D), running stats (2·S).
+    """
+    floats = s * d + 2 * block_ctx * d + s * block_ctx + s * d + 2 * s
+    return 4 * floats
+
+
+def mxu_utilization_estimate(s: int, d: int, block_ctx: int) -> float:
+    """Fraction of each 128×128 MXU tile doing useful work, per matmul.
+
+    Both inner matmuls are (S×D)·(D×block_ctx) and (S×block_ctx)·(block_ctx×D);
+    utilization is the product of per-axis fill ratios against 128 tiles.
+    """
+
+    def fill(n: int) -> float:
+        pad = ((n + 127) // 128) * 128
+        return n / pad
+
+    return min(fill(s) * fill(d), fill(s) * fill(block_ctx))

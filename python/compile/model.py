@@ -1,0 +1,335 @@
+"""L2 — GPT pipeline-stage model in JAX (build-time only).
+
+TeraPipe partitions a Transformer LM F = c_K ∘ … ∘ c_1 into *cells*, one
+per pipeline stage, and pipelines *token slices* of each training sequence
+through the cells (paper §3.2). This module defines the per-cell compute as
+pure JAX functions of explicit flat parameter tuples, shaped so that
+`aot.py` can lower each one to a static-shape HLO module the rust
+coordinator executes via PJRT:
+
+  embed_fwd / embed_bwd   token+position embedding (first stage only)
+  stage_fwd / stage_bwd   `layers_per_stage` pre-LN GPT blocks over one
+                          token slice, reading/extending a padded KV
+                          context buffer (the paper's "hidden states of
+                          previous positions")
+  head_fwd / head_bwd     final LN + LM head + summed token cross-entropy
+                          (last stage only)
+  adam_step               fused Adam update for any parameter tuple
+
+Backward executables recompute the forward internally (rematerialization —
+paper §3.4 "combine with memory optimization") via `jax.vjp`, so the rust
+side only stores each slice's *input* activation, context lengths, and the
+grown KV buffers — never python-side residuals. Crucially, `stage_bwd`
+returns gradients w.r.t. the KV *context* as well: those are attention
+gradients flowing from this slice back to *earlier* slices of the same
+sequence, which the coordinator accumulates and feeds into the earlier
+slices' `g_know/g_vnew` cotangents (reverse token order), exactly mirroring
+the fine-grained dependency structure that makes token-level pipelining
+valid in the first place.
+
+All shapes are static except scalar operands (`ctx_len`, `pos_offset`,
+`step`, `lr`); the KV buffer is padded to the full sequence length T = L.
+Parameters are flat tuples in the canonical orders given by
+`*_param_specs()` — the manifest written by aot.py records the same order
+for the rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.slice_attention import slice_attention_batched
+
+LAYER_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_proj", "b_proj",
+    "ln2_g", "ln2_b", "w_fc1", "b_fc1", "w_fc2", "b_fc2",
+)
+PARAMS_PER_LAYER = len(LAYER_PARAM_NAMES)
+
+
+class ModelDims(NamedTuple):
+    """Static model/stage geometry shared by all executables."""
+
+    vocab: int
+    hidden: int
+    num_heads: int
+    layers_per_stage: int
+    num_stages: int
+    seq_len: int  # T = L: KV buffers are padded to this
+    batch: int  # sequences per microbatch (each fully token-sliced)
+    block_ctx: int  # L1 kernel KV tile length
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.num_heads
+
+    @property
+    def ffn(self) -> int:
+        return 4 * self.hidden
+
+    @property
+    def num_layers(self) -> int:
+        return self.layers_per_stage * self.num_stages
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (canonical flat order — mirrored in artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+
+def layer_param_shapes(d: ModelDims):
+    h, f = d.hidden, d.ffn
+    return {
+        "ln1_g": (h,), "ln1_b": (h,),
+        "w_qkv": (h, 3 * h), "b_qkv": (3 * h,),
+        "w_proj": (h, h), "b_proj": (h,),
+        "ln2_g": (h,), "ln2_b": (h,),
+        "w_fc1": (h, f), "b_fc1": (f,),
+        "w_fc2": (f, h), "b_fc2": (h,),
+    }
+
+
+def stage_param_specs(d: ModelDims):
+    """[(name, shape)] for one stage: layers_per_stage × 12 arrays."""
+    shapes = layer_param_shapes(d)
+    return [
+        (f"layer{i}.{n}", shapes[n])
+        for i in range(d.layers_per_stage)
+        for n in LAYER_PARAM_NAMES
+    ]
+
+
+def embed_param_specs(d: ModelDims):
+    return [("tok_emb", (d.vocab, d.hidden)), ("pos_emb", (d.seq_len, d.hidden))]
+
+
+def head_param_specs(d: ModelDims):
+    return [
+        ("lnf_g", (d.hidden,)), ("lnf_b", (d.hidden,)),
+        ("w_out", (d.hidden, d.vocab)), ("b_out", (d.vocab,)),
+    ]
+
+
+def init_params(d: ModelDims, seed: int = 0):
+    """Deterministic GPT-2-style init. Returns (embed, stages, head) where
+    stages is a list (one flat tuple per stage)."""
+    key = jax.random.PRNGKey(seed)
+
+    def normal(key, shape, std):
+        return (std * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    k_embed, k_head, *k_stages = jax.random.split(key, 2 + d.num_stages)
+
+    ke1, ke2 = jax.random.split(k_embed)
+    embed = (normal(ke1, (d.vocab, d.hidden), 0.02),
+             normal(ke2, (d.seq_len, d.hidden), 0.01))
+
+    # residual-scaled init for projections back onto the residual stream
+    resid_std = 0.02 / (2.0 * d.num_layers) ** 0.5
+    stages = []
+    for ks in k_stages:
+        arrays = []
+        for i, kl in enumerate(jax.random.split(ks, d.layers_per_stage)):
+            kq, kp, k1, k2 = jax.random.split(kl, 4)
+            shapes = layer_param_shapes(d)
+            vals = {
+                "ln1_g": jnp.ones(shapes["ln1_g"], jnp.float32),
+                "ln1_b": jnp.zeros(shapes["ln1_b"], jnp.float32),
+                "w_qkv": normal(kq, shapes["w_qkv"], 0.02),
+                "b_qkv": jnp.zeros(shapes["b_qkv"], jnp.float32),
+                "w_proj": normal(kp, shapes["w_proj"], resid_std),
+                "b_proj": jnp.zeros(shapes["b_proj"], jnp.float32),
+                "ln2_g": jnp.ones(shapes["ln2_g"], jnp.float32),
+                "ln2_b": jnp.zeros(shapes["ln2_b"], jnp.float32),
+                "w_fc1": normal(k1, shapes["w_fc1"], 0.02),
+                "b_fc1": jnp.zeros(shapes["b_fc1"], jnp.float32),
+                "w_fc2": normal(k2, shapes["w_fc2"], resid_std),
+                "b_fc2": jnp.zeros(shapes["b_fc2"], jnp.float32),
+            }
+            arrays.extend(vals[n] for n in LAYER_PARAM_NAMES)
+        stages.append(tuple(arrays))
+
+    kh = jax.random.split(k_head, 1)[0]
+    head = (jnp.ones((d.hidden,), jnp.float32), jnp.zeros((d.hidden,), jnp.float32),
+            normal(kh, (d.hidden, d.vocab), 0.02), jnp.zeros((d.vocab,), jnp.float32))
+    return embed, stages, head
+
+
+# ---------------------------------------------------------------------------
+# Forward compute
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def transformer_layer_slice(lp, h, k_ctx, v_ctx, ctx_len, d: ModelDims):
+    """One pre-LN GPT block over a token slice.
+
+    lp: 12-tuple in LAYER_PARAM_NAMES order.
+    h: [B, S, H] slice hidden states; k_ctx/v_ctx: [B, T, NH, HD] padded
+    buffers holding the context produced by earlier slices.
+    Returns (h_out [B,S,H], k_slice [B,S,NH,HD], v_slice [B,S,NH,HD]).
+    """
+    (ln1_g, ln1_b, w_qkv, b_qkv, w_proj, b_proj,
+     ln2_g, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2) = lp
+    b, s, hidden = h.shape
+    nh, hd = d.num_heads, d.head_dim
+
+    x = layer_norm(h, ln1_g, ln1_b)
+    qkv = x @ w_qkv + b_qkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, hd)
+    k_slice = k.reshape(b, s, nh, hd)
+    v_slice = v.reshape(b, s, nh, hd)
+
+    # Scatter this slice's K/V into the padded buffer at ctx_len; the L1
+    # kernel's causal mask then covers both context and within-slice terms.
+    zero = jnp.zeros((), jnp.int32)
+    k_buf = jax.lax.dynamic_update_slice(k_ctx, k_slice, (zero, ctx_len, zero, zero))
+    v_buf = jax.lax.dynamic_update_slice(v_ctx, v_slice, (zero, ctx_len, zero, zero))
+
+    att = slice_attention_batched(q, k_buf, v_buf, ctx_len, block_ctx=d.block_ctx)
+    att = att.reshape(b, s, hidden)
+    h = h + att @ w_proj + b_proj
+
+    x = layer_norm(h, ln2_g, ln2_b)
+    h = h + gelu(x @ w_fc1 + b_fc1) @ w_fc2 + b_fc2
+    return h, k_slice, v_slice
+
+
+def stage_fwd(params, h, k_ctx, v_ctx, ctx_len, d: ModelDims):
+    """One pipeline cell over one token slice.
+
+    params: flat tuple per stage_param_specs.
+    h: [B, S, H]; k_ctx/v_ctx: [NL, B, T, NH, HD] (NL = layers_per_stage).
+    Returns (h_out, k_new [NL,B,S,NH,HD], v_new [NL,B,S,NH,HD]).
+    """
+    k_news, v_news = [], []
+    for i in range(d.layers_per_stage):
+        lp = params[i * PARAMS_PER_LAYER : (i + 1) * PARAMS_PER_LAYER]
+        h, k_s, v_s = transformer_layer_slice(lp, h, k_ctx[i], v_ctx[i], ctx_len, d)
+        k_news.append(k_s)
+        v_news.append(v_s)
+    return h, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def embed_fwd(params, tokens, pos_offset, d: ModelDims):
+    """tokens [B, S] int32, pos_offset scalar → h [B, S, H]."""
+    tok_emb, pos_emb = params
+    s = tokens.shape[1]
+    pos = jax.lax.dynamic_slice(pos_emb, (pos_offset, jnp.zeros((), jnp.int32)), (s, d.hidden))
+    return tok_emb[tokens] + pos[None, :, :]
+
+
+def head_fwd(params, h, targets, d: ModelDims):
+    """Final LN + LM head + summed cross-entropy over the slice.
+
+    h [B,S,H], targets [B,S] int32 → scalar loss (sum over B·S tokens;
+    the coordinator normalizes by B·L at the end of the minibatch).
+    """
+    lnf_g, lnf_b, w_out, b_out = params
+    x = layer_norm(h, lnf_g, lnf_b)
+    logits = x @ w_out + b_out  # [B, S, V]
+    logits = logits - jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))  # [B, S]
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Backward compute (recompute-based VJPs — see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def stage_bwd(params, h, k_ctx, v_ctx, ctx_len, g_hout, g_knew, g_vnew, d: ModelDims):
+    """VJP of stage_fwd for one slice.
+
+    g_hout: upstream grad from the next stage for this slice.
+    g_knew/g_vnew: accumulated attention grads w.r.t. this slice's own K/V,
+    contributed by *later* slices of the same sequence (zero for the last).
+    Returns (g_params…, g_h, g_kctx, g_vctx); g_kctx/g_vctx feed the
+    coordinator's per-stage context-grad accumulators.
+    """
+    fn = lambda p, hh, kc, vc: stage_fwd(p, hh, kc, vc, ctx_len, d)
+    _, vjp = jax.vjp(fn, params, h, k_ctx, v_ctx)
+    g_params, g_h, g_kctx, g_vctx = vjp((g_hout, g_knew, g_vnew))
+    return (*g_params, g_h, g_kctx, g_vctx)
+
+
+def embed_bwd(params, tokens, pos_offset, g_h, d: ModelDims):
+    fn = lambda p: embed_fwd(p, tokens, pos_offset, d)
+    _, vjp = jax.vjp(fn, params)
+    (g_params,) = vjp(g_h)
+    return g_params
+
+
+def head_bwd(params, h, targets, d: ModelDims):
+    """Returns (g_params…, g_h) for upstream cotangent 1.0 on the loss."""
+    fn = lambda p, hh: head_fwd(p, hh, targets, d)
+    _, vjp = jax.vjp(fn, params, h)
+    g_params, g_h = vjp(jnp.ones((), jnp.float32))
+    return (*g_params, g_h)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+def adam_step(params, grads, m, v, step, lr,
+              beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8):
+    """Bias-corrected Adam over a flat tuple of tensors.
+
+    step is the 1-based int32 update counter; lr a float32 scalar. Returns
+    (params', m', v') concatenated as one flat tuple (aot donates the
+    inputs so the update is in-place at the PJRT level).
+    """
+    step_f = step.astype(jnp.float32)
+    c1 = 1.0 - beta1 ** step_f
+    c2 = 1.0 - beta2 ** step_f
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = beta1 * mi + (1.0 - beta1) * g
+        vi = beta2 * vi + (1.0 - beta2) * g * g
+        p = p - lr * (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (*new_p, *new_m, *new_v)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (python tests + loss parity with the rust run)
+# ---------------------------------------------------------------------------
+
+
+def full_model_loss(embed, stages, head, tokens, targets, d: ModelDims):
+    """Unsliced single-device loss: the oracle for pipelined training.
+
+    Runs the whole model as ONE slice of length L with empty context —
+    exercising the very same stage_fwd/head_fwd code the pipeline uses, so
+    pipelined-vs-unsliced equality is a pure statement about the schedule.
+    """
+    b, l = tokens.shape
+    h = embed_fwd(embed, tokens, jnp.zeros((), jnp.int32), d)
+    empty = jnp.zeros((d.layers_per_stage, b, d.seq_len, d.num_heads, d.head_dim), jnp.float32)
+    for sp in stages:
+        h, _, _ = stage_fwd(sp, h, empty, empty, jnp.zeros((), jnp.int32), d)
+    return head_fwd(head, h, targets, d)
+
+
+def full_model_grads(embed, stages, head, tokens, targets, d: ModelDims):
+    fn = lambda e, ss, hd: full_model_loss(e, ss, hd, tokens, targets, d)
+    return jax.grad(fn, argnums=(0, 1, 2))(embed, stages, head)

@@ -1,0 +1,324 @@
+"""L2 correctness: the stage model and — critically — the *pipelined
+backward algebra*.
+
+TeraPipe's synchronous-training claim (paper §4: "exactly the same
+underlying optimization algorithm") holds only if per-slice backward with
+context-gradient accumulation reproduces the full-sequence gradients. The
+emulator below mirrors the rust coordinator step for step: forward slices
+in order growing the per-stage KV buffers; backward slices in reverse
+order, feeding each slice the attention gradients that later slices
+deposited on its K/V (`g_knew/g_vnew`) and accumulating the `g_kctx/g_vctx`
+it returns. test_pipelined_grads_equal_full_grads is therefore the single
+most load-bearing test in the python suite.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+DIMS = M.ModelDims(
+    vocab=64, hidden=64, num_heads=2, layers_per_stage=2, num_stages=2,
+    seq_len=32, batch=2, block_ctx=16,
+)
+
+# jitted entry points (ModelDims is a NamedTuple of ints → hashable static
+# arg); interpret-mode pallas is far too slow to re-trace per call, and jit
+# caches by input shapes so repeated slicings are cheap.
+j_stage_fwd = jax.jit(M.stage_fwd, static_argnums=(5,))
+j_stage_bwd = jax.jit(M.stage_bwd, static_argnums=(8,))
+j_embed_fwd = jax.jit(M.embed_fwd, static_argnums=(3,))
+j_embed_bwd = jax.jit(M.embed_bwd, static_argnums=(4,))
+j_head_fwd = jax.jit(M.head_fwd, static_argnums=(3,))
+j_head_bwd = jax.jit(M.head_bwd, static_argnums=(3,))
+j_full_loss = jax.jit(M.full_model_loss, static_argnums=(5,))
+j_full_grads = jax.jit(M.full_model_grads, static_argnums=(5,))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(DIMS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(key, (DIMS.batch, DIMS.seq_len), 0, DIMS.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+def empty_kv(d=DIMS):
+    return jnp.zeros(
+        (d.layers_per_stage, d.batch, d.seq_len, d.num_heads, d.head_dim), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Coordinator emulator (python mirror of rust/src/coordinator/)
+# ---------------------------------------------------------------------------
+
+
+def pipelined_loss_and_grads(params, tokens, targets, slice_lens, d=DIMS):
+    embed, stages, head = params
+    assert sum(slice_lens) == d.seq_len
+    K = d.num_stages
+
+    kbuf = [empty_kv(d) for _ in range(K)]
+    vbuf = [empty_kv(d) for _ in range(K)]
+    h_in = [[] for _ in range(K)]  # per stage, per slice: input activation
+    h_out_last = []
+    offs = []
+
+    # ---- forward, slice order ----
+    off = 0
+    for s in slice_lens:
+        offs.append(off)
+        h = j_embed_fwd(embed, tokens[:, off : off + s], jnp.int32(off), d)
+        for k in range(K):
+            h_in[k].append(h)
+            h, k_new, v_new = j_stage_fwd(stages[k], h, kbuf[k], vbuf[k], jnp.int32(off), d)
+            kbuf[k] = jax.lax.dynamic_update_slice(kbuf[k], k_new, (0, 0, off, 0, 0))
+            vbuf[k] = jax.lax.dynamic_update_slice(vbuf[k], v_new, (0, 0, off, 0, 0))
+        h_out_last.append(h)
+        off += s
+
+    loss = sum(
+        j_head_fwd(head, h_out_last[i], targets[:, offs[i] : offs[i] + slice_lens[i]], d)
+        for i in range(len(slice_lens))
+    )
+
+    # ---- backward, reverse slice order ----
+    g_embed = [jnp.zeros_like(p) for p in embed]
+    g_stages = [[jnp.zeros_like(p) for p in stages[k]] for k in range(K)]
+    g_head = [jnp.zeros_like(p) for p in (head)]
+    g_kacc = [jnp.zeros_like(empty_kv(d)) for _ in range(K)]
+    g_vacc = [jnp.zeros_like(empty_kv(d)) for _ in range(K)]
+
+    for i in reversed(range(len(slice_lens))):
+        s, off = slice_lens[i], offs[i]
+        *g_hp, g_h = j_head_bwd(head, h_out_last[i], targets[:, off : off + s], d)
+        g_head = [a + b for a, b in zip(g_head, g_hp)]
+        for k in reversed(range(K)):
+            g_know = jax.lax.dynamic_slice(
+                g_kacc[k], (0, 0, off, 0, 0),
+                (d.layers_per_stage, d.batch, s, d.num_heads, d.head_dim),
+            )
+            g_vnow = jax.lax.dynamic_slice(
+                g_vacc[k], (0, 0, off, 0, 0),
+                (d.layers_per_stage, d.batch, s, d.num_heads, d.head_dim),
+            )
+            out = j_stage_bwd(
+                stages[k], h_in[k][i], kbuf[k], vbuf[k], jnp.int32(off),
+                g_h, g_know, g_vnow, d,
+            )
+            n = len(stages[k])
+            g_p, g_h, g_kctx, g_vctx = out[:n], out[n], out[n + 1], out[n + 2]
+            g_stages[k] = [a + b for a, b in zip(g_stages[k], g_p)]
+            g_kacc[k] = g_kacc[k] + g_kctx
+            g_vacc[k] = g_vacc[k] + g_vctx
+        g_e = j_embed_bwd(embed, tokens[:, off : off + s], jnp.int32(off), g_h, d)
+        g_embed = [a + b for a, b in zip(g_embed, g_e)]
+
+    return loss, (g_embed, g_stages, g_head)
+
+
+SLICINGS = [
+    [32],
+    [16, 16],
+    [8, 8, 8, 8],
+    [12, 8, 8, 4],
+    [1, 31],
+    [31, 1],
+    [5, 9, 3, 15],
+]
+
+
+@pytest.mark.parametrize("slice_lens", SLICINGS, ids=[str(s) for s in SLICINGS])
+def test_pipelined_loss_equals_full_loss(params, batch, slice_lens):
+    tokens, targets = batch
+    full = j_full_loss(*params, tokens, targets, DIMS)
+    sliced, _ = pipelined_loss_and_grads(params, tokens, targets, slice_lens)
+    np.testing.assert_allclose(sliced, full, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("slice_lens", [[16, 16], [12, 8, 8, 4], [1, 31]],
+                         ids=["uniform", "nonuniform", "wavefront"])
+def test_pipelined_grads_equal_full_grads(params, batch, slice_lens):
+    tokens, targets = batch
+    embed, stages, head = params
+    fg_embed, fg_stages, fg_head = j_full_grads(embed, stages, head, tokens, targets, DIMS)
+    _, (g_embed, g_stages, g_head) = pipelined_loss_and_grads(params, tokens, targets, slice_lens)
+
+    for a, b in zip(g_embed, fg_embed):
+        np.testing.assert_allclose(a, b, **TOL)
+    for k in range(DIMS.num_stages):
+        for a, b in zip(g_stages[k], fg_stages[k]):
+            np.testing.assert_allclose(a, b, **TOL)
+    for a, b in zip(g_head, fg_head):
+        np.testing.assert_allclose(a, b, **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(data=st.data())
+def test_pipelined_loss_random_slicings(params, batch, data):
+    """Any partition of L must give the same loss (paper Fig. 4 freedom).
+    Lengths are multiples of 4 to bound the jit compile-cache size."""
+    tokens, targets = batch
+    rem, lens = DIMS.seq_len, []
+    while rem > 0:
+        s = 4 * data.draw(st.integers(1, rem // 4))
+        lens.append(s)
+        rem -= s
+    full = j_full_loss(*params, tokens, targets, DIMS)
+    sliced, _ = pipelined_loss_and_grads(params, tokens, targets, lens)
+    np.testing.assert_allclose(sliced, full, rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Component-level checks
+# ---------------------------------------------------------------------------
+
+
+def test_stage_fwd_matches_dense_layer_reference(params, batch):
+    """stage_fwd over a full-length slice == dense masked attention math."""
+    tokens, _ = batch
+    embed, stages, _ = params
+    d = DIMS
+    h = M.embed_fwd(embed, tokens, jnp.int32(0), d)
+    out, k_new, v_new = M.stage_fwd(stages[0], h, empty_kv(), empty_kv(), jnp.int32(0), d)
+
+    # independent dense implementation
+    x = h
+    for i in range(d.layers_per_stage):
+        lp = stages[0][i * M.PARAMS_PER_LAYER : (i + 1) * M.PARAMS_PER_LAYER]
+        (ln1_g, ln1_b, w_qkv, b_qkv, w_proj, b_proj,
+         ln2_g, ln2_b, w_fc1, b_fc1, w_fc2, b_fc2) = lp
+        y = M.layer_norm(x, ln1_g, ln1_b)
+        qkv = y @ w_qkv + b_qkv
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        b_, l_, _ = q.shape
+        q = q.reshape(b_, l_, d.num_heads, d.head_dim)
+        k = k.reshape(b_, l_, d.num_heads, d.head_dim)
+        v = v.reshape(b_, l_, d.num_heads, d.head_dim)
+        scores = jnp.einsum("bqnd,bknd->bnqk", q, k) / np.sqrt(d.head_dim)
+        mask = jnp.tril(jnp.ones((l_, l_), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bnqk,bknd->bqnd", probs, v).reshape(b_, l_, d.hidden)
+        x = x + att @ w_proj + b_proj
+        y = M.layer_norm(x, ln2_g, ln2_b)
+        x = x + M.gelu(y @ w_fc1 + b_fc1) @ w_fc2 + b_fc2
+    np.testing.assert_allclose(out, x, rtol=2e-4, atol=2e-4)
+    assert k_new.shape == (d.layers_per_stage, d.batch, d.seq_len, d.num_heads, d.head_dim)
+
+
+def test_head_fwd_matches_manual_xent(params, batch):
+    tokens, targets = batch
+    _, _, head = params
+    d = DIMS
+    h = jax.random.normal(jax.random.PRNGKey(1), (d.batch, 8, d.hidden))
+    tg = targets[:, :8]
+    loss = M.head_fwd(head, h, tg, d)
+    lnf_g, lnf_b, w_out, b_out = head
+    x = M.layer_norm(h, lnf_g, lnf_b)
+    logits = np.asarray(x @ w_out + b_out)
+    ref = 0.0
+    for b in range(d.batch):
+        for t in range(8):
+            z = logits[b, t] - logits[b, t].max()
+            ref += np.log(np.exp(z).sum()) - z[tg[b, t]]
+    np.testing.assert_allclose(loss, ref, rtol=1e-5)
+
+
+def test_embed_bwd_matches_autograd(params, batch):
+    tokens, _ = batch
+    embed, _, _ = params
+    d = DIMS
+    g_h = jax.random.normal(jax.random.PRNGKey(2), (d.batch, 8, d.hidden))
+    got = M.embed_bwd(embed, tokens[:, 4:12], jnp.int32(4), g_h, d)
+    want = jax.grad(
+        lambda e: jnp.sum(M.embed_fwd(e, tokens[:, 4:12], jnp.int32(4), d) * g_h)
+    )(embed)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_step_matches_numpy_reference():
+    key = jax.random.PRNGKey(0)
+    shapes = [(4, 3), (5,), (2, 2, 2)]
+    ps = tuple(jax.random.normal(jax.random.fold_in(key, i), s) for i, s in enumerate(shapes))
+    gs = tuple(jax.random.normal(jax.random.fold_in(key, 10 + i), s) for i, s in enumerate(shapes))
+    ms = tuple(jnp.zeros(s) for s in shapes)
+    vs = tuple(jnp.zeros(s) for s in shapes)
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+
+    out = M.adam_step(ps, gs, ms, vs, jnp.int32(1), jnp.float32(lr))
+    n = len(shapes)
+    new_p, new_m, new_v = out[:n], out[n : 2 * n], out[2 * n :]
+    for p, g, m, v, np_, nm, nv in zip(ps, gs, ms, vs, new_p, new_m, new_v):
+        m_ref = b1 * np.asarray(m) + (1 - b1) * np.asarray(g)
+        v_ref = b2 * np.asarray(v) + (1 - b2) * np.asarray(g) ** 2
+        p_ref = np.asarray(p) - lr * (m_ref / (1 - b1)) / (np.sqrt(v_ref / (1 - b2)) + eps)
+        np.testing.assert_allclose(nm, m_ref, rtol=1e-6)
+        np.testing.assert_allclose(nv, v_ref, rtol=1e-6)
+        np.testing.assert_allclose(np_, p_ref, rtol=1e-5, atol=1e-7)
+
+
+def test_training_reduces_loss(params, batch):
+    """Three full-model Adam steps on one batch must reduce the loss —
+    a smoke test that grads point downhill end to end."""
+    tokens, targets = batch
+    embed, stages, head = params
+    d = DIMS
+
+    def loss_fn(e, ss, hd):
+        return M.full_model_loss(e, ss, hd, tokens, targets, d)
+
+    flat = (*embed, *[p for sp in stages for p in sp], *head)
+
+    def unflat(flat):
+        e = tuple(flat[:2])
+        off = 2
+        ss = []
+        for _ in range(d.num_stages):
+            n = len(M.stage_param_specs(d))
+            ss.append(tuple(flat[off : off + n]))
+            off += n
+        return e, ss, tuple(flat[off:])
+
+    m = tuple(jnp.zeros_like(p) for p in flat)
+    v = tuple(jnp.zeros_like(p) for p in flat)
+    loss0 = loss_fn(*unflat(flat))
+    for step in range(3):
+        e, ss, hd = unflat(flat)
+        ge, gss, ghd = M.full_model_grads(e, ss, hd, tokens, targets, d)
+        gflat = (*ge, *[p for sp in gss for p in sp], *ghd)
+        out = M.adam_step(flat, gflat, m, v, jnp.int32(step + 1), jnp.float32(1e-2))
+        n = len(flat)
+        flat, m, v = out[:n], out[n : 2 * n], out[2 * n :]
+    loss1 = loss_fn(*unflat(flat))
+    assert float(loss1) < float(loss0)
+
+
+def test_init_params_deterministic():
+    a = M.init_params(DIMS, seed=0)
+    b = M.init_params(DIMS, seed=0)
+    c = M.init_params(DIMS, seed=1)
+    np.testing.assert_array_equal(a[0][0], b[0][0])
+    assert not np.array_equal(np.asarray(a[0][0]), np.asarray(c[0][0]))
+
+
+def test_param_specs_cover_init_shapes():
+    embed, stages, head = M.init_params(DIMS, seed=0)
+    for (n, sh), arr in zip(M.embed_param_specs(DIMS), embed):
+        assert tuple(arr.shape) == tuple(sh), n
+    for (n, sh), arr in zip(M.stage_param_specs(DIMS), stages[0]):
+        assert tuple(arr.shape) == tuple(sh), n
+    for (n, sh), arr in zip(M.head_param_specs(DIMS), head):
+        assert tuple(arr.shape) == tuple(sh), n

@@ -1,0 +1,380 @@
+//! Model / cluster / parallelism configuration.
+//!
+//! Mirrors the paper's experimental grid: a [`ModelConfig`] is a GPT-3
+//! variant (Table 1 columns N, H, #Params, L), a [`ClusterConfig`] is the
+//! AWS p3.16xlarge testbed shape, and a [`ParallelConfig`] is one Table 1
+//! row (#GPUs, B, #Data, #Pipe, #Op). JSON load/save lets users define
+//! their own; [`presets`] carries the paper's exact settings.
+
+pub mod presets;
+
+/// A GPT-style Transformer LM (decoder-only), paper §3.1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Number of Transformer layers (Table 1 "N").
+    pub num_layers: u32,
+    /// Hidden state size (Table 1 "H").
+    pub hidden: u32,
+    /// Attention heads (paper follows GPT-3: head dim 128).
+    pub num_heads: u32,
+    /// Input sequence length (Table 1 "L").
+    pub seq_len: u32,
+    /// Vocabulary size (GPT-3 BPE).
+    pub vocab: u32,
+}
+
+impl ModelConfig {
+    /// Total parameter count: 12·N·H² transformer weights plus embeddings,
+    /// the standard estimate the paper's "#Params" column uses.
+    pub fn num_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let n = self.num_layers as u64;
+        12 * n * h * h + (self.vocab as u64 + self.seq_len as u64) * h
+    }
+
+    /// Forward FLOPs per token for one layer, excluding the context-length
+    /// dependent attention term: QKV (6H²) + proj (2H²) + FFN (16H²).
+    pub fn layer_flops_per_token(&self) -> f64 {
+        24.0 * (self.hidden as f64) * (self.hidden as f64)
+    }
+
+    /// Context-dependent attention FLOPs for a slice of `i` tokens whose
+    /// context has `j` tokens: each query attends to (j + within-slice)
+    /// keys → QKᵀ + PV ≈ 4·H·(j + i/2) per token.
+    pub fn attn_ctx_flops(&self, i: f64, j: f64) -> f64 {
+        4.0 * self.hidden as f64 * i * (j + i / 2.0)
+    }
+}
+
+/// GPU device model (defaults shaped like a 16 GB V100 SXM2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Peak mixed-precision throughput, TFLOP/s (V100 tensor cores: 125).
+    pub peak_tflops: f64,
+    /// Fraction of peak achievable on saturated transformer matmuls.
+    pub efficiency: f64,
+    /// Memory capacity in GiB.
+    pub mem_gib: f64,
+    /// Kernel-launch + framework overhead per layer invocation, ms. This is
+    /// what makes the Fig. 3 curve flat below the saturation knee.
+    pub launch_overhead_ms: f64,
+    /// Tokens at which a single layer saturates the device for H = 2048
+    /// (paper Fig. 3 measures ≈256 on V100); scaled by H²/op internally.
+    pub saturation_tokens_h2048: f64,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        // efficiency / saturation / launch / p2p are the four constants
+        // calibrated against the paper's Table 2 latencies by
+        // `terapipe calibrate` (rms log-error 0.39 ⇒ typical ×1.5;
+        // EXPERIMENTS.md §Calibration).
+        GpuSpec {
+            peak_tflops: 125.0,
+            efficiency: 0.45,
+            mem_gib: 16.0,
+            launch_overhead_ms: 2.0,
+            saturation_tokens_h2048: 128.0,
+        }
+    }
+}
+
+/// Cluster shape: the paper uses AWS p3.16xlarge (8×V100, NVLink inside a
+/// node, 25 Gbps between nodes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub gpus_per_node: u32,
+    pub num_nodes: u32,
+    /// Intra-node (NVLink) bandwidth per link, GB/s.
+    pub intra_bw_gbps: f64,
+    /// Inter-node network bandwidth, GB/s (25 Gbps ⇒ ~3.1 GB/s).
+    pub inter_bw_gbps: f64,
+    /// Point-to-point latency, ms.
+    pub p2p_latency_ms: f64,
+    pub gpu: GpuSpec,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            gpus_per_node: 8,
+            num_nodes: 48,
+            intra_bw_gbps: 130.0,
+            inter_bw_gbps: 3.1,
+            p2p_latency_ms: 2.0,
+            gpu: GpuSpec::default(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn total_gpus(&self) -> u32 {
+        self.gpus_per_node * self.num_nodes
+    }
+}
+
+/// One parallel-training setup — a row of Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelConfig {
+    /// Minibatch size B (sequences).
+    pub batch_size: u32,
+    /// Data-parallel replicas (Table 1 "#Data").
+    pub data_parallel: u32,
+    /// Pipeline stages K (Table 1 "#Pipe").
+    pub pipeline_stages: u32,
+    /// GPUs doing Megatron-style operation partitioning per layer ("#Op").
+    pub op_parallel: u32,
+}
+
+impl ParallelConfig {
+    pub fn total_gpus(&self) -> u32 {
+        self.data_parallel * self.pipeline_stages * self.op_parallel
+    }
+}
+
+/// A full experimental setting: Table 1 row = model + cluster + parallelism.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Setting {
+    /// Table 1 row number, 1–10.
+    pub id: u32,
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub parallel: ParallelConfig,
+}
+
+impl Setting {
+    /// Layers per pipeline cell; the paper partitions uniformly so this
+    /// must divide exactly.
+    pub fn layers_per_stage(&self) -> u32 {
+        assert_eq!(
+            self.model.num_layers % self.parallel.pipeline_stages,
+            0,
+            "layers must divide evenly across pipeline stages"
+        );
+        self.model.num_layers / self.parallel.pipeline_stages
+    }
+
+    /// Sequences processed together per pipeline (B / #Data).
+    pub fn batch_per_pipeline(&self) -> u32 {
+        self.parallel.batch_size / self.parallel.data_parallel
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.model.num_layers % self.parallel.pipeline_stages != 0 {
+            return Err(format!(
+                "setting {}: {} layers not divisible by {} stages",
+                self.id, self.model.num_layers, self.parallel.pipeline_stages
+            ));
+        }
+        if self.parallel.batch_size % self.parallel.data_parallel != 0 {
+            return Err(format!(
+                "setting {}: batch {} not divisible by #data {}",
+                self.id, self.parallel.batch_size, self.parallel.data_parallel
+            ));
+        }
+        if self.parallel.total_gpus() > self.cluster.total_gpus() {
+            return Err(format!(
+                "setting {}: needs {} GPUs, cluster has {}",
+                self.id,
+                self.parallel.total_gpus(),
+                self.cluster.total_gpus()
+            ));
+        }
+        if self.model.hidden % self.model.num_heads != 0 {
+            return Err(format!("setting {}: hidden % heads != 0", self.id));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON (de)serialization — user-defined configs for the launcher
+// ---------------------------------------------------------------------------
+
+use crate::util::json::Json;
+
+impl Setting {
+    pub fn to_json(&self) -> Json {
+        let m = &self.model;
+        let c = &self.cluster;
+        let p = &self.parallel;
+        Json::obj(vec![
+            ("id", self.id.into()),
+            (
+                "model",
+                Json::obj(vec![
+                    ("name", m.name.as_str().into()),
+                    ("num_layers", m.num_layers.into()),
+                    ("hidden", m.hidden.into()),
+                    ("num_heads", m.num_heads.into()),
+                    ("seq_len", m.seq_len.into()),
+                    ("vocab", m.vocab.into()),
+                ]),
+            ),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("gpus_per_node", c.gpus_per_node.into()),
+                    ("num_nodes", c.num_nodes.into()),
+                    ("intra_bw_gbps", c.intra_bw_gbps.into()),
+                    ("inter_bw_gbps", c.inter_bw_gbps.into()),
+                    ("p2p_latency_ms", c.p2p_latency_ms.into()),
+                    (
+                        "gpu",
+                        Json::obj(vec![
+                            ("peak_tflops", c.gpu.peak_tflops.into()),
+                            ("efficiency", c.gpu.efficiency.into()),
+                            ("mem_gib", c.gpu.mem_gib.into()),
+                            ("launch_overhead_ms", c.gpu.launch_overhead_ms.into()),
+                            ("saturation_tokens_h2048", c.gpu.saturation_tokens_h2048.into()),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "parallel",
+                Json::obj(vec![
+                    ("batch_size", p.batch_size.into()),
+                    ("data_parallel", p.data_parallel.into()),
+                    ("pipeline_stages", p.pipeline_stages.into()),
+                    ("op_parallel", p.op_parallel.into()),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Setting, String> {
+        let u = |v: &Json, k: &str| -> Result<u32, String> {
+            v.req(k)?.as_u32().ok_or_else(|| format!("'{k}' must be a number"))
+        };
+        let f = |v: &Json, k: &str| -> Result<f64, String> {
+            v.req(k)?.as_f64().ok_or_else(|| format!("'{k}' must be a number"))
+        };
+        let m = v.req("model")?;
+        let c = v.req("cluster")?;
+        let g = c.req("gpu")?;
+        let p = v.req("parallel")?;
+        let s = Setting {
+            id: u(v, "id")?,
+            model: ModelConfig {
+                name: m.req("name")?.as_str().ok_or("'name' must be a string")?.to_string(),
+                num_layers: u(m, "num_layers")?,
+                hidden: u(m, "hidden")?,
+                num_heads: u(m, "num_heads")?,
+                seq_len: u(m, "seq_len")?,
+                vocab: u(m, "vocab")?,
+            },
+            cluster: ClusterConfig {
+                gpus_per_node: u(c, "gpus_per_node")?,
+                num_nodes: u(c, "num_nodes")?,
+                intra_bw_gbps: f(c, "intra_bw_gbps")?,
+                inter_bw_gbps: f(c, "inter_bw_gbps")?,
+                p2p_latency_ms: f(c, "p2p_latency_ms")?,
+                gpu: GpuSpec {
+                    peak_tflops: f(g, "peak_tflops")?,
+                    efficiency: f(g, "efficiency")?,
+                    mem_gib: f(g, "mem_gib")?,
+                    launch_overhead_ms: f(g, "launch_overhead_ms")?,
+                    saturation_tokens_h2048: f(g, "saturation_tokens_h2048")?,
+                },
+            },
+            parallel: ParallelConfig {
+                batch_size: u(p, "batch_size")?,
+                data_parallel: u(p, "data_parallel")?,
+                pipeline_stages: u(p, "pipeline_stages")?,
+                op_parallel: u(p, "op_parallel")?,
+            },
+        };
+        Ok(s)
+    }
+}
+
+/// Load a [`Setting`] from a JSON file (user-defined configs).
+pub fn load_setting(path: &std::path::Path) -> anyhow::Result<Setting> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    let s = Setting::from_json(&v).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    s.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(s)
+}
+
+/// Serialize a [`Setting`] to JSON text (for `terapipe configs --dump`).
+pub fn dump_setting(s: &Setting) -> String {
+    s.to_json().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper_names() {
+        // Table 1: the model names encode the param counts.
+        let b1 = presets::gpt3_1b();
+        let b13 = presets::gpt3_13b();
+        let b44 = presets::gpt3_44b();
+        let b175 = presets::gpt3_175b();
+        assert!((b1.num_params() as f64 / 1e9 - 1.2).abs() < 0.3, "{}", b1.num_params());
+        assert!((b13.num_params() as f64 / 1e9 - 13.0).abs() < 1.0);
+        assert!((b44.num_params() as f64 / 1e9 - 44.0).abs() < 2.0);
+        assert!((b175.num_params() as f64 / 1e9 - 175.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn all_table1_settings_validate() {
+        for s in presets::table1() {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn table1_has_ten_rows_with_paper_shapes() {
+        let t = presets::table1();
+        assert_eq!(t.len(), 10);
+        // spot-check row 9: GPT3-175B, 384 GPUs, B=2, 96 stages, op=4
+        let s9 = &t[8];
+        assert_eq!(s9.id, 9);
+        assert_eq!(s9.model.hidden, 12288);
+        assert_eq!(s9.parallel.pipeline_stages, 96);
+        assert_eq!(s9.parallel.op_parallel, 4);
+        assert_eq!(s9.parallel.batch_size, 2);
+        assert_eq!(s9.parallel.total_gpus(), 384);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = presets::setting(5);
+        let text = dump_setting(&s);
+        let back = Setting::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let v = crate::util::json::Json::parse(r#"{"id": 1}"#).unwrap();
+        let err = Setting::from_json(&v).unwrap_err();
+        assert!(err.contains("model"), "{err}");
+    }
+
+    #[test]
+    fn layers_per_stage_divides() {
+        let s = presets::setting(9);
+        assert_eq!(s.layers_per_stage(), 1); // 96 layers / 96 stages
+        let s = presets::setting(10);
+        assert_eq!(s.layers_per_stage(), 2); // 96 / 48
+    }
+
+    #[test]
+    fn invalid_settings_rejected() {
+        let mut s = presets::setting(1);
+        s.parallel.pipeline_stages = 7; // 24 % 7 != 0
+        assert!(s.validate().is_err());
+        let mut s = presets::setting(1);
+        s.parallel.data_parallel = 3;
+        assert!(s.validate().is_err());
+        let mut s = presets::setting(1);
+        s.cluster.num_nodes = 1;
+        assert!(s.validate().is_err());
+    }
+}

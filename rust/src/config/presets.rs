@@ -1,0 +1,144 @@
+//! The paper's exact experimental grid (Table 1) plus the model zoo.
+//!
+//! | id | model     | N  | H     | L    | #GPUs | B   | #Data | #Pipe | #Op |
+//! |----|-----------|----|-------|------|-------|-----|-------|-------|-----|
+//! | 1  | GPT3-1B   | 24 | 2048  | 2048 | 192   | 128 | 8     | 24    | 1   |
+//! | 2  | GPT3-1B   | 24 | 2048  | 2048 | 192   | 72  | 2     | 12    | 8   |
+//! | 3  | GPT3-1B   | 24 | 2048  | 2048 | 192   | 72  | 1     | 24    | 8   |
+//! | 4  | GPT3-13B  | 40 | 5120  | 2048 | 320   | 32  | 2     | 20    | 8   |
+//! | 5  | GPT3-13B  | 40 | 5120  | 2048 | 320   | 32  | 1     | 40    | 8   |
+//! | 6  | GPT3-44B  | 96 | 6144  | 2048 | 384   | 8   | 4     | 96    | 1   |
+//! | 7  | GPT3-44B  | 96 | 6144  | 2048 | 384   | 8   | 2     | 24    | 8   |
+//! | 8  | GPT3-44B  | 96 | 6144  | 2048 | 384   | 8   | 1     | 48    | 8   |
+//! | 9  | GPT3-175B | 96 | 12288 | 2048 | 384   | 2   | 1     | 96    | 4   |
+//! | 10 | GPT3-175B | 96 | 12288 | 2048 | 384   | 2   | 1     | 48    | 8   |
+
+use super::{ClusterConfig, ModelConfig, ParallelConfig, Setting};
+
+const GPT3_VOCAB: u32 = 50257;
+
+/// GPT3-1B (paper Table 1; matches GPT-3 XL geometry).
+pub fn gpt3_1b() -> ModelConfig {
+    ModelConfig {
+        name: "GPT3-1B".into(),
+        num_layers: 24,
+        hidden: 2048,
+        num_heads: 16,
+        seq_len: 2048,
+        vocab: GPT3_VOCAB,
+    }
+}
+
+/// GPT3-13B.
+pub fn gpt3_13b() -> ModelConfig {
+    ModelConfig {
+        name: "GPT3-13B".into(),
+        num_layers: 40,
+        hidden: 5120,
+        num_heads: 40,
+        seq_len: 2048,
+        vocab: GPT3_VOCAB,
+    }
+}
+
+/// GPT3-44B — the paper's custom model: 175B layout with half the hidden size.
+pub fn gpt3_44b() -> ModelConfig {
+    ModelConfig {
+        name: "GPT3-44B".into(),
+        num_layers: 96,
+        hidden: 6144,
+        num_heads: 48,
+        seq_len: 2048,
+        vocab: GPT3_VOCAB,
+    }
+}
+
+/// GPT3-175B — the largest GPT-3 (Brown et al., 2020).
+pub fn gpt3_175b() -> ModelConfig {
+    ModelConfig {
+        name: "GPT3-175B".into(),
+        num_layers: 96,
+        hidden: 12288,
+        num_heads: 96,
+        seq_len: 2048,
+        vocab: GPT3_VOCAB,
+    }
+}
+
+pub fn model_by_name(name: &str) -> Option<ModelConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "gpt3-1b" | "1b" => Some(gpt3_1b()),
+        "gpt3-13b" | "13b" => Some(gpt3_13b()),
+        "gpt3-44b" | "44b" => Some(gpt3_44b()),
+        "gpt3-175b" | "175b" => Some(gpt3_175b()),
+        _ => None,
+    }
+}
+
+fn cluster_for(total_gpus: u32) -> ClusterConfig {
+    ClusterConfig {
+        num_nodes: total_gpus / 8,
+        ..ClusterConfig::default()
+    }
+}
+
+fn setting_row(
+    id: u32,
+    model: ModelConfig,
+    gpus: u32,
+    batch: u32,
+    data: u32,
+    pipe: u32,
+    op: u32,
+) -> Setting {
+    let s = Setting {
+        id,
+        model,
+        cluster: cluster_for(gpus),
+        parallel: ParallelConfig {
+            batch_size: batch,
+            data_parallel: data,
+            pipeline_stages: pipe,
+            op_parallel: op,
+        },
+    };
+    debug_assert_eq!(s.parallel.total_gpus(), gpus, "row {id}");
+    s
+}
+
+/// All ten Table 1 rows, in order.
+pub fn table1() -> Vec<Setting> {
+    vec![
+        setting_row(1, gpt3_1b(), 192, 128, 8, 24, 1),
+        setting_row(2, gpt3_1b(), 192, 72, 2, 12, 8),
+        setting_row(3, gpt3_1b(), 192, 72, 1, 24, 8),
+        setting_row(4, gpt3_13b(), 320, 32, 2, 20, 8),
+        setting_row(5, gpt3_13b(), 320, 32, 1, 40, 8),
+        setting_row(6, gpt3_44b(), 384, 8, 4, 96, 1),
+        setting_row(7, gpt3_44b(), 384, 8, 2, 24, 8),
+        setting_row(8, gpt3_44b(), 384, 8, 1, 48, 8),
+        setting_row(9, gpt3_175b(), 384, 2, 1, 96, 4),
+        setting_row(10, gpt3_175b(), 384, 2, 1, 48, 8),
+    ]
+}
+
+/// Table 1 row by id (1-based, panics outside 1..=10).
+pub fn setting(id: u32) -> Setting {
+    table1()
+        .into_iter()
+        .find(|s| s.id == id)
+        .unwrap_or_else(|| panic!("no Table 1 setting {id}"))
+}
+
+/// The Fig. 7 variants: setting (5) with longer sequences; the paper
+/// shrinks B to fit memory (4096→8, 6144→4, 8192→2).
+pub fn long_sequence_settings() -> Vec<(u32, Setting)> {
+    let mut out = Vec::new();
+    for (seq_len, batch) in [(2048u32, 32u32), (4096, 8), (6144, 4), (8192, 2)] {
+        let mut s = setting(5);
+        s.model.seq_len = seq_len;
+        s.parallel.batch_size = batch;
+        out.push((seq_len, s));
+    }
+    out
+}

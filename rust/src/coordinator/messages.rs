@@ -1,0 +1,63 @@
+//! Message types flowing between the driver and the stage workers.
+
+use crate::runtime::tensor::HostTensor;
+
+/// Forward payload: raw tokens into stage 0, activations between stages.
+#[derive(Debug, Clone)]
+pub enum FwdPayload {
+    /// [B, S] token ids (driver → first stage).
+    Tokens(Vec<i32>),
+    /// [B, S, H] hidden states (stage k → stage k+1).
+    Act(HostTensor),
+}
+
+/// Worker inbox. One receiver per stage; senders held by the previous
+/// stage (Fwd), the next stage (Bwd) and the driver (Fwd to stage 0,
+/// Update/Shutdown to all).
+#[derive(Debug)]
+pub enum Msg {
+    Fwd {
+        mb: usize,
+        slice: usize,
+        /// Token offset of this slice in the sequence (= context length).
+        off: usize,
+        len: usize,
+        /// True iff this is the final slice of the microbatch (off+len=L);
+        /// triggers the backward sweep on the last stage.
+        last: bool,
+        payload: FwdPayload,
+        /// [B, S] next-token targets for this slice (used by the last
+        /// stage; carried along the pipe so no side channel is needed).
+        targets: Vec<i32>,
+    },
+    Bwd {
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        /// Gradient w.r.t. this stage's output for the slice, [B, S, H].
+        g_h: HostTensor,
+    },
+    /// Apply the optimizer with the accumulated gradients, then reset
+    /// per-step state.
+    Update { step: i32, lr: f32 },
+    /// Persist this stage's parameters under `dir` (init-file format, so a
+    /// checkpoint is loadable wherever the init weights are).
+    Checkpoint { dir: std::path::PathBuf },
+    Shutdown,
+}
+
+/// Driver inbox.
+#[derive(Debug)]
+pub enum DriverMsg {
+    /// Stage 0 finished backward for one (mb, slice).
+    BwdDone { mb: usize, slice: usize },
+    /// Last stage's summed token cross-entropy for one (mb, slice).
+    Loss { mb: usize, slice: usize, loss_sum: f32 },
+    /// A worker applied its optimizer update.
+    UpdateDone { stage: usize },
+    /// A worker wrote its checkpoint files.
+    CheckpointDone { stage: usize },
+    /// A worker hit an unrecoverable error.
+    Fatal { stage: usize, error: String },
+}

@@ -1,0 +1,117 @@
+//! The token-level pipeline training coordinator — TeraPipe's mechanism,
+//! actually executed.
+//!
+//! One OS thread per pipeline cell (stage), each owning its own PJRT
+//! client, compiled executables, parameters and Adam state. Token slices
+//! flow downstream as [`runtime::tensor::HostTensor`] activations over
+//! mpsc channels; gradients flow back upstream in reverse slice order,
+//! carrying the context-gradient accumulation that makes the pipelined
+//! backward *exactly* equal the unsliced one (validated by
+//! `rust/tests/coordinator_equivalence.rs` and by the python oracle tests
+//! on the same executables).
+//!
+//! Execution schedule (paper §3.2/3.4, per microbatch `mb` with slices
+//! s_1..s_M of one training sequence batch):
+//!
+//! ```text
+//! driver  → stage 0:   Fwd(mb, i, tokens sᵢ)            i = 1..M in order
+//! stage k → stage k+1: Fwd(mb, i, h)                    pipelined
+//! stage K-1:           on Fwd of the final slice, run head loss + begin
+//!                      Bwd(mb, i) for i = M..1 (reverse), sending
+//! stage k ← stage k+1: Bwd(mb, i, g_h)                  pipelined
+//! driver  ← stage 0:   BwdDone per slice; when all arrive → Update
+//! all stages:          Adam step (AOT executable), zero accumulators
+//! ```
+//!
+//! While one microbatch is in backward, the next microbatch's forward
+//! slices overlap on upstream stages — the fine-grained pipelining of
+//! Fig. 1d / Fig. 2c, driven purely by message arrival.
+
+pub mod messages;
+pub mod trainer;
+pub mod worker;
+
+pub use trainer::{train, StepReport, Trainer};
+
+use anyhow::{bail, Result};
+
+/// Training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Token slice lengths (each must be an AOT bucket; sum must be L).
+    pub slicing: Vec<usize>,
+    /// Microbatches per step (each is `batch` sequences; gradients
+    /// accumulate across them before the Adam step).
+    pub microbatches: usize,
+    pub steps: usize,
+    pub lr: f32,
+    /// RNG seed for the batcher.
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Validate against the manifest geometry.
+    pub fn validate(&self, seq_len: usize, buckets: &[usize]) -> Result<()> {
+        if self.slicing.is_empty() {
+            bail!("slicing must be non-empty");
+        }
+        let total: usize = self.slicing.iter().sum();
+        if total != seq_len {
+            bail!("slicing sums to {total}, sequence length is {seq_len}");
+        }
+        for &s in &self.slicing {
+            if !buckets.contains(&s) {
+                bail!("slice length {s} is not an AOT bucket ({buckets:?}); re-run `make artifacts` with it or pick bucketed lengths");
+            }
+        }
+        if self.microbatches == 0 || self.steps == 0 {
+            bail!("microbatches and steps must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// Slice offsets (prefix sums).
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.slicing.len());
+        let mut acc = 0;
+        for &s in &self.slicing {
+            offs.push(acc);
+            acc += s;
+        }
+        offs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_bucketed_cover() {
+        let c = TrainConfig {
+            slicing: vec![64, 32, 16, 16],
+            microbatches: 1,
+            steps: 1,
+            lr: 1e-3,
+            seed: 0,
+        };
+        c.validate(128, &[16, 32, 64, 128]).unwrap();
+        assert_eq!(c.offsets(), vec![0, 64, 96, 112]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_sum_and_bucket() {
+        let mut c = TrainConfig {
+            slicing: vec![64, 32],
+            microbatches: 1,
+            steps: 1,
+            lr: 1e-3,
+            seed: 0,
+        };
+        assert!(c.validate(128, &[16, 32, 64]).is_err()); // sums to 96
+        c.slicing = vec![100, 28];
+        assert!(c.validate(128, &[16, 32, 64]).is_err()); // not buckets
+        c.slicing = vec![];
+        assert!(c.validate(128, &[16]).is_err());
+    }
+}

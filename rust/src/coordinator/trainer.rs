@@ -1,0 +1,266 @@
+//! The driver: spawns stage workers, streams token slices into the
+//! pipeline, collects losses, and coordinates optimizer updates.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::messages::{DriverMsg, FwdPayload, Msg};
+use super::worker::{run_worker, WorkerCfg};
+use super::TrainConfig;
+use crate::data::Batch;
+use crate::runtime::manifest::Manifest;
+
+/// Per-step telemetry.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    pub step: usize,
+    /// Mean per-token cross-entropy (nats).
+    pub loss: f64,
+    pub wall_ms: f64,
+    /// Tokens processed this step (microbatches · batch · L).
+    pub tokens: usize,
+}
+
+/// A running pipeline: workers + channel endpoints.
+pub struct Trainer {
+    pub manifest: Manifest,
+    cfg: TrainConfig,
+    /// Global step counter (continues across checkpoint resume).
+    steps_done: usize,
+    to_first: Sender<Msg>,
+    to_all: Vec<Sender<Msg>>,
+    from_workers: Receiver<DriverMsg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Trainer {
+    /// Spawn one worker thread per stage (each compiles its own
+    /// executables on its own PJRT client).
+    pub fn new(artifacts: &Path, cfg: TrainConfig) -> Result<Trainer> {
+        Self::new_with_resume(artifacts, cfg, None)
+    }
+
+    /// Like [`Trainer::new`] but loading parameters from a checkpoint dir
+    /// written by [`Trainer::save_checkpoint`].
+    pub fn new_with_resume(
+        artifacts: &Path,
+        cfg: TrainConfig,
+        resume_from: Option<PathBuf>,
+    ) -> Result<Trainer> {
+        let manifest = Manifest::load(artifacts)?;
+        cfg.validate(manifest.model.seq_len, &manifest.buckets)?;
+        let k = manifest.model.num_stages;
+
+        let (driver_tx, from_workers) = channel::<DriverMsg>();
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(k);
+        let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+
+        let mut handles = Vec::with_capacity(k);
+        for stage in 0..k {
+            let cfg_w = WorkerCfg {
+                stage,
+                num_stages: k,
+                artifacts: PathBuf::from(artifacts),
+                resume_from: resume_from.clone(),
+                inbox: receivers[stage].take().unwrap(),
+                next: (stage + 1 < k).then(|| senders[stage + 1].clone()),
+                prev: (stage > 0).then(|| senders[stage - 1].clone()),
+                driver: driver_tx.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("terapipe-stage-{stage}"))
+                    .spawn(move || run_worker(cfg_w))?,
+            );
+        }
+
+        let steps_done = resume_from
+            .as_ref()
+            .and_then(|d| std::fs::read_to_string(d.join("meta.json")).ok())
+            .and_then(|t| crate::util::json::Json::parse(&t).ok())
+            .and_then(|v| v.get("next_step").and_then(|s| s.as_usize()))
+            .unwrap_or(0);
+
+        Ok(Trainer {
+            manifest,
+            cfg,
+            steps_done,
+            to_first: senders[0].clone(),
+            to_all: senders,
+            from_workers,
+            handles,
+        })
+    }
+
+    /// One synchronous training step over `microbatches` batches.
+    /// Returns (mean per-token loss, tokens processed).
+    pub fn step(&mut self, step_idx: usize, batches: &[Batch]) -> Result<(f64, usize)> {
+        let m = &self.manifest.model;
+        let cfg = &self.cfg;
+        assert_eq!(batches.len(), cfg.microbatches);
+        let offs = cfg.offsets();
+        let num_slices = cfg.slicing.len();
+
+        // ---- stream forward slices into the pipe ----
+        for (mb, batch) in batches.iter().enumerate() {
+            assert_eq!(batch.batch, m.batch);
+            assert_eq!(batch.seq_len, m.seq_len);
+            for (i, (&len, &off)) in cfg.slicing.iter().zip(&offs).enumerate() {
+                let mut tokens = Vec::with_capacity(m.batch * len);
+                let mut targets = Vec::with_capacity(m.batch * len);
+                for b in 0..m.batch {
+                    let row = b * m.seq_len + off;
+                    tokens.extend_from_slice(&batch.tokens[row..row + len]);
+                    targets.extend_from_slice(&batch.targets[row..row + len]);
+                }
+                self.to_first
+                    .send(Msg::Fwd {
+                        mb,
+                        slice: i,
+                        off,
+                        len,
+                        last: i == num_slices - 1,
+                        payload: FwdPayload::Tokens(tokens),
+                        targets,
+                    })
+                    .map_err(|_| anyhow!("pipeline stage 0 is down"))?;
+            }
+        }
+
+        // ---- collect losses and backward completions ----
+        let expected = cfg.microbatches * num_slices;
+        let mut losses = 0f64;
+        let mut loss_cnt = 0usize;
+        let mut bwd_done = 0usize;
+        while loss_cnt < expected || bwd_done < expected {
+            match self.from_workers.recv() {
+                Ok(DriverMsg::Loss { loss_sum, .. }) => {
+                    losses += loss_sum as f64;
+                    loss_cnt += 1;
+                }
+                Ok(DriverMsg::BwdDone { .. }) => bwd_done += 1,
+                Ok(DriverMsg::Fatal { stage, error }) => {
+                    bail!("stage {stage} failed: {error}")
+                }
+                Ok(other) => bail!("unexpected {other:?} mid-step"),
+                Err(_) => bail!("all workers hung up"),
+            }
+        }
+
+        // ---- optimizer update on every stage ----
+        let global_step = self.steps_done + 1; // 1-based Adam bias correction
+        let _ = step_idx;
+        for tx in &self.to_all {
+            tx.send(Msg::Update {
+                step: global_step as i32,
+                lr: cfg.lr,
+            })
+            .map_err(|_| anyhow!("worker hung up before update"))?;
+        }
+        let mut updates = 0;
+        while updates < self.to_all.len() {
+            match self.from_workers.recv() {
+                Ok(DriverMsg::UpdateDone { .. }) => updates += 1,
+                Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
+                Ok(_) => bail!("unexpected message during update"),
+                Err(_) => bail!("all workers hung up"),
+            }
+        }
+
+        self.steps_done += 1;
+        let tokens = self.cfg.microbatches * self.manifest.model.batch * self.manifest.model.seq_len;
+        Ok((losses / tokens as f64, tokens))
+    }
+
+    /// Drive `cfg.steps` steps pulling microbatches from `next_batch`.
+    pub fn train(
+        &mut self,
+        mut next_batch: impl FnMut() -> Batch,
+        mut on_step: impl FnMut(&StepReport),
+    ) -> Result<Vec<StepReport>> {
+        let steps = self.cfg.steps;
+        let mbs = self.cfg.microbatches;
+        let mut reports = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let batches: Vec<Batch> = (0..mbs).map(|_| next_batch()).collect();
+            let t0 = Instant::now();
+            let (loss, tokens) = self.step(step, &batches)?;
+            let rep = StepReport {
+                step,
+                loss,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                tokens,
+            };
+            on_step(&rep);
+            reports.push(rep);
+        }
+        Ok(reports)
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Persist all stages' parameters under `dir` (init-file layout; load
+    /// with [`Trainer::new_with_resume`]).
+    pub fn save_checkpoint(&mut self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join("meta.json"),
+            crate::util::json::Json::obj(vec![("next_step", self.steps_done.into())]).to_string(),
+        )?;
+        for tx in &self.to_all {
+            tx.send(Msg::Checkpoint { dir: dir.to_path_buf() })
+                .map_err(|_| anyhow!("worker hung up before checkpoint"))?;
+        }
+        let mut done = 0;
+        while done < self.to_all.len() {
+            match self.from_workers.recv() {
+                Ok(DriverMsg::CheckpointDone { .. }) => done += 1,
+                Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
+                Ok(_) => bail!("unexpected message during checkpoint"),
+                Err(_) => bail!("all workers hung up"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown (also called on drop).
+    pub fn shutdown(&mut self) {
+        for tx in &self.to_all {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Trainer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Convenience one-call API: spawn, train on a batcher, shut down.
+pub fn train(
+    artifacts: &Path,
+    cfg: TrainConfig,
+    corpus: &str,
+    mut on_step: impl FnMut(&StepReport),
+) -> Result<Vec<StepReport>> {
+    let mut trainer = Trainer::new(artifacts, cfg)?;
+    let m = trainer.manifest.model.clone();
+    let seed = trainer.cfg.seed;
+    let mut batcher = crate::data::Batcher::new(corpus, m.batch, m.seq_len, seed);
+    trainer.train(|| batcher.next_batch(), &mut on_step)
+}

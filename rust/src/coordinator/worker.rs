@@ -1,0 +1,583 @@
+//! Stage worker: one OS thread per pipeline cell.
+//!
+//! Owns parameters + Adam state for its layers (plus the embedding on the
+//! first stage and the LM head on the last), the per-microbatch KV context
+//! buffers, stored slice inputs for the recompute-based backward, and the
+//! context-gradient accumulators. All compute goes through AOT
+//! executables; this file is pure orchestration and buffer bookkeeping.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::messages::{DriverMsg, FwdPayload, Msg};
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{stage_exe_names, StageRuntime};
+
+/// Bookkeeping for one token slice of one microbatch.
+#[derive(Debug, Clone)]
+struct SliceMeta {
+    off: usize,
+    len: usize,
+    /// Slice token ids (kept on the first stage for embed_bwd).
+    tokens: Option<Vec<i32>>,
+    /// Slice targets (kept on the last stage for head_bwd).
+    targets: Vec<i32>,
+}
+
+/// Per-microbatch in-flight state (the "activations of the whole
+/// minibatch" the paper stores; freed after the microbatch's backward).
+struct MbState {
+    k_ctx: HostTensor,
+    v_ctx: HostTensor,
+    g_kacc: HostTensor,
+    g_vacc: HostTensor,
+    /// Stage-input activation per slice (recompute-based bwd needs it).
+    h_in: HashMap<usize, HostTensor>,
+    /// Last stage only: stage-output activation per slice (head input).
+    h_out: HashMap<usize, HostTensor>,
+    meta: HashMap<usize, SliceMeta>,
+}
+
+impl MbState {
+    fn new(dims: &ModelDims) -> Self {
+        let kv = dims.kv_shape();
+        MbState {
+            k_ctx: HostTensor::zeros_f32(&kv),
+            v_ctx: HostTensor::zeros_f32(&kv),
+            g_kacc: HostTensor::zeros_f32(&kv),
+            g_vacc: HostTensor::zeros_f32(&kv),
+            h_in: HashMap::new(),
+            h_out: HashMap::new(),
+            meta: HashMap::new(),
+        }
+    }
+}
+
+/// An optimizer-managed parameter group backed by `adam_<group>`.
+///
+/// Parameters are kept both as host tensors (for the optimizer step) and
+/// as pre-converted PJRT literals: they only change at `apply`, but are
+/// inputs to *every* slice executable — caching the upload halves the
+/// per-slice host work (EXPERIMENTS.md §Perf L3 iteration 2).
+struct ParamGroup {
+    exe: String,
+    params: Vec<HostTensor>,
+    /// Cached literal uploads of `params` (invalidated by `apply`).
+    lits: Vec<xla::Literal>,
+    grads: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+}
+
+impl ParamGroup {
+    fn new(exe: &str, params: Vec<HostTensor>) -> Result<Self> {
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros_f32(&p.shape))
+            .collect();
+        let lits = params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamGroup {
+            exe: exe.to_string(),
+            lits,
+            grads: zeros.clone(),
+            m: zeros.clone(),
+            v: zeros,
+            params,
+        })
+    }
+
+    fn accumulate(&mut self, slice_grads: &[HostTensor]) {
+        assert_eq!(slice_grads.len(), self.grads.len(), "{} grad arity", self.exe);
+        for (g, s) in self.grads.iter_mut().zip(slice_grads) {
+            g.add_assign(s);
+        }
+    }
+
+    fn apply(&mut self, rt: &StageRuntime, step: i32, lr: f32) -> Result<()> {
+        let n = self.params.len();
+        let mut inputs = Vec::with_capacity(4 * n + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.grads.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar_i32(step));
+        inputs.push(HostTensor::scalar_f32(lr));
+        let mut out = rt.run(&self.exe, &inputs)?;
+        // outputs: params, m, v — in that order
+        self.v = out.split_off(2 * n);
+        self.m = out.split_off(n);
+        self.params = out;
+        self.lits = self
+            .params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        for g in &mut self.grads {
+            g.fill_zero();
+        }
+        Ok(())
+    }
+}
+
+/// `init/stage0.w.bin` → `init/m.stage0.w.bin` (same dir, prefixed stem).
+fn moment_path(dir: &std::path::Path, file: &str, prefix: &str) -> PathBuf {
+    let p = std::path::Path::new(file);
+    let name = p.file_name().unwrap().to_string_lossy();
+    dir.join(p.parent().unwrap_or_else(|| std::path::Path::new("")))
+        .join(format!("{prefix}.{name}"))
+}
+
+/// Worker configuration handed to [`run_worker`].
+pub struct WorkerCfg {
+    pub stage: usize,
+    pub num_stages: usize,
+    pub artifacts: PathBuf,
+    /// Load parameters from this checkpoint dir instead of artifacts/init.
+    pub resume_from: Option<PathBuf>,
+    pub inbox: Receiver<Msg>,
+    /// Next stage's inbox (forward direction), if any.
+    pub next: Option<Sender<Msg>>,
+    /// Previous stage's inbox (backward direction), if any.
+    pub prev: Option<Sender<Msg>>,
+    pub driver: Sender<DriverMsg>,
+}
+
+/// Thread body. Errors are reported to the driver as `Fatal`.
+pub fn run_worker(cfg: WorkerCfg) {
+    let stage = cfg.stage;
+    let driver = cfg.driver.clone();
+    if let Err(e) = Worker::init_and_run(cfg) {
+        let _ = driver.send(DriverMsg::Fatal {
+            stage,
+            error: format!("{e:#}"),
+        });
+    }
+}
+
+struct Worker {
+    stage: usize,
+    is_first: bool,
+    is_last: bool,
+    rt: StageRuntime,
+    dims: ModelDims,
+    stage_group: ParamGroup,
+    embed_group: Option<ParamGroup>,
+    head_group: Option<ParamGroup>,
+    mbs: HashMap<usize, MbState>,
+    next: Option<Sender<Msg>>,
+    prev: Option<Sender<Msg>>,
+    driver: Sender<DriverMsg>,
+}
+
+impl Worker {
+    fn init_and_run(cfg: WorkerCfg) -> Result<()> {
+        let WorkerCfg {
+            stage,
+            num_stages,
+            artifacts,
+            resume_from,
+            inbox,
+            next,
+            prev,
+            driver,
+        } = cfg;
+        let is_first = stage == 0;
+        let is_last = stage == num_stages - 1;
+
+        let manifest = crate::runtime::manifest::Manifest::load(&artifacts)?;
+        let names = stage_exe_names(stage, num_stages, &manifest.buckets);
+        let rt = StageRuntime::load(&artifacts, &names)
+            .with_context(|| format!("stage {stage}: loading runtime"))?;
+        let dims = rt.manifest.model.clone();
+
+        // Parameters come from artifacts/init, or from a checkpoint dir
+        // (same file layout — see Msg::Checkpoint).
+        // Parameters (and, when resuming, Adam moments) from artifacts/init
+        // or a checkpoint dir.
+        let read_file = |path: std::path::PathBuf, shape: &[usize]| -> Result<HostTensor> {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading checkpoint {}", path.display()))?;
+            let n: usize = shape.iter().product::<usize>().max(1);
+            anyhow::ensure!(bytes.len() == 4 * n, "{}: wrong size", path.display());
+            let floats = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(HostTensor::f32(shape, floats))
+        };
+        let mk_group = |exe: &str,
+                        entries: &[crate::runtime::manifest::InitEntry]|
+         -> Result<ParamGroup> {
+            match &resume_from {
+                None => ParamGroup::new(exe, rt.manifest.load_init(entries)?),
+                Some(dir) => {
+                    let params = entries
+                        .iter()
+                        .map(|e| read_file(dir.join(&e.file), &e.shape))
+                        .collect::<Result<Vec<_>>>()?;
+                    let mut g = ParamGroup::new(exe, params)?;
+                    // moments are optional (params-only checkpoints load too)
+                    if entries
+                        .iter()
+                        .all(|e| moment_path(dir, &e.file, "m").exists())
+                    {
+                        g.m = entries
+                            .iter()
+                            .map(|e| read_file(moment_path(dir, &e.file, "m"), &e.shape))
+                            .collect::<Result<Vec<_>>>()?;
+                        g.v = entries
+                            .iter()
+                            .map(|e| read_file(moment_path(dir, &e.file, "v"), &e.shape))
+                            .collect::<Result<Vec<_>>>()?;
+                    }
+                    Ok(g)
+                }
+            }
+        };
+        let stage_group = mk_group("adam_stage", &rt.manifest.init_stages[stage])?;
+        let embed_group = is_first
+            .then(|| mk_group("adam_embed", &rt.manifest.init_embed))
+            .transpose()?;
+        let head_group = is_last
+            .then(|| mk_group("adam_head", &rt.manifest.init_head))
+            .transpose()?;
+        drop(manifest);
+
+        let mut w = Worker {
+            stage,
+            is_first,
+            is_last,
+            rt,
+            dims,
+            stage_group,
+            embed_group,
+            head_group,
+            mbs: HashMap::new(),
+            next,
+            prev,
+            driver,
+        };
+
+        while let Ok(msg) = inbox.recv() {
+            match msg {
+                Msg::Shutdown => break,
+                Msg::Update { step, lr } => w.handle_update(step, lr)?,
+                Msg::Checkpoint { dir } => w.handle_checkpoint(&dir)?,
+                Msg::Fwd {
+                    mb,
+                    slice,
+                    off,
+                    len,
+                    last,
+                    payload,
+                    targets,
+                } => w.handle_fwd(mb, slice, off, len, last, payload, targets)?,
+                Msg::Bwd {
+                    mb,
+                    slice,
+                    off,
+                    len,
+                    g_h,
+                } => w.handle_bwd(mb, slice, off, len, g_h)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Write this stage's parameter groups under `dir` in the init-file
+    /// layout (init/stage{k}.name.bin etc.), so checkpoints are loadable
+    /// via `resume_from`.
+    fn handle_checkpoint(&mut self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir.join("init"))?;
+        let manifest = &self.rt.manifest;
+        let groups: Vec<(&[crate::runtime::manifest::InitEntry], &ParamGroup)> = {
+            let mut v: Vec<(&[crate::runtime::manifest::InitEntry], &ParamGroup)> = vec![(
+                manifest.init_stages[self.stage].as_slice(),
+                &self.stage_group,
+            )];
+            if let Some(g) = &self.embed_group {
+                v.push((manifest.init_embed.as_slice(), g));
+            }
+            if let Some(g) = &self.head_group {
+                v.push((manifest.init_head.as_slice(), g));
+            }
+            v
+        };
+        let write = |path: std::path::PathBuf, t: &HostTensor| -> Result<()> {
+            let bytes: Vec<u8> = t.as_f32().iter().flat_map(|x| x.to_le_bytes()).collect();
+            std::fs::write(path, bytes)?;
+            Ok(())
+        };
+        for (entries, group) in groups {
+            for (i, e) in entries.iter().enumerate() {
+                write(dir.join(&e.file), &group.params[i])?;
+                // optimizer moments beside the params, "m."/"v." prefixed
+                write(moment_path(dir, &e.file, "m"), &group.m[i])?;
+                write(moment_path(dir, &e.file, "v"), &group.v[i])?;
+            }
+        }
+        self.driver
+            .send(DriverMsg::CheckpointDone { stage: self.stage })
+            .ok();
+        Ok(())
+    }
+
+    fn handle_update(&mut self, step: i32, lr: f32) -> Result<()> {
+        self.stage_group.apply(&self.rt, step, lr)?;
+        if let Some(g) = self.embed_group.as_mut() {
+            g.apply(&self.rt, step, lr)?;
+        }
+        if let Some(g) = self.head_group.as_mut() {
+            g.apply(&self.rt, step, lr)?;
+        }
+        self.mbs.clear();
+        self.driver
+            .send(DriverMsg::UpdateDone { stage: self.stage })
+            .ok();
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_fwd(
+        &mut self,
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        last: bool,
+        payload: FwdPayload,
+        targets: Vec<i32>,
+    ) -> Result<()> {
+        // 1. Materialize this stage's input activation.
+        let (h_in, tokens) = match payload {
+            FwdPayload::Tokens(tokens) => {
+                let eg = self
+                    .embed_group
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("tokens arrived at non-first stage {}", self.stage))?;
+                let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens.clone()).to_literal()?;
+                let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+                let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
+                args.push(&tok_l);
+                args.push(&off_l);
+                let h = self
+                    .rt
+                    .run_literal_refs(&format!("embed_fwd_s{len}"), &args)?
+                    .remove(0);
+                (h, Some(tokens))
+            }
+            FwdPayload::Act(h) => (h, None),
+        };
+
+        // 2. Stage forward with the KV context accumulated so far.
+        let st = self.mbs.entry(mb).or_insert_with(|| MbState::new(&self.dims));
+        let h_l = h_in.to_literal()?;
+        let k_l = st.k_ctx.to_literal()?;
+        let v_l = st.v_ctx.to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
+        args.extend([&h_l, &k_l, &v_l, &off_l]);
+        let mut out = self.rt.run_literal_refs(&format!("stage_fwd_s{len}"), &args)?;
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let h_out = out.pop().unwrap();
+
+        // 3. Grow the context buffers (axis 2 = token position) and stash
+        // what backward will need.
+        st.k_ctx.write_at_axis(2, off, &k_new);
+        st.v_ctx.write_at_axis(2, off, &v_new);
+        st.h_in.insert(slice, h_in);
+        st.meta.insert(
+            slice,
+            SliceMeta {
+                off,
+                len,
+                tokens,
+                targets: targets.clone(),
+            },
+        );
+
+        if self.is_last {
+            // 4a. Head loss for this slice (reported to the driver).
+            let hg = self.head_group.as_ref().unwrap();
+            let tg_l = HostTensor::i32(&[self.dims.batch, len], targets).to_literal()?;
+            let h_l = h_out.to_literal()?;
+            let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
+            args.extend([&h_l, &tg_l]);
+            let loss = self.rt.run_literal_refs(&format!("head_fwd_s{len}"), &args)?.remove(0);
+            self.driver
+                .send(DriverMsg::Loss {
+                    mb,
+                    slice,
+                    loss_sum: loss.as_f32()[0],
+                })
+                .ok();
+            self.mbs.get_mut(&mb).unwrap().h_out.insert(slice, h_out);
+
+            // 4b. Final slice arrived → run the backward sweep for this
+            // microbatch in reverse slice order.
+            if last {
+                self.backward_sweep(mb)?;
+                self.mbs.remove(&mb);
+            }
+        } else {
+            // 4. Hand the activation to the next stage.
+            self.next
+                .as_ref()
+                .unwrap()
+                .send(Msg::Fwd {
+                    mb,
+                    slice,
+                    off,
+                    len,
+                    last,
+                    payload: FwdPayload::Act(h_out),
+                    targets,
+                })
+                .map_err(|_| anyhow!("stage {}: next stage hung up", self.stage))?;
+        }
+        Ok(())
+    }
+
+    fn handle_bwd(&mut self, mb: usize, slice: usize, off: usize, len: usize, g_h: HostTensor) -> Result<()> {
+        let g_h_in = self.backward_one_slice(mb, slice, off, len, g_h)?;
+        self.finish_bwd_slice(mb, slice, off, len, g_h_in)?;
+        if self.mbs.get(&mb).map(|s| s.h_in.is_empty()).unwrap_or(false) {
+            self.mbs.remove(&mb);
+        }
+        Ok(())
+    }
+
+    /// Backward for one slice on this stage: reads the accumulated K/V
+    /// grads for the slice's own keys, runs the recompute-based stage_bwd,
+    /// folds returned context grads into the accumulators and param grads
+    /// into the group. Returns grad w.r.t. the stage input.
+    fn backward_one_slice(
+        &mut self,
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        g_h: HostTensor,
+    ) -> Result<HostTensor> {
+        let st = self
+            .mbs
+            .get_mut(&mb)
+            .ok_or_else(|| anyhow!("stage {}: Bwd for unknown mb {mb}", self.stage))?;
+        let h_in = st
+            .h_in
+            .remove(&slice)
+            .ok_or_else(|| anyhow!("missing stored activation for slice {slice}"))?;
+        // Gradients w.r.t. this slice's own K/V, deposited by later slices
+        // (zero for the final slice — nothing attends past it).
+        let g_know = st.g_kacc.read_at_axis(2, off, len);
+        let g_vnow = st.g_vacc.read_at_axis(2, off, len);
+
+        let h_l = h_in.to_literal()?;
+        let k_l = st.k_ctx.to_literal()?;
+        let v_l = st.v_ctx.to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let gh_l = g_h.to_literal()?;
+        let gk_l = g_know.to_literal()?;
+        let gv_l = g_vnow.to_literal()?;
+        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
+        args.extend([&h_l, &k_l, &v_l, &off_l, &gh_l, &gk_l, &gv_l]);
+        let mut out = self.rt.run_literal_refs(&format!("stage_bwd_s{len}"), &args)?;
+        let g_vctx = out.pop().unwrap();
+        let g_kctx = out.pop().unwrap();
+        let g_h_in = out.pop().unwrap();
+        self.stage_group.accumulate(&out);
+        st.g_kacc.add_assign(&g_kctx);
+        st.g_vacc.add_assign(&g_vctx);
+        Ok(g_h_in)
+    }
+
+    /// Route the input-gradient of a finished backward slice: upstream, or
+    /// into embed_bwd on the first stage (+ notify the driver).
+    fn finish_bwd_slice(
+        &mut self,
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        g_h_in: HostTensor,
+    ) -> Result<()> {
+        if self.is_first {
+            let meta = self
+                .mbs
+                .get(&mb)
+                .and_then(|s| s.meta.get(&slice))
+                .cloned()
+                .ok_or_else(|| anyhow!("missing slice meta"))?;
+            let tokens = meta
+                .tokens
+                .ok_or_else(|| anyhow!("first stage lost slice tokens"))?;
+            let eg = self.embed_group.as_ref().unwrap();
+            let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens).to_literal()?;
+            let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+            let gh_l = g_h_in.to_literal()?;
+            let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
+            args.extend([&tok_l, &off_l, &gh_l]);
+            let out = self.rt.run_literal_refs(&format!("embed_bwd_s{len}"), &args)?;
+            let eg = self.embed_group.as_mut().unwrap();
+            eg.accumulate(&out);
+            self.driver.send(DriverMsg::BwdDone { mb, slice }).ok();
+        } else {
+            self.prev
+                .as_ref()
+                .unwrap()
+                .send(Msg::Bwd {
+                    mb,
+                    slice,
+                    off,
+                    len,
+                    g_h: g_h_in,
+                })
+                .map_err(|_| anyhow!("stage {}: prev stage hung up", self.stage))?;
+        }
+        Ok(())
+    }
+
+    /// Last stage: backward over all slices of a microbatch in reverse
+    /// order, seeding each slice with its head gradient.
+    fn backward_sweep(&mut self, mb: usize) -> Result<()> {
+        let mut order: Vec<usize> = self
+            .mbs
+            .get(&mb)
+            .map(|s| s.meta.keys().copied().collect())
+            .unwrap_or_default();
+        order.sort_unstable_by(|a, b| b.cmp(a)); // reverse slice order
+
+        for slice in order {
+            let (meta, h_out) = {
+                let st = self.mbs.get_mut(&mb).unwrap();
+                let meta = st.meta.get(&slice).cloned().unwrap();
+                let h_out = st
+                    .h_out
+                    .remove(&slice)
+                    .ok_or_else(|| anyhow!("missing head input for slice {slice}"))?;
+                (meta, h_out)
+            };
+            let hg = self.head_group.as_ref().unwrap();
+            let tg_l = HostTensor::i32(&[self.dims.batch, meta.len], meta.targets.clone()).to_literal()?;
+            let h_l = h_out.to_literal()?;
+            let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
+            args.extend([&h_l, &tg_l]);
+            let mut out = self.rt.run_literal_refs(&format!("head_bwd_s{}", meta.len), &args)?;
+            let hg = self.head_group.as_mut().unwrap();
+            let g_h = out.pop().unwrap();
+            hg.accumulate(&out);
+
+            let g_h_in = self.backward_one_slice(mb, slice, meta.off, meta.len, g_h)?;
+            self.finish_bwd_slice(mb, slice, meta.off, meta.len, g_h_in)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,380 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §5 maps each to its bench target).
+//!
+//! All functions are pure library code so `terapipe <fig…>` subcommands,
+//! the `benches/` binaries, and the tests share one implementation. The
+//! GPU testbed is the calibrated analytic model + discrete-event simulator
+//! (DESIGN.md §2); the paper's own published numbers are embedded as
+//! constants for side-by-side reporting in EXPERIMENTS.md.
+
+use crate::config::{presets, Setting};
+use crate::perfmodel::analytic::{fig3_model, AnalyticModel};
+use crate::sim::schedule::{build_plan, PhaseCost};
+use crate::sim::{engine::simulate, SimResult};
+use crate::solver::joint::{gpipe_plan, solve_joint_analytic, JointOpts};
+use crate::solver::JointScheme;
+
+/// Analytic phase costs for the simulator (fwd/bwd split from the model).
+pub struct AnalyticPhase<'a> {
+    pub base: &'a AnalyticModel,
+}
+
+impl PhaseCost for AnalyticPhase<'_> {
+    fn fwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        self.base.with_microbatch(b).t_fwd(i, j)
+    }
+    fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        let m = self.base.with_microbatch(b);
+        m.bwd_ratio * m.t_fwd(i, j)
+    }
+    fn comm_ms(&self, b: u32, i: u32) -> f64 {
+        use crate::perfmodel::CostModel;
+        self.base.with_microbatch(b).t_comm(i)
+    }
+}
+
+/// One w/o-vs-w/ TeraPipe comparison row (Fig. 5 / Table 2).
+#[derive(Debug, Clone)]
+pub struct ComparisonRow {
+    pub setting: u32,
+    pub model_name: String,
+    pub gpipe_scheme: String,
+    pub gpipe_latency_s: f64,
+    pub gpipe_tflops: f64,
+    pub terapipe_scheme: String,
+    pub terapipe_latency_s: f64,
+    pub terapipe_tflops: f64,
+    pub speedup: f64,
+    /// The paper's measured latencies (s) for this row, for reference.
+    pub paper_gpipe_s: f64,
+    pub paper_terapipe_s: f64,
+}
+
+/// Paper Table 2 latency columns (mean seconds), rows 1–10.
+pub const PAPER_TABLE2: [(f64, f64); 10] = [
+    (1.517, 1.254),
+    (1.018, 1.018),
+    (0.913, 0.913),
+    (2.637, 1.891),
+    (1.863, 1.328),
+    (13.319, 7.103),
+    (4.311, 2.771),
+    (2.662, 1.111),
+    (9.990, 1.481),
+    (5.822, 1.160),
+];
+
+/// Simulated iteration latency (ms) of a joint scheme on a setting:
+/// pipeline makespan (flush schedule, as the paper's implementation) plus
+/// the data-parallel gradient allreduce.
+pub fn sim_iteration_ms(setting: &Setting, scheme: &JointScheme) -> SimResult {
+    let base = AnalyticModel::from_setting(setting, 1);
+    let cost = AnalyticPhase { base: &base };
+    let plan = build_plan(
+        &cost,
+        scheme,
+        setting.parallel.pipeline_stages as usize,
+        None,
+        true,
+    );
+    let mut r = simulate(&plan).expect("uncapped flush schedule cannot deadlock");
+    r.makespan_ms += base.dp_allreduce_ms(setting.parallel.data_parallel);
+    r
+}
+
+/// Model FLOPs utilization per GPU (TFLOP/s), the paper's last column:
+/// 6 · #params · B · L / (#GPUs · latency).
+pub fn tflops_per_gpu(setting: &Setting, latency_s: f64) -> f64 {
+    let flops = 6.0
+        * setting.model.num_params() as f64
+        * setting.parallel.batch_size as f64
+        * setting.model.seq_len as f64;
+    flops / (setting.parallel.total_gpus() as f64 * latency_s) / 1e12
+}
+
+/// Solve + simulate one Table 1 setting both ways (Fig. 5 / Table 2 row).
+pub fn fig5_row(setting_id: u32, opts: &JointOpts) -> ComparisonRow {
+    fig5_row_for(&presets::setting(setting_id), opts)
+}
+
+/// Same, over a caller-supplied (possibly customized) setting — used by
+/// the calibration sweep (`terapipe calibrate`, EXPERIMENTS.md §Calib).
+pub fn fig5_row_for(setting: &Setting, opts: &JointOpts) -> ComparisonRow {
+    let setting_id = setting.id;
+    let base = AnalyticModel::from_setting(setting, 1);
+    let b_pipe = setting.batch_per_pipeline();
+    let k = setting.parallel.pipeline_stages;
+    let l = setting.model.seq_len;
+
+    let gpipe = gpipe_plan(&|b| base.with_microbatch(b), b_pipe, l, k);
+    let tera = solve_joint_analytic(&base, b_pipe, l, k, opts);
+
+    let g_ms = sim_iteration_ms(setting, &gpipe).makespan_ms;
+    let t_ms = sim_iteration_ms(setting, &tera).makespan_ms;
+    let (pg, pt) = PAPER_TABLE2[setting_id as usize - 1];
+
+    ComparisonRow {
+        setting: setting_id,
+        model_name: setting.model.name.clone(),
+        gpipe_scheme: gpipe.notation(),
+        gpipe_latency_s: g_ms / 1e3,
+        gpipe_tflops: tflops_per_gpu(setting, g_ms / 1e3),
+        terapipe_scheme: tera.notation(),
+        terapipe_latency_s: t_ms / 1e3,
+        terapipe_tflops: tflops_per_gpu(setting, t_ms / 1e3),
+        speedup: g_ms / t_ms,
+        paper_gpipe_s: pg,
+        paper_terapipe_s: pt,
+    }
+}
+
+/// All ten rows (Fig. 5).
+pub fn fig5_all(opts: &JointOpts) -> Vec<ComparisonRow> {
+    (1..=10).map(|i| fig5_row(i, opts)).collect()
+}
+
+/// Fig. 3: single-layer forward time + throughput vs token count on one
+/// V100 (analytic). Returns (tokens, ms, tokens/ms).
+pub fn fig3_curve(model: &crate::config::ModelConfig, max_tokens: u32) -> Vec<(u32, f64, f64)> {
+    let m = fig3_model(model);
+    let mut out = Vec::new();
+    let mut t = 1u32;
+    while t <= max_tokens {
+        let ms = m.t_fwd(t, 0);
+        out.push((t, ms, t as f64 / ms));
+        t *= 2;
+    }
+    out
+}
+
+/// Fig. 6: uniform #slices sweep vs the DP scheme on one setting.
+/// Returns (label, scheme notation, latency_s, tflops).
+pub fn fig6_rows(setting_id: u32, max_slices: u32, opts: &JointOpts) -> Vec<(String, String, f64, f64)> {
+    let setting = presets::setting(setting_id);
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let b_pipe = setting.batch_per_pipeline();
+    let k = setting.parallel.pipeline_stages;
+    let l = setting.model.seq_len;
+    let mut rows = Vec::new();
+
+    let mut n = 1u32;
+    while n <= max_slices {
+        let s = crate::solver::uniform::uniform_scheme(&base, l, k, n, opts.granularity);
+        let scheme = JointScheme {
+            parts: (0..b_pipe).map(|_| (1u32, s.clone())).collect(),
+            latency_ms: 0.0,
+        };
+        let ms = sim_iteration_ms(&setting, &scheme).makespan_ms;
+        rows.push((
+            format!("#Slices={n}"),
+            scheme.notation(),
+            ms / 1e3,
+            tflops_per_gpu(&setting, ms / 1e3),
+        ));
+        n *= 2;
+    }
+
+    let tera = solve_joint_analytic(&base, b_pipe, l, k, opts);
+    let ms = sim_iteration_ms(&setting, &tera).makespan_ms;
+    rows.push((
+        "DP".into(),
+        tera.notation(),
+        ms / 1e3,
+        tflops_per_gpu(&setting, ms / 1e3),
+    ));
+    rows
+}
+
+/// Fig. 7 / Table 4: sequence-length sweep on GPT3-13B setting (5).
+/// Returns (seq_len, gpipe_s, terapipe_s, speedup, terapipe scheme).
+pub fn fig7_rows(opts: &JointOpts) -> Vec<(u32, f64, f64, f64, String)> {
+    presets::long_sequence_settings()
+        .into_iter()
+        .map(|(seq_len, setting)| {
+            let base = AnalyticModel::from_setting(&setting, 1);
+            let b_pipe = setting.batch_per_pipeline();
+            let k = setting.parallel.pipeline_stages;
+            let gpipe = gpipe_plan(&|b| base.with_microbatch(b), b_pipe, seq_len, k);
+            let tera = solve_joint_analytic(&base, b_pipe, seq_len, k, opts);
+            let g = sim_iteration_ms(&setting, &gpipe).makespan_ms / 1e3;
+            let t = sim_iteration_ms(&setting, &tera).makespan_ms / 1e3;
+            (seq_len, g, t, g / t, tera.notation())
+        })
+        .collect()
+}
+
+/// Appendix A: 3-stage pipeline, per-stage memory cap of 2 sequences, six
+/// input sequences. Returns (label, makespan) for (a) uncapped GA,
+/// (b) capped GA, (c) capped TeraPipe-split.
+pub fn appendix_a_rows() -> Vec<(String, f64)> {
+    struct Unit;
+    impl PhaseCost for Unit {
+        fn fwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+            i as f64
+        }
+        fn bwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+            2.0 * i as f64
+        }
+        fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+            0.0
+        }
+    }
+    let seqs = |lens: Vec<u32>| JointScheme {
+        parts: (0..6)
+            .map(|_| {
+                (
+                    1u32,
+                    crate::solver::SliceScheme {
+                        lens: lens.clone(),
+                        total_ms: 0.0,
+                        t_max_ms: 0.0,
+                        latency_ms: 0.0,
+                    },
+                )
+            })
+            .collect(),
+        latency_ms: 0.0,
+    };
+    let k = 3usize;
+    let run = |scheme: &JointScheme, cap: Option<u32>| {
+        simulate(&build_plan(&Unit, scheme, k, cap, false))
+            .unwrap()
+            .makespan_ms
+    };
+    vec![
+        ("(a) GA, no memory cap".into(), run(&seqs(vec![2]), None)),
+        ("(b) GA, cap 2 seqs".into(), run(&seqs(vec![2]), Some(2))),
+        ("(c) TeraPipe split, cap 2 seqs".into(), run(&seqs(vec![1, 1]), Some(2))),
+    ]
+}
+
+/// Markdown-ish table rendering shared by the CLI and the benches.
+pub fn render_fig5(rows: &[ComparisonRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "| set | model     | algorithm    | slicing scheme | latency (s) | TFLOPs/GPU | paper (s) |\n",
+    );
+    out.push_str(
+        "|-----|-----------|--------------|----------------|-------------|------------|-----------|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| ({}) | {} | w/o TeraPipe | {} | {:.3} | {:.4} | {:.3} |\n",
+            r.setting,
+            r.model_name,
+            clip(&r.gpipe_scheme, 34),
+            r.gpipe_latency_s,
+            r.gpipe_tflops,
+            r.paper_gpipe_s
+        ));
+        out.push_str(&format!(
+            "| ({}) | {} | w/ TeraPipe  | {} | {:.3} | {:.4} | {:.3} | speedup {:.2}x (paper {:.2}x)\n",
+            r.setting,
+            r.model_name,
+            clip(&r.terapipe_scheme, 34),
+            r.terapipe_latency_s,
+            r.terapipe_tflops,
+            r.paper_terapipe_s,
+            r.speedup,
+            r.paper_gpipe_s / r.paper_terapipe_s,
+        ));
+    }
+    out
+}
+
+fn clip(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n.saturating_sub(1)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_opts() -> JointOpts {
+        JointOpts {
+            granularity: 128,
+            eps_ms: 0.5,
+            max_microbatch: Some(4),
+        }
+    }
+
+    #[test]
+    fn fig5_headline_shape_holds() {
+        // The paper's headline: biggest wins on the biggest models (9)/(10),
+        // no win on large-batch GPT3-1B settings (2)/(3).
+        let r9 = fig5_row(9, &fast_opts());
+        assert!(r9.speedup > 3.0, "setting 9 speedup {}", r9.speedup);
+        let r2 = fig5_row(2, &fast_opts());
+        assert!(r2.speedup < 1.3, "setting 2 speedup {}", r2.speedup);
+        assert!(r9.terapipe_tflops > r9.gpipe_tflops);
+    }
+
+    #[test]
+    fn fig3_curve_flat_then_linear() {
+        let c = fig3_curve(&presets::gpt3_1b(), 2048);
+        let t1 = c[0].1;
+        let t256 = c.iter().find(|r| r.0 == 256).unwrap().1;
+        let t2048 = c.iter().find(|r| r.0 == 2048).unwrap().1;
+        assert!(t256 < 1.5 * t1, "flat region");
+        assert!(t2048 > 5.0 * t256, "linear region");
+        // throughput plateaus
+        let tp_last = c.last().unwrap().2;
+        let tp_first = c[0].2;
+        assert!(tp_last > 20.0 * tp_first);
+    }
+
+    #[test]
+    fn fig6_dp_at_least_matches_best_uniform() {
+        // DP optimizes the Eq. 5 objective while the judge is the full
+        // fwd+bwd flush simulation, so allow a small modelling gap; the
+        // paper's Fig. 6 claim (extremes lose, DP ≈/beats best uniform)
+        // is asserted at bench granularity in benches/fig6_dp_ablation.
+        let opts = JointOpts { granularity: 32, eps_ms: 0.2, max_microbatch: Some(4) };
+        let rows = fig6_rows(8, 16, &opts);
+        let dp = rows.last().unwrap();
+        assert_eq!(dp.0, "DP");
+        let best_uniform = rows[..rows.len() - 1]
+            .iter()
+            .map(|r| r.2)
+            .fold(f64::INFINITY, f64::min);
+        assert!(dp.2 <= best_uniform * 1.05, "dp {} vs best uniform {}", dp.2, best_uniform);
+        // both extremes lose (Fig. 6 U-shape)
+        let one = rows[0].2;
+        let finest = rows[rows.len() - 2].2;
+        assert!(one > dp.2 * 1.2, "single slice must lose: {one} vs {}", dp.2);
+        assert!(finest > best_uniform, "finest slicing must lose to the best");
+    }
+
+    #[test]
+    fn fig7_speedup_grows_with_sequence_length() {
+        let rows = fig7_rows(&fast_opts());
+        assert_eq!(rows.len(), 4);
+        let speedups: Vec<f64> = rows.iter().map(|r| r.3).collect();
+        // paper: 1.4x → 2.76x → 4.97x → 7.83x: strictly growing
+        for w in speedups.windows(2) {
+            assert!(w[1] > w[0], "speedups not increasing: {speedups:?}");
+        }
+        assert!(*speedups.last().unwrap() > 3.0);
+    }
+
+    #[test]
+    fn appendix_a_ordering() {
+        let rows = appendix_a_rows();
+        let (a, b, c) = (rows[0].1, rows[1].1, rows[2].1);
+        // cap hurts GA; TeraPipe split recovers most of it
+        assert!(b > a, "cap must slow GA: {a} vs {b}");
+        assert!(c < b, "token split must beat capped GA: {c} vs {b}");
+    }
+
+    #[test]
+    fn render_fig5_contains_paper_columns() {
+        let rows = vec![fig5_row(5, &fast_opts())];
+        let s = render_fig5(&rows);
+        assert!(s.contains("w/o TeraPipe"));
+        assert!(s.contains("speedup"));
+    }
+}

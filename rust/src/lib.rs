@@ -1,0 +1,35 @@
+//! TeraPipe — token-level pipeline parallelism for training large-scale
+//! language models (Li et al., ICML 2021), reproduced as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper's contribution lives in this crate:
+//!
+//! * [`solver`] — the dynamic-programming slicing algorithm (Alg. 1, Eq. 5–8)
+//!   plus the joint batch+token extension and the 1-D knapsack (§3.4).
+//! * [`perfmodel`] — the `t_fwd(i, j) = t_fwd(i, 0) + t_ctx(i, j)` latency
+//!   model (Eq. 9), both the analytic V100-shaped instantiation used for the
+//!   paper-scale experiments and a least-squares fit over real measurements.
+//! * [`sim`] — a discrete-event pipeline simulator standing in for the
+//!   48-node GPU testbed (DESIGN.md §2): executes GPipe, TeraPipe and
+//!   memory-capped (Appendix A) schedules under the cost model.
+//! * [`runtime`] — a PJRT wrapper (via the `xla` crate) that loads the HLO
+//!   text artifacts lowered by `python/compile/aot.py` and executes them on
+//!   the CPU device; python never runs on the request path.
+//! * [`coordinator`] — the real execution engine: one worker thread per
+//!   pipeline cell, token slices flowing downstream and gradients flowing
+//!   back upstream, with the context-gradient accumulation that makes the
+//!   pipelined backward exactly equal the unsliced one.
+//! * [`config`] — model / cluster / parallelism configuration incl. the
+//!   paper's Table 1 presets.
+//! * [`data`] — synthetic corpus + byte-level tokenizer + batcher for the
+//!   end-to-end training example.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;

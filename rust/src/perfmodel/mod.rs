@@ -1,0 +1,183 @@
+//! Performance models: the paper's `t_fwd(i, j)` (Eq. 4/9).
+//!
+//! `i` is the slice length in tokens, `j` the total length of all previous
+//! sub-sequences (the attention context). Every latency is **ms** and — as
+//! §3.3 prescribes for optimizing training time — already includes the
+//! backward pass (`t_fwd + t_bwd`) unless a model says otherwise.
+//!
+//! Three instantiations:
+//! * [`analytic::AnalyticModel`] — FLOPs/bandwidth/launch-overhead model of
+//!   a V100 pipeline cell, calibrated against the paper's published
+//!   latencies (DESIGN.md §6). Drives the paper-scale simulations.
+//! * [`linear::LinearCtxModel`] — the paper's measured form: tabulated
+//!   `t(i, 0)` plus the fitted `t_ctx(i,j) = a0 + a1·i + a2·j + a3·ij`.
+//! * [`TableCostModel`] — any model densified onto a granularity grid for
+//!   O(1) lookups inside the DP inner loop.
+
+pub mod analytic;
+pub mod linear;
+pub mod measure;
+
+/// A per-cell slice-latency model: time (ms) to push a slice of `i` tokens
+/// with `j` tokens of context through one pipeline cell.
+pub trait CostModel {
+    /// Latency (ms) for slice length `i` ≥ 1 with context `j` ≥ 0.
+    fn t(&self, i: u32, j: u32) -> f64;
+
+    /// Per-hop activation transfer latency (ms) for an `i`-token slice;
+    /// included so Eq. 4's "computation + data transmission" holds. Models
+    /// may fold this into `t` and return 0 here.
+    fn t_comm(&self, _i: u32) -> f64 {
+        0.0
+    }
+}
+
+impl<M: CostModel + ?Sized> CostModel for &M {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        (**self).t(i, j)
+    }
+    fn t_comm(&self, i: u32) -> f64 {
+        (**self).t_comm(i)
+    }
+}
+
+/// Dense `t(i, j)` table on a `granularity`-token grid, for the DP hot loop.
+///
+/// Entry `(a, b)` holds `t(a·g, b·g)` for `a ∈ 1..=n`, `b ∈ 0..=n-a` where
+/// `n = L / g`. Infeasible combinations (`a + b > n`) hold +∞.
+pub struct TableCostModel {
+    n: usize,
+    granularity: u32,
+    /// Row-major `[a-1][b]`, `n × n` (+∞ where a + b > n).
+    table: Vec<f64>,
+    comm: Vec<f64>,
+}
+
+impl TableCostModel {
+    /// Densify `model` over sequence length `seq_len` at `granularity`
+    /// tokens per grid unit. `seq_len` must be divisible by `granularity`.
+    pub fn build<M: CostModel>(model: &M, seq_len: u32, granularity: u32) -> Self {
+        assert!(granularity >= 1 && seq_len % granularity == 0);
+        let n = (seq_len / granularity) as usize;
+        let mut table = vec![f64::INFINITY; n * n];
+        for a in 1..=n {
+            for b in 0..=(n - a) {
+                table[(a - 1) * n + b] = model.t(a as u32 * granularity, b as u32 * granularity);
+            }
+        }
+        let comm = (0..=n)
+            .map(|a| model.t_comm(a as u32 * granularity))
+            .collect();
+        TableCostModel {
+            n,
+            granularity,
+            table,
+            comm,
+        }
+    }
+
+    pub fn units(&self) -> usize {
+        self.n
+    }
+
+    pub fn granularity(&self) -> u32 {
+        self.granularity
+    }
+
+    /// `t` in grid units: slice of `a` units with `b` units of context.
+    #[inline]
+    pub fn at(&self, a: usize, b: usize) -> f64 {
+        debug_assert!(a >= 1 && a <= self.n && b < self.n);
+        self.table[(a - 1) * self.n + b]
+    }
+
+    #[inline]
+    pub fn comm_at(&self, a: usize) -> f64 {
+        self.comm[a]
+    }
+
+    /// All finite `t` values (candidate `t_max` pool for the enumeration).
+    pub fn finite_values(&self) -> Vec<f64> {
+        self.table.iter().copied().filter(|v| v.is_finite()).collect()
+    }
+}
+
+impl CostModel for TableCostModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        assert!(i % self.granularity == 0 && j % self.granularity == 0);
+        self.at((i / self.granularity) as usize, (j / self.granularity) as usize)
+    }
+    fn t_comm(&self, i: u32) -> f64 {
+        self.comm_at((i / self.granularity) as usize)
+    }
+}
+
+/// Evaluate the paper's pipeline-latency objective (Eq. 5) for a given
+/// slicing: `T = Σᵢ tᵢ + (K-1)·maxⱼ tⱼ`, with `tᵢ = t(lᵢ, Σ_{<i} lⱼ)`.
+pub fn pipeline_latency<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> f64 {
+    assert!(stages >= 1 && !lens.is_empty());
+    let mut ctx = 0u32;
+    let mut total = 0.0;
+    let mut tmax = f64::NEG_INFINITY;
+    for &l in lens {
+        let t = model.t(l, ctx) + model.t_comm(l);
+        total += t;
+        tmax = tmax.max(t);
+        ctx += l;
+    }
+    total + (stages as f64 - 1.0) * tmax
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// t = i + 0.01·i·j — trivially checkable.
+    pub struct Toy;
+    impl CostModel for Toy {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            i as f64 + 0.01 * i as f64 * j as f64
+        }
+    }
+
+    #[test]
+    fn table_matches_model_on_grid() {
+        let t = TableCostModel::build(&Toy, 64, 8);
+        assert_eq!(t.units(), 8);
+        for a in 1..=8usize {
+            for b in 0..=(8 - a) {
+                let want = Toy.t(a as u32 * 8, b as u32 * 8);
+                assert_eq!(t.at(a, b), want);
+                assert_eq!(t.t(a as u32 * 8, b as u32 * 8), want);
+            }
+        }
+    }
+
+    #[test]
+    fn table_marks_infeasible_as_infinite() {
+        let t = TableCostModel::build(&Toy, 32, 8);
+        assert!(t.at(4, 1).is_infinite()); // 4 + 1 > 4 units
+        assert!(t.at(4, 0).is_finite());
+    }
+
+    #[test]
+    fn pipeline_latency_matches_hand_computation() {
+        // lens [2, 2] over L=4, K=3 with Toy: t1 = 2, t2 = 2 + 0.01·2·2 = 2.04
+        let lat = pipeline_latency(&Toy, &[2, 2], 3);
+        let want = (2.0 + 2.04) + 2.0 * 2.04;
+        assert!((lat - want).abs() < 1e-12, "{lat} vs {want}");
+    }
+
+    #[test]
+    fn single_slice_single_stage_is_plain_cost() {
+        let lat = pipeline_latency(&Toy, &[16], 1);
+        assert_eq!(lat, 16.0);
+    }
+
+    #[test]
+    fn finite_values_counts_feasible_pairs() {
+        let t = TableCostModel::build(&Toy, 32, 8);
+        // feasible (a,b): a=1..4, b=0..4-a → 4+3+2+1 = 10
+        assert_eq!(t.finite_values().len(), 10);
+    }
+}

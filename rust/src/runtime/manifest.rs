@@ -1,0 +1,315 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: model geometry, slice buckets, per-executable
+//! input/output specs (flat, in HLO parameter order), and the initial
+//! parameter files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model geometry (mirror of python `ModelDims`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub num_heads: usize,
+    pub layers_per_stage: usize,
+    pub num_stages: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub block_ctx: usize,
+    pub seed: u64,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.num_heads
+    }
+
+    /// KV context buffer shape: [NL, B, T, NH, HD].
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![
+            self.layers_per_stage,
+            self.batch,
+            self.seq_len,
+            self.num_heads,
+            self.head_dim(),
+        ]
+    }
+
+    /// Per-slice KV shape for slice length `s`.
+    pub fn kv_new_shape(&self, s: usize) -> Vec<usize> {
+        vec![self.layers_per_stage, self.batch, s, self.num_heads, self.head_dim()]
+    }
+
+    pub fn total_params(&self) -> usize {
+        let h = self.hidden;
+        12 * h * h * self.layers_per_stage * self.num_stages
+            + (self.vocab + self.seq_len) * h // embeddings
+            + 2 * h // final LN
+            + h * self.vocab + self.vocab // LM head
+    }
+}
+
+/// One tensor in an executable's I/O list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// An executable's flat I/O signature.
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A parameter tensor with its init file.
+#[derive(Debug, Clone)]
+pub struct InitEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub buckets: Vec<usize>,
+    /// Parameter specs per group, in canonical flat order.
+    pub embed_params: Vec<TensorSpec>,
+    pub stage_params: Vec<TensorSpec>,
+    pub head_params: Vec<TensorSpec>,
+    pub executables: Vec<ExeSpec>,
+    pub init_embed: Vec<InitEntry>,
+    pub init_head: Vec<InitEntry>,
+    pub init_stages: Vec<Vec<InitEntry>>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.req("name").map_err(|m| anyhow!(m))?.as_str().unwrap_or_default().to_string(),
+                shape: e
+                    .req("shape")
+                    .map_err(|m| anyhow!(m))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape must be array"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                dtype: e
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn init_entries(v: &Json) -> Result<Vec<InitEntry>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected init array"))?
+        .iter()
+        .map(|e| {
+            Ok(InitEntry {
+                name: e.req("name").map_err(|m| anyhow!(m))?.as_str().unwrap().to_string(),
+                shape: e
+                    .req("shape")
+                    .map_err(|m| anyhow!(m))?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                file: e.req("file").map_err(|m| anyhow!(m))?.as_str().unwrap().to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let m = v.req("model").map_err(|e| anyhow!(e))?;
+        let u = |k: &str| -> Result<usize> {
+            m.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("model.{k} must be a number"))
+        };
+        let model = ModelDims {
+            vocab: u("vocab")?,
+            hidden: u("hidden")?,
+            num_heads: u("num_heads")?,
+            layers_per_stage: u("layers_per_stage")?,
+            num_stages: u("num_stages")?,
+            seq_len: u("seq_len")?,
+            batch: u("batch")?,
+            block_ctx: u("block_ctx")?,
+            seed: u("seed")? as u64,
+        };
+
+        let buckets: Vec<usize> = v
+            .req("buckets")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets must be an array"))?
+            .iter()
+            .map(|b| b.as_usize().unwrap())
+            .collect();
+
+        let groups = v.req("param_groups").map_err(|e| anyhow!(e))?;
+        let embed_params = tensor_specs(groups.req("embed").map_err(|e| anyhow!(e))?)?;
+        let stage_params = tensor_specs(groups.req("stage").map_err(|e| anyhow!(e))?)?;
+        let head_params = tensor_specs(groups.req("head").map_err(|e| anyhow!(e))?)?;
+
+        let mut executables = Vec::new();
+        for (name, spec) in v
+            .req("executables")
+            .map_err(|e| anyhow!(e))?
+            .members()
+            .ok_or_else(|| anyhow!("executables must be an object"))?
+        {
+            executables.push(ExeSpec {
+                name: name.clone(),
+                inputs: tensor_specs(spec.req("inputs").map_err(|e| anyhow!(e))?)?,
+                outputs: tensor_specs(spec.req("outputs").map_err(|e| anyhow!(e))?)?,
+            });
+        }
+
+        let init = v.req("init").map_err(|e| anyhow!(e))?;
+        let init_embed = init_entries(init.req("embed").map_err(|e| anyhow!(e))?)?;
+        let init_head = init_entries(init.req("head").map_err(|e| anyhow!(e))?)?;
+        let init_stages = init
+            .req("stages")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("init.stages must be an array"))?
+            .iter()
+            .map(init_entries)
+            .collect::<Result<Vec<_>>>()?;
+
+        if init_stages.len() != model.num_stages {
+            bail!(
+                "manifest has {} stage inits for {} stages",
+                init_stages.len(),
+                model.num_stages
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            buckets,
+            embed_params,
+            stage_params,
+            head_params,
+            executables,
+            init_embed,
+            init_head,
+            init_stages,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load an init tensor group from its raw f32 files.
+    pub fn load_init(&self, entries: &[InitEntry]) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
+        entries
+            .iter()
+            .map(|e| {
+                let path = self.dir.join(&e.file);
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading init file {}", path.display()))?;
+                let n: usize = e.shape.iter().product::<usize>().max(1);
+                if bytes.len() != 4 * n {
+                    bail!("{}: expected {} bytes, got {}", e.file, 4 * n, bytes.len());
+                }
+                let floats: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Ok(crate::runtime::tensor::HostTensor::f32(&e.shape, floats))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(dir) = art_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.buckets.len() >= 2);
+        assert_eq!(m.stage_params.len(), 12 * m.model.layers_per_stage);
+        assert_eq!(m.embed_params.len(), 2);
+        assert_eq!(m.head_params.len(), 4);
+        // every bucket has its six executables
+        for &s in &m.buckets {
+            for role in ["embed_fwd", "embed_bwd", "stage_fwd", "stage_bwd", "head_fwd", "head_bwd"] {
+                let name = format!("{role}_s{s}");
+                let e = m.exe(&name).unwrap();
+                assert!(!e.inputs.is_empty(), "{name}");
+                assert!(m.hlo_path(&name).exists(), "{name} hlo file");
+            }
+        }
+        // init loads and matches shapes
+        let embed = m.load_init(&m.init_embed).unwrap();
+        assert_eq!(embed[0].shape, vec![m.model.vocab, m.model.hidden]);
+        assert_eq!(m.init_stages.len(), m.model.num_stages);
+    }
+
+    #[test]
+    fn kv_shapes_consistent() {
+        let d = ModelDims {
+            vocab: 256, hidden: 128, num_heads: 4, layers_per_stage: 2,
+            num_stages: 2, seq_len: 128, batch: 4, block_ctx: 64, seed: 0,
+        };
+        assert_eq!(d.head_dim(), 32);
+        assert_eq!(d.kv_shape(), vec![2, 4, 128, 4, 32]);
+        assert_eq!(d.kv_new_shape(16), vec![2, 4, 16, 4, 32]);
+        assert!(d.total_params() > 12 * 128 * 128 * 4);
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,244 @@
+//! PJRT runtime: load the AOT HLO-text artifacts, compile them once, and
+//! execute them on the hot path. Python never runs here.
+//!
+//! Each [`StageRuntime`] owns its own `PjRtClient` — one per stage worker
+//! thread, mirroring one-process-per-GPU deployments and sidestepping the
+//! (non-Send) PJRT handles: all cross-thread traffic is plain
+//! [`tensor::HostTensor`] data.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not
+//! serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use manifest::{ExeSpec, Manifest};
+use tensor::HostTensor;
+
+/// A compiled executable plus its manifest signature.
+pub struct Executable {
+    pub spec: ExeSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation against the manifest spec.
+    /// Inputs are uploaded, the tuple output is decomposed into host
+    /// tensors in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrow-based variant — the coordinator hot path: parameters and KV
+    /// buffers are passed by reference instead of deep-cloned per slice
+    /// (EXPERIMENTS.md §Perf L3 iteration 1).
+    pub fn run_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != s.shape {
+                bail!(
+                    "{} input '{}': shape {:?} != manifest {:?}",
+                    self.spec.name, s.name, t.shape, s.shape
+                );
+            }
+            if t.dtype_name() != s.dtype {
+                bail!(
+                    "{} input '{}': dtype {} != manifest {}",
+                    self.spec.name, s.name, t.dtype_name(), s.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literal_refs(&refs)
+    }
+
+    /// Lowest-level entry: pre-converted literals (the coordinator caches
+    /// parameter literals between optimizer steps — §Perf L3 iteration 2).
+    /// Count is validated; shape validation happened when the literals
+    /// were built.
+    pub fn run_literal_refs(&self, args: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                args.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.spec.name))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.spec.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // single outputs.
+        let parts = out_lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, s) in parts.iter().zip(&self.spec.outputs) {
+            let t = HostTensor::from_literal(lit)
+                .with_context(|| format!("{} output '{}'", self.spec.name, s.name))?;
+            if t.shape != s.shape {
+                bail!(
+                    "{} output '{}': shape {:?} != manifest {:?}",
+                    self.spec.name, s.name, t.shape, s.shape
+                );
+            }
+            outs.push(t);
+        }
+        Ok(outs)
+    }
+}
+
+/// One stage worker's runtime: a CPU PJRT client plus the compiled
+/// executables that worker needs.
+pub struct StageRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+}
+
+impl StageRuntime {
+    /// Create a client and compile `names` from the artifact dir.
+    pub fn load(artifacts: &Path, names: &[String]) -> Result<StageRuntime> {
+        // Silence xla_extension's per-client INFO chatter (created/destroyed
+        // lines) unless the user asked for it. Must be set before the first
+        // client in the process — which is here.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut rt = StageRuntime {
+            manifest,
+            client,
+            exes: HashMap::new(),
+        };
+        for n in names {
+            rt.compile(n)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile (or re-use) an executable by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.exe(name)?.clone();
+        let path = self.manifest.hlo_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), Executable { spec, exe });
+        Ok(())
+    }
+
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not compiled"))?
+            .run(inputs)
+    }
+
+    /// Borrow-based hot-path variant (no input cloning).
+    pub fn run_refs(&self, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not compiled"))?
+            .run_refs(inputs)
+    }
+
+    /// Pre-converted-literal hot path (cached parameter uploads).
+    pub fn run_literal_refs(&self, name: &str, args: &[&xla::Literal]) -> Result<Vec<HostTensor>> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable '{name}' not compiled"))?
+            .run_literal_refs(args)
+    }
+
+    pub fn compiled(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Names of the executables a given stage worker needs, given the bucket
+/// set: every stage runs stage_fwd/bwd; the first adds embed, the last
+/// adds head; everyone gets its optimizer step(s).
+pub fn stage_exe_names(stage: usize, num_stages: usize, buckets: &[usize]) -> Vec<String> {
+    let mut names = Vec::new();
+    for &s in buckets {
+        names.push(format!("stage_fwd_s{s}"));
+        names.push(format!("stage_bwd_s{s}"));
+        if stage == 0 {
+            names.push(format!("embed_fwd_s{s}"));
+            names.push(format!("embed_bwd_s{s}"));
+        }
+        if stage == num_stages - 1 {
+            names.push(format!("head_fwd_s{s}"));
+            names.push(format!("head_bwd_s{s}"));
+        }
+    }
+    names.push("adam_stage".into());
+    if stage == 0 {
+        names.push("adam_embed".into());
+    }
+    if stage == num_stages - 1 {
+        names.push("adam_head".into());
+    }
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_exe_names_cover_roles() {
+        let names = stage_exe_names(0, 2, &[16, 32]);
+        assert!(names.contains(&"embed_fwd_s16".to_string()));
+        assert!(names.contains(&"adam_embed".to_string()));
+        assert!(!names.contains(&"head_fwd_s16".to_string()));
+        let last = stage_exe_names(1, 2, &[16, 32]);
+        assert!(last.contains(&"head_bwd_s32".to_string()));
+        assert!(last.contains(&"adam_head".to_string()));
+        assert!(!last.contains(&"embed_fwd_s16".to_string()));
+        // single-stage pipelines get both roles
+        let solo = stage_exe_names(0, 1, &[16]);
+        assert!(solo.contains(&"embed_fwd_s16".to_string()));
+        assert!(solo.contains(&"head_fwd_s16".to_string()));
+    }
+}

@@ -1,0 +1,263 @@
+//! Host-side tensors exchanged with PJRT and between stage workers.
+//!
+//! The coordinator moves activations/gradients between OS threads as plain
+//! `Vec<f32>`/`Vec<i32>` with explicit shapes; [`HostTensor`] converts
+//! to/from `xla::Literal` at the PJRT boundary and provides the strided
+//! copies the KV-buffer bookkeeping needs (writing a slice's K/V into the
+//! padded context buffer at `ctx_len`, reading a slice's accumulated
+//! context gradients back out).
+
+use anyhow::{bail, Context, Result};
+
+/// Element payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor {
+            shape: vec![],
+            data: Data::I32(vec![v]),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "float32",
+            Data::I32(_) => "int32",
+        }
+    }
+
+    /// In-place elementwise add (gradient accumulation).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        let dst = self.as_f32_mut();
+        let src = other.as_f32();
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+
+    pub fn fill_zero(&mut self) {
+        match &mut self.data {
+            Data::F32(v) => v.iter_mut().for_each(|x| *x = 0.0),
+            Data::I32(v) => v.iter_mut().for_each(|x| *x = 0),
+        }
+    }
+
+    /// Max |x| — used by tests and grad-norm telemetry.
+    pub fn max_abs(&self) -> f32 {
+        self.as_f32().iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    // ---- PJRT boundary ----
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Data::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let t = match shape.ty() {
+            xla::ElementType::F32 => HostTensor {
+                shape: dims,
+                data: Data::F32(lit.to_vec::<f32>()?),
+            },
+            xla::ElementType::S32 => HostTensor {
+                shape: dims,
+                data: Data::I32(lit.to_vec::<i32>()?),
+            },
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(t)
+    }
+
+    // ---- KV-buffer strided copies ----
+    //
+    // KV tensors are [NL, B, T, NH, HD]; flattening (NL·B) = outer and
+    // (NH·HD) = inner gives a canonical (outer, T, inner) view used below.
+
+    /// View helper: split `shape` at `axis` into (outer, axis_len, inner).
+    fn axis_view(shape: &[usize], axis: usize) -> (usize, usize, usize) {
+        let outer: usize = shape[..axis].iter().product();
+        let inner: usize = shape[axis + 1..].iter().product();
+        (outer, shape[axis], inner)
+    }
+
+    /// Write `src` (same shape except `axis` where `src` is shorter) into
+    /// `self` starting at `offset` along `axis` — the coordinator's
+    /// "scatter this slice's K/V at ctx_len".
+    pub fn write_at_axis(&mut self, axis: usize, offset: usize, src: &HostTensor) {
+        assert_eq!(self.shape.len(), src.shape.len());
+        for (d, (a, b)) in self.shape.iter().zip(&src.shape).enumerate() {
+            if d != axis {
+                assert_eq!(a, b, "dim {d} mismatch");
+            }
+        }
+        let (outer, t_dst, inner) = Self::axis_view(&self.shape, axis);
+        let (_, t_src, _) = Self::axis_view(&src.shape, axis);
+        assert!(offset + t_src <= t_dst, "write past axis end");
+        let dst = self.as_f32_mut();
+        let s = src.as_f32();
+        for o in 0..outer {
+            let dst_base = (o * t_dst + offset) * inner;
+            let src_base = o * t_src * inner;
+            dst[dst_base..dst_base + t_src * inner]
+                .copy_from_slice(&s[src_base..src_base + t_src * inner]);
+        }
+    }
+
+    /// Read `len` entries along `axis` starting at `offset` — the
+    /// coordinator's "gather this slice's accumulated context grads".
+    pub fn read_at_axis(&self, axis: usize, offset: usize, len: usize) -> HostTensor {
+        let (outer, t_src, inner) = Self::axis_view(&self.shape, axis);
+        assert!(offset + len <= t_src, "read past axis end");
+        let src = self.as_f32();
+        let mut out = vec![0.0f32; outer * len * inner];
+        for o in 0..outer {
+            let src_base = (o * t_src + offset) * inner;
+            let dst_base = o * len * inner;
+            out[dst_base..dst_base + len * inner]
+                .copy_from_slice(&src[src_base..src_base + len * inner]);
+        }
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        HostTensor {
+            shape,
+            data: Data::F32(out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read_roundtrip_on_axis2() {
+        // [NL=2, B=1, T=4, NH=1, HD=3] buffer; write a 2-long slice at 1
+        let mut buf = HostTensor::zeros_f32(&[2, 1, 4, 1, 3]);
+        let src = HostTensor::f32(&[2, 1, 2, 1, 3], (0..12).map(|x| x as f32).collect());
+        buf.write_at_axis(2, 1, &src);
+        let back = buf.read_at_axis(2, 1, 2);
+        assert_eq!(back, src);
+        // untouched positions stay zero
+        let head = buf.read_at_axis(2, 0, 1);
+        assert!(head.as_f32().iter().all(|&x| x == 0.0));
+        let tail = buf.read_at_axis(2, 3, 1);
+        assert!(tail.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn write_at_axis_places_rows_correctly() {
+        let mut buf = HostTensor::zeros_f32(&[1, 1, 3, 1, 2]);
+        let src = HostTensor::f32(&[1, 1, 1, 1, 2], vec![7.0, 8.0]);
+        buf.write_at_axis(2, 2, &src);
+        assert_eq!(buf.as_f32(), &[0., 0., 0., 0., 7., 8.]);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = HostTensor::f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = HostTensor::f32(&[2, 2], vec![0.5; 4]);
+        a.add_assign(&b);
+        assert_eq!(a.as_f32(), &[1.5, 2.5, 3.5, 4.5]);
+        a.fill_zero();
+        assert_eq!(a.as_f32(), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "write past axis end")]
+    fn write_past_end_panics() {
+        let mut buf = HostTensor::zeros_f32(&[1, 1, 3, 1, 2]);
+        let src = HostTensor::f32(&[1, 1, 2, 1, 2], vec![0.0; 4]);
+        buf.write_at_axis(2, 2, &src);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        assert_eq!(HostTensor::scalar_i32(5).shape, Vec::<usize>::new());
+        assert_eq!(HostTensor::scalar_f32(1.5).len(), 1);
+    }
+
+    #[test]
+    fn max_abs_works() {
+        let t = HostTensor::f32(&[3], vec![-2.5, 1.0, 2.0]);
+        assert_eq!(t.max_abs(), 2.5);
+    }
+}

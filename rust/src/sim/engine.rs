@@ -1,0 +1,411 @@
+//! The discrete-event core: executes a [`Plan`] and returns a
+//! [`SimResult`].
+//!
+//! Each stage is a unit-capacity resource with a priority queue of ready
+//! items. An item becomes *ready* when all dependencies have finished plus
+//! their edge delays; it becomes *dispatchable* when its stage is idle,
+//! the flush barrier (if any) allows its phase, and — for the first
+//! forward slice of a batch part on that stage — an activation slot is
+//! free. Backward completion of a part's last slice releases the slot
+//! (Appendix A's memory constraint).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::trace::Span;
+use super::{Phase, Plan, SimResult};
+
+#[derive(Debug, PartialEq)]
+struct Ev {
+    time: f64,
+    /// 0 = item finished, 1 = wake (retry dispatch) — finish first at ties.
+    kind: u8,
+    stage: usize,
+    item: usize,
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.kind.cmp(&other.kind))
+            .then(self.item.cmp(&other.item))
+    }
+}
+
+/// Simulate the plan. Returns an error on deadlock (e.g. a memory cap that
+/// can never be satisfied under a flush barrier — Appendix A's failure
+/// mode) instead of looping forever.
+pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
+    let n = plan.items.len();
+    let k = plan.stages;
+    assert!(k >= 1);
+    for it in &plan.items {
+        assert!(it.stage < k, "item {} on stage {} ≥ {}", it.id, it.stage, k);
+        assert!(it.dur_ms >= 0.0);
+    }
+
+    // dependency bookkeeping
+    let mut missing: Vec<usize> = plan.items.iter().map(|i| i.deps.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for it in &plan.items {
+        for &(d, _) in &it.deps {
+            dependents[d].push(it.id);
+        }
+    }
+    let mut ready_time: Vec<f64> = vec![0.0; n];
+    let mut finish: Vec<f64> = vec![f64::NAN; n];
+    let mut started: Vec<bool> = vec![false; n];
+
+    // per-stage state
+    let mut idle_at: Vec<f64> = vec![0.0; k];
+    let mut busy: Vec<f64> = vec![0.0; k];
+    // ready queue per stage: (priority, id), min-heap
+    let mut queues: Vec<BinaryHeap<Reverse<(u64, usize)>>> = (0..k).map(|_| BinaryHeap::new()).collect();
+    // flush barrier: remaining fwd items per stage
+    let mut fwd_left: Vec<usize> = vec![0; k];
+    for it in &plan.items {
+        if it.phase == Phase::Fwd {
+            fwd_left[it.stage] += 1;
+        }
+    }
+    // memory slots: per stage, per part — acquired at first Fwd slice
+    // dispatch, released after last Bwd slice finishes
+    let parts = plan.items.iter().map(|i| i.part).max().map_or(0, |p| p + 1);
+    let mut holds: Vec<Vec<bool>> = vec![vec![false; parts]; k];
+    let mut used_slots: Vec<u32> = vec![0; k];
+    let mut bwd_left_per_part: Vec<Vec<usize>> = vec![vec![0; parts]; k];
+    let mut has_bwd_stage: Vec<bool> = vec![false; k];
+    for it in &plan.items {
+        if it.phase == Phase::Bwd {
+            bwd_left_per_part[it.stage][it.part] += 1;
+            has_bwd_stage[it.stage] = true;
+        }
+    }
+
+    let mut events: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    // items with no deps are ready at t=0
+    for it in &plan.items {
+        if it.deps.is_empty() {
+            queues[it.stage].push(Reverse((it.priority, it.id)));
+        }
+    }
+    for s in 0..k {
+        events.push(Reverse(Ev { time: 0.0, kind: 1, stage: s, item: usize::MAX }));
+    }
+
+    let mut trace: Vec<Span> = Vec::with_capacity(n);
+    let mut done = 0usize;
+
+    // dispatch as much as possible on a stage at `now`; returns next
+    // blocked-ready wake time if any
+    let dispatch = |now: f64,
+                    s: usize,
+                    plan: &Plan,
+                    queues: &mut Vec<BinaryHeap<Reverse<(u64, usize)>>>,
+                    idle_at: &mut Vec<f64>,
+                    busy: &mut Vec<f64>,
+                    started: &mut Vec<bool>,
+                    ready_time: &Vec<f64>,
+                    fwd_left: &Vec<usize>,
+                    holds: &mut Vec<Vec<bool>>,
+                    used_slots: &mut Vec<u32>,
+                    has_bwd_stage: &Vec<bool>,
+                    events: &mut BinaryHeap<Reverse<Ev>>,
+                    trace: &mut Vec<Span>|
+     -> () {
+        if idle_at[s] > now {
+            return;
+        }
+        // scan the queue for the best dispatchable item; keep blocked ones
+        let mut deferred: Vec<(u64, usize)> = Vec::new();
+        let mut chosen: Option<usize> = None;
+        while let Some(Reverse((prio, id))) = queues[s].pop() {
+            let it = &plan.items[id];
+            if started[id] {
+                continue;
+            }
+            let mut blocked = false;
+            let mut wake: Option<f64> = None;
+            if ready_time[id] > now {
+                blocked = true;
+                wake = Some(ready_time[id]);
+            }
+            if !blocked && plan.flush_barrier && it.phase == Phase::Bwd && fwd_left[s] > 0 {
+                blocked = true; // barrier lifts when last fwd finishes
+            }
+            if !blocked && it.phase == Phase::Fwd && has_bwd_stage[s] {
+                if let Some(cap) = plan.mem_cap_parts {
+                    if !holds[s][it.part] && used_slots[s] >= cap {
+                        blocked = true; // slot frees on a bwd completion
+                    }
+                }
+            }
+            if blocked {
+                deferred.push((prio, id));
+                if let Some(w) = wake {
+                    events.push(Reverse(Ev { time: w, kind: 1, stage: s, item: usize::MAX }));
+                }
+            } else {
+                chosen = Some(id);
+                break;
+            }
+        }
+        for d in deferred {
+            queues[s].push(Reverse(d));
+        }
+        if let Some(id) = chosen {
+            let it = &plan.items[id];
+            if it.phase == Phase::Fwd && has_bwd_stage[s] && plan.mem_cap_parts.is_some() && !holds[s][it.part] {
+                holds[s][it.part] = true;
+                used_slots[s] += 1;
+            }
+            started[id] = true;
+            let end = now + it.dur_ms;
+            idle_at[s] = end;
+            busy[s] += it.dur_ms;
+            trace.push(Span {
+                stage: s,
+                start_ms: now,
+                end_ms: end,
+                phase: it.phase,
+                part: it.part,
+                slice: it.slice,
+            });
+            events.push(Reverse(Ev { time: end, kind: 0, stage: s, item: id }));
+        }
+    };
+
+    while let Some(Reverse(ev)) = events.pop() {
+        let now = ev.time;
+        if ev.kind == 0 {
+            // item finished
+            let id = ev.item;
+            finish[id] = now;
+            done += 1;
+            let it = &plan.items[id];
+            let s = it.stage;
+            if it.phase == Phase::Fwd {
+                fwd_left[s] -= 1;
+            } else {
+                bwd_left_per_part[s][it.part] -= 1;
+                if bwd_left_per_part[s][it.part] == 0 && holds[s][it.part] {
+                    holds[s][it.part] = false;
+                    used_slots[s] -= 1;
+                }
+            }
+            // release dependents
+            for &dep_id in &dependents[id] {
+                let delay = plan.items[dep_id]
+                    .deps
+                    .iter()
+                    .find(|&&(d, _)| d == id)
+                    .map(|&(_, del)| del)
+                    .unwrap();
+                ready_time[dep_id] = ready_time[dep_id].max(now + delay);
+                missing[dep_id] -= 1;
+                if missing[dep_id] == 0 {
+                    let ds = plan.items[dep_id].stage;
+                    queues[ds].push(Reverse((plan.items[dep_id].priority, dep_id)));
+                    events.push(Reverse(Ev {
+                        time: ready_time[dep_id].max(now),
+                        kind: 1,
+                        stage: ds,
+                        item: usize::MAX,
+                    }));
+                }
+            }
+            // this stage is idle now; also re-try every stage that may have
+            // been blocked on memory or the barrier (cheap: K is small)
+            for st in 0..k {
+                dispatch(
+                    now, st, plan, &mut queues, &mut idle_at, &mut busy, &mut started,
+                    &ready_time, &fwd_left, &mut holds, &mut used_slots, &has_bwd_stage,
+                    &mut events, &mut trace,
+                );
+            }
+        } else {
+            dispatch(
+                now, ev.stage, plan, &mut queues, &mut idle_at, &mut busy, &mut started,
+                &ready_time, &fwd_left, &mut holds, &mut used_slots, &has_bwd_stage,
+                &mut events, &mut trace,
+            );
+        }
+    }
+
+    if done != n {
+        return Err(format!(
+            "deadlock: {done}/{n} items completed (memory cap {:?} with flush_barrier={} is unsatisfiable)",
+            plan.mem_cap_parts, plan.flush_barrier
+        ));
+    }
+
+    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+    let total_busy: f64 = busy.iter().sum();
+    trace.sort_by(|a, b| (a.stage, a.start_ms).partial_cmp(&(b.stage, b.start_ms)).unwrap());
+    Ok(SimResult {
+        makespan_ms: makespan,
+        bubble_fraction: 1.0 - total_busy / (k as f64 * makespan),
+        busy_ms: busy,
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Item;
+
+    fn item(id: usize, stage: usize, phase: Phase, part: usize, slice: usize, dur: f64, deps: Vec<(usize, f64)>) -> Item {
+        Item { id, stage, phase, part, slice, dur_ms: dur, deps, priority: id as u64 }
+    }
+
+    /// fwd-only chain: K stages × M slices with slice costs `t`, uniform
+    /// across stages ⇒ makespan must equal Eq. 5 exactly.
+    fn chain_plan(k: usize, t: &[f64]) -> Plan {
+        let m = t.len();
+        let mut items = Vec::new();
+        for s in 0..k {
+            for i in 0..m {
+                let mut deps = Vec::new();
+                if s > 0 {
+                    deps.push(((s - 1) * m + i, 0.0));
+                }
+                if i > 0 {
+                    deps.push((s * m + i - 1, 0.0));
+                }
+                items.push(item(s * m + i, s, Phase::Fwd, 0, i, t[i], deps));
+            }
+        }
+        Plan { stages: k, items, mem_cap_parts: None, flush_barrier: false }
+    }
+
+    #[test]
+    fn forward_chain_matches_eq5() {
+        for t in [vec![1.0, 3.0], vec![3.0, 1.0], vec![2.0, 5.0, 1.0, 4.0], vec![1.0; 8]] {
+            for k in [1usize, 2, 3, 5] {
+                let r = simulate(&chain_plan(k, &t)).unwrap();
+                let want: f64 = t.iter().sum::<f64>()
+                    + (k as f64 - 1.0) * t.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                assert!(
+                    (r.makespan_ms - want).abs() < 1e-9,
+                    "k={k} t={t:?}: sim {} vs eq5 {want}",
+                    r.makespan_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_split_nonuniform_time_has_bigger_bubbles() {
+        // Fig. 4: same total work, the balanced split wins.
+        let k = 4;
+        let uneven = simulate(&chain_plan(k, &[1.0, 1.5, 2.0, 2.5])).unwrap();
+        let even = simulate(&chain_plan(k, &[1.75; 4])).unwrap();
+        assert!(even.makespan_ms < uneven.makespan_ms);
+        assert!(even.bubble_fraction < uneven.bubble_fraction);
+    }
+
+    #[test]
+    fn comm_delay_extends_makespan() {
+        let p = chain_plan(3, &[1.0, 1.0]);
+        // rebuild with explicit delays on cross-stage edges
+        let mut items = p.items.clone();
+        for it in &mut items {
+            let my_stage = it.stage;
+            for d in &mut it.deps {
+                let dep_stage = d.0 / 2;
+                if dep_stage != my_stage {
+                    d.1 = 0.5;
+                }
+            }
+        }
+        let delayed = simulate(&Plan { items, ..p.clone() }).unwrap();
+        let plain = simulate(&p).unwrap();
+        // plain: Σt + (K-1)·max = 2 + 2·1 = 4
+        assert!((plain.makespan_ms - 4.0).abs() < 1e-9, "{}", plain.makespan_ms);
+        // each of the two cross-stage hops adds 0.5 on the critical path
+        assert!((delayed.makespan_ms - 5.0).abs() < 1e-9, "{}", delayed.makespan_ms);
+    }
+
+    #[test]
+    fn single_stage_is_serial_sum() {
+        let r = simulate(&chain_plan(1, &[2.0, 3.0, 4.0])).unwrap();
+        assert!((r.makespan_ms - 9.0).abs() < 1e-12);
+        assert!(r.bubble_fraction.abs() < 1e-12);
+    }
+
+    #[test]
+    fn flush_barrier_orders_bwd_after_all_fwd() {
+        // 1 stage, one fwd part then its bwd + a second fwd part: with the
+        // barrier, both fwds run before the first bwd.
+        let items = vec![
+            item(0, 0, Phase::Fwd, 0, 0, 1.0, vec![]),
+            item(1, 0, Phase::Bwd, 0, 0, 1.0, vec![(0, 0.0)]),
+            item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
+        ];
+        let r = simulate(&Plan { stages: 1, items: items.clone(), mem_cap_parts: None, flush_barrier: true }).unwrap();
+        let bwd_span = r.trace.iter().find(|s| s.phase == Phase::Bwd).unwrap();
+        assert!((bwd_span.start_ms - 2.0).abs() < 1e-9, "bwd must wait for the flush");
+        // without the barrier the bwd (ready at t=1, priority 1 < 2) runs first
+        let r2 = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false }).unwrap();
+        let bwd_span2 = r2.trace.iter().find(|s| s.phase == Phase::Bwd).unwrap();
+        assert!((bwd_span2.start_ms - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_cap_blocks_admission_until_bwd_frees() {
+        // Appendix A (b): cap of 1 part ⇒ second part's fwd waits for the
+        // first part's bwd to finish on that stage.
+        let items = vec![
+            item(0, 0, Phase::Fwd, 0, 0, 1.0, vec![]),
+            item(1, 0, Phase::Bwd, 0, 0, 1.0, vec![(0, 0.0)]),
+            item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
+            item(3, 0, Phase::Bwd, 1, 0, 1.0, vec![(2, 0.0)]),
+        ];
+        let r = simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: false }).unwrap();
+        let f2 = r.trace.iter().find(|s| s.phase == Phase::Fwd && s.part == 1).unwrap();
+        assert!(f2.start_ms >= 2.0 - 1e-9, "fwd(part 1) at {} must wait for bwd(part 0)", f2.start_ms);
+    }
+
+    #[test]
+    fn impossible_cap_with_barrier_deadlocks_cleanly() {
+        // barrier forces both fwds before any bwd, but cap 1 forbids the
+        // second fwd before a bwd ⇒ deadlock, reported not spun.
+        let items = vec![
+            item(0, 0, Phase::Fwd, 0, 0, 1.0, vec![]),
+            item(1, 0, Phase::Bwd, 0, 0, 1.0, vec![(0, 0.0)]),
+            item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
+            item(3, 0, Phase::Bwd, 1, 0, 1.0, vec![(2, 0.0)]),
+        ];
+        let err = simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: true }).unwrap_err();
+        assert!(err.contains("deadlock"));
+    }
+
+    #[test]
+    fn busy_time_equals_item_durations() {
+        let r = simulate(&chain_plan(3, &[1.0, 2.0])).unwrap();
+        for b in &r.busy_ms {
+            assert!((b - 3.0).abs() < 1e-12);
+        }
+        assert_eq!(r.trace.len(), 6);
+    }
+
+    #[test]
+    fn priority_breaks_ties_among_ready_items() {
+        // two independent fwd items on one stage: lower priority runs first
+        let items = vec![
+            Item { id: 0, stage: 0, phase: Phase::Fwd, part: 0, slice: 0, dur_ms: 1.0, deps: vec![], priority: 10 },
+            Item { id: 1, stage: 0, phase: Phase::Fwd, part: 1, slice: 0, dur_ms: 1.0, deps: vec![], priority: 5 },
+        ];
+        let r = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false }).unwrap();
+        assert_eq!(r.trace[0].part, 1);
+    }
+}

@@ -1,0 +1,342 @@
+//! Schedule builders: turn a [`JointScheme`] (or a GPipe baseline) into a
+//! simulator [`Plan`] with full fwd+bwd dependency structure.
+//!
+//! Dependency structure (per batch part d with token slices s_1..s_M):
+//!
+//! * Fwd(k, d, i) ← Fwd(k-1, d, i)  [activation arrives, + comm delay]
+//! * Fwd(k, d, i) ← Fwd(k, d, i-1)  [KV context of earlier slices]
+//! * Bwd(K-1, d, i) ← Fwd(K-1, d, i) and all Fwd(K-1, d, >i) — the slice's
+//!   K/V gradient contributions from later slices must exist; with the
+//!   reverse-order backward the binding dep is Bwd(k, d, i+1)
+//! * Bwd(k, d, i) ← Bwd(k+1, d, i)  [upstream grad, + comm delay]
+//! * Bwd(k, d, i) ← Bwd(k, d, i+1)  [context-grad accumulators]
+//!
+//! Priorities realize the paper's execution order: forward slices in
+//! stream order, backward in reverse stream order.
+
+use super::{Item, Phase, Plan};
+use crate::perfmodel::CostModel;
+use crate::solver::JointScheme;
+
+/// Per-phase slice costs. [`CostModel::t`] is fwd+bwd combined; the
+/// simulator needs them apart.
+pub trait PhaseCost {
+    fn fwd_ms(&self, microbatch: u32, i: u32, j: u32) -> f64;
+    fn bwd_ms(&self, microbatch: u32, i: u32, j: u32) -> f64;
+    fn comm_ms(&self, microbatch: u32, i: u32) -> f64;
+}
+
+/// Adapter: any [`CostModel`] factory split by the standard bwd ≈ 2·fwd.
+pub struct SplitCost<F> {
+    pub model_for: F,
+}
+
+impl<F, M> PhaseCost for SplitCost<F>
+where
+    F: Fn(u32) -> M,
+    M: CostModel,
+{
+    fn fwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        (self.model_for)(b).t(i, j) / 3.0
+    }
+    fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        2.0 * (self.model_for)(b).t(i, j) / 3.0
+    }
+    fn comm_ms(&self, b: u32, i: u32) -> f64 {
+        (self.model_for)(b).t_comm(i)
+    }
+}
+
+/// Build the simulator plan for a joint (batch, token) scheme on a
+/// `stages`-deep pipeline.
+pub fn build_plan<C: PhaseCost>(
+    cost: &C,
+    scheme: &JointScheme,
+    stages: usize,
+    mem_cap_parts: Option<u32>,
+    flush_barrier: bool,
+) -> Plan {
+    let mut items: Vec<Item> = Vec::new();
+    // ids: fwd items first (part-major, slice, stage), then bwd
+    let fwd_id = |d: usize, i: usize, k: usize, counts: &[usize]| -> usize {
+        // offset of part d = stages * (slices of parts < d)
+        let prior: usize = counts[..d].iter().sum();
+        (prior + i) * stages + k
+    };
+    let counts: Vec<usize> = scheme.parts.iter().map(|(_, s)| s.lens.len()).collect();
+    let total_slices: usize = counts.iter().sum();
+    let fwd_total = total_slices * stages;
+
+    // forward items
+    let mut prio = 0u64;
+    for (d, (b, s)) in scheme.parts.iter().enumerate() {
+        let mut ctx = 0u32;
+        for (i, &l) in s.lens.iter().enumerate() {
+            for k in 0..stages {
+                let id = fwd_id(d, i, k, &counts);
+                let mut deps = Vec::new();
+                if k > 0 {
+                    deps.push((fwd_id(d, i, k - 1, &counts), cost.comm_ms(*b, l)));
+                }
+                if i > 0 {
+                    deps.push((fwd_id(d, i - 1, k, &counts), 0.0));
+                }
+                items.push(Item {
+                    id,
+                    stage: k,
+                    phase: Phase::Fwd,
+                    part: d,
+                    slice: i,
+                    dur_ms: cost.fwd_ms(*b, l, ctx),
+                    deps,
+                    priority: prio,
+                });
+                prio += 1;
+            }
+            ctx += l;
+        }
+    }
+    items.sort_by_key(|i| i.id);
+
+    // backward items: reverse stream order, reverse stage order
+    let bwd_id = |d: usize, i: usize, k: usize, counts: &[usize]| -> usize {
+        let prior: usize = counts[..d].iter().sum();
+        fwd_total + (prior + i) * stages + k
+    };
+    let mut bwd_items = Vec::new();
+    for (d, (b, s)) in scheme.parts.iter().enumerate() {
+        let m = s.lens.len();
+        let mut ctx_of: Vec<u32> = Vec::with_capacity(m);
+        let mut acc = 0u32;
+        for &l in &s.lens {
+            ctx_of.push(acc);
+            acc += l;
+        }
+        for i in (0..m).rev() {
+            for k in (0..stages).rev() {
+                let id = bwd_id(d, i, k, &counts);
+                let mut deps = Vec::new();
+                if k == stages - 1 {
+                    // loss grad needs this slice's forward on the last stage
+                    deps.push((fwd_id(d, i, k, &counts), 0.0));
+                } else {
+                    deps.push((bwd_id(d, i, k + 1, &counts), cost.comm_ms(*b, s.lens[i])));
+                }
+                if i + 1 < m {
+                    // context-grad accumulation from the next slice
+                    deps.push((bwd_id(d, i + 1, k, &counts), 0.0));
+                }
+                bwd_items.push(Item {
+                    id,
+                    stage: k,
+                    phase: Phase::Bwd,
+                    part: d,
+                    slice: i,
+                    dur_ms: cost.bwd_ms(*b, s.lens[i], ctx_of[i]),
+                    deps,
+                    // bwd runs after fwd priorities; reverse stream order
+                    priority: prio + (m - 1 - i) as u64 * stages as u64 + (stages - 1 - k) as u64,
+                });
+            }
+        }
+        prio += (m * stages) as u64;
+    }
+    items.extend(bwd_items);
+    items.sort_by_key(|i| i.id);
+    for (idx, it) in items.iter().enumerate() {
+        debug_assert_eq!(idx, it.id);
+    }
+
+    Plan {
+        stages,
+        items,
+        mem_cap_parts,
+        flush_barrier,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::simulate;
+    use crate::solver::{JointScheme, SliceScheme};
+
+    /// constant-cost model: fwd 1 ms, bwd 2 ms, no comm
+    struct Const;
+    impl PhaseCost for Const {
+        fn fwd_ms(&self, _b: u32, _i: u32, _j: u32) -> f64 {
+            1.0
+        }
+        fn bwd_ms(&self, _b: u32, _i: u32, _j: u32) -> f64 {
+            2.0
+        }
+        fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+            0.0
+        }
+    }
+
+    fn scheme(parts: Vec<Vec<u32>>) -> JointScheme {
+        JointScheme {
+            parts: parts
+                .into_iter()
+                .map(|lens| {
+                    (
+                        1u32,
+                        SliceScheme {
+                            lens,
+                            total_ms: 0.0,
+                            t_max_ms: 0.0,
+                            latency_ms: 0.0,
+                        },
+                    )
+                })
+                .collect(),
+            latency_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn plan_has_fwd_and_bwd_for_every_slice_stage() {
+        let p = build_plan(&Const, &scheme(vec![vec![8, 8], vec![16]]), 3, None, true);
+        assert_eq!(p.items.len(), 2 * 3 * 3); // 3 slices × 3 stages × {f,b}
+        let fwd = p.items.iter().filter(|i| i.phase == Phase::Fwd).count();
+        assert_eq!(fwd, 9);
+    }
+
+    #[test]
+    fn gpipe_like_single_part_makespan_known() {
+        // M=1 part, 1 slice, K=2, fwd 1 bwd 2, flush: F0@0-1, F1@1-2,
+        // B1@2-4, B0@4-6 ⇒ makespan 6
+        let p = build_plan(&Const, &scheme(vec![vec![16]]), 2, None, true);
+        let r = simulate(&p).unwrap();
+        assert!((r.makespan_ms - 6.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn token_slicing_reduces_makespan_vs_single_slice() {
+        // Fig. 2c vs 2b: same work, more slices ⇒ smaller bubbles. Use a
+        // cost where slice time scales with length so total work is equal.
+        struct Linear;
+        impl PhaseCost for Linear {
+            fn fwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+                i as f64 / 16.0
+            }
+            fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+                2.0 * self.fwd_ms(b, i, j)
+            }
+            fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+                0.0
+            }
+        }
+        let k = 4;
+        let single = simulate(&build_plan(&Linear, &scheme(vec![vec![64]]), k, None, true)).unwrap();
+        let sliced = simulate(&build_plan(&Linear, &scheme(vec![vec![16; 4]]), k, None, true)).unwrap();
+        assert!(
+            sliced.makespan_ms < 0.6 * single.makespan_ms,
+            "sliced {} vs single {}",
+            sliced.makespan_ms,
+            single.makespan_ms
+        );
+        assert!(sliced.bubble_fraction < single.bubble_fraction);
+    }
+
+    #[test]
+    fn later_slices_cost_more_with_context_model() {
+        struct Ctx;
+        impl PhaseCost for Ctx {
+            fn fwd_ms(&self, _b: u32, i: u32, j: u32) -> f64 {
+                i as f64 / 16.0 + (i as f64 * j as f64) / 1024.0
+            }
+            fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+                2.0 * self.fwd_ms(b, i, j)
+            }
+            fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+                0.0
+            }
+        }
+        let p = build_plan(&Ctx, &scheme(vec![vec![16, 16]]), 1, None, true);
+        let first = p.items.iter().find(|i| i.slice == 0 && i.phase == Phase::Fwd).unwrap();
+        let second = p.items.iter().find(|i| i.slice == 1 && i.phase == Phase::Fwd).unwrap();
+        assert!(second.dur_ms > first.dur_ms);
+    }
+
+    #[test]
+    fn memory_capped_plan_still_completes_without_barrier() {
+        // Appendix A (c): cap 2 parts, 3 parts total, interleaved bwd.
+        let p = build_plan(&Const, &scheme(vec![vec![8], vec![8], vec![8]]), 3, Some(2), false);
+        let r = simulate(&p).unwrap();
+        assert!(r.makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn appendix_a_terapipe_beats_capped_gpipe() {
+        // Appendix A: 3 stages, memory cap 2 sequences. (b) microbatch GA
+        // vs (c) TeraPipe splitting each sequence in two.
+        let k = 3;
+        struct Linear;
+        impl PhaseCost for Linear {
+            fn fwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+                i as f64
+            }
+            fn bwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+                2.0 * i as f64
+            }
+            fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+                0.0
+            }
+        }
+        let ga = simulate(&build_plan(
+            &Linear,
+            &scheme(vec![vec![2]; 6]),
+            k,
+            Some(2),
+            false,
+        ))
+        .unwrap();
+        let tp = simulate(&build_plan(
+            &Linear,
+            &scheme(vec![vec![1, 1]; 6]),
+            k,
+            Some(2),
+            false,
+        ))
+        .unwrap();
+        assert!(
+            tp.makespan_ms < ga.makespan_ms,
+            "terapipe {} vs GA {}",
+            tp.makespan_ms,
+            ga.makespan_ms
+        );
+    }
+
+    #[test]
+    fn comm_delays_appear_on_cross_stage_edges() {
+        struct WithComm;
+        impl PhaseCost for WithComm {
+            fn fwd_ms(&self, _b: u32, _i: u32, _j: u32) -> f64 {
+                1.0
+            }
+            fn bwd_ms(&self, _b: u32, _i: u32, _j: u32) -> f64 {
+                1.0
+            }
+            fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+                0.25
+            }
+        }
+        let p = build_plan(&WithComm, &scheme(vec![vec![8]]), 2, None, true);
+        // F0@0-1, F1@1.25-2.25, B1@2.25-3.25, B0@3.5-4.5
+        let r = simulate(&p).unwrap();
+        assert!((r.makespan_ms - 4.5).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn ids_are_dense_and_consistent() {
+        let p = build_plan(&Const, &scheme(vec![vec![8, 8, 8], vec![8]]), 4, None, false);
+        for (i, it) in p.items.iter().enumerate() {
+            assert_eq!(i, it.id);
+            for &(d, _) in &it.deps {
+                assert!(d < p.items.len());
+            }
+        }
+    }
+}

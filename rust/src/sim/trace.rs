@@ -1,0 +1,115 @@
+//! Timeline traces: the paper's Fig. 2 / Fig. 4 style visualizations as
+//! ASCII (for the CLI) and Chrome trace-event JSON (for chrome://tracing).
+
+use super::Phase;
+use crate::util::json::Json;
+
+/// One executed work item on the timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub stage: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub phase: Phase,
+    pub part: usize,
+    pub slice: usize,
+}
+
+/// ASCII timeline, one row per stage (Fig. 2-style). `width` columns span
+/// [0, makespan]. Forward slices print as digits (part index mod 10),
+/// backward as letters, idle as '·'.
+pub fn ascii(spans: &[Span], stages: usize, width: usize) -> String {
+    let makespan = spans.iter().map(|s| s.end_ms).fold(0.0f64, f64::max);
+    if makespan <= 0.0 || width == 0 {
+        return String::new();
+    }
+    let mut rows = vec![vec!['·'; width]; stages];
+    for s in spans {
+        let a = ((s.start_ms / makespan) * width as f64).floor() as usize;
+        let b = (((s.end_ms / makespan) * width as f64).ceil() as usize).min(width);
+        let ch = match s.phase {
+            Phase::Fwd => char::from_digit((s.part % 10) as u32, 10).unwrap(),
+            Phase::Bwd => (b'a' + (s.part % 26) as u8) as char,
+        };
+        for c in a..b.max(a + 1).min(width) {
+            rows[s.stage][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    for (k, row) in rows.iter().enumerate() {
+        out.push_str(&format!("stage {k:>2} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!("          0 ms {:>width$.1} ms\n", makespan, width = width.saturating_sub(5)));
+    out
+}
+
+/// Chrome trace-event JSON (load via chrome://tracing or Perfetto).
+pub fn chrome_json(spans: &[Span]) -> String {
+    let evs: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                (
+                    "name",
+                    format!(
+                        "{}{}.{}",
+                        if s.phase == Phase::Fwd { "F" } else { "B" },
+                        s.part,
+                        s.slice
+                    )
+                    .into(),
+                ),
+                ("cat", if s.phase == Phase::Fwd { "fwd" } else { "bwd" }.into()),
+                ("ph", "X".into()),
+                ("ts", (s.start_ms * 1000.0).into()),
+                ("dur", ((s.end_ms - s.start_ms) * 1000.0).into()),
+                ("pid", 0u32.into()),
+                ("tid", s.stage.into()),
+            ])
+        })
+        .collect();
+    Json::Arr(evs).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans() -> Vec<Span> {
+        vec![
+            Span { stage: 0, start_ms: 0.0, end_ms: 1.0, phase: Phase::Fwd, part: 0, slice: 0 },
+            Span { stage: 1, start_ms: 1.0, end_ms: 2.0, phase: Phase::Fwd, part: 0, slice: 0 },
+            Span { stage: 1, start_ms: 2.0, end_ms: 4.0, phase: Phase::Bwd, part: 0, slice: 0 },
+            Span { stage: 0, start_ms: 4.0, end_ms: 6.0, phase: Phase::Bwd, part: 0, slice: 0 },
+        ]
+    }
+
+    #[test]
+    fn ascii_has_one_row_per_stage_and_idle_gaps() {
+        let a = ascii(&spans(), 2, 24);
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("stage  0"));
+        assert!(lines[0].contains('0')); // fwd part 0
+        assert!(lines[0].contains('a')); // bwd part 0
+        assert!(lines[1].contains('·')); // stage 1 idle at start
+    }
+
+    #[test]
+    fn ascii_empty_input_is_empty() {
+        assert_eq!(ascii(&[], 2, 10), "");
+    }
+
+    #[test]
+    fn chrome_json_parses_and_counts() {
+        let j = chrome_json(&spans());
+        let v = Json::parse(&j).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(arr[2].get("cat").unwrap().as_str(), Some("bwd"));
+        assert_eq!(arr[2].get("tid").unwrap().as_usize(), Some(1));
+    }
+}

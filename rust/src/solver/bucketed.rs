@@ -1,0 +1,223 @@
+//! Bucket-restricted slicing DP — Algorithm 1 over the AOT bucket set.
+//!
+//! The paper's DP may pick any slice length; our AOT runtime only ships
+//! executables for a bucket set (static HLO shapes, DESIGN.md §9). This
+//! variant restricts the inner DP's choice of `k` to bucketed lengths, so
+//! `terapipe train --auto` / `terapipe measure` can go straight from the
+//! fitted Eq. 9 model to an executable schedule. Collapses to the paper's
+//! solver when every grid multiple is a bucket.
+
+use super::dp::{FixedTmaxSolution, SolveStats};
+use super::SliceScheme;
+use crate::perfmodel::{CostModel, TableCostModel};
+
+/// Algorithm 1 with `k` restricted to `allowed_units` (grid units).
+pub fn solve_fixed_tmax_restricted(
+    table: &TableCostModel,
+    t_max: f64,
+    allowed_units: &[usize],
+) -> Option<FixedTmaxSolution> {
+    let n = table.units();
+    let mut s = vec![f64::INFINITY; n + 1];
+    let mut q = vec![0usize; n + 1];
+    s[0] = 0.0;
+    for i in 1..=n {
+        let mut best = f64::INFINITY;
+        let mut bestk = 0usize;
+        for &k in allowed_units {
+            if k == 0 || k > i || !s[i - k].is_finite() {
+                continue;
+            }
+            let t = table.at(k, i - k) + table.comm_at(k);
+            if t <= t_max {
+                let cand = s[i - k] + t;
+                if cand < best {
+                    best = cand;
+                    bestk = k;
+                }
+            }
+        }
+        s[i] = best;
+        q[i] = bestk;
+    }
+    if !s[n].is_finite() {
+        return None;
+    }
+    let mut lens = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        lens.push(q[i]);
+        i -= q[i];
+    }
+    lens.reverse();
+    Some(FixedTmaxSolution {
+        lens_units: lens,
+        total_ms: s[n],
+    })
+}
+
+/// Full bucketed solver: optimal Eq. 5 slicing of `seq_len` into lengths
+/// drawn from `buckets` (tokens). Granularity = gcd of the buckets.
+/// Returns `None` if the buckets cannot compose `seq_len`.
+pub fn solve_tokens_bucketed<M: CostModel>(
+    model: &M,
+    seq_len: u32,
+    stages: u32,
+    buckets: &[u32],
+    eps_ms: f64,
+) -> Option<(SliceScheme, SolveStats)> {
+    assert!(!buckets.is_empty());
+    let g = buckets.iter().copied().fold(0u32, gcd).max(1);
+    if seq_len % g != 0 {
+        return None;
+    }
+    let table = TableCostModel::build(model, seq_len, g);
+    let allowed: Vec<usize> = buckets.iter().map(|&b| (b / g) as usize).collect();
+    let k_f = stages as f64 - 1.0;
+
+    // Candidate t_max pool: only bucketed slice lengths are reachable.
+    let n = table.units();
+    let mut cands = Vec::new();
+    for &a in &allowed {
+        if a == 0 || a > n {
+            continue; // bucket longer than the sequence
+        }
+        for b in 0..=(n - a) {
+            cands.push(table.at(a, b) + table.comm_at(a));
+        }
+    }
+    if cands.is_empty() {
+        return None;
+    }
+    cands.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mut filtered = Vec::with_capacity(cands.len());
+    let mut last = f64::NEG_INFINITY;
+    for c in cands {
+        if c - last >= eps_ms {
+            filtered.push(c);
+            last = c;
+        }
+    }
+
+    let mut stats = SolveStats {
+        candidates: filtered.len(),
+        dps_run: 0,
+    };
+    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
+    for &tmax in &filtered {
+        if let Some((bl, _, _)) = &best {
+            if k_f * tmax >= *bl {
+                break;
+            }
+        }
+        stats.dps_run += 1;
+        if let Some(sol) = solve_fixed_tmax_restricted(&table, tmax, &allowed) {
+            let mut ctx = 0usize;
+            let mut achieved = f64::NEG_INFINITY;
+            for &l in &sol.lens_units {
+                achieved = achieved.max(table.at(l, ctx) + table.comm_at(l));
+                ctx += l;
+            }
+            let latency = sol.total_ms + k_f * achieved;
+            if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
+                best = Some((latency, sol, achieved));
+            }
+        }
+    }
+
+    best.map(|(latency, sol, tmax)| {
+        (
+            SliceScheme {
+                lens: sol.lens_units.iter().map(|&u| u as u32 * g).collect(),
+                total_ms: sol.total_ms,
+                t_max_ms: tmax,
+                latency_ms: latency,
+            },
+            stats,
+        )
+    })
+}
+
+fn gcd(a: u32, b: u32) -> u32 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::pipeline_latency;
+    use crate::util::prop;
+
+    struct Affine;
+    impl CostModel for Affine {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            0.5 + 0.02 * i as f64 + 1e-4 * i as f64 * j as f64
+        }
+    }
+
+    #[test]
+    fn collapses_to_unrestricted_when_all_lengths_allowed() {
+        let buckets: Vec<u32> = (1..=16).map(|u| u * 8).collect();
+        let (restricted, _) = solve_tokens_bucketed(&Affine, 128, 8, &buckets, 0.0).unwrap();
+        let (free, _) = crate::solver::dp::solve_tokens(&Affine, 128, 8, 8, 0.0);
+        assert!((restricted.latency_ms - free.latency_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scheme_uses_only_buckets_and_covers() {
+        let buckets = [16u32, 32, 64, 128];
+        let (s, _) = solve_tokens_bucketed(&Affine, 128, 4, &buckets, 0.0).unwrap();
+        assert_eq!(s.seq_len(), 128);
+        assert!(s.lens.iter().all(|l| buckets.contains(l)), "{:?}", s.lens);
+    }
+
+    #[test]
+    fn exhaustive_optimality_over_bucket_compositions() {
+        // enumerate every composition of 128 from {16,32,64,128} and check
+        // the DP's latency is minimal
+        let buckets = [16u32, 32, 64, 128];
+        let k = 6u32;
+        let (s, _) = solve_tokens_bucketed(&Affine, 128, k, &buckets, 0.0).unwrap();
+
+        fn rec(rem: u32, cur: &mut Vec<u32>, buckets: &[u32], k: u32, best: &mut f64) {
+            if rem == 0 {
+                *best = best.min(pipeline_latency(&Affine, cur, k));
+                return;
+            }
+            for &b in buckets {
+                if b <= rem {
+                    cur.push(b);
+                    rec(rem - b, cur, buckets, k, best);
+                    cur.pop();
+                }
+            }
+        }
+        let mut best = f64::INFINITY;
+        rec(128, &mut Vec::new(), &buckets, k, &mut best);
+        assert!((s.latency_ms - best).abs() < 1e-9, "dp {} vs exhaustive {best}", s.latency_ms);
+    }
+
+    #[test]
+    fn impossible_coverage_returns_none() {
+        assert!(solve_tokens_bucketed(&Affine, 100, 4, &[64, 128], 0.0).is_none());
+        // 96 not composable from {64, 128} even though gcd divides it
+        assert!(solve_tokens_bucketed(&Affine, 96, 4, &[64, 128], 0.0).is_none());
+    }
+
+    #[test]
+    fn prop_restricted_never_beats_unrestricted() {
+        prop::run_cases(50, |g| {
+            let k = g.int(1, 12);
+            let l = g.int(2, 8) * 16;
+            let (free, _) = crate::solver::dp::solve_tokens(&Affine, l, k, 16, 0.0);
+            if let Some((restr, _)) = solve_tokens_bucketed(&Affine, l, k, &[16, 32, 64], 0.0) {
+                assert!(restr.latency_ms >= free.latency_ms - 1e-9);
+                assert_eq!(restr.seq_len(), l);
+            }
+        });
+    }
+}

@@ -1,0 +1,114 @@
+//! The 1-D knapsack the joint batch+token scheme reduces to (§3.4).
+//!
+//! Given per-batch-size costs `T_b` (b = 1..=B), pick counts of batch
+//! slices `b_1, …, b_D` with `Σ b_d = B` minimizing `Σ T_{b_d}` — an
+//! unbounded min-cost exact-cover over the batch dimension, solved by DP in
+//! O(B²).
+
+/// `costs[b-1]` = T_b for a batch slice of `b` sequences. Returns the
+/// minimizing composition (descending) and its total cost, or `None` if
+/// `costs` is empty or `total` is 0.
+pub fn min_cost_composition(costs: &[f64], total: u32) -> Option<(Vec<u32>, f64)> {
+    if costs.is_empty() || total == 0 {
+        return None;
+    }
+    let b_max = costs.len().min(total as usize);
+    let n = total as usize;
+    let mut dp = vec![f64::INFINITY; n + 1];
+    let mut choice = vec![0usize; n + 1];
+    dp[0] = 0.0;
+    for i in 1..=n {
+        for b in 1..=b_max.min(i) {
+            let c = dp[i - b] + costs[b - 1];
+            if c < dp[i] {
+                dp[i] = c;
+                choice[i] = b;
+            }
+        }
+    }
+    if !dp[n].is_finite() {
+        return None;
+    }
+    let mut parts = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        parts.push(choice[i] as u32);
+        i -= choice[i];
+    }
+    parts.sort_unstable_by(|a, b| b.cmp(a));
+    Some((parts, dp[n]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn picks_cheapest_single_part_when_subadditive() {
+        // T_b = b (perfectly linear): any composition costs the same.
+        let costs: Vec<f64> = (1..=8).map(|b| b as f64).collect();
+        let (parts, cost) = min_cost_composition(&costs, 8).unwrap();
+        assert_eq!(parts.iter().sum::<u32>(), 8);
+        assert!((cost - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefers_large_parts_with_economies_of_scale() {
+        // T_b = 1 + 0.1·b: fixed overhead per part ⇒ one big part wins.
+        let costs: Vec<f64> = (1..=8).map(|b| 1.0 + 0.1 * b as f64).collect();
+        let (parts, _) = min_cost_composition(&costs, 8).unwrap();
+        assert_eq!(parts, vec![8]);
+    }
+
+    #[test]
+    fn prefers_small_parts_with_diseconomies() {
+        // Superlinear T_b ⇒ all-ones wins.
+        let costs: Vec<f64> = (1..=8).map(|b| (b * b) as f64).collect();
+        let (parts, cost) = min_cost_composition(&costs, 8).unwrap();
+        assert_eq!(parts, vec![1; 8]);
+        assert!((cost - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handles_total_larger_than_cost_table() {
+        let costs = vec![1.0, 1.5]; // only b ∈ {1, 2} available
+        let (parts, cost) = min_cost_composition(&costs, 5).unwrap();
+        assert_eq!(parts.iter().sum::<u32>(), 5);
+        assert!((cost - (2.0 * 1.5 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_zero_rejected() {
+        assert!(min_cost_composition(&[], 4).is_none());
+        assert!(min_cost_composition(&[1.0], 0).is_none());
+    }
+
+    /// Property: the DP result is a valid composition and beats 200 random
+    /// compositions per case.
+    #[test]
+    fn prop_optimal_vs_random_compositions() {
+        prop::run_cases(256, |g| {
+            let n = g.int(1, 6) as usize;
+            let costs = g.floats(n, 0.01, 10.0);
+            let total = g.int(1, 12);
+            let (parts, cost) = min_cost_composition(&costs, total).unwrap();
+            assert_eq!(parts.iter().sum::<u32>(), total);
+            assert!(parts.iter().all(|&p| p >= 1 && p as usize <= costs.len()));
+            let recomputed: f64 = parts.iter().map(|&p| costs[p as usize - 1]).sum();
+            assert!((recomputed - cost).abs() < 1e-9);
+
+            // random adversary compositions
+            for _ in 0..200 {
+                let mut rem = total;
+                let mut c = 0.0;
+                while rem > 0 {
+                    let b = g.int(1, rem.min(costs.len() as u32));
+                    c += costs[b as usize - 1];
+                    rem -= b;
+                }
+                assert!(cost <= c + 1e-9, "dp {cost} beaten by random {c}");
+            }
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! The TeraPipe slicing solvers (paper §3.3–3.4).
+//!
+//! * [`dp`] — Algorithm 1: the `S*(i; t_max)` dynamic program, plus the
+//!   outer `t_max` enumeration with the ε-grid and the `K·t_max` pruning
+//!   optimizations the paper describes.
+//! * [`uniform`] — the uniform-slicing heuristic baseline of Fig. 6.
+//! * [`joint`] — the §3.4 joint batch+token extension: token-DP per batch
+//!   size, then a 1-D knapsack over the batch dimension.
+//! * [`knapsack`] — the exact unbounded min-cost composition solver the
+//!   joint scheme reduces to.
+
+pub mod bucketed;
+pub mod dp;
+pub mod joint;
+pub mod knapsack;
+pub mod uniform;
+
+/// A slicing of one (micro)batch along the token dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceScheme {
+    /// Slice lengths l_1..l_M in tokens (sum = L).
+    pub lens: Vec<u32>,
+    /// Σ tᵢ — total per-cell occupancy (ms).
+    pub total_ms: f64,
+    /// maxⱼ tⱼ — the pipeline's slowest stage time (ms).
+    pub t_max_ms: f64,
+    /// Eq. 5 latency: total + (K-1)·t_max (ms).
+    pub latency_ms: f64,
+}
+
+impl SliceScheme {
+    pub fn num_slices(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn seq_len(&self) -> u32 {
+        self.lens.iter().sum()
+    }
+
+    /// Paper notation, e.g. `[776, 640, 632]` (Table 2).
+    pub fn notation(&self) -> String {
+        format!(
+            "[{}]",
+            self.lens
+                .iter()
+                .map(|l| l.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+}
+
+/// The full §3.4 plan for a minibatch: batch split + per-batch-slice token
+/// schemes, e.g. the paper's `[(1, [776, 640, 632])] * 16`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointScheme {
+    /// (microbatch sequences, token scheme) per pipelined batch slice, in
+    /// execution order.
+    pub parts: Vec<(u32, SliceScheme)>,
+    /// Predicted iteration latency (ms) under the Eq. 5-style objective.
+    pub latency_ms: f64,
+}
+
+impl JointScheme {
+    pub fn batch(&self) -> u32 {
+        self.parts.iter().map(|(b, _)| b).sum()
+    }
+
+    /// Paper notation with run-length folding: `[(1, [2048])] * 32`.
+    pub fn notation(&self) -> String {
+        let mut runs: Vec<(String, u32)> = Vec::new();
+        for (b, s) in &self.parts {
+            let token = format!("({}, {})", b, s.notation());
+            match runs.last_mut() {
+                Some((t, n)) if *t == token => *n += 1,
+                _ => runs.push((token, 1)),
+            }
+        }
+        runs.iter()
+            .map(|(t, n)| {
+                if *n == 1 {
+                    format!("[{t}]")
+                } else {
+                    format!("[{t}] * {n}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scheme(lens: &[u32]) -> SliceScheme {
+        SliceScheme {
+            lens: lens.to_vec(),
+            total_ms: 1.0,
+            t_max_ms: 1.0,
+            latency_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn notation_matches_paper_style() {
+        assert_eq!(scheme(&[776, 640, 632]).notation(), "[776, 640, 632]");
+        let j = JointScheme {
+            parts: vec![(1, scheme(&[2048])); 3],
+            latency_ms: 0.0,
+        };
+        assert_eq!(j.notation(), "[(1, [2048])] * 3");
+        let j2 = JointScheme {
+            parts: vec![(1, scheme(&[2048])), (2, scheme(&[1024, 1024]))],
+            latency_ms: 0.0,
+        };
+        assert_eq!(j2.notation(), "[(1, [2048])] + [(2, [1024, 1024])]");
+    }
+
+    #[test]
+    fn joint_batch_sums_parts() {
+        let j = JointScheme {
+            parts: vec![(2, scheme(&[8])), (3, scheme(&[8]))],
+            latency_ms: 0.0,
+        };
+        assert_eq!(j.batch(), 5);
+    }
+}

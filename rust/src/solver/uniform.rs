@@ -1,0 +1,130 @@
+//! Uniform slicing — the Fig. 6 ablation baseline.
+//!
+//! "Splitting inputs into multiple same-size chunks for pipelining, as
+//! normally done in existing work, is not the ideal way for pipelining on
+//! the token dimension" (§3.2). This module builds those same-size schemes
+//! so the benches can reproduce the DP-vs-uniform gap.
+
+use super::SliceScheme;
+use crate::perfmodel::CostModel;
+
+/// Slice `seq_len` into `num_slices` near-equal parts (remainder spread
+/// over the leading slices, keeping every length a multiple of
+/// `granularity` when possible).
+pub fn uniform_lens(seq_len: u32, num_slices: u32, granularity: u32) -> Vec<u32> {
+    assert!(num_slices >= 1 && num_slices * granularity <= seq_len.max(granularity));
+    let units = seq_len / granularity;
+    let base = units / num_slices;
+    let extra = units % num_slices;
+    let mut lens: Vec<u32> = (0..num_slices)
+        .map(|i| (base + u32::from(i < extra)) * granularity)
+        .collect();
+    // granularity may not divide seq_len exactly: pad the first slice
+    let covered: u32 = lens.iter().sum();
+    lens[0] += seq_len - covered;
+    lens
+}
+
+/// Evaluate the uniform scheme with `num_slices` under Eq. 5.
+pub fn uniform_scheme<M: CostModel>(
+    model: &M,
+    seq_len: u32,
+    stages: u32,
+    num_slices: u32,
+    granularity: u32,
+) -> SliceScheme {
+    let lens = uniform_lens(seq_len, num_slices, granularity);
+    let mut ctx = 0u32;
+    let mut total = 0.0;
+    let mut tmax = f64::NEG_INFINITY;
+    for &l in &lens {
+        let t = model.t(l, ctx) + model.t_comm(l);
+        total += t;
+        tmax = tmax.max(t);
+        ctx += l;
+    }
+    SliceScheme {
+        lens,
+        total_ms: total,
+        t_max_ms: tmax,
+        latency_ms: total + (stages as f64 - 1.0) * tmax,
+    }
+}
+
+/// Sweep #slices over powers of two (the Fig. 6 x-axis) and return
+/// (num_slices, scheme) pairs.
+pub fn sweep<M: CostModel>(
+    model: &M,
+    seq_len: u32,
+    stages: u32,
+    max_slices: u32,
+    granularity: u32,
+) -> Vec<(u32, SliceScheme)> {
+    let mut out = Vec::new();
+    let mut m = 1u32;
+    while m <= max_slices && m * granularity <= seq_len {
+        out.push((m, uniform_scheme(model, seq_len, stages, m, granularity)));
+        m *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::CostModel;
+
+    struct Toy;
+    impl CostModel for Toy {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            0.5 + 0.01 * i as f64 + 1e-5 * i as f64 * j as f64
+        }
+    }
+
+    #[test]
+    fn uniform_lens_cover_and_balance() {
+        let lens = uniform_lens(2048, 16, 8);
+        assert_eq!(lens.iter().sum::<u32>(), 2048);
+        assert!(lens.iter().all(|&l| l == 128));
+        let lens = uniform_lens(2048, 3, 8);
+        assert_eq!(lens.iter().sum::<u32>(), 2048);
+        let max = lens.iter().max().unwrap();
+        let min = lens.iter().min().unwrap();
+        assert!(max - min <= 8, "{lens:?}");
+    }
+
+    #[test]
+    fn uniform_lens_handles_indivisible_seq() {
+        let lens = uniform_lens(100, 3, 8);
+        assert_eq!(lens.iter().sum::<u32>(), 100);
+    }
+
+    #[test]
+    fn later_uniform_slices_dominate_tmax() {
+        // Non-uniform running time of uniform splits (paper Fig. 4 top):
+        // the last slice carries the most context ⇒ defines t_max.
+        let s = uniform_scheme(&Toy, 1024, 4, 8, 8);
+        let last_ctx: u32 = s.lens[..7].iter().sum();
+        let t_last = Toy.t(s.lens[7], last_ctx);
+        assert!((s.t_max_ms - t_last).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_returns_powers_of_two() {
+        let sw = sweep(&Toy, 2048, 8, 128, 8);
+        let ns: Vec<u32> = sw.iter().map(|(n, _)| *n).collect();
+        assert_eq!(ns, vec![1, 2, 4, 8, 16, 32, 64, 128]);
+    }
+
+    #[test]
+    fn some_intermediate_slice_count_wins() {
+        // Fig. 6: both #slices=1 (big bubbles) and #slices=max (overhead)
+        // lose to an intermediate count.
+        let sw = sweep(&Toy, 2048, 16, 128, 8);
+        let best = sw
+            .iter()
+            .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())
+            .unwrap();
+        assert!(best.0 > 1 && best.0 < 128, "best #slices {}", best.0);
+    }
+}

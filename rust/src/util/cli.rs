@@ -1,0 +1,129 @@
+//! Tiny CLI argument parser (substrate module, offline build — no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Value-binding is greedy: `--name tok` treats `tok` as the value unless
+//! it starts with `--`; bare boolean flags should therefore come last or
+//! use `--flag=true`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (without argv[0]).
+    pub fn parse(raw: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let arg = &raw[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.opts.insert(stripped.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u32(&self, name: &str, default: u32) -> u32 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.u32(name, default as u32) as usize
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated u32 list.
+    pub fn u32_list(&self, name: &str, default: &[u32]) -> Vec<u32> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad entry '{x}'")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("solve out.json --setting 5 --eps=0.1 --verbose");
+        assert_eq!(a.positional, vec!["solve", "out.json"]);
+        assert_eq!(a.u32("setting", 0), 5);
+        assert_eq!(a.f64("eps", 0.0), 0.1);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.u32("steps", 100), 100);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.u32_list("buckets", &[16, 32]), vec![16, 32]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("--buckets 16,32,64");
+        assert_eq!(a.u32_list("buckets", &[]), vec![16, 32, 64]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--dry-run --setting 3");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.u32("setting", 0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        parse("--setting five").u32("setting", 0);
+    }
+}

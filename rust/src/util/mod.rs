@@ -1,0 +1,124 @@
+//! Small shared utilities: summary statistics, a deterministic RNG, a
+//! wall-clock timer, and the offline-build substrates (JSON, CLI parsing,
+//! property testing).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+
+use std::time::Instant;
+
+/// Mean / standard deviation over repeated latency measurements — Table
+/// 2–4 report "mean ± std over 10 runs" and so do we.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from_samples(xs: &[f64]) -> Stats {
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let min = xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min,
+            max,
+            n,
+        }
+    }
+
+    /// "1.328 ± 0.037" (paper table style, seconds with 3 decimals).
+    pub fn pm(&self) -> String {
+        format!("{:.3} ± {:.3}", self.mean, self.std)
+    }
+}
+
+/// Time a closure in milliseconds.
+pub fn time_ms<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// SplitMix64 — deterministic, dependency-free RNG for synthetic data.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, m).
+    pub fn below(&mut self, m: u32) -> u32 {
+        (self.next_u64() % m as u64) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.pm(), "2.000 ± 1.000");
+    }
+
+    #[test]
+    fn stats_single_sample_has_zero_std() {
+        let s = Stats::from_samples(&[5.0]);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn rng_deterministic_and_in_range() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            let x = a.below(17);
+            assert_eq!(x, b.below(17));
+            assert!(x < 17);
+        }
+        let f = a.f64();
+        assert!((0.0..1.0).contains(&f));
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

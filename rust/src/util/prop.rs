@@ -1,0 +1,130 @@
+//! Lightweight property-testing harness (substrate module — proptest is
+//! not in the offline crate set).
+//!
+//! [`run_cases`] drives a closure with a deterministic [`Gen`] per case and
+//! reports the failing seed on panic, so failures reproduce exactly:
+//!
+//! ```ignore
+//! prop::run_cases(256, |g| {
+//!     let lens = g.composition(64, 8);
+//!     assert_eq!(lens.iter().sum::<u32>(), 64);
+//! });
+//! ```
+
+use super::Rng;
+
+/// Per-case random generator with domain-specific helpers.
+pub struct Gen {
+    rng: Rng,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            case: seed,
+        }
+    }
+
+    /// Uniform u32 in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: u32, hi: u32) -> u32 {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+
+    /// Random composition of `total` into parts that are multiples of
+    /// `granularity` (total must be a multiple too) — random slicing
+    /// schemes for the solver/sim/coordinator invariants.
+    pub fn composition(&mut self, total: u32, granularity: u32) -> Vec<u32> {
+        assert!(granularity >= 1 && total % granularity == 0 && total > 0);
+        let units = total / granularity;
+        let mut lens = Vec::new();
+        let mut rem = units;
+        while rem > 0 {
+            let take = self.int(1, rem);
+            lens.push(take * granularity);
+            rem -= take;
+        }
+        lens
+    }
+
+    /// Vector of `n` floats in [lo, hi).
+    pub fn floats(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.float(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` deterministic property cases; on panic, re-raise with the
+/// case index so `Gen::new(i)` reproduces it.
+pub fn run_cases(cases: u64, mut body: impl FnMut(&mut Gen)) {
+    for i in 0..cases {
+        let mut g = Gen::new(i);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = r {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {i}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn composition_covers_total() {
+        run_cases(200, |g| {
+            let total = g.int(1, 32) * 8;
+            let lens = g.composition(total, 8);
+            assert_eq!(lens.iter().sum::<u32>(), total);
+            assert!(lens.iter().all(|&l| l > 0 && l % 8 == 0));
+        });
+    }
+
+    #[test]
+    fn int_bounds_inclusive() {
+        run_cases(100, |g| {
+            let x = g.int(3, 5);
+            assert!((3..=5).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_case_reports_index() {
+        let r = std::panic::catch_unwind(|| {
+            run_cases(50, |g| {
+                assert!(g.case != 17, "boom");
+            })
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("case 17"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        run_cases(5, |g| a.push(g.int(0, 1000)));
+        let mut b = Vec::new();
+        run_cases(5, |g| b.push(g.int(0, 1000)));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,276 @@
+//! Cross-module property tests: the DP solver, the Eq. 5 closed form and
+//! the discrete-event simulator must agree wherever the paper's math says
+//! they do. Uses the in-tree deterministic property harness
+//! (`terapipe::util::prop`).
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::perfmodel::{pipeline_latency, CostModel, TableCostModel};
+use terapipe::sim::engine::simulate;
+use terapipe::sim::schedule::{build_plan, PhaseCost};
+use terapipe::sim::{Item, Phase, Plan};
+use terapipe::solver::dp::{solve_fixed_tmax, solve_tokens};
+use terapipe::solver::joint::{evaluate_joint_with, solve_joint_exact, JointOpts};
+use terapipe::solver::uniform::uniform_scheme;
+use terapipe::solver::{JointScheme, SliceScheme};
+use terapipe::util::prop;
+
+/// Random affine-with-context cost model drawn per case.
+fn random_model(g: &mut prop::Gen) -> impl CostModel + Clone {
+    #[derive(Clone)]
+    struct M {
+        over: f64,
+        lin: f64,
+        ctx: f64,
+        comm: f64,
+    }
+    impl CostModel for M {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64
+        }
+        fn t_comm(&self, _i: u32) -> f64 {
+            self.comm
+        }
+    }
+    M {
+        over: g.float(0.01, 2.0),
+        lin: g.float(0.001, 0.1),
+        ctx: g.float(0.0, 3e-4),
+        comm: g.float(0.0, 0.3),
+    }
+}
+
+/// The DP's reported latency must equal the independent Eq. 5 evaluation
+/// of its scheme, and no random slicing may beat it.
+#[test]
+fn prop_dp_latency_consistent_and_unbeaten_by_random_schemes() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let units = g.int(4, 16);
+        let gran = *g.choose(&[8u32, 16, 32]);
+        let l = units * gran;
+        let k = g.int(1, 24);
+        let (scheme, _) = solve_tokens(&m, l, k, gran, 0.0);
+        assert_eq!(scheme.seq_len(), l);
+
+        let eval = pipeline_latency(&m, &scheme.lens, k);
+        assert!(
+            (eval - scheme.latency_ms).abs() < 1e-9,
+            "reported {} vs eval {eval}",
+            scheme.latency_ms
+        );
+
+        for _ in 0..50 {
+            let lens = g.composition(l, gran);
+            let lat = pipeline_latency(&m, &lens, k);
+            assert!(
+                scheme.latency_ms <= lat + 1e-9,
+                "DP {} beaten by {:?} = {lat}",
+                scheme.latency_ms,
+                lens
+            );
+        }
+    });
+}
+
+/// Algorithm 1 feasibility: every slice in a fixed-t_max solution respects
+/// the budget, and tightening t_max never lowers the total.
+#[test]
+fn prop_fixed_tmax_feasible_and_monotone() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let gran = 8u32;
+        let l = g.int(4, 20) * gran;
+        let table = TableCostModel::build(&m, l, gran);
+        let tmax_hi = m.t(l, 0) + m.t_comm(l) + 1.0;
+        let tmax_lo = tmax_hi * g.float(0.3, 0.9);
+
+        let hi = solve_fixed_tmax(&table, tmax_hi).expect("whole-sequence slice fits");
+        if let Some(lo) = solve_fixed_tmax(&table, tmax_lo) {
+            assert!(lo.total_ms >= hi.total_ms - 1e-9, "tighter budget, lower total");
+            let mut ctx = 0usize;
+            for &u in &lo.lens_units {
+                assert!(table.at(u, ctx) + table.comm_at(u) <= tmax_lo + 1e-9);
+                ctx += u;
+            }
+        }
+    });
+}
+
+/// Fwd-only simulation of any slicing equals the Eq. 5 closed form
+/// (uniform per-stage costs — the regime where Eq. 5 is exact).
+#[test]
+fn prop_sim_forward_matches_eq5_closed_form() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let gran = 8u32;
+        let l = g.int(2, 12) * gran;
+        let k = g.int(1, 10) as usize;
+        let lens = g.composition(l, gran);
+
+        // forward-only items on a K-stage chain
+        let mut items = Vec::new();
+        let mcount = lens.len();
+        let mut ctx = vec![0u32; mcount];
+        let mut acc = 0;
+        for (i, &len) in lens.iter().enumerate() {
+            ctx[i] = acc;
+            acc += len;
+        }
+        for s in 0..k {
+            for (i, &len) in lens.iter().enumerate() {
+                let mut deps = Vec::new();
+                if s > 0 {
+                    deps.push(((s - 1) * mcount + i, m.t_comm(len)));
+                }
+                if i > 0 {
+                    deps.push((s * mcount + i - 1, 0.0));
+                }
+                items.push(Item {
+                    id: s * mcount + i,
+                    stage: s,
+                    phase: Phase::Fwd,
+                    part: 0,
+                    slice: i,
+                    dur_ms: m.t(len, ctx[i]),
+                    deps,
+                    priority: (s * mcount + i) as u64,
+                });
+            }
+        }
+        let r = simulate(&Plan {
+            stages: k,
+            items,
+            mem_cap_parts: None,
+            flush_barrier: false,
+        })
+        .unwrap();
+
+        // Eq. 5 with comm folded differently: the sim pays comm on edges
+        // (pipeline fill), so compare against the no-comm closed form when
+        // comm = 0; otherwise just require sim ≥ closed form.
+        let closed = {
+            let mut total = 0.0;
+            let mut tmax = f64::NEG_INFINITY;
+            let mut c = 0u32;
+            for &len in &lens {
+                let t = m.t(len, c);
+                total += t;
+                tmax = tmax.max(t);
+                c += len;
+            }
+            total + (k as f64 - 1.0) * tmax
+        };
+        if m.t_comm(8) == 0.0 {
+            assert!((r.makespan_ms - closed).abs() < 1e-6, "sim {} vs eq5 {closed}", r.makespan_ms);
+        } else {
+            assert!(r.makespan_ms >= closed - 1e-9);
+        }
+    });
+}
+
+/// The exact joint solver's plan always covers the batch, and its reported
+/// latency is never worse than the trivial GPipe plan's Eq. 5 evaluation.
+#[test]
+fn prop_joint_exact_covers_batch_and_beats_gpipe_eval() {
+    prop::run_cases(25, |g| {
+        let setting = presets::setting(*g.choose(&[5u32, 7, 8, 9]));
+        let base = AnalyticModel::from_setting(&setting, 1);
+        let batch = g.int(1, 8);
+        let k = g.int(2, 48);
+        let opts = JointOpts {
+            granularity: 128,
+            eps_ms: 0.5,
+            max_microbatch: Some(4),
+        };
+        let j = solve_joint_exact(|b| base.with_microbatch(b), batch, 2048, k, &opts);
+        assert_eq!(j.batch(), batch);
+        for (_, s) in &j.parts {
+            assert_eq!(s.seq_len(), 2048);
+            assert!(s.lens.iter().all(|&l| l % 128 == 0));
+        }
+        // trivial plan: every sequence unsliced
+        let trivial: Vec<(u32, SliceScheme)> = (0..batch)
+            .map(|_| {
+                (
+                    1u32,
+                    SliceScheme {
+                        lens: vec![2048],
+                        total_ms: 0.0,
+                        t_max_ms: 0.0,
+                        latency_ms: 0.0,
+                    },
+                )
+            })
+            .collect();
+        let trivial_eval = evaluate_joint_with(&|b| base.with_microbatch(b), &trivial, k);
+        assert!(
+            j.latency_ms <= trivial_eval + 1e-6,
+            "joint {} vs trivial {trivial_eval}",
+            j.latency_ms
+        );
+    });
+}
+
+/// Memory-capped simulation is never faster than uncapped, and caps ≥
+/// #parts change nothing (Appendix A boundary conditions).
+#[test]
+fn prop_memory_cap_monotone() {
+    struct Unit;
+    impl PhaseCost for Unit {
+        fn fwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+            i as f64
+        }
+        fn bwd_ms(&self, _b: u32, i: u32, _j: u32) -> f64 {
+            2.0 * i as f64
+        }
+        fn comm_ms(&self, _b: u32, _i: u32) -> f64 {
+            0.0
+        }
+    }
+    prop::run_cases(40, |g| {
+        let parts = g.int(2, 6);
+        let slices = g.int(1, 3);
+        let k = g.int(2, 5) as usize;
+        let scheme = JointScheme {
+            parts: (0..parts)
+                .map(|_| {
+                    (
+                        1u32,
+                        SliceScheme {
+                            lens: vec![4; slices as usize],
+                            total_ms: 0.0,
+                            t_max_ms: 0.0,
+                            latency_ms: 0.0,
+                        },
+                    )
+                })
+                .collect(),
+            latency_ms: 0.0,
+        };
+        let free = simulate(&build_plan(&Unit, &scheme, k, None, false)).unwrap();
+        let ample = simulate(&build_plan(&Unit, &scheme, k, Some(parts), false)).unwrap();
+        let tight = simulate(&build_plan(&Unit, &scheme, k, Some(1), false)).unwrap();
+        assert!((free.makespan_ms - ample.makespan_ms).abs() < 1e-9);
+        assert!(tight.makespan_ms >= free.makespan_ms - 1e-9);
+    });
+}
+
+/// Uniform baseline self-consistency: scheme latency equals the closed
+/// form on random instances; the DP never loses to it.
+#[test]
+fn prop_uniform_eval_matches_closed_form_and_dp_wins() {
+    prop::run_cases(40, |g| {
+        let m = random_model(g);
+        let gran = 8u32;
+        let l = g.int(4, 16) * gran;
+        let k = g.int(2, 16);
+        let n = g.int(1, l / gran);
+        let u = uniform_scheme(&m, l, k, n, gran);
+        let eval = pipeline_latency(&m, &u.lens, k);
+        assert!((eval - u.latency_ms).abs() < 1e-9);
+
+        let (dp, _) = solve_tokens(&m, l, k, gran, 0.0);
+        assert!(dp.latency_ms <= u.latency_ms + 1e-9);
+    });
+}
