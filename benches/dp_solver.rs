@@ -1,15 +1,23 @@
 //! Bench: the DP solver itself (§3.3 "the dynamic programming can finish
-//! within a minute"). Times `solve_tokens` and the exact joint solver at
-//! paper scale across granularities, and reports the ε-grid/pruning
-//! statistics.
-
-use std::time::Instant;
+//! within a minute"). Times the parallel engine vs the retained sequential
+//! reference at paper scale across granularities, reports per-run stats
+//! (not just the last run), and emits a machine-readable
+//! `BENCH_dp_solver.json` at the workspace root so the perf trajectory is
+//! tracked across PRs.
+//!
+//! Each granularity densifies its `TableCostModel` **once** and reuses it
+//! across repetitions via `solve_tokens_table`, so the numbers time the
+//! DP — table densification is timed separately and reported on its own.
 
 use terapipe::config::presets;
 use terapipe::perfmodel::analytic::AnalyticModel;
-use terapipe::solver::dp::solve_tokens;
+use terapipe::perfmodel::TableCostModel;
+use terapipe::solver::dp::{solve_tokens_table, solve_tokens_table_seq};
 use terapipe::solver::joint::{solve_joint_analytic, JointOpts};
-use terapipe::util::Stats;
+use terapipe::util::json::Json;
+use terapipe::util::{time_ms, Stats};
+
+const REPS: usize = 5;
 
 fn main() {
     println!("# DP solver runtime (paper budget: under one minute at L=2048)");
@@ -17,31 +25,93 @@ fn main() {
     let base = AnalyticModel::from_setting(&setting, 1);
     let l = setting.model.seq_len;
     let k = setting.parallel.pipeline_stages;
+    let threads = rayon::current_num_threads();
+    println!("threads: {threads}");
+
+    let mut rows: Vec<Json> = Vec::new();
 
     println!("\n## single-sequence token DP, setting (9), K={k}, L={l}");
-    println!("| granularity | eps (ms) | candidates | DPs run | slices | wall (ms, mean ± std of 5) |");
+    println!("| granularity | eps (ms) | densify (ms) | candidates | DPs run | probe DPs | slices | wall ms (mean ± std of {REPS}) | runs |");
     for (g, eps) in [(64u32, 0.1f64), (32, 0.1), (16, 0.1), (8, 0.1), (8, 0.0)] {
-        let mut wall = Vec::new();
+        // densify once — the repetitions time the DP, not the table build
+        let (table, densify_ms) = time_ms(|| TableCostModel::build(&base, l, g));
+        let mut wall = Vec::with_capacity(REPS);
         let mut last = None;
-        for _ in 0..5 {
-            let t0 = Instant::now();
-            let r = solve_tokens(&base, l, k, g, eps);
-            wall.push(t0.elapsed().as_secs_f64() * 1e3);
+        for _ in 0..REPS {
+            let (r, ms) = time_ms(|| solve_tokens_table(&table, k, eps));
+            wall.push(ms);
             last = Some(r);
         }
         let (scheme, stats) = last.unwrap();
         let s = Stats::from_samples(&wall);
+        let runs = wall
+            .iter()
+            .map(|w| format!("{w:.2}"))
+            .collect::<Vec<_>>()
+            .join("/");
         println!(
-            "| {g} | {eps} | {} | {} | {} | {} |",
+            "| {g} | {eps} | {densify_ms:.2} | {} | {} | {} | {} | {} | {runs} |",
             stats.candidates,
             stats.dps_run,
+            stats.probe_dps,
             scheme.num_slices(),
             s.pm()
         );
+        rows.push(Json::obj(vec![
+            ("granularity", Json::Num(g as f64)),
+            ("eps_ms", Json::Num(eps)),
+            ("densify_ms", Json::Num(densify_ms)),
+            ("candidates", Json::Num(stats.candidates as f64)),
+            ("dps_run", Json::Num(stats.dps_run as f64)),
+            ("probe_dps", Json::Num(stats.probe_dps as f64)),
+            ("slices", Json::Num(scheme.num_slices() as f64)),
+            ("wall_ms_mean", Json::Num(s.mean)),
+            ("wall_ms_std", Json::Num(s.std)),
+            ("wall_ms_min", Json::Num(s.min)),
+            ("wall_ms_max", Json::Num(s.max)),
+            (
+                "wall_ms_runs",
+                Json::arr(wall.iter().map(|&w| Json::Num(w)).collect()),
+            ),
+        ]));
     }
+
+    // ---- acceptance setting: parallel engine vs sequential reference ----
+    // Setting (9), g = 8, eps = 0.1 — the ISSUE's ≥4× criterion. Outputs
+    // are bit-identical (enforced by the equivalence property tests; spot
+    // re-checked here); only the wall clock may differ.
+    println!("\n## parallel engine vs sequential reference (K={k}, L={l}, g=8, eps=0.1)");
+    let (table, _) = time_ms(|| TableCostModel::build(&base, l, 8));
+    let mut par_wall = Vec::with_capacity(REPS);
+    let mut seq_wall = Vec::with_capacity(REPS);
+    let mut par_scheme = None;
+    let mut seq_scheme = None;
+    for _ in 0..REPS {
+        let (r, ms) = time_ms(|| solve_tokens_table(&table, k, 0.1));
+        par_wall.push(ms);
+        par_scheme = Some(r.0);
+        let (r, ms) = time_ms(|| solve_tokens_table_seq(&table, k, 0.1));
+        seq_wall.push(ms);
+        seq_scheme = Some(r.0);
+    }
+    let (par_scheme, seq_scheme) = (par_scheme.unwrap(), seq_scheme.unwrap());
+    assert_eq!(
+        par_scheme.lens, seq_scheme.lens,
+        "parallel and sequential schemes must be bit-identical"
+    );
+    let ps = Stats::from_samples(&par_wall);
+    let ss = Stats::from_samples(&seq_wall);
+    // min-over-reps is the steadiest speedup estimator on a shared box
+    let speedup = ss.min / ps.min.max(1e-9);
+    println!("sequential reference: {} ms (min {:.2})", ss.pm(), ss.min);
+    println!("parallel engine:      {} ms (min {:.2})", ps.pm(), ps.min);
+    println!("speedup: {speedup:.2}x on {threads} threads");
+    // (the ≥4x acceptance assert runs at the very end, AFTER the JSON
+    // report is written — a regression must still leave a record)
 
     println!("\n## exact joint batch+token DP (knapsack over Algorithm-1 totals)");
     println!("| setting | B/pipe | granularity | wall (ms) |");
+    let mut joint_rows: Vec<Json> = Vec::new();
     for id in [5u32, 8, 9] {
         let st = presets::setting(id);
         let b = AnalyticModel::from_setting(&st, 1);
@@ -50,14 +120,70 @@ fn main() {
             eps_ms: 0.1,
             max_microbatch: Some(8),
         };
-        let t0 = Instant::now();
-        let j = solve_joint_analytic(&b, st.batch_per_pipeline(), st.model.seq_len, st.parallel.pipeline_stages, &opts);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (j, ms) = time_ms(|| {
+            solve_joint_analytic(
+                &b,
+                st.batch_per_pipeline(),
+                st.model.seq_len,
+                st.parallel.pipeline_stages,
+                &opts,
+            )
+        });
         println!(
             "| ({id}) | {} | 16 | {ms:.0} | -> {}",
             st.batch_per_pipeline(),
             &j.notation()[..j.notation().len().min(60)]
         );
         assert!(ms < 60_000.0, "paper budget exceeded");
+        joint_rows.push(Json::obj(vec![
+            ("setting", Json::Num(id as f64)),
+            ("batch_per_pipeline", Json::Num(st.batch_per_pipeline() as f64)),
+            ("granularity", Json::Num(16.0)),
+            ("wall_ms", Json::Num(ms)),
+        ]));
+    }
+
+    // ---- machine-readable report (workspace root) ----
+    let report = Json::obj(vec![
+        ("bench", Json::Str("dp_solver".into())),
+        ("setting", Json::Num(9.0)),
+        ("stages", Json::Num(k as f64)),
+        ("seq_len", Json::Num(l as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("reps", Json::Num(REPS as f64)),
+        ("token_dp", Json::arr(rows)),
+        (
+            "seq_vs_par",
+            Json::obj(vec![
+                ("granularity", Json::Num(8.0)),
+                ("eps_ms", Json::Num(0.1)),
+                ("seq_wall_ms_min", Json::Num(ss.min)),
+                ("seq_wall_ms_mean", Json::Num(ss.mean)),
+                ("par_wall_ms_min", Json::Num(ps.min)),
+                ("par_wall_ms_mean", Json::Num(ps.mean)),
+                ("speedup_min_over_min", Json::Num(speedup)),
+            ]),
+        ),
+        ("joint", Json::arr(joint_rows)),
+    ]);
+    // resolve at runtime: the binary may run on a different machine /
+    // checkout than it was built on (cargo sets the var for bench runs;
+    // fall back to the current directory elsewhere)
+    let path = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/../BENCH_dp_solver.json"))
+        .unwrap_or_else(|_| "BENCH_dp_solver.json".into());
+    std::fs::write(&path, report.to_string() + "\n").expect("write BENCH_dp_solver.json");
+    println!("\nwrote {path}");
+
+    // Acceptance gate (ISSUE 1): ≥4x over the sequential reference on a
+    // multi-core host. Checked last so the JSON above records the run
+    // even when the gate fails.
+    if threads >= 8 {
+        assert!(
+            speedup >= 4.0,
+            "acceptance: expected ≥4x on a multi-core host, got {speedup:.2}x on {threads} threads"
+        );
+    } else if speedup < 4.0 {
+        println!("(note: <8 threads available; the ≥4x acceptance bound is not enforced here)");
     }
 }

@@ -13,6 +13,10 @@ use terapipe::solver::joint::JointOpts;
 
 fn main() {
     let t0 = Instant::now();
+    println!(
+        "(joint solver: parallel anti-diagonal engine, {} threads)",
+        rayon::current_num_threads()
+    );
     let opts = JointOpts {
         granularity: 16,
         eps_ms: 0.1,

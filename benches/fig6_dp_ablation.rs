@@ -2,10 +2,13 @@
 //! the DP scheme on GPT3-44B setting (8) (1..16 slices) and GPT3-175B
 //! setting (9) (1..128 slices), as in the paper.
 
+use std::time::Instant;
+
 use terapipe::experiments::fig6_rows;
 use terapipe::solver::joint::JointOpts;
 
 fn main() {
+    let t0 = Instant::now();
     let opts = JointOpts {
         granularity: 16,
         eps_ms: 0.1,
@@ -34,4 +37,9 @@ fn main() {
             paper_gain
         );
     }
+    println!(
+        "\nsolved + simulated both ablations in {:.1}s ({} threads)",
+        t0.elapsed().as_secs_f64(),
+        rayon::current_num_threads()
+    );
 }

@@ -3,10 +3,13 @@
 //! The reproduced claim: the TeraPipe speedup *grows* with sequence
 //! length (paper: 1.40x → 2.76x → 4.97x → 7.83x).
 
+use std::time::Instant;
+
 use terapipe::experiments::fig7_rows;
 use terapipe::solver::joint::JointOpts;
 
 fn main() {
+    let t0 = Instant::now();
     let opts = JointOpts {
         granularity: 16,
         eps_ms: 0.1,
@@ -24,4 +27,9 @@ fn main() {
         };
         println!("| {l} | {b} | {g:.3} | {t:.3} | {sp:.2}x | {p:.2}x | {short} |");
     }
+    println!(
+        "\nsolved + simulated the sweep in {:.1}s ({} threads)",
+        t0.elapsed().as_secs_f64(),
+        rayon::current_num_threads()
+    );
 }

@@ -41,7 +41,9 @@ fn main() {
         let b = setting.batch_per_pipeline();
 
         let gpipe = gpipe_plan(&|m| base.with_microbatch(m), b, seq_len, k);
-        let tera = solve_joint_analytic(&base, b, seq_len, k, &opts);
+        // the parallel engine keeps even the L=16384 solve interactive
+        let (tera, solve_ms) = terapipe::util::time_ms(|| solve_joint_analytic(&base, b, seq_len, k, &opts));
+        eprintln!("  [L={seq_len}] joint DP solved in {solve_ms:.0} ms");
 
         let g = sim_iteration_ms(&setting, &gpipe);
         let t = sim_iteration_ms(&setting, &tera);

@@ -12,6 +12,7 @@ use terapipe::experiments as exp;
 use terapipe::solver::joint::JointOpts;
 
 fn main() {
+    let t0 = std::time::Instant::now();
     let opts = JointOpts {
         granularity: 16,
         eps_ms: 0.1,
@@ -50,4 +51,10 @@ fn main() {
     for (label, ms) in exp::appendix_a_rows() {
         println!("| {label} | {ms:.1} |");
     }
+
+    println!(
+        "\n(full sweep solved + simulated in {:.1}s on {} threads)",
+        t0.elapsed().as_secs_f64(),
+        rayon::current_num_threads()
+    );
 }

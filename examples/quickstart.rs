@@ -33,15 +33,17 @@ fn main() {
     // 2. Cost model (Eq. 4/9): per-cell slice latency t(i, j).
     let model = AnalyticModel::from_setting(&setting, 1);
 
-    // 3. Token-dimension DP (Algorithm 1 + t_max enumeration, §3.3).
-    let (scheme, stats) = solve_tokens(&model, l, k, 16, 0.1);
+    // 3. Token-dimension DP (Algorithm 1 + t_max enumeration, §3.3),
+    // running on the parallel anti-diagonal engine.
+    let ((scheme, stats), dp_ms) = terapipe::util::time_ms(|| solve_tokens(&model, l, k, 16, 0.1));
     println!("single-sequence DP scheme: {}", scheme.notation());
     println!(
-        "  Eq.5 latency {:.1} ms ({} slices; {} t_max candidates, {} DPs after pruning)\n",
+        "  Eq.5 latency {:.1} ms ({} slices; {} t_max candidates, {} DPs after pruning + {} feasibility probes; solved in {dp_ms:.1} ms)\n",
         scheme.latency_ms,
         scheme.num_slices(),
         stats.candidates,
-        stats.dps_run
+        stats.dps_run,
+        stats.probe_dps
     );
 
     // 4. Joint batch+token plan (§3.4) vs the GPipe baseline.

@@ -12,10 +12,10 @@
 //! * [`sim`] — a discrete-event pipeline simulator standing in for the
 //!   48-node GPU testbed (DESIGN.md §2): executes GPipe, TeraPipe and
 //!   memory-capped (Appendix A) schedules under the cost model.
-//! * [`runtime`] — a PJRT wrapper (via the `xla` crate) that loads the HLO
+//! * [`runtime`] — (feature `pjrt`) a PJRT wrapper (via the `xla` crate) that loads the HLO
 //!   text artifacts lowered by `python/compile/aot.py` and executes them on
 //!   the CPU device; python never runs on the request path.
-//! * [`coordinator`] — the real execution engine: one worker thread per
+//! * [`coordinator`] — (feature `pjrt`) the real execution engine: one worker thread per
 //!   pipeline cell, token slices flowing downstream and gradients flowing
 //!   back upstream, with the context-gradient accumulation that makes the
 //!   pipelined backward exactly equal the unsliced one.
@@ -25,10 +25,12 @@
 //!   end-to-end training example.
 
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod perfmodel;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod solver;

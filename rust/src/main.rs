@@ -13,12 +13,15 @@
 //!
 //! Flags use `--key value` / `--key=value` (see util::cli).
 
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
 use terapipe::config::{dump_setting, presets};
+#[cfg(feature = "pjrt")]
 use terapipe::data::synthetic_corpus;
 use terapipe::experiments as exp;
 use terapipe::perfmodel::analytic::AnalyticModel;
+#[cfg(feature = "pjrt")]
 use terapipe::perfmodel::{measure, CostModel};
 use terapipe::sim::schedule::build_plan;
 use terapipe::sim::{engine::simulate, trace};
@@ -40,8 +43,14 @@ fn main() {
         "fig7" => cmd_fig7(&args),
         "appendix-a" => cmd_appendix_a(),
         "calibrate" => cmd_calibrate(&args),
+        #[cfg(feature = "pjrt")]
         "train" => cmd_train(&args),
+        #[cfg(feature = "pjrt")]
         "measure" => cmd_measure(&args),
+        #[cfg(not(feature = "pjrt"))]
+        "train" | "measure" => Err(anyhow::anyhow!(
+            "this build has no PJRT runtime; rebuild with `--features pjrt` (requires the xla crate)"
+        )),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -127,8 +136,8 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
         scheme.num_slices()
     );
     println!(
-        "  t_max candidates {}, inner DPs run {}",
-        stats.candidates, stats.dps_run
+        "  t_max candidates {}, inner DPs run {} (+{} feasibility probes)",
+        stats.candidates, stats.dps_run, stats.probe_dps
     );
 
     let joint = solve_joint_analytic(&base, setting.batch_per_pipeline(), l, k, &opts);
@@ -280,10 +289,12 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let dir = artifacts_dir(args);
     let manifest = terapipe::runtime::manifest::Manifest::load(&dir)?;
@@ -360,6 +371,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 
 /// Measure the real per-slice latency of stage_fwd through the PJRT
 /// runtime and fit the paper's Eq. 9 model.
+#[cfg(feature = "pjrt")]
 fn measured_model(
     dir: &std::path::Path,
     repeats: u32,
@@ -395,6 +407,7 @@ fn measured_model(
 }
 
 /// Bucket-restricted DP over a fitted cost model (solver::bucketed).
+#[cfg(feature = "pjrt")]
 fn dp_bucketed(
     fitted: &terapipe::perfmodel::linear::LinearCtxModel,
     m: &terapipe::runtime::manifest::ModelDims,
@@ -408,6 +421,7 @@ fn dp_bucketed(
     scheme.lens.into_iter().map(|l| l as usize).collect()
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_measure(args: &Args) -> anyhow::Result<()> {
     let dir = artifacts_dir(args);
     let fitted = measured_model(&dir, args.u32("repeats", 5))?;

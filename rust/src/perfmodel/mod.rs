@@ -44,11 +44,19 @@ impl<M: CostModel + ?Sized> CostModel for &M {
 /// Dense `t(i, j)` table on a `granularity`-token grid, for the DP hot loop.
 ///
 /// Entry `(a, b)` holds `t(a·g, b·g)` for `a ∈ 1..=n`, `b ∈ 0..=n-a` where
-/// `n = L / g`. Infeasible combinations (`a + b > n`) hold +∞.
+/// `n = L / g`. Infeasible combinations (`a + b > n`) read as +∞.
+///
+/// Storage is **anti-diagonal-major**: all entries with `a + b = d` are
+/// contiguous, ordered by `a`. Algorithm 1's inner loop at position `i`
+/// reads exactly `t(k, i-k)` for `k = 1..=i` — the anti-diagonal `d = i` —
+/// so the layout turns the old stride-`n` walk (one cache miss per
+/// candidate `k`) into a single sequential run ([`Self::diag`]). Only the
+/// n(n+1)/2 feasible pairs are stored.
 pub struct TableCostModel {
     n: usize,
     granularity: u32,
-    /// Row-major `[a-1][b]`, `n × n` (+∞ where a + b > n).
+    /// Anti-diagonal-major: diagonal `d = a + b` starts at `d(d-1)/2`;
+    /// entry `a - 1` within it holds `t(a, d - a)`.
     table: Vec<f64>,
     comm: Vec<f64>,
 }
@@ -59,10 +67,10 @@ impl TableCostModel {
     pub fn build<M: CostModel>(model: &M, seq_len: u32, granularity: u32) -> Self {
         assert!(granularity >= 1 && seq_len % granularity == 0);
         let n = (seq_len / granularity) as usize;
-        let mut table = vec![f64::INFINITY; n * n];
-        for a in 1..=n {
-            for b in 0..=(n - a) {
-                table[(a - 1) * n + b] = model.t(a as u32 * granularity, b as u32 * granularity);
+        let mut table = Vec::with_capacity(n * (n + 1) / 2);
+        for d in 1..=n {
+            for a in 1..=d {
+                table.push(model.t(a as u32 * granularity, (d - a) as u32 * granularity));
             }
         }
         let comm = (0..=n)
@@ -84,11 +92,37 @@ impl TableCostModel {
         self.granularity
     }
 
+    #[inline]
+    fn diag_off(d: usize) -> usize {
+        d * (d - 1) / 2
+    }
+
     /// `t` in grid units: slice of `a` units with `b` units of context.
     #[inline]
     pub fn at(&self, a: usize, b: usize) -> f64 {
-        debug_assert!(a >= 1 && a <= self.n && b < self.n);
-        self.table[(a - 1) * self.n + b]
+        debug_assert!(a >= 1);
+        let d = a + b;
+        if d > self.n {
+            return f64::INFINITY;
+        }
+        self.table[Self::diag_off(d) + (a - 1)]
+    }
+
+    /// Anti-diagonal `i` (`1 ≤ i ≤ n`): `diag(i)[k - 1] = t(k, i - k)` for
+    /// `k ∈ 1..=i` — exactly the reads of Algorithm 1's inner loop at
+    /// position `i`, contiguous in memory.
+    #[inline]
+    pub fn diag(&self, i: usize) -> &[f64] {
+        debug_assert!(i >= 1 && i <= self.n);
+        let off = Self::diag_off(i);
+        &self.table[off..off + i]
+    }
+
+    /// Per-hop comm latencies indexed by slice length in units (`0..=n`),
+    /// exposed as a slice so the DP avoids a bounds check per candidate.
+    #[inline]
+    pub fn comms(&self) -> &[f64] {
+        &self.comm
     }
 
     #[inline]
@@ -96,9 +130,21 @@ impl TableCostModel {
         self.comm[a]
     }
 
-    /// All finite `t` values (candidate `t_max` pool for the enumeration).
-    pub fn finite_values(&self) -> Vec<f64> {
-        self.table.iter().copied().filter(|v| v.is_finite()).collect()
+    /// The §3.3 candidate `t_max` pool: the per-slice *stage* time
+    /// `t(a, b) + t_comm(a)` (Eq. 4's computation + transmission) for every
+    /// feasible `(a, b)`, built in one pass over the dense storage. Callers
+    /// sort/ε-dedup it once — this replaces the seed's double enumeration
+    /// (a comm-less `finite_values` pass plus a second comm loop) in the
+    /// solver.
+    pub fn stage_time_candidates(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.table.len());
+        for d in 1..=self.n {
+            let diag = self.diag(d);
+            for (idx, &t) in diag.iter().enumerate() {
+                out.push(t + self.comm[idx + 1]);
+            }
+        }
+        out
     }
 }
 
@@ -175,9 +221,45 @@ mod tests {
     }
 
     #[test]
-    fn finite_values_counts_feasible_pairs() {
+    fn candidate_pool_counts_feasible_pairs() {
         let t = TableCostModel::build(&Toy, 32, 8);
         // feasible (a,b): a=1..4, b=0..4-a → 4+3+2+1 = 10
-        assert_eq!(t.finite_values().len(), 10);
+        assert_eq!(t.stage_time_candidates().len(), 10);
+    }
+
+    #[test]
+    fn diag_matches_at_lookups() {
+        let t = TableCostModel::build(&Toy, 64, 8);
+        for i in 1..=t.units() {
+            let d = t.diag(i);
+            assert_eq!(d.len(), i);
+            for k in 1..=i {
+                assert_eq!(d[k - 1], t.at(k, i - k), "diag({i})[{}]", k - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_time_candidates_cover_all_feasible_pairs_with_comm() {
+        struct WithComm;
+        impl CostModel for WithComm {
+            fn t(&self, i: u32, j: u32) -> f64 {
+                i as f64 + 0.01 * i as f64 * j as f64
+            }
+            fn t_comm(&self, i: u32) -> f64 {
+                0.125 * i as f64
+            }
+        }
+        let t = TableCostModel::build(&WithComm, 32, 8);
+        let mut want = Vec::new();
+        for a in 1..=4usize {
+            for b in 0..=(4 - a) {
+                want.push(t.at(a, b) + t.comm_at(a));
+            }
+        }
+        let mut got = t.stage_time_candidates();
+        want.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        got.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(got, want);
     }
 }

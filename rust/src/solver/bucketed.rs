@@ -8,6 +8,7 @@
 //! solver when every grid multiple is a bucket.
 
 use super::dp::{FixedTmaxSolution, SolveStats};
+use super::engine;
 use super::SliceScheme;
 use crate::perfmodel::{CostModel, TableCostModel};
 
@@ -73,7 +74,6 @@ pub fn solve_tokens_bucketed<M: CostModel>(
     }
     let table = TableCostModel::build(model, seq_len, g);
     let allowed: Vec<usize> = buckets.iter().map(|&b| (b / g) as usize).collect();
-    let k_f = stages as f64 - 1.0;
 
     // Candidate t_max pool: only bucketed slice lengths are reachable.
     let n = table.units();
@@ -89,43 +89,19 @@ pub fn solve_tokens_bucketed<M: CostModel>(
     if cands.is_empty() {
         return None;
     }
-    cands.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let mut filtered = Vec::with_capacity(cands.len());
-    let mut last = f64::NEG_INFINITY;
-    for c in cands {
-        if c - last >= eps_ms {
-            filtered.push(c);
-            last = c;
-        }
-    }
+    let filtered = engine::dedup_candidates(cands, eps_ms);
 
-    let mut stats = SolveStats {
+    // Same parallel enumeration engine as the unrestricted solver, with
+    // Algorithm 1's `k` choices restricted to the bucket set.
+    let r = engine::enumerate_par(&table, stages, &filtered, |tmax| {
+        solve_fixed_tmax_restricted(&table, tmax, &allowed)
+    });
+    let stats = SolveStats {
         candidates: filtered.len(),
-        dps_run: 0,
+        dps_run: r.dps_run,
+        probe_dps: r.probe_dps,
     };
-    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
-    for &tmax in &filtered {
-        if let Some((bl, _, _)) = &best {
-            if k_f * tmax >= *bl {
-                break;
-            }
-        }
-        stats.dps_run += 1;
-        if let Some(sol) = solve_fixed_tmax_restricted(&table, tmax, &allowed) {
-            let mut ctx = 0usize;
-            let mut achieved = f64::NEG_INFINITY;
-            for &l in &sol.lens_units {
-                achieved = achieved.max(table.at(l, ctx) + table.comm_at(l));
-                ctx += l;
-            }
-            let latency = sol.total_ms + k_f * achieved;
-            if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
-                best = Some((latency, sol, achieved));
-            }
-        }
-    }
-
-    best.map(|(latency, sol, tmax)| {
+    r.best.map(|(latency, sol, tmax)| {
         (
             SliceScheme {
                 lens: sol.lens_units.iter().map(|&u| u as u32 * g).collect(),

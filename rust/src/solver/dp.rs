@@ -7,15 +7,27 @@
 //! ```
 //!
 //! computed over a granularity grid of `n = L / g` units in O(n²). The
-//! outer loop (Eq. 6) enumerates candidate `t_max` values ascending, with
-//! the paper's two optimizations:
+//! inner loop at position `i` reads the table's anti-diagonal `d = i`
+//! ([`TableCostModel::diag`]), which the diagonal-major layout makes one
+//! contiguous run — the cache behaviour that lets the enumeration engine
+//! stay memory-bound-free when it fans DPs out across cores.
+//!
+//! The outer loop (Eq. 6) enumerates candidate `t_max` values ascending,
+//! with the paper's two optimizations:
 //!
 //! 1. **Pruning** — once `(K-1)·t_max` alone exceeds the best latency so
 //!    far, no larger `t_max` can win; stop.
 //! 2. **ε-grid** — skip candidates closer than ε to the last one tried;
 //!    the result is within `K·ε` of the optimum (we default ε = 0.1 ms,
 //!    the paper's value, and verify ε = 0 agreement in tests).
+//!
+//! [`solve_tokens`] runs the enumeration on the parallel engine
+//! ([`super::engine`]): feasibility binary search over the sorted pool,
+//! then a blocked multi-threaded scan with a shared atomic pruning bound.
+//! [`solve_tokens_seq`] is the retained sequential reference — the two are
+//! property-tested to be bit-identical (ties broken by candidate order).
 
+use super::engine;
 use super::SliceScheme;
 use crate::perfmodel::{CostModel, TableCostModel};
 
@@ -33,15 +45,19 @@ pub struct FixedTmaxSolution {
 /// (some position unreachable without exceeding `t_max`).
 pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxSolution> {
     let n = table.units();
+    let comm = table.comms();
     // s[i] = S*(i; t_max); q[i] = argmin k (last-slice length in units)
     let mut s = vec![f64::INFINITY; n + 1];
     let mut q = vec![0usize; n + 1];
     s[0] = 0.0;
     for i in 1..=n {
+        // diag[k-1] = t(k, i-k): the whole inner loop reads one
+        // contiguous anti-diagonal instead of striding n-1 per candidate.
+        let diag = table.diag(i);
         let mut best = f64::INFINITY;
         let mut bestk = 0usize;
         for k in 1..=i {
-            let t = table.at(k, i - k) + table.comm_at(k);
+            let t = diag[k - 1] + comm[k];
             if t <= t_max {
                 let cand = s[i - k] + t;
                 if cand < best {
@@ -74,15 +90,20 @@ pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxS
 /// Solver statistics (for the §3.3 "within a minute" bench and EXPERIMENTS).
 #[derive(Debug, Clone, Default)]
 pub struct SolveStats {
-    /// Candidate t_max values after ε-deduplication.
+    /// Candidate t_max values after exact + ε deduplication.
     pub candidates: usize,
-    /// Inner DPs actually run (≤ candidates thanks to pruning).
+    /// Inner DPs consumed by the enumeration scan (≤ candidates thanks to
+    /// pruning; the parallel path also skips the infeasible prefix).
     pub dps_run: usize,
+    /// Inner DPs spent probing feasibility in the binary search (parallel
+    /// path only; 0 for the sequential reference).
+    pub probe_dps: usize,
 }
 
 /// Full §3.3 solver: optimal token slicing of `seq_len` for a `stages`-deep
 /// pipeline under `model`, on a `granularity`-token grid with the ε-grid
-/// t_max enumeration. Returns the scheme in *tokens*.
+/// t_max enumeration. Returns the scheme in *tokens*. Runs on the parallel
+/// engine; bit-identical to [`solve_tokens_seq`].
 pub fn solve_tokens<M: CostModel>(
     model: &M,
     seq_len: u32,
@@ -94,79 +115,55 @@ pub fn solve_tokens<M: CostModel>(
     solve_tokens_table(&table, stages, eps_ms)
 }
 
-/// Same, over a pre-densified table (the hot path for the joint solver).
+/// Same, over a pre-densified table (the hot path for the joint solver and
+/// the benches, which reuse one table across runs).
 pub fn solve_tokens_table(table: &TableCostModel, stages: u32, eps_ms: f64) -> (SliceScheme, SolveStats) {
-    let g = table.granularity();
-    let k_f = stages as f64 - 1.0;
+    let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
+    let r = engine::enumerate_par(table, stages, &cands, |tmax| solve_fixed_tmax(table, tmax));
+    finish(table.granularity(), cands.len(), r)
+}
 
-    // Candidate t_max pool: every distinct feasible t(k, j) (paper: at most
-    // O(L²) choices), ascending, ε-deduplicated.
-    let mut cands = table.finite_values();
-    let n = table.units();
-    for a in 1..=n {
-        // include comm so the per-slice "stage time" matches Eq. 4
-        for b in 0..=(n - a) {
-            cands.push(table.at(a, b) + table.comm_at(a));
-        }
-    }
-    cands.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let mut filtered = Vec::with_capacity(cands.len());
-    let mut last = f64::NEG_INFINITY;
-    for c in cands {
-        if c - last >= eps_ms {
-            filtered.push(c);
-            last = c;
-        }
-    }
+/// The retained sequential reference: identical candidate pool, plain
+/// ascending scan with the paper's pruning. Ground truth for the
+/// equivalence property tests and the bench's speedup baseline.
+pub fn solve_tokens_seq<M: CostModel>(
+    model: &M,
+    seq_len: u32,
+    stages: u32,
+    granularity: u32,
+    eps_ms: f64,
+) -> (SliceScheme, SolveStats) {
+    let table = TableCostModel::build(model, seq_len, granularity);
+    solve_tokens_table_seq(&table, stages, eps_ms)
+}
 
-    let mut stats = SolveStats {
-        candidates: filtered.len(),
-        dps_run: 0,
+/// Sequential reference over a pre-densified table.
+pub fn solve_tokens_table_seq(
+    table: &TableCostModel,
+    stages: u32,
+    eps_ms: f64,
+) -> (SliceScheme, SolveStats) {
+    let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
+    let r = engine::enumerate_seq(table, stages, &cands, |tmax| solve_fixed_tmax(table, tmax));
+    finish(table.granularity(), cands.len(), r)
+}
+
+fn finish(granularity: u32, candidates: usize, r: engine::EnumResult) -> (SliceScheme, SolveStats) {
+    let stats = SolveStats {
+        candidates,
+        dps_run: r.dps_run,
+        probe_dps: r.probe_dps,
     };
-    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None; // (latency, sol, tmax)
-    for &tmax in &filtered {
-        // Pruning: larger t_max can only grow the (K-1)·t_max term beyond
-        // the best full latency already found.
-        if let Some((best_lat, _, _)) = &best {
-            if k_f * tmax >= *best_lat {
-                break;
-            }
-        }
-        stats.dps_run += 1;
-        if let Some(sol) = solve_fixed_tmax(table, tmax) {
-            // Recompute the achieved max (≤ tmax; using it tightens Eq. 5).
-            let achieved_max = achieved_tmax(table, &sol.lens_units);
-            let latency = sol.total_ms + k_f * achieved_max;
-            let better = match &best {
-                None => true,
-                Some((bl, _, _)) => latency < *bl,
-            };
-            if better {
-                best = Some((latency, sol, achieved_max));
-            }
-        }
-    }
-
-    let (latency, sol, tmax) = best.expect("t_max = max t(L, 0) is always feasible");
+    let (latency, sol, tmax) = r.best.expect("t_max = max stage time is always feasible");
     (
         SliceScheme {
-            lens: sol.lens_units.iter().map(|&u| u as u32 * g).collect(),
+            lens: sol.lens_units.iter().map(|&u| u as u32 * granularity).collect(),
             total_ms: sol.total_ms,
             t_max_ms: tmax,
             latency_ms: latency,
         },
         stats,
     )
-}
-
-fn achieved_tmax(table: &TableCostModel, lens_units: &[usize]) -> f64 {
-    let mut ctx = 0usize;
-    let mut m = f64::NEG_INFINITY;
-    for &l in lens_units {
-        m = m.max(table.at(l, ctx) + table.comm_at(l));
-        ctx += l;
-    }
-    m
 }
 
 #[cfg(test)]
@@ -291,6 +288,24 @@ mod tests {
         let m = default_model();
         let (_, stats) = solve_tokens(&m, 1024, 8, 32, 0.0);
         assert!(stats.dps_run < stats.candidates, "{stats:?}");
+        // the sequential reference prunes too
+        let (_, sstats) = solve_tokens_seq(&m, 1024, 8, 32, 0.0);
+        assert!(sstats.dps_run < sstats.candidates, "{sstats:?}");
+        // and the parallel path's binary search skips the infeasible
+        // prefix the reference pays for candidate-by-candidate
+        assert!(stats.dps_run <= sstats.dps_run, "{stats:?} vs {sstats:?}");
+    }
+
+    #[test]
+    fn parallel_and_sequential_agree_on_default_model() {
+        let m = default_model();
+        for eps in [0.0, 0.1] {
+            let (p, ps) = solve_tokens(&m, 1024, 16, 32, eps);
+            let (s, ss) = solve_tokens_seq(&m, 1024, 16, 32, eps);
+            assert_eq!(p.lens, s.lens);
+            assert!(p.latency_ms == s.latency_ms && p.total_ms == s.total_ms);
+            assert_eq!(ps.candidates, ss.candidates);
+        }
     }
 
     #[test]

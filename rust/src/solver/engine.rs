@@ -1,0 +1,345 @@
+//! The parallel `t_max`-enumeration engine shared by [`super::dp`] and
+//! [`super::bucketed`].
+//!
+//! The §3.3 outer loop is, semantically, a *sequential* scan of the sorted
+//! candidate pool: run Algorithm 1 per candidate, keep the first-best
+//! latency (ties broken by candidate order), and stop at the first
+//! candidate where the paper's bound `(K-1)·t_max ≥ best` fires. This
+//! module reproduces those semantics **bit-identically** while extracting
+//! parallelism from two places:
+//!
+//! 1. **Feasibility binary search** — Algorithm 1's feasibility is
+//!    monotone in `t_max` (a larger budget only adds transitions), so the
+//!    infeasible prefix of the pool is skipped with O(log n) probe DPs
+//!    instead of one failed O(n²) DP per infeasible candidate.
+//! 2. **Blocked parallel scan** — candidates are processed in blocks of
+//!    a few per thread; within a block every DP runs on its own worker
+//!    (rayon), sharing an atomic best-latency bound so the `(K-1)·t_max`
+//!    pruning keeps firing across workers. A sequential merge then replays
+//!    the block's results *in candidate order* with exactly the serial
+//!    update/break logic, so the chosen scheme, its latency, and the
+//!    tie-breaking are identical to [`enumerate_seq`].
+//!
+//! Why the merge is sound: a worker skips candidate `i` only when
+//! `(K-1)·t_max(i) ≥ bound` for some already-published latency `bound`.
+//! If that `bound` came from a candidate `< i`, the merge's own running
+//! best is ≤ `bound` by the time it reaches `i`, so the serial break fires
+//! at or before `i` and the skipped result is never needed. If it came
+//! from a candidate `> i` (a wall-clock race), the merge recomputes the DP
+//! inline — rare, and never changes the outcome.
+
+use rayon::prelude::*;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::dp::FixedTmaxSolution;
+use crate::perfmodel::TableCostModel;
+
+/// Outcome of one enumeration: the winning `(latency, solution, achieved
+/// t_max)` plus DP counts for [`super::dp::SolveStats`].
+pub(crate) struct EnumResult {
+    pub best: Option<(f64, FixedTmaxSolution, f64)>,
+    /// Inner DPs consumed by the scan itself (= the sequential reference's
+    /// count from the first feasible candidate to the pruning break).
+    pub dps_run: usize,
+    /// Extra DPs spent probing feasibility in the binary search.
+    pub probe_dps: usize,
+}
+
+/// Sort ascending, drop exact duplicates, then apply the paper's ε-grid
+/// (skip candidates closer than ε to the last kept one). The single shared
+/// pool-preparation step for every solver front-end.
+///
+/// The maximum candidate is always retained even when the ε-grid would
+/// merge it away: it is the loosest budget — the feasibility backstop
+/// behind every solver's "the single-slice scheme always fits"
+/// expectation — and dropping it could turn a solvable instance into a
+/// panic for large ε.
+pub(crate) fn dedup_candidates(mut cands: Vec<f64>, eps_ms: f64) -> Vec<f64> {
+    cands.sort_unstable_by(|x, y| x.partial_cmp(y).unwrap());
+    cands.dedup();
+    if eps_ms <= 0.0 || cands.is_empty() {
+        return cands;
+    }
+    let max = *cands.last().unwrap();
+    let mut filtered = Vec::with_capacity(cands.len());
+    let mut last = f64::NEG_INFINITY;
+    for c in cands {
+        if c - last >= eps_ms {
+            filtered.push(c);
+            last = c;
+        }
+    }
+    if *filtered.last().unwrap() != max {
+        filtered.push(max);
+    }
+    filtered
+}
+
+/// Max achieved per-slice stage time of a scheme (recomputing it under the
+/// table tightens Eq. 5 versus using the enumerated budget directly).
+pub(crate) fn achieved_tmax(table: &TableCostModel, lens_units: &[usize]) -> f64 {
+    let mut ctx = 0usize;
+    let mut m = f64::NEG_INFINITY;
+    for &l in lens_units {
+        m = m.max(table.at(l, ctx) + table.comm_at(l));
+        ctx += l;
+    }
+    m
+}
+
+/// The retained sequential reference: the paper's plain ascending scan
+/// with `(K-1)·t_max` pruning. Kept as the ground truth the parallel path
+/// is property-tested against (and as the honest baseline for the
+/// `dp_solver` bench).
+pub(crate) fn enumerate_seq<F>(
+    table: &TableCostModel,
+    stages: u32,
+    cands: &[f64],
+    dp: F,
+) -> EnumResult
+where
+    F: Fn(f64) -> Option<FixedTmaxSolution>,
+{
+    let k_f = stages as f64 - 1.0;
+    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
+    let mut dps_run = 0usize;
+    for &tmax in cands {
+        if let Some((bl, _, _)) = &best {
+            if k_f * tmax >= *bl {
+                break;
+            }
+        }
+        dps_run += 1;
+        if let Some(sol) = dp(tmax) {
+            let achieved = achieved_tmax(table, &sol.lens_units);
+            let latency = sol.total_ms + k_f * achieved;
+            if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
+                best = Some((latency, sol, achieved));
+            }
+        }
+    }
+    EnumResult {
+        best,
+        dps_run,
+        probe_dps: 0,
+    }
+}
+
+/// Per-candidate worker outcome inside one block.
+enum CandOutcome {
+    /// Pruned by the shared bound — the merge either breaks before this
+    /// index or recomputes it inline.
+    Skipped,
+    /// DP ran: `(latency, solution, achieved t_max)`, or `None` infeasible.
+    Ran(Option<(f64, FixedTmaxSolution, f64)>),
+}
+
+/// The parallel engine. Bit-identical to [`enumerate_seq`] on the same
+/// candidate list (same winning scheme, latency, and tie-breaks); only the
+/// DP *counts* differ (the infeasible prefix is binary-searched away, and
+/// wasted speculative DPs past the pruning break are not billed).
+pub(crate) fn enumerate_par<F>(
+    table: &TableCostModel,
+    stages: u32,
+    cands: &[f64],
+    dp: F,
+) -> EnumResult
+where
+    F: Fn(f64) -> Option<FixedTmaxSolution> + Sync,
+{
+    if cands.is_empty() {
+        return EnumResult {
+            best: None,
+            dps_run: 0,
+            probe_dps: 0,
+        };
+    }
+    let k_f = stages as f64 - 1.0;
+
+    // Feasibility binary search (monotone in t_max): find the first
+    // feasible candidate; everything before it contributes nothing to the
+    // sequential scan either.
+    let mut probe_dps = 1usize;
+    if dp(*cands.last().unwrap()).is_none() {
+        // Even the loosest budget is infeasible (bucket sets that cannot
+        // compose the sequence) — identical to the reference scanning
+        // everything and finding nothing.
+        return EnumResult {
+            best: None,
+            dps_run: 0,
+            probe_dps,
+        };
+    }
+    let mut lo = 0usize;
+    let mut hi = cands.len() - 1; // known feasible
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        probe_dps += 1;
+        if dp(cands[mid]).is_some() {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let first = lo;
+
+    // Blocked parallel scan with a shared atomic best-latency bound.
+    // Latencies are positive finite f64s, whose IEEE-754 bit patterns
+    // order identically to their values — so an AtomicU64 + fetch_min is a
+    // lock-free shared upper bound.
+    let threads = rayon::current_num_threads().max(1);
+    let block = (4 * threads).max(16);
+    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
+    let mut dps_run = 0usize;
+    let mut start = first;
+    'scan: while start < cands.len() {
+        let end = (start + block).min(cands.len());
+        let bound = AtomicU64::new(
+            best.as_ref()
+                .map(|(bl, _, _)| bl.to_bits())
+                .unwrap_or(f64::INFINITY.to_bits()),
+        );
+        let outcomes: Vec<CandOutcome> = cands[start..end]
+            .par_iter()
+            .map(|&tmax| {
+                if k_f * tmax >= f64::from_bits(bound.load(Ordering::Relaxed)) {
+                    return CandOutcome::Skipped;
+                }
+                match dp(tmax) {
+                    None => CandOutcome::Ran(None),
+                    Some(sol) => {
+                        let achieved = achieved_tmax(table, &sol.lens_units);
+                        let latency = sol.total_ms + k_f * achieved;
+                        bound.fetch_min(latency.to_bits(), Ordering::Relaxed);
+                        CandOutcome::Ran(Some((latency, sol, achieved)))
+                    }
+                }
+            })
+            .collect();
+
+        // Sequential merge in candidate order — literally the reference
+        // loop, with the DP results precomputed.
+        for (off, outcome) in outcomes.into_iter().enumerate() {
+            let tmax = cands[start + off];
+            if let Some((bl, _, _)) = &best {
+                if k_f * tmax >= *bl {
+                    break 'scan;
+                }
+            }
+            dps_run += 1;
+            let resolved = match outcome {
+                CandOutcome::Ran(r) => r,
+                CandOutcome::Skipped => {
+                    // The bound raced ahead of the in-order prefix (set by
+                    // a later candidate): replay this DP inline.
+                    dp(tmax).map(|sol| {
+                        let achieved = achieved_tmax(table, &sol.lens_units);
+                        (sol.total_ms + k_f * achieved, sol, achieved)
+                    })
+                }
+            };
+            if let Some((latency, sol, achieved)) = resolved {
+                if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
+                    best = Some((latency, sol, achieved));
+                }
+            }
+        }
+        start = end;
+    }
+
+    EnumResult {
+        best,
+        dps_run,
+        probe_dps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::CostModel;
+    use crate::solver::dp::solve_fixed_tmax;
+    use crate::util::prop;
+
+    struct Affine {
+        over: f64,
+        lin: f64,
+        ctx: f64,
+    }
+    impl CostModel for Affine {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64
+        }
+    }
+
+    fn table_for(g: &mut prop::Gen) -> TableCostModel {
+        let m = Affine {
+            over: g.float(0.01, 2.0),
+            lin: g.float(0.001, 0.1),
+            ctx: g.float(0.0, 3e-4),
+        };
+        let gran = *g.choose(&[8u32, 16]);
+        let l = g.int(2, 24) * gran;
+        TableCostModel::build(&m, l, gran)
+    }
+
+    #[test]
+    fn dedup_sorts_dedups_and_eps_filters() {
+        let out = dedup_candidates(vec![3.0, 1.0, 1.0, 2.0, 1.05], 0.0);
+        assert_eq!(out, vec![1.0, 1.05, 2.0, 3.0]);
+        let out = dedup_candidates(vec![3.0, 1.0, 1.0, 2.0, 1.05], 0.1);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn dedup_always_retains_the_loosest_candidate() {
+        // the ε-grid would merge 1.05 into 1.0, but 1.05 is the
+        // feasibility backstop (loosest budget) and must survive
+        let out = dedup_candidates(vec![1.0, 1.05], 0.1);
+        assert_eq!(out, vec![1.0, 1.05]);
+        // huge ε: collapses to {min, max}
+        let out = dedup_candidates(vec![1.0, 2.0, 3.0, 4.0], 100.0);
+        assert_eq!(out, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_par_enum_bit_identical_to_seq() {
+        prop::run_cases(80, |g| {
+            let table = table_for(g);
+            let stages = g.int(1, 24);
+            let eps = *g.choose(&[0.0f64, 0.05, 0.2]);
+            let cands = dedup_candidates(table.stage_time_candidates(), eps);
+            let seq = enumerate_seq(&table, stages, &cands, |t| solve_fixed_tmax(&table, t));
+            let par = enumerate_par(&table, stages, &cands, |t| solve_fixed_tmax(&table, t));
+            match (&seq.best, &par.best) {
+                (None, None) => {}
+                (Some((sl, ss, sa)), Some((pl, ps, pa))) => {
+                    assert_eq!(ss.lens_units, ps.lens_units, "case {}", g.case);
+                    assert!(sl == pl && sa == pa && ss.total_ms == ps.total_ms);
+                }
+                _ => panic!("feasibility disagreement at case {}", g.case),
+            }
+        });
+    }
+
+    #[test]
+    fn empty_pool_yields_nothing() {
+        let mut g = prop::Gen::new(7);
+        let table = table_for(&mut g);
+        let r = enumerate_par(&table, 4, &[], |t| solve_fixed_tmax(&table, t));
+        assert!(r.best.is_none());
+        assert_eq!(r.dps_run + r.probe_dps, 0);
+    }
+
+    #[test]
+    fn infeasible_pool_yields_nothing_for_both_paths() {
+        let mut g = prop::Gen::new(3);
+        let table = table_for(&mut g);
+        // budgets below the cheapest single-unit slice: nothing is solvable
+        let tiny = table.at(1, 0) * 0.5;
+        let cands = vec![tiny * 0.5, tiny];
+        let seq = enumerate_seq(&table, 4, &cands, |t| solve_fixed_tmax(&table, t));
+        let par = enumerate_par(&table, 4, &cands, |t| solve_fixed_tmax(&table, t));
+        assert!(seq.best.is_none() && par.best.is_none());
+    }
+}

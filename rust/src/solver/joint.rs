@@ -12,11 +12,14 @@
 //! concatenated slice stream, and that value is what we report and what
 //! the simulator is checked against.
 
-use super::dp::solve_tokens;
+use rayon::prelude::*;
+
+use super::dp::{solve_fixed_tmax, solve_tokens_table, FixedTmaxSolution};
+use super::engine;
 use super::knapsack::min_cost_composition;
 use super::{JointScheme, SliceScheme};
 use crate::perfmodel::analytic::AnalyticModel;
-use crate::perfmodel::CostModel;
+use crate::perfmodel::{CostModel, TableCostModel};
 
 /// Options for the joint solver.
 #[derive(Debug, Clone)]
@@ -51,22 +54,27 @@ pub fn solve_joint<F, M>(
     opts: &JointOpts,
 ) -> JointScheme
 where
-    F: Fn(u32) -> M,
+    F: Fn(u32) -> M + Sync,
     M: CostModel,
 {
     assert!(batch >= 1);
     let b_max = opts.max_microbatch.unwrap_or(batch).min(batch);
 
-    // Token DP per candidate microbatch size.
-    let mut per_b: Vec<(f64, SliceScheme, M)> = Vec::with_capacity(b_max as usize);
-    for b in 1..=b_max {
-        let m = model_for(b);
-        let (scheme, _) = solve_tokens(&m, seq_len, stages, opts.granularity, opts.eps_ms);
-        per_b.push((scheme.latency_ms, scheme, m));
-    }
+    // Token DP per candidate microbatch size — independent by
+    // construction, so they fan out across threads; each densifies its
+    // table once and reuses it for the whole enumeration.
+    let per_b: Vec<(f64, SliceScheme)> = (1..b_max + 1)
+        .into_par_iter()
+        .map(|b| {
+            let m = model_for(b);
+            let table = TableCostModel::build(&m, seq_len, opts.granularity);
+            let (scheme, _) = solve_tokens_table(&table, stages, opts.eps_ms);
+            (scheme.latency_ms, scheme)
+        })
+        .collect();
 
     // Knapsack over the batch dimension.
-    let costs: Vec<f64> = per_b.iter().map(|(t, _, _)| *t).collect();
+    let costs: Vec<f64> = per_b.iter().map(|(t, _)| *t).collect();
     let (parts, _) = min_cost_composition(&costs, batch).expect("batch ≥ 1");
 
     let mut plan: Vec<(u32, SliceScheme)> = parts
@@ -100,53 +108,45 @@ pub fn solve_joint_exact<F, M>(
     opts: &JointOpts,
 ) -> JointScheme
 where
-    F: Fn(u32) -> M,
+    F: Fn(u32) -> M + Sync,
     M: CostModel,
 {
-    use crate::perfmodel::TableCostModel;
-    use crate::solver::dp::solve_fixed_tmax;
-
     assert!(batch >= 1);
     let b_max = opts.max_microbatch.unwrap_or(batch).min(batch);
     let k_f = stages as f64 - 1.0;
 
-    let tables: Vec<TableCostModel> = (1..=b_max)
+    // One densified table per batch size, built in parallel and shared by
+    // every candidate evaluation below (and by nothing else — the token
+    // coordinates of the final plan are re-evaluated under the exact model
+    // in `evaluate_joint_with`).
+    let tables: Vec<TableCostModel> = (1..b_max + 1)
+        .into_par_iter()
         .map(|b| TableCostModel::build(&model_for(b), seq_len, opts.granularity))
         .collect();
 
-    // Candidate pool: all feasible slice times across all batch sizes.
+    // Candidate pool: all feasible slice times across all batch sizes,
+    // built in one pass per table, sorted + ε-deduplicated once.
     let mut cands: Vec<f64> = Vec::new();
     for t in &tables {
-        let n = t.units();
-        for a in 1..=n {
-            for c in 0..=(n - a) {
-                cands.push(t.at(a, c) + t.comm_at(a));
-            }
-        }
+        cands.extend(t.stage_time_candidates());
     }
-    cands.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let mut filtered = Vec::with_capacity(cands.len());
-    let mut last = f64::NEG_INFINITY;
-    for c in cands {
-        if c - last >= opts.eps_ms {
-            filtered.push(c);
-            last = c;
-        }
-    }
+    let filtered = engine::dedup_candidates(cands, opts.eps_ms);
 
-    let mut best: Option<(f64, Vec<u32>, Vec<Option<SliceScheme>>, f64)> = None;
-    for &tmax in &filtered {
-        if let Some((bl, _, _, _)) = &best {
-            if k_f * tmax >= *bl {
-                break;
-            }
-        }
-        // Algorithm 1 per batch size under this budget.
-        let mut totals = vec![f64::INFINITY; b_max as usize];
+    // Evaluate one global t_max: Algorithm 1 per batch size (parallel —
+    // the per-b DPs are independent), then the knapsack over the finite
+    // totals. `None` = no batch composition is feasible under this budget.
+    let eval = |tmax: f64| -> Option<(f64, Vec<u32>, Vec<Option<SliceScheme>>)> {
+        let sols: Vec<Option<FixedTmaxSolution>> = tables
+            .par_iter()
+            .map(|table| solve_fixed_tmax(table, tmax))
+            .collect();
+        let mut usable = vec![1e30f64; b_max as usize];
         let mut schemes: Vec<Option<SliceScheme>> = vec![None; b_max as usize];
-        for (bi, table) in tables.iter().enumerate() {
-            if let Some(sol) = solve_fixed_tmax(table, tmax) {
-                totals[bi] = sol.total_ms;
+        let mut any = false;
+        for (bi, sol) in sols.into_iter().enumerate() {
+            if let Some(sol) = sol {
+                any = true;
+                usable[bi] = sol.total_ms;
                 schemes[bi] = Some(SliceScheme {
                     lens: sol
                         .lens_units
@@ -159,18 +159,55 @@ where
                 });
             }
         }
-        if totals.iter().all(|t| !t.is_finite()) {
-            continue;
+        if !any {
+            return None;
         }
-        // knapsack over finite totals only
-        let usable: Vec<f64> = totals
-            .iter()
-            .map(|&t| if t.is_finite() { t } else { 1e30 })
+        let (parts, cost) = min_cost_composition(&usable, batch)?;
+        if cost >= 1e29 {
+            return None; // forced to use an infeasible b
+        }
+        Some((cost, parts, schemes))
+    };
+
+    // Feasibility-only probe for the binary search: same per-b DPs and
+    // knapsack check as `eval`, but skips building the token schemes the
+    // probe would throw away.
+    let feasible = |tmax: f64| -> bool {
+        let totals: Vec<f64> = tables
+            .par_iter()
+            .map(|table| solve_fixed_tmax(table, tmax).map_or(1e30, |sol| sol.total_ms))
             .collect();
-        if let Some((parts, cost)) = min_cost_composition(&usable, batch) {
-            if cost >= 1e29 {
-                continue; // forced to use an infeasible b
+        if totals.iter().all(|&t| t >= 1e29) {
+            return false;
+        }
+        matches!(min_cost_composition(&totals, batch), Some((_, cost)) if cost < 1e29)
+    };
+
+    // Joint feasibility is monotone in t_max (every per-b DP is, and a
+    // composition feasible at t stays feasible at t' > t): binary-search
+    // the first feasible candidate instead of failing one-by-one.
+    if filtered.is_empty() || !feasible(*filtered.last().unwrap()) {
+        panic!("tmax = t(L,0) at b=1 is always feasible");
+    }
+    let mut lo = 0usize;
+    let mut hi = filtered.len() - 1;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if feasible(filtered[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+
+    let mut best: Option<(f64, Vec<u32>, Vec<Option<SliceScheme>>, f64)> = None;
+    for &tmax in &filtered[lo..] {
+        if let Some((bl, _, _, _)) = &best {
+            if k_f * tmax >= *bl {
+                break;
             }
+        }
+        if let Some((cost, parts, schemes)) = eval(tmax) {
             let latency = cost + k_f * tmax;
             if best.as_ref().map_or(true, |(bl, _, _, _)| latency < *bl) {
                 best = Some((latency, parts, schemes, tmax));

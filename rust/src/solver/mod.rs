@@ -3,6 +3,10 @@
 //! * [`dp`] — Algorithm 1: the `S*(i; t_max)` dynamic program, plus the
 //!   outer `t_max` enumeration with the ε-grid and the `K·t_max` pruning
 //!   optimizations the paper describes.
+//! * `engine` (crate-private) — the parallel anti-diagonal enumeration
+//!   engine behind `dp` and `bucketed`: feasibility binary search over the
+//!   sorted candidate pool + a blocked rayon scan with a shared atomic
+//!   pruning bound, bit-identical to the retained sequential reference.
 //! * [`uniform`] — the uniform-slicing heuristic baseline of Fig. 6.
 //! * [`joint`] — the §3.4 joint batch+token extension: token-DP per batch
 //!   size, then a 1-D knapsack over the batch dimension.
@@ -11,6 +15,7 @@
 
 pub mod bucketed;
 pub mod dp;
+pub(crate) mod engine;
 pub mod joint;
 pub mod knapsack;
 pub mod uniform;

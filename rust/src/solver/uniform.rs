@@ -52,21 +52,26 @@ pub fn uniform_scheme<M: CostModel>(
 }
 
 /// Sweep #slices over powers of two (the Fig. 6 x-axis) and return
-/// (num_slices, scheme) pairs.
-pub fn sweep<M: CostModel>(
+/// (num_slices, scheme) pairs. Each slice count is evaluated on its own
+/// thread (they are independent); the output order stays ascending.
+pub fn sweep<M: CostModel + Sync>(
     model: &M,
     seq_len: u32,
     stages: u32,
     max_slices: u32,
     granularity: u32,
 ) -> Vec<(u32, SliceScheme)> {
-    let mut out = Vec::new();
+    use rayon::prelude::*;
+    let mut counts = Vec::new();
     let mut m = 1u32;
     while m <= max_slices && m * granularity <= seq_len {
-        out.push((m, uniform_scheme(model, seq_len, stages, m, granularity)));
+        counts.push(m);
         m *= 2;
     }
-    out
+    counts
+        .into_par_iter()
+        .map(|n| (n, uniform_scheme(model, seq_len, stages, n, granularity)))
+        .collect()
 }
 
 #[cfg(test)]

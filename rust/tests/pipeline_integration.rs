@@ -5,6 +5,10 @@
 //! paper's synchronous-training claim means the *schedule* must not change
 //! the math — any token slicing, pipelined across stages, must produce the
 //! same losses and the same updated parameters as any other.
+//!
+//! The whole file is compiled only with the `pjrt` feature (the PJRT
+//! runtime binds the `xla` crate, which the default build omits).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

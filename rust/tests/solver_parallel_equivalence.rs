@@ -1,0 +1,133 @@
+//! Equivalence properties for the parallel solver engine.
+//!
+//! The §3.3/§3.4 enumeration now runs on a multi-threaded engine
+//! (feasibility binary search + blocked parallel scan with a shared atomic
+//! pruning bound). The DP itself is deterministic with ties broken by
+//! candidate order, so the engine must return **bit-identical** schemes to
+//! the retained sequential reference (`solve_tokens_seq`) — not "close",
+//! identical, across granularities, ε values, pipeline depths, and model
+//! shapes. These tests are the contract that keeps the parallel path
+//! honest as it gets further optimized.
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::perfmodel::{CostModel, TableCostModel};
+use terapipe::solver::bucketed::solve_fixed_tmax_restricted;
+use terapipe::solver::dp::{solve_fixed_tmax, solve_tokens, solve_tokens_seq};
+use terapipe::util::prop;
+
+/// Random affine-with-context cost model drawn per case (same family the
+/// sim-vs-solver properties use).
+#[derive(Clone)]
+struct RandModel {
+    over: f64,
+    lin: f64,
+    ctx: f64,
+    comm: f64,
+}
+impl CostModel for RandModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64
+    }
+    fn t_comm(&self, _i: u32) -> f64 {
+        self.comm
+    }
+}
+
+fn random_model(g: &mut prop::Gen) -> RandModel {
+    RandModel {
+        over: g.float(0.01, 2.0),
+        lin: g.float(0.001, 0.1),
+        ctx: g.float(0.0, 3e-4),
+        comm: g.float(0.0, 0.3),
+    }
+}
+
+/// (a) The parallel solver's output is bit-identical to the sequential
+/// reference across granularities and ε values — lens, total, t_max, and
+/// latency all compare with `==`, no tolerance.
+#[test]
+fn prop_parallel_solver_bit_identical_to_sequential_reference() {
+    prop::run_cases(100, |g| {
+        let m = random_model(g);
+        let gran = *g.choose(&[8u32, 16, 32, 64]);
+        let l = g.int(2, 20) * gran;
+        let k = g.int(1, 32);
+        let eps = *g.choose(&[0.0f64, 0.01, 0.1, 0.5]);
+
+        let (par, pstats) = solve_tokens(&m, l, k, gran, eps);
+        let (seq, sstats) = solve_tokens_seq(&m, l, k, gran, eps);
+
+        assert_eq!(par.lens, seq.lens, "case {} (g={gran}, K={k}, eps={eps})", g.case);
+        assert!(
+            par.total_ms == seq.total_ms
+                && par.t_max_ms == seq.t_max_ms
+                && par.latency_ms == seq.latency_ms,
+            "case {}: non-bit-identical floats: {par:?} vs {seq:?}",
+            g.case
+        );
+        // both paths see the same deduplicated candidate pool
+        assert_eq!(pstats.candidates, sstats.candidates, "case {}", g.case);
+        // the parallel path never pays more scan DPs than the reference
+        // (it skips the infeasible prefix the reference walks through)
+        assert!(pstats.dps_run <= sstats.dps_run, "case {}", g.case);
+    });
+}
+
+/// Same contract on the paper-scale analytic model (setting (9): K = 96,
+/// L = 2048 — the configuration the acceptance bench times).
+#[test]
+fn paper_setting9_parallel_matches_sequential() {
+    let setting = presets::setting(9);
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let l = setting.model.seq_len;
+    let k = setting.parallel.pipeline_stages;
+    for (gran, eps) in [(64u32, 0.1f64), (32, 0.1), (32, 0.0)] {
+        let (par, _) = solve_tokens(&base, l, k, gran, eps);
+        let (seq, _) = solve_tokens_seq(&base, l, k, gran, eps);
+        assert_eq!(par.lens, seq.lens, "g={gran} eps={eps}");
+        assert!(
+            par.latency_ms == seq.latency_ms && par.t_max_ms == seq.t_max_ms,
+            "g={gran} eps={eps}: {} vs {}",
+            par.latency_ms,
+            seq.latency_ms
+        );
+    }
+}
+
+/// (b) `bucketed::solve_fixed_tmax_restricted` collapses to
+/// `dp::solve_fixed_tmax` when every grid multiple is allowed — same
+/// scheme, same total, bit-identical (both iterate k ascending, so the
+/// tie-breaks coincide too).
+#[test]
+fn prop_restricted_fixed_tmax_equals_unrestricted_when_all_multiples_allowed() {
+    prop::run_cases(100, |g| {
+        let m = random_model(g);
+        let gran = *g.choose(&[8u32, 16, 32]);
+        let l = g.int(2, 20) * gran;
+        let table = TableCostModel::build(&m, l, gran);
+        let n = table.units();
+        let all: Vec<usize> = (1..=n).collect();
+
+        // budgets spanning infeasible → generous
+        let top = table.at(n, 0) + table.comm_at(n);
+        for f in [0.1f64, 0.4, 0.7, 1.0, 1.5] {
+            let tmax = top * f;
+            let free = solve_fixed_tmax(&table, tmax);
+            let restr = solve_fixed_tmax_restricted(&table, tmax, &all);
+            match (free, restr) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.lens_units, b.lens_units, "case {} f={f}", g.case);
+                    assert!(a.total_ms == b.total_ms, "case {} f={f}", g.case);
+                }
+                (a, b) => panic!(
+                    "feasibility disagreement at case {} f={f}: free={} restr={}",
+                    g.case,
+                    a.is_some(),
+                    b.is_some()
+                ),
+            }
+        }
+    });
+}

@@ -9,7 +9,7 @@ use terapipe::perfmodel::{pipeline_latency, CostModel, TableCostModel};
 use terapipe::sim::engine::simulate;
 use terapipe::sim::schedule::{build_plan, PhaseCost};
 use terapipe::sim::{Item, Phase, Plan};
-use terapipe::solver::dp::{solve_fixed_tmax, solve_tokens};
+use terapipe::solver::dp::{solve_fixed_tmax, solve_tokens, solve_tokens_seq};
 use terapipe::solver::joint::{evaluate_joint_with, solve_joint_exact, JointOpts};
 use terapipe::solver::uniform::uniform_scheme;
 use terapipe::solver::{JointScheme, SliceScheme};
@@ -59,6 +59,11 @@ fn prop_dp_latency_consistent_and_unbeaten_by_random_schemes() {
             "reported {} vs eval {eval}",
             scheme.latency_ms
         );
+
+        // the parallel engine and the sequential reference agree here too
+        // (the dedicated bit-identity suite is solver_parallel_equivalence)
+        let (seq_scheme, _) = solve_tokens_seq(&m, l, k, gran, 0.0);
+        assert_eq!(scheme.lens, seq_scheme.lens);
 
         for _ in 0..50 {
             let lens = g.composition(l, gran);
