@@ -13,7 +13,7 @@ use terapipe::config::presets;
 use terapipe::perfmodel::analytic::AnalyticModel;
 use terapipe::perfmodel::TableCostModel;
 use terapipe::solver::dp::{solve_tokens_table, solve_tokens_table_seq};
-use terapipe::solver::joint::{solve_joint_analytic, JointOpts};
+use terapipe::solver::joint::{solve_joint_analytic, solve_joint_seq, JointOpts};
 use terapipe::util::json::Json;
 use terapipe::util::{time_ms, Stats};
 
@@ -109,7 +109,32 @@ fn main() {
     // (the ≥4x acceptance assert runs at the very end, AFTER the JSON
     // report is written — a regression must still leave a record)
 
-    println!("\n## exact joint batch+token DP (knapsack over Algorithm-1 totals)");
+    // ---- serial vs parallel table densification (build_par) ----
+    println!("\n## table densification: build vs build_par (setting (9), L={l})");
+    println!("| granularity | build (ms) | build_par (ms) | speedup |");
+    let mut densify_rows: Vec<Json> = Vec::new();
+    for g in [64u32, 16, 8] {
+        let mut ser = Vec::with_capacity(REPS);
+        let mut par = Vec::with_capacity(REPS);
+        for _ in 0..REPS {
+            let (_, ms) = time_ms(|| TableCostModel::build(&base, l, g));
+            ser.push(ms);
+            let (_, ms) = time_ms(|| TableCostModel::build_par(&base, l, g));
+            par.push(ms);
+        }
+        let ss = Stats::from_samples(&ser);
+        let ps = Stats::from_samples(&par);
+        let sp = ss.min / ps.min.max(1e-9);
+        println!("| {g} | {:.2} | {:.2} | {sp:.2}x |", ss.min, ps.min);
+        densify_rows.push(Json::obj(vec![
+            ("granularity", Json::Num(g as f64)),
+            ("build_ms_min", Json::Num(ss.min)),
+            ("build_par_ms_min", Json::Num(ps.min)),
+            ("speedup_min_over_min", Json::Num(sp)),
+        ]));
+    }
+
+    println!("\n## exact joint batch+token DP (shared engine: global t_max enumeration)");
     println!("| setting | B/pipe | granularity | wall (ms) |");
     let mut joint_rows: Vec<Json> = Vec::new();
     for id in [5u32, 8, 9] {
@@ -143,6 +168,49 @@ fn main() {
         ]));
     }
 
+    // ---- joint solver: engine (parallel) vs sequential oracle ----
+    // Setting (8), the deep-pipeline joint regime. Plans are bit-identical
+    // (enforced by tests/solver_joint_equivalence.rs; spot re-checked
+    // here); only the wall clock may differ.
+    println!("\n## joint solver: parallel engine vs sequential oracle (setting (8))");
+    let st8 = presets::setting(8);
+    let base8 = AnalyticModel::from_setting(&st8, 1);
+    let jopts = JointOpts {
+        granularity: 32,
+        eps_ms: 0.1,
+        max_microbatch: Some(4),
+    };
+    let (jb, jl, jk) = (
+        st8.batch_per_pipeline().min(8),
+        st8.model.seq_len,
+        st8.parallel.pipeline_stages,
+    );
+    let mut jpar_wall = Vec::with_capacity(REPS);
+    let mut jseq_wall = Vec::with_capacity(REPS);
+    let mut jpar = None;
+    let mut jseq = None;
+    for _ in 0..REPS {
+        let (r, ms) = time_ms(|| solve_joint_analytic(&base8, jb, jl, jk, &jopts));
+        jpar_wall.push(ms);
+        jpar = Some(r);
+        let (r, ms) = time_ms(|| solve_joint_seq(|b| base8.with_microbatch(b), jb, jl, jk, &jopts));
+        jseq_wall.push(ms);
+        jseq = Some(r);
+    }
+    let (jpar, jseq) = (jpar.unwrap(), jseq.unwrap());
+    assert_eq!(
+        jpar.notation(),
+        jseq.notation(),
+        "joint parallel and sequential plans must be bit-identical"
+    );
+    assert!(jpar.latency_ms == jseq.latency_ms);
+    let jps = Stats::from_samples(&jpar_wall);
+    let jss = Stats::from_samples(&jseq_wall);
+    let joint_speedup = jss.min / jps.min.max(1e-9);
+    println!("sequential oracle: {} ms (min {:.2})", jss.pm(), jss.min);
+    println!("parallel engine:   {} ms (min {:.2})", jps.pm(), jps.min);
+    println!("speedup: {joint_speedup:.2}x on {threads} threads");
+
     // ---- machine-readable report (workspace root) ----
     let report = Json::obj(vec![
         ("bench", Json::Str("dp_solver".into())),
@@ -164,7 +232,22 @@ fn main() {
                 ("speedup_min_over_min", Json::Num(speedup)),
             ]),
         ),
+        ("densify", Json::arr(densify_rows)),
         ("joint", Json::arr(joint_rows)),
+        (
+            "joint_seq_vs_par",
+            Json::obj(vec![
+                ("setting", Json::Num(8.0)),
+                ("batch", Json::Num(jb as f64)),
+                ("granularity", Json::Num(jopts.granularity as f64)),
+                ("eps_ms", Json::Num(jopts.eps_ms)),
+                ("seq_wall_ms_min", Json::Num(jss.min)),
+                ("seq_wall_ms_mean", Json::Num(jss.mean)),
+                ("par_wall_ms_min", Json::Num(jps.min)),
+                ("par_wall_ms_mean", Json::Num(jps.mean)),
+                ("speedup_min_over_min", Json::Num(joint_speedup)),
+            ]),
+        ),
     ]);
     // resolve at runtime: the binary may run on a different machine /
     // checkout than it was built on (cargo sets the var for bench runs;

@@ -84,6 +84,41 @@ impl TableCostModel {
         }
     }
 
+    /// Parallel twin of [`Self::build`] (ROADMAP: "parallel table
+    /// densification"): the anti-diagonals are independent contiguous
+    /// runs, so they fan out across threads — worth it for expensive cost
+    /// models (measured/fitted) or fine grids. Requires `M: Sync` (the
+    /// model is shared read-only across workers) and produces a
+    /// **bit-identical** table: the same `model.t` calls land at the same
+    /// offsets, each diagonal filled left-to-right exactly as in the
+    /// serial build (equality is pinned by a unit test).
+    pub fn build_par<M: CostModel + Sync>(model: &M, seq_len: u32, granularity: u32) -> Self {
+        use rayon::prelude::*;
+        assert!(granularity >= 1 && seq_len % granularity == 0);
+        let n = (seq_len / granularity) as usize;
+        let diags: Vec<Vec<f64>> = (1..n + 1)
+            .into_par_iter()
+            .map(|d| {
+                (1..d + 1)
+                    .map(|a| model.t(a as u32 * granularity, (d - a) as u32 * granularity))
+                    .collect()
+            })
+            .collect();
+        let mut table = Vec::with_capacity(n * (n + 1) / 2);
+        for row in &diags {
+            table.extend_from_slice(row);
+        }
+        let comm = (0..=n)
+            .map(|a| model.t_comm(a as u32 * granularity))
+            .collect();
+        TableCostModel {
+            n,
+            granularity,
+            table,
+            comm,
+        }
+    }
+
     pub fn units(&self) -> usize {
         self.n
     }
@@ -204,6 +239,28 @@ mod tests {
         let t = TableCostModel::build(&Toy, 32, 8);
         assert!(t.at(4, 1).is_infinite()); // 4 + 1 > 4 units
         assert!(t.at(4, 0).is_finite());
+    }
+
+    #[test]
+    fn build_par_is_bit_identical_to_build() {
+        struct WithComm;
+        impl CostModel for WithComm {
+            fn t(&self, i: u32, j: u32) -> f64 {
+                0.3 + 0.07 * i as f64 + 2.5e-4 * i as f64 * j as f64
+            }
+            fn t_comm(&self, i: u32) -> f64 {
+                0.05 * i as f64
+            }
+        }
+        for (l, g) in [(8u32, 8u32), (64, 8), (96, 16), (512, 8)] {
+            let a = TableCostModel::build(&WithComm, l, g);
+            let b = TableCostModel::build_par(&WithComm, l, g);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.granularity, b.granularity);
+            // exact f64 equality, storage order included
+            assert_eq!(a.table, b.table, "L={l} g={g}");
+            assert_eq!(a.comm, b.comm, "L={l} g={g}");
+        }
     }
 
     #[test]

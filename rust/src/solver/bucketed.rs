@@ -93,15 +93,24 @@ pub fn solve_tokens_bucketed<M: CostModel>(
 
     // Same parallel enumeration engine as the unrestricted solver, with
     // Algorithm 1's `k` choices restricted to the bucket set.
-    let r = engine::enumerate_par(&table, stages, &filtered, |tmax| {
-        solve_fixed_tmax_restricted(&table, tmax, &allowed)
-    });
+    let k_f = stages as f64 - 1.0;
+    let r = engine::enumerate_par(
+        stages,
+        &filtered,
+        |tmax| solve_fixed_tmax_restricted(&table, tmax, &allowed).is_some(),
+        |tmax| {
+            solve_fixed_tmax_restricted(&table, tmax, &allowed).map(|sol| {
+                let achieved = engine::achieved_tmax(&table, &sol.lens_units);
+                (sol.total_ms + k_f * achieved, (sol, achieved))
+            })
+        },
+    );
     let stats = SolveStats {
         candidates: filtered.len(),
         dps_run: r.dps_run,
         probe_dps: r.probe_dps,
     };
-    r.best.map(|(latency, sol, tmax)| {
+    r.best.map(|(latency, (sol, tmax))| {
         (
             SliceScheme {
                 lens: sol.lens_units.iter().map(|&u| u as u32 * g).collect(),

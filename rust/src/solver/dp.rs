@@ -115,11 +115,33 @@ pub fn solve_tokens<M: CostModel>(
     solve_tokens_table(&table, stages, eps_ms)
 }
 
+/// The engine's eval shape for the plain token DP: run Algorithm 1 under
+/// the budget, tighten to the achieved stage max, report Eq. 5. Shared by
+/// the parallel path, the sequential reference, and the engine's own test
+/// suite, so everything enumerates literally the same closure.
+pub(crate) fn token_eval<'a>(
+    table: &'a TableCostModel,
+    stages: u32,
+) -> impl Fn(f64) -> Option<(f64, (FixedTmaxSolution, f64))> + Sync + 'a {
+    let k_f = stages as f64 - 1.0;
+    move |tmax| {
+        solve_fixed_tmax(table, tmax).map(|sol| {
+            let achieved = engine::achieved_tmax(table, &sol.lens_units);
+            (sol.total_ms + k_f * achieved, (sol, achieved))
+        })
+    }
+}
+
 /// Same, over a pre-densified table (the hot path for the joint solver and
 /// the benches, which reuse one table across runs).
 pub fn solve_tokens_table(table: &TableCostModel, stages: u32, eps_ms: f64) -> (SliceScheme, SolveStats) {
     let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
-    let r = engine::enumerate_par(table, stages, &cands, |tmax| solve_fixed_tmax(table, tmax));
+    let r = engine::enumerate_par(
+        stages,
+        &cands,
+        |tmax| solve_fixed_tmax(table, tmax).is_some(),
+        token_eval(table, stages),
+    );
     finish(table.granularity(), cands.len(), r)
 }
 
@@ -144,17 +166,21 @@ pub fn solve_tokens_table_seq(
     eps_ms: f64,
 ) -> (SliceScheme, SolveStats) {
     let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
-    let r = engine::enumerate_seq(table, stages, &cands, |tmax| solve_fixed_tmax(table, tmax));
+    let r = engine::enumerate_seq(stages, &cands, token_eval(table, stages));
     finish(table.granularity(), cands.len(), r)
 }
 
-fn finish(granularity: u32, candidates: usize, r: engine::EnumResult) -> (SliceScheme, SolveStats) {
+fn finish(
+    granularity: u32,
+    candidates: usize,
+    r: engine::EnumResult<(FixedTmaxSolution, f64)>,
+) -> (SliceScheme, SolveStats) {
     let stats = SolveStats {
         candidates,
         dps_run: r.dps_run,
         probe_dps: r.probe_dps,
     };
-    let (latency, sol, tmax) = r.best.expect("t_max = max stage time is always feasible");
+    let (latency, (sol, tmax)) = r.best.expect("t_max = max stage time is always feasible");
     (
         SliceScheme {
             lens: sol.lens_units.iter().map(|&u| u as u32 * granularity).collect(),

@@ -1,47 +1,62 @@
-//! The parallel `t_max`-enumeration engine shared by [`super::dp`] and
-//! [`super::bucketed`].
+//! The generic parallel `t_max`-enumeration engine shared by every solver
+//! front-end: [`super::dp`], [`super::bucketed`], and [`super::joint`].
 //!
-//! The §3.3 outer loop is, semantically, a *sequential* scan of the sorted
-//! candidate pool: run Algorithm 1 per candidate, keep the first-best
+//! Each §3.3/§3.4 solver is, semantically, the same *sequential* search:
+//! scan a sorted candidate pool of per-slice budgets ascending, evaluate
+//! each budget into a plan and its Eq. 5 latency, keep the first-best
 //! latency (ties broken by candidate order), and stop at the first
-//! candidate where the paper's bound `(K-1)·t_max ≥ best` fires. This
-//! module reproduces those semantics **bit-identically** while extracting
-//! parallelism from two places:
+//! candidate where the paper's bound `(K-1)·t_max ≥ best` fires. What
+//! differs per solver is only the *evaluation* of one budget — Algorithm 1
+//! for the token DP, Algorithm 1 restricted to a bucket set, or the per-b
+//! Algorithm-1 fan-out plus batch knapsack for the joint solver — so the
+//! engine is parameterized over two closures:
 //!
-//! 1. **Feasibility binary search** — Algorithm 1's feasibility is
-//!    monotone in `t_max` (a larger budget only adds transitions), so the
-//!    infeasible prefix of the pool is skipped with O(log n) probe DPs
-//!    instead of one failed O(n²) DP per infeasible candidate.
+//! * `eval: Fn(t_max) -> Option<(latency, P)>` — run the solver's DP(s)
+//!   under the budget and return the plan `P` with its Eq. 5 latency, or
+//!   `None` when the budget is infeasible.
+//! * `feasible: Fn(t_max) -> bool` (parallel path only) — a
+//!   feasibility-only probe for the binary search, so solvers with a
+//!   cheaper probe than a full `eval` (the joint solver skips scheme
+//!   reconstruction) don't pay for plans the search throws away.
+//!
+//! The engine reproduces the sequential semantics **bit-identically**
+//! while extracting parallelism from two places:
+//!
+//! 1. **Feasibility binary search** — every solver's feasibility is
+//!    monotone in `t_max` (a larger budget only adds DP transitions, and a
+//!    feasible knapsack composition stays feasible at a looser budget), so
+//!    the infeasible prefix of the pool is skipped with O(log n) probes
+//!    instead of one failed evaluation per infeasible candidate.
 //! 2. **Blocked parallel scan** — candidates are processed in blocks of
-//!    a few per thread; within a block every DP runs on its own worker
-//!    (rayon), sharing an atomic best-latency bound so the `(K-1)·t_max`
-//!    pruning keeps firing across workers. A sequential merge then replays
-//!    the block's results *in candidate order* with exactly the serial
-//!    update/break logic, so the chosen scheme, its latency, and the
-//!    tie-breaking are identical to [`enumerate_seq`].
+//!    a few per thread; within a block every evaluation runs on its own
+//!    worker (rayon), sharing an atomic best-latency bound so the
+//!    `(K-1)·t_max` pruning keeps firing across workers. A sequential
+//!    merge then replays the block's results *in candidate order* with
+//!    exactly the serial update/break logic, so the chosen plan, its
+//!    latency, and the tie-breaking are identical to [`enumerate_seq`].
 //!
 //! Why the merge is sound: a worker skips candidate `i` only when
 //! `(K-1)·t_max(i) ≥ bound` for some already-published latency `bound`.
 //! If that `bound` came from a candidate `< i`, the merge's own running
 //! best is ≤ `bound` by the time it reaches `i`, so the serial break fires
 //! at or before `i` and the skipped result is never needed. If it came
-//! from a candidate `> i` (a wall-clock race), the merge recomputes the DP
-//! inline — rare, and never changes the outcome.
+//! from a candidate `> i` (a wall-clock race), the merge recomputes the
+//! evaluation inline — rare, and never changes the outcome.
 
 use rayon::prelude::*;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::dp::FixedTmaxSolution;
 use crate::perfmodel::TableCostModel;
 
-/// Outcome of one enumeration: the winning `(latency, solution, achieved
-/// t_max)` plus DP counts for [`super::dp::SolveStats`].
-pub(crate) struct EnumResult {
-    pub best: Option<(f64, FixedTmaxSolution, f64)>,
-    /// Inner DPs consumed by the scan itself (= the sequential reference's
-    /// count from the first feasible candidate to the pruning break).
+/// Outcome of one enumeration: the winning `(latency, plan)` plus
+/// evaluation counts for [`super::dp::SolveStats`].
+pub(crate) struct EnumResult<P> {
+    pub best: Option<(f64, P)>,
+    /// Evaluations consumed by the scan itself (= the sequential
+    /// reference's count from the first feasible candidate to the pruning
+    /// break).
     pub dps_run: usize,
-    /// Extra DPs spent probing feasibility in the binary search.
+    /// Extra evaluations spent probing feasibility in the binary search.
     pub probe_dps: usize,
 }
 
@@ -91,30 +106,23 @@ pub(crate) fn achieved_tmax(table: &TableCostModel, lens_units: &[usize]) -> f64
 /// with `(K-1)·t_max` pruning. Kept as the ground truth the parallel path
 /// is property-tested against (and as the honest baseline for the
 /// `dp_solver` bench).
-pub(crate) fn enumerate_seq<F>(
-    table: &TableCostModel,
-    stages: u32,
-    cands: &[f64],
-    dp: F,
-) -> EnumResult
+pub(crate) fn enumerate_seq<P, E>(stages: u32, cands: &[f64], eval: E) -> EnumResult<P>
 where
-    F: Fn(f64) -> Option<FixedTmaxSolution>,
+    E: Fn(f64) -> Option<(f64, P)>,
 {
     let k_f = stages as f64 - 1.0;
-    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
+    let mut best: Option<(f64, P)> = None;
     let mut dps_run = 0usize;
     for &tmax in cands {
-        if let Some((bl, _, _)) = &best {
+        if let Some((bl, _)) = &best {
             if k_f * tmax >= *bl {
                 break;
             }
         }
         dps_run += 1;
-        if let Some(sol) = dp(tmax) {
-            let achieved = achieved_tmax(table, &sol.lens_units);
-            let latency = sol.total_ms + k_f * achieved;
-            if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
-                best = Some((latency, sol, achieved));
+        if let Some((latency, plan)) = eval(tmax) {
+            if best.as_ref().map_or(true, |(bl, _)| latency < *bl) {
+                best = Some((latency, plan));
             }
         }
     }
@@ -126,26 +134,33 @@ where
 }
 
 /// Per-candidate worker outcome inside one block.
-enum CandOutcome {
+enum CandOutcome<P> {
     /// Pruned by the shared bound — the merge either breaks before this
     /// index or recomputes it inline.
     Skipped,
-    /// DP ran: `(latency, solution, achieved t_max)`, or `None` infeasible.
-    Ran(Option<(f64, FixedTmaxSolution, f64)>),
+    /// Evaluation ran: `(latency, plan)`, or `None` infeasible.
+    Ran(Option<(f64, P)>),
 }
 
 /// The parallel engine. Bit-identical to [`enumerate_seq`] on the same
-/// candidate list (same winning scheme, latency, and tie-breaks); only the
-/// DP *counts* differ (the infeasible prefix is binary-searched away, and
-/// wasted speculative DPs past the pruning break are not billed).
-pub(crate) fn enumerate_par<F>(
-    table: &TableCostModel,
+/// candidate list and `eval` closure (same winning plan, latency, and
+/// tie-breaks); only the evaluation *counts* differ (the infeasible prefix
+/// is binary-searched away, and wasted speculative evaluations past the
+/// pruning break are not billed).
+///
+/// `feasible(t)` must agree with `eval(t).is_some()` for every candidate,
+/// and feasibility must be monotone in `t` — both hold for every Algorithm
+/// 1 variant and for the joint knapsack composition (see module docs).
+pub(crate) fn enumerate_par<P, E, F>(
     stages: u32,
     cands: &[f64],
-    dp: F,
-) -> EnumResult
+    feasible: F,
+    eval: E,
+) -> EnumResult<P>
 where
-    F: Fn(f64) -> Option<FixedTmaxSolution> + Sync,
+    P: Send,
+    E: Fn(f64) -> Option<(f64, P)> + Sync,
+    F: Fn(f64) -> bool + Sync,
 {
     if cands.is_empty() {
         return EnumResult {
@@ -160,7 +175,7 @@ where
     // feasible candidate; everything before it contributes nothing to the
     // sequential scan either.
     let mut probe_dps = 1usize;
-    if dp(*cands.last().unwrap()).is_none() {
+    if !feasible(*cands.last().unwrap()) {
         // Even the loosest budget is infeasible (bucket sets that cannot
         // compose the sequence) — identical to the reference scanning
         // everything and finding nothing.
@@ -175,7 +190,7 @@ where
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
         probe_dps += 1;
-        if dp(cands[mid]).is_some() {
+        if feasible(cands[mid]) {
             hi = mid;
         } else {
             lo = mid + 1;
@@ -189,39 +204,37 @@ where
     // lock-free shared upper bound.
     let threads = rayon::current_num_threads().max(1);
     let block = (4 * threads).max(16);
-    let mut best: Option<(f64, FixedTmaxSolution, f64)> = None;
+    let mut best: Option<(f64, P)> = None;
     let mut dps_run = 0usize;
     let mut start = first;
     'scan: while start < cands.len() {
         let end = (start + block).min(cands.len());
         let bound = AtomicU64::new(
             best.as_ref()
-                .map(|(bl, _, _)| bl.to_bits())
+                .map(|(bl, _)| bl.to_bits())
                 .unwrap_or(f64::INFINITY.to_bits()),
         );
-        let outcomes: Vec<CandOutcome> = cands[start..end]
+        let outcomes: Vec<CandOutcome<P>> = cands[start..end]
             .par_iter()
             .map(|&tmax| {
                 if k_f * tmax >= f64::from_bits(bound.load(Ordering::Relaxed)) {
                     return CandOutcome::Skipped;
                 }
-                match dp(tmax) {
+                match eval(tmax) {
                     None => CandOutcome::Ran(None),
-                    Some(sol) => {
-                        let achieved = achieved_tmax(table, &sol.lens_units);
-                        let latency = sol.total_ms + k_f * achieved;
+                    Some((latency, plan)) => {
                         bound.fetch_min(latency.to_bits(), Ordering::Relaxed);
-                        CandOutcome::Ran(Some((latency, sol, achieved)))
+                        CandOutcome::Ran(Some((latency, plan)))
                     }
                 }
             })
             .collect();
 
         // Sequential merge in candidate order — literally the reference
-        // loop, with the DP results precomputed.
+        // loop, with the evaluations precomputed.
         for (off, outcome) in outcomes.into_iter().enumerate() {
             let tmax = cands[start + off];
-            if let Some((bl, _, _)) = &best {
+            if let Some((bl, _)) = &best {
                 if k_f * tmax >= *bl {
                     break 'scan;
                 }
@@ -231,16 +244,13 @@ where
                 CandOutcome::Ran(r) => r,
                 CandOutcome::Skipped => {
                     // The bound raced ahead of the in-order prefix (set by
-                    // a later candidate): replay this DP inline.
-                    dp(tmax).map(|sol| {
-                        let achieved = achieved_tmax(table, &sol.lens_units);
-                        (sol.total_ms + k_f * achieved, sol, achieved)
-                    })
+                    // a later candidate): replay this evaluation inline.
+                    eval(tmax)
                 }
             };
-            if let Some((latency, sol, achieved)) = resolved {
-                if best.as_ref().map_or(true, |(bl, _, _)| latency < *bl) {
-                    best = Some((latency, sol, achieved));
+            if let Some((latency, plan)) = resolved {
+                if best.as_ref().map_or(true, |(bl, _)| latency < *bl) {
+                    best = Some((latency, plan));
                 }
             }
         }
@@ -258,7 +268,7 @@ where
 mod tests {
     use super::*;
     use crate::perfmodel::CostModel;
-    use crate::solver::dp::solve_fixed_tmax;
+    use crate::solver::dp::{solve_fixed_tmax, token_eval};
     use crate::util::prop;
 
     struct Affine {
@@ -309,11 +319,16 @@ mod tests {
             let stages = g.int(1, 24);
             let eps = *g.choose(&[0.0f64, 0.05, 0.2]);
             let cands = dedup_candidates(table.stage_time_candidates(), eps);
-            let seq = enumerate_seq(&table, stages, &cands, |t| solve_fixed_tmax(&table, t));
-            let par = enumerate_par(&table, stages, &cands, |t| solve_fixed_tmax(&table, t));
+            let seq = enumerate_seq(stages, &cands, token_eval(&table, stages));
+            let par = enumerate_par(
+                stages,
+                &cands,
+                |t| solve_fixed_tmax(&table, t).is_some(),
+                token_eval(&table, stages),
+            );
             match (&seq.best, &par.best) {
                 (None, None) => {}
-                (Some((sl, ss, sa)), Some((pl, ps, pa))) => {
+                (Some((sl, (ss, sa))), Some((pl, (ps, pa)))) => {
                     assert_eq!(ss.lens_units, ps.lens_units, "case {}", g.case);
                     assert!(sl == pl && sa == pa && ss.total_ms == ps.total_ms);
                 }
@@ -326,9 +341,37 @@ mod tests {
     fn empty_pool_yields_nothing() {
         let mut g = prop::Gen::new(7);
         let table = table_for(&mut g);
-        let r = enumerate_par(&table, 4, &[], |t| solve_fixed_tmax(&table, t));
+        let r = enumerate_par(
+            4,
+            &[],
+            |t| solve_fixed_tmax(&table, t).is_some(),
+            token_eval(&table, 4),
+        );
         assert!(r.best.is_none());
         assert_eq!(r.dps_run + r.probe_dps, 0);
+    }
+
+    #[test]
+    fn singleton_pool_evaluates_exactly_once() {
+        let mut g = prop::Gen::new(11);
+        let table = table_for(&mut g);
+        let n = table.units();
+        // the loosest budget: the whole-sequence slice always fits
+        let loose = table.at(n, 0) + table.comm_at(n) + 1.0;
+        let cands = vec![loose];
+        let seq = enumerate_seq(6, &cands, token_eval(&table, 6));
+        let par = enumerate_par(
+            6,
+            &cands,
+            |t| solve_fixed_tmax(&table, t).is_some(),
+            token_eval(&table, 6),
+        );
+        let (sl, (ss, _)) = seq.best.expect("loosest budget is feasible");
+        let (pl, (ps, _)) = par.best.expect("loosest budget is feasible");
+        assert_eq!(ss.lens_units, ps.lens_units);
+        assert!(sl == pl);
+        assert_eq!(seq.dps_run, 1);
+        assert_eq!(par.dps_run, 1);
     }
 
     #[test]
@@ -338,8 +381,71 @@ mod tests {
         // budgets below the cheapest single-unit slice: nothing is solvable
         let tiny = table.at(1, 0) * 0.5;
         let cands = vec![tiny * 0.5, tiny];
-        let seq = enumerate_seq(&table, 4, &cands, |t| solve_fixed_tmax(&table, t));
-        let par = enumerate_par(&table, 4, &cands, |t| solve_fixed_tmax(&table, t));
+        let seq = enumerate_seq(4, &cands, token_eval(&table, 4));
+        let par = enumerate_par(
+            4,
+            &cands,
+            |t| solve_fixed_tmax(&table, t).is_some(),
+            token_eval(&table, 4),
+        );
         assert!(seq.best.is_none() && par.best.is_none());
+        // the parallel path learns this from the single backstop probe
+        assert_eq!(par.probe_dps, 1);
+        assert_eq!(par.dps_run, 0);
+    }
+
+    #[test]
+    fn single_unit_sequence_solves_on_both_paths() {
+        // L = 1 grid unit: exactly one scheme ([1]) and one candidate.
+        struct Toy;
+        impl CostModel for Toy {
+            fn t(&self, i: u32, j: u32) -> f64 {
+                i as f64 + 0.01 * i as f64 * j as f64
+            }
+        }
+        let table = TableCostModel::build(&Toy, 8, 8);
+        assert_eq!(table.units(), 1);
+        let cands = dedup_candidates(table.stage_time_candidates(), 0.0);
+        assert_eq!(cands.len(), 1);
+        for stages in [1u32, 4] {
+            let seq = enumerate_seq(stages, &cands, token_eval(&table, stages));
+            let par = enumerate_par(
+                stages,
+                &cands,
+                |t| solve_fixed_tmax(&table, t).is_some(),
+                token_eval(&table, stages),
+            );
+            let (sl, (ss, _)) = seq.best.expect("single-unit scheme fits");
+            let (pl, (ps, _)) = par.best.expect("single-unit scheme fits");
+            assert_eq!(ss.lens_units, vec![1]);
+            assert_eq!(ps.lens_units, vec![1]);
+            assert!(sl == pl);
+        }
+    }
+
+    #[test]
+    fn single_stage_scans_without_pruning() {
+        // K = 1 ⇒ (K-1)·t_max = 0 never reaches a positive best: the scan
+        // must visit every candidate from the first feasible one and both
+        // paths must still agree.
+        let mut g = prop::Gen::new(5);
+        let table = table_for(&mut g);
+        let cands = dedup_candidates(table.stage_time_candidates(), 0.0);
+        let seq = enumerate_seq(1, &cands, token_eval(&table, 1));
+        let par = enumerate_par(
+            1,
+            &cands,
+            |t| solve_fixed_tmax(&table, t).is_some(),
+            token_eval(&table, 1),
+        );
+        let (sl, (ss, _)) = seq.best.expect("loosest budget is feasible");
+        let (pl, (ps, _)) = par.best.expect("loosest budget is feasible");
+        assert_eq!(ss.lens_units, ps.lens_units);
+        assert!(sl == pl);
+        // no pruning: the merge walks every candidate past the first
+        // feasible one (the parallel path still skips the infeasible
+        // prefix, so its count is ≤ the reference's)
+        assert_eq!(seq.dps_run, cands.len());
+        assert!(par.dps_run <= seq.dps_run);
     }
 }

@@ -4,6 +4,13 @@
 //! slices `b_1, …, b_D` with `Σ b_d = B` minimizing `Σ T_{b_d}` — an
 //! unbounded min-cost exact-cover over the batch dimension, solved by DP in
 //! O(B²).
+//!
+//! The paper's stated reduction sets `T_b = S_b + (K-1)·t_max,b`, which
+//! charges the pipeline-fill bubble once *per part* while Eq. 5 charges it
+//! once *per iteration* — [`min_latency_composition`] is the corrected
+//! objective `Σ S_{b_d} + (K-1)·max_d t_max,{b_d}`, solved exactly by
+//! enumerating the bubble-defining budget over the distinct per-b stage
+//! maxima (O(B) knapsacks).
 
 /// `costs[b-1]` = T_b for a batch slice of `b` sequences. Returns the
 /// minimizing composition (descending) and its total cost, or `None` if
@@ -37,6 +44,57 @@ pub fn min_cost_composition(costs: &[f64], total: u32) -> Option<(Vec<u32>, f64)
     }
     parts.sort_unstable_by(|a, b| b.cmp(a));
     Some((parts, dp[n]))
+}
+
+/// The corrected §3.4 composition objective: given per-batch-size *totals*
+/// `totals[b-1] = S_b` and per-batch-size max stage times
+/// `tmaxes[b-1] = t_max,b`, pick `b_1 + … + b_D = total` minimizing the
+/// Eq. 5 latency `Σ S_{b_d} + (K-1)·max_d t_max,{b_d}` — the bubble term
+/// counted **once**, not once per part as the paper's `T_b` reduction
+/// does.
+///
+/// Exact in O(B) knapsacks: the max term takes one of the distinct
+/// `t_max,b` values `m`; for each, restrict the knapsack to batch sizes
+/// with `t_max,b ≤ m` and charge `(K-1)·m` once. An entry with a
+/// non-finite total (infeasible batch size) is never picked. Returns the
+/// minimizing composition (descending) and its latency.
+pub fn min_latency_composition(
+    totals: &[f64],
+    tmaxes: &[f64],
+    total: u32,
+    stages: u32,
+) -> Option<(Vec<u32>, f64)> {
+    assert_eq!(totals.len(), tmaxes.len());
+    if totals.is_empty() || total == 0 {
+        return None;
+    }
+    let k_f = stages as f64 - 1.0;
+    let mut budgets: Vec<f64> = tmaxes
+        .iter()
+        .zip(totals)
+        .filter(|(_, &s)| s.is_finite())
+        .map(|(&m, _)| m)
+        .collect();
+    budgets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    budgets.dedup();
+    let mut best: Option<(Vec<u32>, f64)> = None;
+    for &m in &budgets {
+        // mask out batch sizes whose own stage max exceeds the budget
+        let masked: Vec<f64> = totals
+            .iter()
+            .zip(tmaxes)
+            .map(|(&s, &t)| if t <= m { s } else { f64::INFINITY })
+            .collect();
+        if let Some((parts, cost)) = min_cost_composition(&masked, total) {
+            if cost.is_finite() {
+                let latency = cost + k_f * m;
+                if best.as_ref().map_or(true, |(_, bl)| latency < *bl) {
+                    best = Some((parts, latency));
+                }
+            }
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -82,6 +140,77 @@ mod tests {
     fn empty_and_zero_rejected() {
         assert!(min_cost_composition(&[], 4).is_none());
         assert!(min_cost_composition(&[1.0], 0).is_none());
+    }
+
+    /// Regression for the double-counted bubble (joint.rs audit): the
+    /// paper's `T_b = S_b + (K-1)·t_max,b` knapsack pays the bubble once
+    /// per part, steering it away from multi-part compositions that the
+    /// true Eq. 5 objective prefers.
+    #[test]
+    fn single_counted_bubble_fixes_double_count_regression() {
+        // b=1: S=1.0, m=0.5; b=2: S=2.2, m=0.5; K=11 (k_f = 10), B=2.
+        // True objective:  [1,1] = 2.0 + 10·0.5 = 7.0  <  [2] = 7.2
+        // T_b reduction:   [1,1] = 2·(1.0+5.0) = 12.0  >  [2] = 7.2
+        let totals = [1.0, 2.2];
+        let tmaxes = [0.5, 0.5];
+        let (parts, latency) = min_latency_composition(&totals, &tmaxes, 2, 11).unwrap();
+        assert_eq!(parts, vec![1, 1]);
+        assert!((latency - 7.0).abs() < 1e-12, "{latency}");
+        // pin the old behaviour the fix replaces: the double-counting
+        // knapsack picks the strictly worse single part
+        let t_b: Vec<f64> = totals.iter().zip(&tmaxes).map(|(s, m)| s + 10.0 * m).collect();
+        let (old_parts, _) = min_cost_composition(&t_b, 2).unwrap();
+        assert_eq!(old_parts, vec![2]);
+    }
+
+    #[test]
+    fn min_latency_composition_skips_infeasible_batch_sizes() {
+        // b=2 infeasible (∞ total): composition must fall back to 1s and
+        // its t_max must not poison the budget enumeration.
+        let totals = [1.0, f64::INFINITY];
+        let tmaxes = [0.4, 0.1];
+        let (parts, latency) = min_latency_composition(&totals, &tmaxes, 3, 5).unwrap();
+        assert_eq!(parts, vec![1, 1, 1]);
+        assert!((latency - (3.0 + 4.0 * 0.4)).abs() < 1e-12);
+        assert!(min_latency_composition(&[], &[], 3, 5).is_none());
+        assert!(min_latency_composition(&totals, &tmaxes, 0, 5).is_none());
+    }
+
+    /// Property: the single-counted composition is valid, its latency is
+    /// the recomputed Eq. 5 value, and no random composition beats it.
+    #[test]
+    fn prop_min_latency_composition_optimal() {
+        prop::run_cases(128, |g| {
+            let n = g.int(1, 6) as usize;
+            let totals = g.floats(n, 0.01, 10.0);
+            let tmaxes = g.floats(n, 0.01, 5.0);
+            let total = g.int(1, 10);
+            let stages = g.int(1, 24);
+            let k_f = stages as f64 - 1.0;
+            let (parts, latency) = min_latency_composition(&totals, &tmaxes, total, stages).unwrap();
+            assert_eq!(parts.iter().sum::<u32>(), total);
+            let recomputed: f64 = parts.iter().map(|&p| totals[p as usize - 1]).sum::<f64>()
+                + k_f
+                    * parts
+                        .iter()
+                        .map(|&p| tmaxes[p as usize - 1])
+                        .fold(f64::NEG_INFINITY, f64::max);
+            assert!((recomputed - latency).abs() < 1e-9, "case {}", g.case);
+
+            for _ in 0..100 {
+                let mut rem = total;
+                let mut sum = 0.0;
+                let mut m = f64::NEG_INFINITY;
+                while rem > 0 {
+                    let b = g.int(1, rem.min(totals.len() as u32));
+                    sum += totals[b as usize - 1];
+                    m = m.max(tmaxes[b as usize - 1]);
+                    rem -= b;
+                }
+                let adversary = sum + k_f * m;
+                assert!(latency <= adversary + 1e-9, "case {}: {latency} beaten by {adversary}", g.case);
+            }
+        });
     }
 
     /// Property: the DP result is a valid composition and beats 200 random

@@ -3,15 +3,24 @@
 //! * [`dp`] — Algorithm 1: the `S*(i; t_max)` dynamic program, plus the
 //!   outer `t_max` enumeration with the ε-grid and the `K·t_max` pruning
 //!   optimizations the paper describes.
-//! * `engine` (crate-private) — the parallel anti-diagonal enumeration
-//!   engine behind `dp` and `bucketed`: feasibility binary search over the
-//!   sorted candidate pool + a blocked rayon scan with a shared atomic
-//!   pruning bound, bit-identical to the retained sequential reference.
+//! * `engine` (crate-private) — the generic enumeration engine behind
+//!   **every** solver front-end (`dp`, `bucketed`, and `joint`),
+//!   parameterized over an eval closure and a feasibility probe:
+//!   feasibility binary search over the sorted candidate pool + a blocked
+//!   rayon scan with a shared atomic pruning bound, bit-identical to the
+//!   retained sequential references (`solve_tokens_seq`,
+//!   `solve_joint_seq`).
 //! * [`uniform`] — the uniform-slicing heuristic baseline of Fig. 6.
 //! * [`joint`] — the §3.4 joint batch+token extension: token-DP per batch
-//!   size, then a 1-D knapsack over the batch dimension.
-//! * [`knapsack`] — the exact unbounded min-cost composition solver the
-//!   joint scheme reduces to.
+//!   size, then a batch composition with the bubble term counted once
+//!   (`solve_joint`), or the exact global-`t_max` search on the engine
+//!   (`solve_joint_exact`).
+//! * [`knapsack`] — the exact unbounded min-cost composition solvers the
+//!   joint schemes reduce to.
+//!
+//! See `solver/README.md` for the engine API and the differential test
+//! harness (seq/par equivalence + solver-vs-simulator) that locks the
+//! whole tree together.
 
 pub mod bucketed;
 pub mod dp;

@@ -1,0 +1,177 @@
+//! Equivalence properties for the joint §3.4 solver on the shared engine.
+//!
+//! `solve_joint_exact` now runs on the same generic enumeration engine as
+//! the §3.3 token solver (feasibility binary search + blocked parallel
+//! scan with a shared atomic pruning bound), with parallel table builds
+//! (`TableCostModel::build_par`) and parallel per-b DPs underneath. The
+//! search is deterministic with ties broken by candidate order, so the
+//! parallel solver must return **bit-identical** plans to the retained
+//! sequential oracle `solve_joint_seq` (serial builds, serial DPs, plain
+//! ascending scan) — not "close", identical, across sequence lengths,
+//! pipeline depths, batch sizes, microbatch caps, ε values, and model
+//! shapes. Mirrors `solver_parallel_equivalence.rs` for the token solver.
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::perfmodel::CostModel;
+use terapipe::solver::joint::{solve_joint, solve_joint_exact, solve_joint_seq, JointOpts};
+use terapipe::util::prop;
+
+/// Random affine-with-context cost model whose terms scale with the
+/// microbatch size `b` — compute roughly linearly (with a sublinear knee
+/// factor), comm linearly — so the batch composition is a real trade-off.
+#[derive(Clone)]
+struct RandJointModel {
+    over: f64,
+    lin: f64,
+    ctx: f64,
+    comm: f64,
+    /// Marginal cost of one extra sequence in the microbatch (0 = free
+    /// batching ⇒ one big part; 1 = linear ⇒ indifferent).
+    scale: f64,
+    b: u32,
+}
+
+impl CostModel for RandJointModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        let f = 1.0 + self.scale * (self.b as f64 - 1.0);
+        f * (self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64)
+    }
+    fn t_comm(&self, _i: u32) -> f64 {
+        self.comm * self.b as f64
+    }
+}
+
+struct Cfg {
+    over: f64,
+    lin: f64,
+    ctx: f64,
+    comm: f64,
+    scale: f64,
+}
+
+fn random_cfg(g: &mut prop::Gen) -> Cfg {
+    Cfg {
+        over: g.float(0.01, 2.0),
+        lin: g.float(0.001, 0.1),
+        ctx: g.float(0.0, 3e-4),
+        comm: g.float(0.0, 0.3),
+        scale: g.float(0.1, 1.2),
+    }
+}
+
+fn assert_joint_identical(
+    par: &terapipe::solver::JointScheme,
+    seq: &terapipe::solver::JointScheme,
+    label: &str,
+) {
+    assert_eq!(par.parts.len(), seq.parts.len(), "{label}: part count");
+    for (i, ((pb, ps), (sb, ss))) in par.parts.iter().zip(&seq.parts).enumerate() {
+        assert_eq!(pb, sb, "{label}: part {i} batch size");
+        assert_eq!(ps.lens, ss.lens, "{label}: part {i} scheme");
+        assert!(
+            ps.total_ms == ss.total_ms && ps.t_max_ms == ss.t_max_ms,
+            "{label}: part {i} non-bit-identical floats: {ps:?} vs {ss:?}"
+        );
+    }
+    assert!(
+        par.latency_ms == seq.latency_ms,
+        "{label}: latency {} vs {}",
+        par.latency_ms,
+        seq.latency_ms
+    );
+}
+
+/// (a) Randomized (L, K, batch, b_max, ε, cost-model) configs: the engine
+/// path is bit-identical to the sequential oracle — plans, per-part
+/// `total_ms`/`t_max_ms`, and total latency all compare with `==`.
+#[test]
+fn prop_joint_exact_bit_identical_to_sequential_oracle() {
+    prop::run_cases(100, |g| {
+        let cfg = random_cfg(g);
+        let gran = *g.choose(&[8u32, 16, 32]);
+        let l = g.int(2, 12) * gran;
+        let k = g.int(1, 16);
+        let batch = g.int(1, 6);
+        let b_cap = g.int(1, 4).min(batch);
+        let eps = *g.choose(&[0.0f64, 0.1, 0.5]);
+        let opts = JointOpts {
+            granularity: gran,
+            eps_ms: eps,
+            max_microbatch: Some(b_cap),
+        };
+        let mk = |b: u32| RandJointModel {
+            over: cfg.over,
+            lin: cfg.lin,
+            ctx: cfg.ctx,
+            comm: cfg.comm,
+            scale: cfg.scale,
+            b,
+        };
+        let par = solve_joint_exact(&mk, batch, l, k, &opts);
+        let seq = solve_joint_seq(&mk, batch, l, k, &opts);
+        let label = format!(
+            "case {} (L={l}, g={gran}, K={k}, B={batch}, b_max={b_cap}, eps={eps})",
+            g.case
+        );
+        assert_joint_identical(&par, &seq, &label);
+        assert_eq!(par.batch(), batch, "{label}: batch coverage");
+    });
+}
+
+/// (b) The exact global-t_max search never loses to the paper's two-phase
+/// reduction at ε = 0: every reduction plan is discoverable at its own
+/// achieved budget, which sits in the exact solver's union pool.
+#[test]
+fn prop_joint_exact_never_worse_than_reduction() {
+    prop::run_cases(20, |g| {
+        let cfg = random_cfg(g);
+        let gran = *g.choose(&[8u32, 16]);
+        let l = g.int(2, 10) * gran;
+        let k = g.int(2, 16);
+        let batch = g.int(2, 6);
+        let b_cap = g.int(1, 3).min(batch);
+        let opts = JointOpts {
+            granularity: gran,
+            eps_ms: 0.0,
+            max_microbatch: Some(b_cap),
+        };
+        let mk = |b: u32| RandJointModel {
+            over: cfg.over,
+            lin: cfg.lin,
+            ctx: cfg.ctx,
+            comm: cfg.comm,
+            scale: cfg.scale,
+            b,
+        };
+        let exact = solve_joint_exact(&mk, batch, l, k, &opts);
+        let reduction = solve_joint(&mk, batch, l, k, &opts);
+        assert!(
+            exact.latency_ms <= reduction.latency_ms + 1e-6,
+            "case {}: exact {} vs reduction {}",
+            g.case,
+            exact.latency_ms,
+            reduction.latency_ms
+        );
+    });
+}
+
+/// Same bit-identity contract on the paper-scale analytic model (setting
+/// (8): K = 48 — the configuration the joint bench times).
+#[test]
+fn paper_setting8_joint_parallel_matches_sequential() {
+    let setting = presets::setting(8);
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let l = setting.model.seq_len;
+    let k = setting.parallel.pipeline_stages;
+    for (gran, eps, batch, b_cap) in [(128u32, 0.1f64, 8u32, 4u32), (128, 0.0, 4, 2)] {
+        let opts = JointOpts {
+            granularity: gran,
+            eps_ms: eps,
+            max_microbatch: Some(b_cap),
+        };
+        let par = solve_joint_exact(|b| base.with_microbatch(b), batch, l, k, &opts);
+        let seq = solve_joint_seq(|b| base.with_microbatch(b), batch, l, k, &opts);
+        assert_joint_identical(&par, &seq, &format!("g={gran} eps={eps} B={batch}"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Solver-vs-simulator differential harness: every solver variant's
+//! *predicted* Eq. 5 latency must equal the discrete-event simulator's
+//! makespan when its plan is replayed as a pipeline.
+//!
+//! The replay regime is the one where Eq. 5 is exact (and where the sim
+//! suite already pins `forward_chain_matches_eq5`): every stage runs the
+//! same stream of slice stage-times `t_i = t(l_i, ctx_i) + t_comm(l_i)`
+//! (Eq. 4's computation + transmission folded into the item duration, no
+//! extra edge delay), so the simulated makespan is
+//! `Σ t_i + (K-1)·max t_i` — independently re-deriving the objective the
+//! DPs optimize. A solver that mis-reports `latency_ms` (stale totals,
+//! double-counted bubble, budget-vs-achieved `t_max` confusion) diverges
+//! from the replay and fails here within 1e-9.
+
+use terapipe::perfmodel::CostModel;
+use terapipe::sim::engine::simulate;
+use terapipe::sim::{Item, Phase, Plan};
+use terapipe::solver::bucketed::solve_tokens_bucketed;
+use terapipe::solver::dp::solve_tokens;
+use terapipe::solver::joint::{solve_joint, solve_joint_exact, JointOpts};
+use terapipe::solver::uniform::uniform_scheme;
+use terapipe::solver::JointScheme;
+use terapipe::util::prop;
+
+/// Random affine-with-context cost model drawn per case (same family as
+/// the other solver property suites; kept at ms scale so the 1e-9
+/// absolute tolerance is ~1e4 ulps of slack).
+#[derive(Clone)]
+struct RandModel {
+    over: f64,
+    lin: f64,
+    ctx: f64,
+    comm: f64,
+    scale: f64,
+    b: u32,
+}
+
+impl CostModel for RandModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        let f = 1.0 + self.scale * (self.b as f64 - 1.0);
+        f * (self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64)
+    }
+    fn t_comm(&self, _i: u32) -> f64 {
+        self.comm * self.b as f64
+    }
+}
+
+fn random_model(g: &mut prop::Gen) -> RandModel {
+    RandModel {
+        over: g.float(0.01, 2.0),
+        lin: g.float(0.001, 0.1),
+        ctx: g.float(0.0, 3e-4),
+        comm: g.float(0.0, 0.3),
+        scale: g.float(0.1, 1.0),
+        b: 1,
+    }
+}
+
+/// Replay a stream of per-slice stage times through the discrete-event
+/// engine: a K-stage pipeline where every stage executes the same slice
+/// stream in order (slice i on stage k depends on slice i on stage k-1
+/// and slice i-1 on stage k). Returns the simulated makespan.
+fn replay_stream(durs: &[f64], stages: usize) -> f64 {
+    assert!(!durs.is_empty() && stages >= 1);
+    let m = durs.len();
+    let mut items = Vec::with_capacity(m * stages);
+    for s in 0..stages {
+        for (i, &d) in durs.iter().enumerate() {
+            let mut deps = Vec::new();
+            if s > 0 {
+                deps.push(((s - 1) * m + i, 0.0));
+            }
+            if i > 0 {
+                deps.push((s * m + i - 1, 0.0));
+            }
+            items.push(Item {
+                id: s * m + i,
+                stage: s,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: i,
+                dur_ms: d,
+                deps,
+                priority: (s * m + i) as u64,
+            });
+        }
+    }
+    simulate(&Plan {
+        stages,
+        items,
+        mem_cap_parts: None,
+        flush_barrier: false,
+    })
+    .expect("replay plan has no cap/barrier, cannot deadlock")
+    .makespan_ms
+}
+
+/// Slice stage times of a single-part token scheme under `model`.
+fn stream_of_lens<M: CostModel>(model: &M, lens: &[u32]) -> Vec<f64> {
+    let mut ctx = 0u32;
+    let mut durs = Vec::with_capacity(lens.len());
+    for &l in lens {
+        durs.push(model.t(l, ctx) + model.t_comm(l));
+        ctx += l;
+    }
+    durs
+}
+
+/// Concatenated slice stream of a joint plan, in execution order, each
+/// part under its own microbatch model.
+fn stream_of_joint<M: CostModel>(model_for: &dyn Fn(u32) -> M, plan: &JointScheme) -> Vec<f64> {
+    let mut durs = Vec::new();
+    for (b, scheme) in &plan.parts {
+        durs.extend(stream_of_lens(&model_for(*b), &scheme.lens));
+    }
+    durs
+}
+
+/// (a) Token DP (§3.3): the solver's reported latency equals the replayed
+/// pipeline makespan of its scheme.
+#[test]
+fn prop_dp_solver_matches_simulated_replay() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let gran = *g.choose(&[8u32, 16, 32]);
+        let l = g.int(2, 14) * gran;
+        let k = g.int(1, 16);
+        let eps = *g.choose(&[0.0f64, 0.1]);
+        let (scheme, _) = solve_tokens(&m, l, k, gran, eps);
+        let sim = replay_stream(&stream_of_lens(&m, &scheme.lens), k as usize);
+        assert!(
+            (sim - scheme.latency_ms).abs() < 1e-9,
+            "case {}: dp predicted {} vs simulated {sim}",
+            g.case,
+            scheme.latency_ms
+        );
+    });
+}
+
+/// (b) Uniform baseline: same contract for every slice count.
+#[test]
+fn prop_uniform_scheme_matches_simulated_replay() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let gran = 8u32;
+        let l = g.int(2, 16) * gran;
+        let k = g.int(1, 12);
+        let n = g.int(1, l / gran);
+        let u = uniform_scheme(&m, l, k, n, gran);
+        let sim = replay_stream(&stream_of_lens(&m, &u.lens), k as usize);
+        assert!(
+            (sim - u.latency_ms).abs() < 1e-9,
+            "case {}: uniform predicted {} vs simulated {sim}",
+            g.case,
+            u.latency_ms
+        );
+    });
+}
+
+/// (c) Bucketed DP: when the bucket set can compose the sequence, its
+/// reported latency replays exactly too.
+#[test]
+fn prop_bucketed_solver_matches_simulated_replay() {
+    prop::run_cases(60, |g| {
+        let m = random_model(g);
+        let l = g.int(2, 12) * 16;
+        let k = g.int(1, 12);
+        let buckets = [16u32, 32, 64];
+        if let Some((scheme, _)) = solve_tokens_bucketed(&m, l, k, &buckets, 0.0) {
+            let sim = replay_stream(&stream_of_lens(&m, &scheme.lens), k as usize);
+            assert!(
+                (sim - scheme.latency_ms).abs() < 1e-9,
+                "case {}: bucketed predicted {} vs simulated {sim}",
+                g.case,
+                scheme.latency_ms
+            );
+        }
+    });
+}
+
+/// (d) Joint solvers (§3.4): both the exact global-t_max search and the
+/// corrected two-phase reduction replay to their reported latency. This is
+/// the test that catches a double-counted bubble term — a plan whose
+/// reported latency charges (K-1)·t_max once per part simulates strictly
+/// faster than predicted.
+#[test]
+fn prop_joint_solvers_match_simulated_replay() {
+    prop::run_cases(40, |g| {
+        let base = random_model(g);
+        let gran = *g.choose(&[8u32, 16]);
+        let l = g.int(2, 10) * gran;
+        let k = g.int(1, 12);
+        let batch = g.int(1, 5);
+        let b_cap = g.int(1, 3).min(batch);
+        let eps = *g.choose(&[0.0f64, 0.1]);
+        let opts = JointOpts {
+            granularity: gran,
+            eps_ms: eps,
+            max_microbatch: Some(b_cap),
+        };
+        let mk = |b: u32| RandModel { b, ..base.clone() };
+
+        let exact = solve_joint_exact(&mk, batch, l, k, &opts);
+        let sim = replay_stream(&stream_of_joint(&mk, &exact), k as usize);
+        assert!(
+            (sim - exact.latency_ms).abs() < 1e-9,
+            "case {}: joint-exact predicted {} vs simulated {sim}",
+            g.case,
+            exact.latency_ms
+        );
+
+        let reduction = solve_joint(&mk, batch, l, k, &opts);
+        let sim = replay_stream(&stream_of_joint(&mk, &reduction), k as usize);
+        assert!(
+            (sim - reduction.latency_ms).abs() < 1e-9,
+            "case {}: joint-reduction predicted {} vs simulated {sim}",
+            g.case,
+            reduction.latency_ms
+        );
+    });
+}
