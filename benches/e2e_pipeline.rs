@@ -22,7 +22,8 @@ use terapipe::util::Stats;
 fn hot_path_microbench(dir: &PathBuf) {
     let manifest = terapipe::runtime::manifest::Manifest::load(dir).unwrap();
     let m = manifest.model.clone();
-    let rt = StageRuntime::load(dir, &stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets)).unwrap();
+    let exe_names = stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets);
+    let rt = StageRuntime::load(dir, &exe_names).unwrap();
     let params = rt.manifest.load_init(&rt.manifest.init_stages[0]).unwrap();
     let len = *manifest.buckets.iter().max().unwrap();
     let exe = format!("stage_fwd_s{len}");

@@ -1,0 +1,224 @@
+//! Bench: the online planner service — cold vs warm re-solve, cost-table
+//! cache hit/miss paths, and the 4-lane unrolled Alg-1 inner loop vs the
+//! scalar reference. Emits `BENCH_planner.json` at the workspace root in
+//! the PR 1 JSON protocol (PERF.md) so the planner trajectory is tracked
+//! across PRs.
+//!
+//! Shapes to expect: the warm re-solve beats cold-with-densify by roughly
+//! the densification cost (the cache rescale is one multiply pass) plus a
+//! handful of feasibility probes (gallop vs full binary search); the
+//! scaled-table cache hit path costs nothing but the solve itself; the
+//! lanes inner loop buys a constant factor per DP. Outputs are
+//! bit-identical across all pairs (asserted here; pinned by the property
+//! suites).
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::perfmodel::{ScaledModel, TableCostModel};
+use terapipe::planner::drift::LatencySample;
+use terapipe::planner::{warm, Planner, PlannerConfig};
+use terapipe::solver::dp::{solve_fixed_tmax, solve_fixed_tmax_ref, solve_tokens_table};
+use terapipe::util::json::Json;
+use terapipe::util::{time_ms, Stats};
+
+const REPS: usize = 5;
+
+fn main() {
+    println!("# Online planner: cold vs warm re-solve, cache paths, lanes inner loop");
+    let setting = presets::setting(9); // K=96, L=2048 — the paper-scale instance
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let l = setting.model.seq_len;
+    let k = setting.parallel.pipeline_stages;
+    let gran = 16u32;
+    let eps = 0.1;
+    let threads = rayon::current_num_threads();
+    println!("setting (9): K={k}, L={l}, g={gran}, eps={eps}, threads {threads}");
+
+    // ---- cold re-solve (the pre-planner baseline: densify + solve) vs
+    //      warm re-solve (cache rescale + gallop-seeded enumeration)
+    //      across a slowdown delta ----
+    println!("\n## re-solve after a 1.2x slowdown: cold (densify + solve) vs warm (rescale + seeded)");
+    let factor = 1.2f64;
+    let mut cold_wall = Vec::with_capacity(REPS);
+    let mut warm_wall = Vec::with_capacity(REPS);
+    let mut cold_scheme = None;
+    let mut warm_scheme = None;
+    let (base_table, densify_ms) = time_ms(|| TableCostModel::build(&base, l, gran));
+    // the warm seed a live planner would carry: the pre-delta boundary
+    let (pre, _) = solve_tokens_table(&base_table, k, eps);
+    for _ in 0..REPS {
+        let (r, ms) = time_ms(|| {
+            // cold: a from-scratch solver has to densify the drifted model
+            let scaled = ScaledModel { inner: &base, compute: factor, comm: 1.0 };
+            let table = TableCostModel::build(&scaled, l, gran);
+            solve_tokens_table(&table, k, eps).0
+        });
+        cold_wall.push(ms);
+        cold_scheme = Some(r);
+        let (r, ms) = time_ms(|| {
+            // warm: rescale the cached diagonals, seed from the scaled hint
+            let table = base_table.rescaled(factor, 1.0);
+            let hint = pre.t_max_ms * factor;
+            warm::solve_tokens_table_warm(&table, k, eps, hint, warm::DEFAULT_WINDOW).0
+        });
+        warm_wall.push(ms);
+        warm_scheme = Some(r);
+    }
+    let (cold_scheme, warm_scheme) = (cold_scheme.unwrap(), warm_scheme.unwrap());
+    assert_eq!(cold_scheme.lens, warm_scheme.lens, "warm must be bit-identical");
+    assert!(cold_scheme.latency_ms == warm_scheme.latency_ms);
+    let cs = Stats::from_samples(&cold_wall);
+    let ws = Stats::from_samples(&warm_wall);
+    let resolve_speedup = cs.min / ws.min.max(1e-9);
+    println!("densify-once cost (amortized away by the cache): {densify_ms:.2} ms");
+    println!("cold re-solve: {} ms (min {:.2})", cs.pm(), cs.min);
+    println!("warm re-solve: {} ms (min {:.2})", ws.pm(), ws.min);
+    println!("speedup: {resolve_speedup:.2}x");
+
+    // ---- cache hit/miss paths ----
+    println!("\n## cost-table cache paths (build = miss, rescale = scaled miss, hit = Arc clone)");
+    let mut build_t = Vec::with_capacity(REPS);
+    let mut rescale_t = Vec::with_capacity(REPS);
+    let mut hit_t = Vec::with_capacity(REPS);
+    for rep in 0..REPS {
+        let mut p = Planner::new(
+            "bench",
+            base.clone(),
+            l,
+            k,
+            PlannerConfig { granularity: gran, eps_ms: eps, ..Default::default() },
+        );
+        let (_, ms) = time_ms(|| p.plan().num_slices()); // base miss: densify + cold solve
+        build_t.push(ms);
+        // scaled miss: rescale + warm solve
+        let (_, ms) = time_ms(|| p.on_slowdown(1.0 + 0.1 * (rep + 1) as f64));
+        rescale_t.push(ms);
+        let (_, ms) = time_ms(|| p.replan_now()); // pure hit: cached table + warm solve
+        hit_t.push(ms);
+    }
+    let bs = Stats::from_samples(&build_t);
+    let rs = Stats::from_samples(&rescale_t);
+    let hs = Stats::from_samples(&hit_t);
+    println!("| path | wall ms (mean ± std of {REPS}) | min |");
+    println!("| base miss (densify + cold solve) | {} | {:.2} |", bs.pm(), bs.min);
+    println!("| scaled miss (rescale + warm solve) | {} | {:.2} |", rs.pm(), rs.min);
+    println!("| hit (cached table + warm solve) | {} | {:.2} |", hs.pm(), hs.min);
+
+    // ---- drift loop end-to-end ----
+    println!("\n## drift-aware replan loop (detect from samples + warm re-solve)");
+    let mut p = Planner::new(
+        "bench-drift",
+        base.clone(),
+        l,
+        k,
+        PlannerConfig { granularity: gran, eps_ms: eps, ..Default::default() },
+    );
+    p.plan();
+    let truth = ScaledModel { inner: base.clone(), compute: 1.3, comm: 1.0 };
+    let max_units = l / gran;
+    let (fed, drift_ms) = time_ms(|| {
+        use terapipe::perfmodel::CostModel;
+        let mut rng = terapipe::util::Rng::new(11);
+        let mut fed = 0u32;
+        loop {
+            let iu = 1 + rng.below(max_units.min(8));
+            let ju = rng.below(max_units - iu + 1);
+            let (i, j) = (iu * gran, ju * gran);
+            let ms = truth.t(i, j) + truth.t_comm(i);
+            fed += 1;
+            if p.on_sample(LatencySample { i, j, ms }).is_some() || fed > 512 {
+                break;
+            }
+        }
+        fed
+    });
+    println!("detected + replanned after {fed} samples in {drift_ms:.2} ms total");
+    let cache = p.cache_stats();
+    println!(
+        "cache over the loop: {} densifications, {} rescales, {} hits",
+        cache.base_misses,
+        cache.rescales,
+        cache.base_hits + cache.scaled_hits
+    );
+
+    // ---- lanes vs scalar inner loop (per-DP) ----
+    println!("\n## Alg-1 inner loop: 4-lane unrolled vs scalar reference (g=8, budget sweep)");
+    let fine = TableCostModel::build(&base, l, 8);
+    let n = fine.units();
+    let budgets: Vec<f64> = (1..=10)
+        .map(|s| (fine.at(n, 0) + fine.comm_at(n)) * s as f64 / 10.0)
+        .collect();
+    let mut lanes_wall = Vec::with_capacity(REPS);
+    let mut scalar_wall = Vec::with_capacity(REPS);
+    for _ in 0..REPS {
+        let (sols, ms) = time_ms(|| {
+            budgets.iter().filter(|&&b| solve_fixed_tmax(&fine, b).is_some()).count()
+        });
+        lanes_wall.push(ms);
+        let (ref_sols, ms) = time_ms(|| {
+            budgets.iter().filter(|&&b| solve_fixed_tmax_ref(&fine, b).is_some()).count()
+        });
+        scalar_wall.push(ms);
+        assert_eq!(sols, ref_sols);
+    }
+    let ls = Stats::from_samples(&lanes_wall);
+    let ss = Stats::from_samples(&scalar_wall);
+    let lanes_speedup = ss.min / ls.min.max(1e-9);
+    println!("scalar reference: {} ms (min {:.2})", ss.pm(), ss.min);
+    println!("4-lane unrolled:  {} ms (min {:.2})", ls.pm(), ls.min);
+    println!("per-DP speedup: {lanes_speedup:.2}x");
+
+    // ---- machine-readable report (workspace root, PR 1 protocol) ----
+    let report = Json::obj(vec![
+        ("bench", Json::Str("planner".into())),
+        ("setting", Json::Num(9.0)),
+        ("stages", Json::Num(k as f64)),
+        ("seq_len", Json::Num(l as f64)),
+        ("granularity", Json::Num(gran as f64)),
+        ("eps_ms", Json::Num(eps)),
+        ("threads", Json::Num(threads as f64)),
+        ("reps", Json::Num(REPS as f64)),
+        (
+            "cold_vs_warm_resolve",
+            Json::obj(vec![
+                ("delta_compute_factor", Json::Num(factor)),
+                ("densify_ms", Json::Num(densify_ms)),
+                ("cold_wall_ms_min", Json::Num(cs.min)),
+                ("cold_wall_ms_mean", Json::Num(cs.mean)),
+                ("warm_wall_ms_min", Json::Num(ws.min)),
+                ("warm_wall_ms_mean", Json::Num(ws.mean)),
+                ("speedup_min_over_min", Json::Num(resolve_speedup)),
+            ]),
+        ),
+        (
+            "cache_paths",
+            Json::obj(vec![
+                ("base_miss_ms_min", Json::Num(bs.min)),
+                ("scaled_miss_ms_min", Json::Num(rs.min)),
+                ("hit_ms_min", Json::Num(hs.min)),
+            ]),
+        ),
+        (
+            "drift_loop",
+            Json::obj(vec![
+                ("samples_to_detect", Json::Num(fed as f64)),
+                ("total_ms", Json::Num(drift_ms)),
+            ]),
+        ),
+        (
+            "lanes_inner_loop",
+            Json::obj(vec![
+                ("granularity", Json::Num(8.0)),
+                ("budgets", Json::Num(budgets.len() as f64)),
+                ("scalar_ms_min", Json::Num(ss.min)),
+                ("lanes_ms_min", Json::Num(ls.min)),
+                ("speedup_min_over_min", Json::Num(lanes_speedup)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/../BENCH_planner.json"))
+        .unwrap_or_else(|_| "BENCH_planner.json".into());
+    std::fs::write(&path, report.to_string() + "\n").expect("write BENCH_planner.json");
+    println!("\nwrote {path}");
+}

@@ -1,0 +1,103 @@
+//! The online planner service, driven as a library: a long-lived
+//! [`Planner`] absorbing a cluster-event stream — the programmatic twin
+//! of `terapipe autotune`.
+//!
+//! ```bash
+//! cargo run --release --example autotune_replay
+//! ```
+//!
+//! Walks the full loop: cold initial solve, warm re-solves on a topology
+//! change and a bandwidth degradation (cost-table cache serving rescales
+//! from the densified diagonals), drift detected from sampled latencies
+//! the planner was never told about, hysteresis deciding each switch —
+//! and every emitted plan replayed through the discrete-event simulator
+//! to confirm its predicted Eq. 5 latency.
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::AnalyticModel;
+use terapipe::perfmodel::{CostModel, ScaledModel};
+use terapipe::planner::drift::LatencySample;
+use terapipe::planner::{validate, Planner, PlannerConfig, ReplanDecision};
+use terapipe::util::Rng;
+
+fn show(p: &Planner<AnalyticModel>, what: &str, d: &ReplanDecision) {
+    let sim = validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9)
+        .expect("planner predictions replay exactly");
+    println!(
+        "{what}: K={} Eq.5 {:.3} ms (sim confirms {:.3}), gain {:+.2}% -> {}",
+        d.stages,
+        d.scheme.latency_ms,
+        sim,
+        100.0 * d.gain_rel,
+        if d.switched { "switched" } else { "kept active plan" }
+    );
+    if let Some(w) = d.warm {
+        println!(
+            "    warm: boundary at candidate {} after {} probes (window {})",
+            w.boundary,
+            w.probes,
+            if w.hit { "hit" } else { "miss" }
+        );
+    }
+}
+
+fn main() {
+    // GPT3-44B, 48 stages (Table 1 row 8) — the deep-pipeline regime
+    // where plan choice is most sensitive to cluster shape.
+    let setting = presets::setting(8);
+    let k = setting.parallel.pipeline_stages;
+    let l = setting.model.seq_len;
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let gran = 32;
+    let mut planner = Planner::new(
+        "analytic/setting8",
+        base,
+        l,
+        k,
+        PlannerConfig { granularity: gran, eps_ms: 0.1, ..Default::default() },
+    );
+
+    println!("=== initial cold solve ===");
+    let first = planner.plan().clone();
+    let sim = validate::validate_scheme(&planner.current_model(), &first, k, 1e-9).unwrap();
+    println!("K={k} Eq.5 {:.3} ms (sim confirms {sim:.3}): {}", first.latency_ms, first.notation());
+
+    println!("\n=== cluster events ===");
+    let d = planner.on_stages_change(k / 2);
+    show(&planner, "half the nodes leave (K -> K/2)", &d);
+    let d = planner.on_bandwidth_change(0.5);
+    show(&planner, "inter-node bandwidth halves", &d);
+    let d = planner.on_stages_change(k);
+    show(&planner, "nodes rejoin (K restored)", &d);
+
+    println!("\n=== undisclosed 30% slowdown, surfaced via samples ===");
+    let (compute, comm) = planner.scales();
+    let truth = ScaledModel { inner: AnalyticModel::from_setting(&setting, 1), compute, comm };
+    let mut rng = Rng::new(7);
+    let max_units = l / gran;
+    let mut fed = 0;
+    loop {
+        let iu = 1 + rng.below(max_units.min(8));
+        let ju = rng.below(max_units - iu + 1);
+        let (i, j) = (iu * gran, ju * gran);
+        let ms = 1.3 * (truth.t(i, j) + truth.t_comm(i));
+        fed += 1;
+        if let Some(d) = planner.on_sample(LatencySample { i, j, ms }) {
+            println!(
+                "drift detected after {fed} samples (fitted compute scale {:.3})",
+                planner.scales().0
+            );
+            show(&planner, "drift replan", &d);
+            break;
+        }
+    }
+
+    let cs = planner.cache_stats();
+    println!(
+        "\ncost-table cache: {} densifications, {} rescales, {} hits over {} solves",
+        cs.base_misses,
+        cs.rescales,
+        cs.base_hits + cs.scaled_hits,
+        5
+    );
+}

@@ -42,7 +42,8 @@ fn main() {
 
         let gpipe = gpipe_plan(&|m| base.with_microbatch(m), b, seq_len, k);
         // the parallel engine keeps even the L=16384 solve interactive
-        let (tera, solve_ms) = terapipe::util::time_ms(|| solve_joint_analytic(&base, b, seq_len, k, &opts));
+        let (tera, solve_ms) =
+            terapipe::util::time_ms(|| solve_joint_analytic(&base, b, seq_len, k, &opts));
         eprintln!("  [L={seq_len}] joint DP solved in {solve_ms:.0} ms");
 
         let g = sim_iteration_ms(&setting, &gpipe);

@@ -36,6 +36,7 @@ fn main() {
             steps,
             lr: 1e-3,
             seed: 42,
+            replan_every: None,
         };
         let reports = train(&dir, cfg, &corpus, |r| {
             if r.step < 3 || r.step % 20 == 0 || r.step == steps - 1 {
@@ -64,7 +65,11 @@ fn main() {
     }
     println!(
         "max per-step loss difference sliced-vs-unsliced: {max_diff:.2e} {}",
-        if max_diff < 5e-3 { "(identical training dynamics ✓)" } else { "(UNEXPECTED divergence!)" }
+        if max_diff < 5e-3 {
+            "(identical training dynamics ✓)"
+        } else {
+            "(UNEXPECTED divergence!)"
+        }
     );
     println!(
         "loss curve: {:.4} -> {:.4} over {} steps (byte-level LM, ln(256)≈5.55 at init)",

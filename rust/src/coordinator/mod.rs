@@ -47,6 +47,12 @@ pub struct TrainConfig {
     pub lr: f32,
     /// RNG seed for the batcher.
     pub seed: u64,
+    /// Solver-in-the-loop cadence: every N steps the trainer invokes its
+    /// replan callback ([`Trainer::train_with_replan`]) and adopts the
+    /// returned slicing if it validates against the manifest — the
+    /// coordinator-side hook of the online planner service
+    /// (`crate::planner`). `None` keeps one slicing for the whole run.
+    pub replan_every: Option<usize>,
 }
 
 impl TrainConfig {
@@ -66,6 +72,9 @@ impl TrainConfig {
         }
         if self.microbatches == 0 || self.steps == 0 {
             bail!("microbatches and steps must be ≥ 1");
+        }
+        if self.replan_every == Some(0) {
+            bail!("replan_every must be ≥ 1 when set");
         }
         Ok(())
     }
@@ -94,6 +103,7 @@ mod tests {
             steps: 1,
             lr: 1e-3,
             seed: 0,
+            replan_every: None,
         };
         c.validate(128, &[16, 32, 64, 128]).unwrap();
         assert_eq!(c.offsets(), vec![0, 64, 96, 112]);
@@ -107,11 +117,25 @@ mod tests {
             steps: 1,
             lr: 1e-3,
             seed: 0,
+            replan_every: None,
         };
         assert!(c.validate(128, &[16, 32, 64]).is_err()); // sums to 96
         c.slicing = vec![100, 28];
         assert!(c.validate(128, &[16, 32, 64]).is_err()); // not buckets
         c.slicing = vec![];
         assert!(c.validate(128, &[16]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_replan_cadence() {
+        let c = TrainConfig {
+            slicing: vec![64, 64],
+            microbatches: 1,
+            steps: 1,
+            lr: 1e-3,
+            seed: 0,
+            replan_every: Some(0),
+        };
+        assert!(c.validate(128, &[64]).is_err());
     }
 }

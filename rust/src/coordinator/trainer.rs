@@ -177,20 +177,58 @@ impl Trainer {
         }
 
         self.steps_done += 1;
-        let tokens = self.cfg.microbatches * self.manifest.model.batch * self.manifest.model.seq_len;
+        let tokens =
+            self.cfg.microbatches * self.manifest.model.batch * self.manifest.model.seq_len;
         Ok((losses / tokens as f64, tokens))
     }
 
     /// Drive `cfg.steps` steps pulling microbatches from `next_batch`.
     pub fn train(
         &mut self,
+        next_batch: impl FnMut() -> Batch,
+        on_step: impl FnMut(&StepReport),
+    ) -> Result<Vec<StepReport>> {
+        self.train_with_replan(next_batch, on_step, |_| None)
+    }
+
+    /// Like [`Trainer::train`], with the online planner in the loop: when
+    /// `cfg.replan_every = Some(n)`, `replan(step)` is invoked every `n`
+    /// steps (before the step runs) and may return a new slicing — e.g.
+    /// from a fresh measure → fit → bucketed-DP solve, or a
+    /// `crate::planner::Planner` decision. A returned slicing is adopted
+    /// only if it validates against the manifest (sum = L, every slice an
+    /// AOT bucket); an invalid one is reported and the current slicing
+    /// kept, so a bad replan can never kill a long training run.
+    pub fn train_with_replan(
+        &mut self,
         mut next_batch: impl FnMut() -> Batch,
         mut on_step: impl FnMut(&StepReport),
+        mut replan: impl FnMut(usize) -> Option<Vec<usize>>,
     ) -> Result<Vec<StepReport>> {
         let steps = self.cfg.steps;
         let mbs = self.cfg.microbatches;
         let mut reports = Vec::with_capacity(steps);
         for step in 0..steps {
+            if let Some(n) = self.cfg.replan_every {
+                if step > 0 && step % n == 0 {
+                    if let Some(slicing) = replan(step) {
+                        let mut cand = self.cfg.clone();
+                        cand.slicing = slicing;
+                        match cand.validate(self.manifest.model.seq_len, &self.manifest.buckets) {
+                            Ok(()) => {
+                                if cand.slicing != self.cfg.slicing {
+                                    eprintln!(
+                                        "replan at step {step}: slicing {:?} -> {:?}",
+                                        self.cfg.slicing, cand.slicing
+                                    );
+                                }
+                                self.cfg = cand;
+                            }
+                            Err(e) => eprintln!("replan at step {step} rejected: {e}"),
+                        }
+                    }
+                }
+            }
             let batches: Vec<Batch> = (0..mbs).map(|_| next_batch()).collect();
             let t0 = Instant::now();
             let (loss, tokens) = self.step(step, &batches)?;

@@ -446,7 +446,14 @@ impl Worker {
         Ok(())
     }
 
-    fn handle_bwd(&mut self, mb: usize, slice: usize, off: usize, len: usize, g_h: HostTensor) -> Result<()> {
+    fn handle_bwd(
+        &mut self,
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        g_h: HostTensor,
+    ) -> Result<()> {
         let g_h_in = self.backward_one_slice(mb, slice, off, len, g_h)?;
         self.finish_bwd_slice(mb, slice, off, len, g_h_in)?;
         if self.mbs.get(&mb).map(|s| s.h_in.is_empty()).unwrap_or(false) {
@@ -566,7 +573,8 @@ impl Worker {
                 (meta, h_out)
             };
             let hg = self.head_group.as_ref().unwrap();
-            let tg_l = HostTensor::i32(&[self.dims.batch, meta.len], meta.targets.clone()).to_literal()?;
+            let tg_l = HostTensor::i32(&[self.dims.batch, meta.len], meta.targets.clone())
+                .to_literal()?;
             let h_l = h_out.to_literal()?;
             let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
             args.extend([&h_l, &tg_l]);

@@ -14,24 +14,10 @@ use crate::sim::{engine::simulate, SimResult};
 use crate::solver::joint::{gpipe_plan, solve_joint_analytic, JointOpts};
 use crate::solver::JointScheme;
 
-/// Analytic phase costs for the simulator (fwd/bwd split from the model).
-pub struct AnalyticPhase<'a> {
-    pub base: &'a AnalyticModel,
-}
-
-impl PhaseCost for AnalyticPhase<'_> {
-    fn fwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
-        self.base.with_microbatch(b).t_fwd(i, j)
-    }
-    fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
-        let m = self.base.with_microbatch(b);
-        m.bwd_ratio * m.t_fwd(i, j)
-    }
-    fn comm_ms(&self, b: u32, i: u32) -> f64 {
-        use crate::perfmodel::CostModel;
-        self.base.with_microbatch(b).t_comm(i)
-    }
-}
+// The simulator-facing fwd/bwd split of the analytic model lives with the
+// model itself; re-exported here so existing callers keep their import
+// path.
+pub use crate::perfmodel::analytic::AnalyticPhase;
 
 /// One w/o-vs-w/ TeraPipe comparison row (Fig. 5 / Table 2).
 #[derive(Debug, Clone)]
@@ -149,7 +135,11 @@ pub fn fig3_curve(model: &crate::config::ModelConfig, max_tokens: u32) -> Vec<(u
 
 /// Fig. 6: uniform #slices sweep vs the DP scheme on one setting.
 /// Returns (label, scheme notation, latency_s, tflops).
-pub fn fig6_rows(setting_id: u32, max_slices: u32, opts: &JointOpts) -> Vec<(String, String, f64, f64)> {
+pub fn fig6_rows(
+    setting_id: u32,
+    max_slices: u32,
+    opts: &JointOpts,
+) -> Vec<(String, String, f64, f64)> {
     let setting = presets::setting(setting_id);
     let base = AnalyticModel::from_setting(&setting, 1);
     let b_pipe = setting.batch_per_pipeline();

@@ -19,6 +19,9 @@
 //!   pipeline cell, token slices flowing downstream and gradients flowing
 //!   back upstream, with the context-gradient accumulation that makes the
 //!   pipelined backward exactly equal the unsliced one.
+//! * [`planner`] — the online planner service: long-lived plan ownership
+//!   with a cost-table cache, warm-started re-solves on cluster deltas,
+//!   and a drift-aware replan loop with hysteresis (`terapipe autotune`).
 //! * [`config`] — model / cluster / parallelism configuration incl. the
 //!   paper's Table 1 presets.
 //! * [`data`] — synthetic corpus + byte-level tokenizer + batcher for the
@@ -30,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod perfmodel;
+pub mod planner;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;

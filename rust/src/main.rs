@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   configs                         list the Table 1 settings (+ --dump N)
 //!   solve    --setting N            DP slicing scheme for one setting
+//!   autotune --setting N            online planner service: replay a
+//!                                   cluster-event trace, warm re-solves,
+//!                                   drift detection, sim-validated plans
 //!   simulate --setting N            w/o vs w/ TeraPipe iteration latency
 //!   timeline --setting N            ASCII (or --chrome) schedule timeline
 //!   fig3 | fig5 | fig6 | fig7 | appendix-a
@@ -35,6 +38,7 @@ fn main() {
     let r = match cmd {
         "configs" => cmd_configs(&args),
         "solve" => cmd_solve(&args),
+        "autotune" => cmd_autotune(&args),
         "simulate" => cmd_simulate(&args),
         "timeline" => cmd_timeline(&args),
         "fig3" => cmd_fig3(&args),
@@ -68,6 +72,8 @@ USAGE: terapipe <command> [--options]
 
   configs  [--dump N]                     Table 1 presets (JSON with --dump)
   solve    --setting N [--granularity 8] [--eps 0.1]
+  autotune --setting N [--events trace.json] [--granularity 16] [--eps 0.1]
+           [--hysteresis 0.02] [--tolerance 1e-9]
   simulate --setting N [--granularity 16]
   timeline --setting N [--mode terapipe|gpipe] [--width 100] [--chrome]
   fig3     [--model gpt3-1b]
@@ -77,7 +83,7 @@ USAGE: terapipe <command> [--options]
   appendix-a
   train    [--artifacts artifacts] [--slicing 64,32,16,16] [--steps 50]
            [--microbatches 1] [--lr 0.001] [--corpus FILE] [--auto]
-           [--save-checkpoint DIR] [--resume DIR]
+           [--replan-every N] [--save-checkpoint DIR] [--resume DIR]
   measure  [--artifacts artifacts] [--repeats 5]
 ";
 
@@ -143,6 +149,141 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     let joint = solve_joint_analytic(&base, setting.batch_per_pipeline(), l, k, &opts);
     println!("joint batch+token scheme: {}", joint.notation());
     println!("  predicted iteration latency {:.1} ms", joint.latency_ms);
+    Ok(())
+}
+
+/// The online planner service on a scripted cluster-event trace: warm
+/// re-solves on topology/bandwidth deltas, drift detection from sampled
+/// latencies, hysteresis-gated switches — every emitted plan replayed
+/// through the discrete-event simulator and rejected if its predicted
+/// Eq. 5 latency diverges beyond --tolerance.
+fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
+    use terapipe::perfmodel::{CostModel, ScaledModel};
+    use terapipe::planner::drift::LatencySample;
+    use terapipe::planner::events::{demo_trace, parse_trace, EventKind};
+    use terapipe::planner::{validate, Planner, PlannerConfig, ReplanDecision};
+
+    let id = args.u32("setting", 8);
+    let setting = presets::setting(id);
+    let gran = args.u32("granularity", 16);
+    let tol = args.f64("tolerance", 1e-9);
+    let k = setting.parallel.pipeline_stages;
+    let l = setting.model.seq_len;
+    let cfg = PlannerConfig {
+        granularity: gran,
+        eps_ms: args.f64("eps", 0.1),
+        hysteresis_rel: args.f64("hysteresis", 0.02),
+        ..Default::default()
+    };
+    let base = AnalyticModel::from_setting(&setting, 1);
+    let mut planner = Planner::new(&format!("analytic/setting{id}"), base, l, k, cfg);
+
+    let trace = match args.get("events") {
+        Some(path) => parse_trace(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?,
+        None => {
+            println!("(no --events file: replaying the built-in demo trace)");
+            demo_trace(k)
+        }
+    };
+
+    let clip = |s: &str| {
+        if s.len() > 44 {
+            format!("{}…", &s[..43])
+        } else {
+            s.to_string()
+        }
+    };
+    let report = |p: &Planner<AnalyticModel>, step: u64, d: &ReplanDecision| -> anyhow::Result<()> {
+        let sim = validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, tol)
+            .map_err(|e| anyhow::anyhow!("sim validation failed at step {step}: {e}"))?;
+        let warm = d
+            .warm
+            .map(|w| format!("{} probes, window {}", w.probes, if w.hit { "hit" } else { "miss" }))
+            .unwrap_or_else(|| "cold".into());
+        println!(
+            "step {:>5} {:<12} K={:<3} scale=({:.3}c,{:.3}m) Eq.5 {:.3} ms (sim {:.3}) gain {:+.2}% {:<6} [{warm}] {}",
+            step,
+            format!("{:?}", d.trigger),
+            d.stages,
+            d.compute_scale,
+            d.comm_scale,
+            d.scheme.latency_ms,
+            sim,
+            100.0 * d.gain_rel,
+            if d.switched { "SWITCH" } else { "keep" },
+            clip(&d.scheme.notation()),
+        );
+        Ok(())
+    };
+
+    println!(
+        "autotune: setting ({id}) {} — K={k}, L={l}, g={gran}, {} events",
+        setting.model.name,
+        trace.len()
+    );
+    let first = planner.plan().clone();
+    let sim = validate::validate_scheme(&planner.current_model(), &first, planner.stages(), tol)
+        .map_err(|e| anyhow::anyhow!("sim validation failed on the initial plan: {e}"))?;
+    println!(
+        "step     0 Initial      K={k:<3} scale=(1.000c,1.000m) Eq.5 {:.3} ms (sim {sim:.3}) [cold] {}",
+        first.latency_ms,
+        clip(&first.notation()),
+    );
+
+    let mut rng = terapipe::util::Rng::new(0xA070);
+    let max_units = l / gran;
+    for ev in &trace {
+        match ev.kind {
+            EventKind::Stages(k2) => {
+                let d = planner.on_stages_change(k2);
+                report(&planner, ev.step, &d)?;
+            }
+            EventKind::Bandwidth(f) => {
+                let d = planner.on_bandwidth_change(f);
+                report(&planner, ev.step, &d)?;
+            }
+            EventKind::Slowdown(f) => {
+                let d = planner.on_slowdown(f);
+                report(&planner, ev.step, &d)?;
+            }
+            EventKind::Samples { true_factor, count } => {
+                // undisclosed drift: observations come from the current
+                // model with every stage time scaled by true_factor
+                let (compute, comm) = planner.scales();
+                let truth = ScaledModel {
+                    inner: AnalyticModel::from_setting(&setting, 1),
+                    compute,
+                    comm,
+                };
+                let mut replans = 0usize;
+                for _ in 0..count {
+                    let iu = 1 + rng.below(max_units.min(8));
+                    let ju = rng.below(max_units - iu + 1);
+                    let (i, j) = (iu * gran, ju * gran);
+                    let ms = true_factor * (truth.t(i, j) + truth.t_comm(i));
+                    if let Some(d) = planner.on_sample(LatencySample { i, j, ms }) {
+                        report(&planner, ev.step, &d)?;
+                        replans += 1;
+                    }
+                }
+                if replans == 0 {
+                    println!(
+                        "step {:>5} Samples      ×{true_factor} ({count} obs): within drift threshold, no replan",
+                        ev.step
+                    );
+                }
+            }
+        }
+    }
+
+    let cs = planner.cache_stats();
+    println!(
+        "cost-table cache: {} densifications, {} rescales (diagonal reuse), {} hits",
+        cs.base_misses,
+        cs.rescales,
+        cs.base_hits + cs.scaled_hits
+    );
     Ok(())
 }
 
@@ -285,7 +426,10 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         }
     }
     let (rms, [eff, sat, launch, p2p]) = best.unwrap();
-    println!("\nbest: efficiency={eff} sat_tokens_h2048={sat} launch_ms={launch} p2p_ms={p2p} (rms log err {rms:.4}, i.e. typical ×{:.2} off)", rms.exp());
+    println!(
+        "\nbest: efficiency={eff} sat_tokens_h2048={sat} launch_ms={launch} p2p_ms={p2p} (rms log err {rms:.4}, i.e. typical ×{:.2} off)",
+        rms.exp()
+    );
     Ok(())
 }
 
@@ -319,6 +463,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         steps: args.usize("steps", 50),
         lr: args.f64("lr", 1e-3) as f32,
         seed: args.u32("seed", 42) as u64,
+        replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,
@@ -340,7 +485,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mm = trainer.manifest.model.clone();
     let seed = trainer.config().seed;
     let mut batcher = terapipe::data::Batcher::new(&corpus, mm.batch, mm.seq_len, seed);
-    let reports = trainer.train(
+    // solver-in-the-loop: on the replan cadence, re-measure the real
+    // stage latency, refit Eq. 9, and re-solve the bucketed DP
+    let replan_dir = dir.clone();
+    let reports = trainer.train_with_replan(
         || batcher.next_batch(),
         |r| {
             if r.step % 10 == 0 || r.step < 5 {
@@ -351,6 +499,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                     r.wall_ms,
                     r.tokens as f64 / (r.wall_ms / 1e3)
                 );
+            }
+        },
+        |step| {
+            println!("replan at step {step}: re-measuring stage latency");
+            match measured_model(&replan_dir, 3) {
+                Ok(fitted) => {
+                    let manifest =
+                        terapipe::runtime::manifest::Manifest::load(&replan_dir).ok()?;
+                    Some(dp_bucketed(&fitted, &manifest.model, &manifest.buckets))
+                }
+                Err(e) => {
+                    eprintln!("replan measure failed, keeping slicing: {e:#}");
+                    None
+                }
             }
         },
     )?;
@@ -382,7 +544,8 @@ fn measured_model(
     let m = manifest.model.clone();
     let buckets: Vec<u32> = manifest.buckets.iter().map(|&b| b as u32).collect();
     // a middle stage (no embed/head) is the representative cell
-    let rt = StageRuntime::load(dir, &stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets))?;
+    let exe_names = stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets);
+    let rt = StageRuntime::load(dir, &exe_names)?;
     let params = rt.manifest.load_init(&rt.manifest.init_stages[0])?;
 
     let timer_fn = move |i: u32, j: u32| -> f64 {

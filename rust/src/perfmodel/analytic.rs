@@ -164,6 +164,28 @@ impl CostModel for AnalyticModel {
     }
 }
 
+/// Analytic phase costs for the simulator (fwd/bwd split from the model's
+/// `bwd_ratio`). The one shared [`crate::sim::schedule::PhaseCost`] impl
+/// over [`AnalyticModel`] — used by the experiment harness, the planner's
+/// validation path, and the CLI (previously duplicated in
+/// `experiments.rs`).
+pub struct AnalyticPhase<'a> {
+    pub base: &'a AnalyticModel,
+}
+
+impl crate::sim::schedule::PhaseCost for AnalyticPhase<'_> {
+    fn fwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        self.base.with_microbatch(b).t_fwd(i, j)
+    }
+    fn bwd_ms(&self, b: u32, i: u32, j: u32) -> f64 {
+        let m = self.base.with_microbatch(b);
+        m.bwd_ratio * m.t_fwd(i, j)
+    }
+    fn comm_ms(&self, b: u32, i: u32) -> f64 {
+        self.base.with_microbatch(b).t_comm(i)
+    }
+}
+
 /// Single-layer forward time on one V100 with no context — the Fig. 3
 /// measurement. Built from a model config with op=1, one layer, b=1.
 ///

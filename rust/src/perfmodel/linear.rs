@@ -125,7 +125,11 @@ pub struct FitReport {
     pub n: usize,
 }
 
-pub fn fit_report<M: CostModel>(model: &M, fitted: &LinearCtxModel, grid: &[(u32, u32)]) -> FitReport {
+pub fn fit_report<M: CostModel>(
+    model: &M,
+    fitted: &LinearCtxModel,
+    grid: &[(u32, u32)],
+) -> FitReport {
     let mut max_rel = 0.0f64;
     let mut sum_rel = 0.0f64;
     for &(i, j) in grid {
@@ -206,7 +210,8 @@ mod tests {
 
     #[test]
     fn off_grid_query_panics() {
-        let m = LinearCtxModel::new(8, vec![0.0, 1.0, 2.0], CtxCoeffs { a0: 0.0, a1: 0.0, a2: 0.0, a3: 0.0 });
+        let zero = CtxCoeffs { a0: 0.0, a1: 0.0, a2: 0.0, a3: 0.0 };
+        let m = LinearCtxModel::new(8, vec![0.0, 1.0, 2.0], zero);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| m.t(7, 0)));
         assert!(r.is_err());
     }

@@ -169,7 +169,8 @@ mod tests {
         let m = measure(&mut t, 128, 6, 5);
         let fitted = fit(&m, 128).unwrap();
         for &(i, j) in &[(16u32, 16u32), (32, 64), (64, 64), (128, 0), (16, 112)] {
-            let truth = 0.2 + 0.01 * i as f64 + if j > 0 { 0.001 * i as f64 * j as f64 / 64.0 } else { 0.0 };
+            let ctx = if j > 0 { 0.001 * i as f64 * j as f64 / 64.0 } else { 0.0 };
+            let truth = 0.2 + 0.01 * i as f64 + ctx;
             let pred = fitted.t(i, j);
             let rel = ((pred - truth) / truth).abs();
             assert!(rel < 0.02, "({i},{j}): pred {pred} truth {truth} rel {rel}");

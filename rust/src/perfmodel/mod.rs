@@ -41,6 +41,35 @@ impl<M: CostModel + ?Sized> CostModel for &M {
     }
 }
 
+/// Multiplicative rescale of a cost model: compute times scaled by
+/// `compute` (a per-stage slowdown), comm times by `comm` (an inverse
+/// bandwidth factor). This is how the planner represents cluster drift —
+/// a degraded node or a bandwidth change moves every `t(i, j)` by one
+/// factor, so the fitted model stays the base model plus two scalars.
+///
+/// [`TableCostModel::rescaled`] produces the same table *bit-identically*
+/// without re-querying the base model (one multiply per stored entry, in
+/// the same `factor * t` order — pinned by a unit test), which is what
+/// makes the planner's cache able to reuse densified diagonals across
+/// scale-only cluster deltas.
+#[derive(Debug, Clone)]
+pub struct ScaledModel<M> {
+    pub inner: M,
+    /// Factor on `t(i, j)` (1.0 = unchanged, >1 = slower compute).
+    pub compute: f64,
+    /// Factor on `t_comm(i)` (1.0 = unchanged, >1 = slower network).
+    pub comm: f64,
+}
+
+impl<M: CostModel> CostModel for ScaledModel<M> {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        self.compute * self.inner.t(i, j)
+    }
+    fn t_comm(&self, i: u32) -> f64 {
+        self.comm * self.inner.t_comm(i)
+    }
+}
+
 /// Dense `t(i, j)` table on a `granularity`-token grid, for the DP hot loop.
 ///
 /// Entry `(a, b)` holds `t(a·g, b·g)` for `a ∈ 1..=n`, `b ∈ 0..=n-a` where
@@ -163,6 +192,26 @@ impl TableCostModel {
     #[inline]
     pub fn comm_at(&self, a: usize) -> f64 {
         self.comm[a]
+    }
+
+    /// Rescale every stored entry by `compute` and every comm value by
+    /// `comm` **without touching the underlying model** — the densified
+    /// anti-diagonals are reused as-is, so a scale-only cluster delta
+    /// (per-stage slowdown, bandwidth change) costs one multiply pass
+    /// instead of `n(n+1)/2` model evaluations.
+    ///
+    /// Bit-identical to `TableCostModel::build(&ScaledModel { inner,
+    /// compute, comm }, ..)` over the same base: both compute the same
+    /// `factor * t` f64 product per entry (pinned by a unit test), which
+    /// is what lets the planner's warm path stay exactly equivalent to a
+    /// cold solve over a freshly densified scaled model.
+    pub fn rescaled(&self, compute: f64, comm: f64) -> Self {
+        TableCostModel {
+            n: self.n,
+            granularity: self.granularity,
+            table: self.table.iter().map(|&t| compute * t).collect(),
+            comm: self.comm.iter().map(|&c| comm * c).collect(),
+        }
     }
 
     /// The §3.3 candidate `t_max` pool: the per-slice *stage* time
@@ -294,6 +343,49 @@ mod tests {
                 assert_eq!(d[k - 1], t.at(k, i - k), "diag({i})[{}]", k - 1);
             }
         }
+    }
+
+    #[test]
+    fn rescaled_table_bit_identical_to_build_from_scaled_model() {
+        struct WithComm;
+        impl CostModel for WithComm {
+            fn t(&self, i: u32, j: u32) -> f64 {
+                0.3 + 0.07 * i as f64 + 2.5e-4 * i as f64 * j as f64
+            }
+            fn t_comm(&self, i: u32) -> f64 {
+                0.05 * i as f64
+            }
+        }
+        for (compute, comm) in [(1.0f64, 1.0f64), (1.37, 0.5), (0.81, 2.25)] {
+            let base = TableCostModel::build(&WithComm, 128, 8);
+            let rescaled = base.rescaled(compute, comm);
+            let built = TableCostModel::build(
+                &ScaledModel { inner: WithComm, compute, comm },
+                128,
+                8,
+            );
+            // exact f64 equality, storage order included
+            assert_eq!(rescaled.table, built.table, "compute={compute} comm={comm}");
+            assert_eq!(rescaled.comm, built.comm, "compute={compute} comm={comm}");
+            assert_eq!(rescaled.n, built.n);
+            assert_eq!(rescaled.granularity, built.granularity);
+        }
+    }
+
+    #[test]
+    fn scaled_model_scales_both_terms() {
+        struct WithComm;
+        impl CostModel for WithComm {
+            fn t(&self, _i: u32, _j: u32) -> f64 {
+                2.0
+            }
+            fn t_comm(&self, _i: u32) -> f64 {
+                0.5
+            }
+        }
+        let s = ScaledModel { inner: WithComm, compute: 3.0, comm: 2.0 };
+        assert_eq!(s.t(8, 0), 6.0);
+        assert_eq!(s.t_comm(8), 1.0);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! The planner's cost-table cache.
+//!
+//! Densifying a [`TableCostModel`] is the dominant fixed cost of a
+//! re-solve (`n(n+1)/2` model evaluations — for measured/fitted models
+//! each one is real work). A long-lived planner re-solves the *same*
+//! `(model, L, g, microbatch)` instance under small cluster deltas, so the
+//! cache keeps:
+//!
+//! * **Base tables**, keyed by [`PlanKey`] — one densification per
+//!   instance, ever.
+//! * **Scaled tables**, keyed by `PlanKey` + the exact `(compute, comm)`
+//!   factor bits — derived from the base table via
+//!   [`TableCostModel::rescaled`], which reuses the densified
+//!   anti-diagonals (one multiply per entry, no model calls) and is
+//!   bit-identical to re-densifying a [`ScaledModel`].
+//!
+//! Eviction is LRU over a fixed capacity, preferring scaled victims; a
+//! key's own base table is never evicted to make room for entries derived
+//! from it (it is their rescale source — losing it would re-trigger a
+//! full densification on the next delta). All tables are handed out as
+//! `Arc`s so a re-solve never copies one.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::perfmodel::{CostModel, TableCostModel};
+
+/// Identity of one planning instance: which model is being sliced, over
+/// what sequence length, on what grid, at what microbatch size. `model`
+/// is a caller-chosen fingerprint string (e.g. `"analytic/setting9"` or
+/// `"measured@v3"`) — two models with the same fingerprint are assumed to
+/// produce identical tables.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub model: String,
+    pub seq_len: u32,
+    pub granularity: u32,
+    pub microbatch: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum CacheKey {
+    Base(PlanKey),
+    /// Factors keyed by exact f64 bits: a rescale is only reusable when
+    /// the cumulative factors match bit-for-bit (f64 products are not
+    /// associative, and the planner promises bit-identical plans).
+    Scaled(PlanKey, u64, u64),
+}
+
+/// Hit/miss counters, split by path (reported by `terapipe autotune` and
+/// the planner bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Base-table lookups served from the cache.
+    pub base_hits: usize,
+    /// Base-table densifications (full model evaluation passes).
+    pub base_misses: usize,
+    /// Scaled-table lookups served from the cache.
+    pub scaled_hits: usize,
+    /// Rescale passes (diagonal reuse: one multiply per entry, no model
+    /// calls).
+    pub rescales: usize,
+    pub evictions: usize,
+}
+
+/// LRU cache of densified cost tables.
+pub struct CostTableCache {
+    map: HashMap<CacheKey, (u64, Arc<TableCostModel>)>,
+    clock: u64,
+    capacity: usize,
+    pub stats: CacheStats,
+}
+
+impl CostTableCache {
+    /// `capacity` ≥ 1: max resident tables (base + scaled combined).
+    pub fn new(capacity: usize) -> Self {
+        CostTableCache {
+            map: HashMap::new(),
+            clock: 0,
+            capacity: capacity.max(1),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn touch(&mut self, key: &CacheKey) -> Option<Arc<TableCostModel>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(key).map(|(stamp, table)| {
+            *stamp = clock;
+            table.clone()
+        })
+    }
+
+    fn insert(&mut self, key: CacheKey, table: Arc<TableCostModel>) {
+        self.clock += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // Evict the least-recently-used entry, preferring scaled
+            // tables: base tables are the rescale source for every
+            // future delta, so evicting one re-triggers a full
+            // densification later. The inserting key's own base is
+            // never a victim (a capacity-1 cache would otherwise evict
+            // it for every rescale it feeds); with no other candidate
+            // the cache briefly exceeds capacity instead.
+            let own_base = match &key {
+                CacheKey::Base(pk) | CacheKey::Scaled(pk, ..) => CacheKey::Base(pk.clone()),
+            };
+            let lru = |scaled_only: bool| {
+                self.map
+                    .iter()
+                    .filter(|(k, _)| !scaled_only || matches!(k, CacheKey::Scaled(..)))
+                    .filter(|(k, _)| **k != own_base)
+                    .min_by_key(|(_, (stamp, _))| *stamp)
+                    .map(|(k, _)| k.clone())
+            };
+            let victim = lru(true).or_else(|| lru(false));
+            if let Some(v) = victim {
+                self.map.remove(&v);
+                self.stats.evictions += 1;
+            }
+        }
+        self.map.insert(key, (self.clock, table));
+    }
+
+    /// The base table for `key`, densifying from `model` on a miss.
+    pub fn base<M: CostModel>(&mut self, key: &PlanKey, model: &M) -> Arc<TableCostModel> {
+        if let Some(t) = self.touch(&CacheKey::Base(key.clone())) {
+            self.stats.base_hits += 1;
+            return t;
+        }
+        self.stats.base_misses += 1;
+        let t = Arc::new(TableCostModel::build(model, key.seq_len, key.granularity));
+        self.insert(CacheKey::Base(key.clone()), t.clone());
+        t
+    }
+
+    /// The table for `key` under cumulative cluster-delta factors
+    /// `(compute, comm)`. A `(1, 1)` request is the base table itself;
+    /// otherwise the base table's diagonals are rescaled in place-order
+    /// (never the model re-queried), and the result cached under the
+    /// exact factor bits.
+    pub fn scaled<M: CostModel>(
+        &mut self,
+        key: &PlanKey,
+        compute: f64,
+        comm: f64,
+        model: &M,
+    ) -> Arc<TableCostModel> {
+        if compute == 1.0 && comm == 1.0 {
+            return self.base(key, model);
+        }
+        let ck = CacheKey::Scaled(key.clone(), compute.to_bits(), comm.to_bits());
+        if let Some(t) = self.touch(&ck) {
+            self.stats.scaled_hits += 1;
+            return t;
+        }
+        let base = self.base(key, model);
+        self.stats.rescales += 1;
+        let t = Arc::new(base.rescaled(compute, comm));
+        self.insert(ck, t.clone());
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    struct Counting<'a> {
+        calls: &'a Cell<usize>,
+    }
+    impl CostModel for Counting<'_> {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            self.calls.set(self.calls.get() + 1);
+            0.5 + 0.01 * i as f64 + 1e-4 * i as f64 * j as f64
+        }
+        fn t_comm(&self, i: u32) -> f64 {
+            0.02 * i as f64
+        }
+    }
+
+    fn key(model: &str, b: u32) -> PlanKey {
+        PlanKey {
+            model: model.into(),
+            seq_len: 64,
+            granularity: 8,
+            microbatch: b,
+        }
+    }
+
+    #[test]
+    fn base_is_densified_once() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(8);
+        let a = c.base(&key("m", 1), &m);
+        let first = calls.get();
+        assert!(first > 0);
+        let b = c.base(&key("m", 1), &m);
+        assert_eq!(calls.get(), first, "second lookup must not re-densify");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.stats.base_misses, 1);
+        assert_eq!(c.stats.base_hits, 1);
+    }
+
+    #[test]
+    fn scaled_reuses_diagonals_without_model_calls() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(8);
+        c.base(&key("m", 1), &m);
+        let after_base = calls.get();
+        let s = c.scaled(&key("m", 1), 1.25, 0.5, &m);
+        assert_eq!(calls.get(), after_base, "rescale must not query the model");
+        assert_eq!(c.stats.rescales, 1);
+        // rescale matches a fresh build from the scaled model, bit for bit
+        let scaled_model = crate::perfmodel::ScaledModel {
+            inner: Counting { calls: &calls },
+            compute: 1.25,
+            comm: 0.5,
+        };
+        let built = TableCostModel::build(&scaled_model, 64, 8);
+        for a in 1..=8usize {
+            for b in 0..=(8 - a) {
+                assert!(s.at(a, b) == built.at(a, b));
+            }
+            assert!(s.comm_at(a) == built.comm_at(a));
+        }
+        // second lookup with the same factor bits hits
+        let s2 = c.scaled(&key("m", 1), 1.25, 0.5, &m);
+        assert!(Arc::ptr_eq(&s, &s2));
+        assert_eq!(c.stats.scaled_hits, 1);
+    }
+
+    #[test]
+    fn unit_factors_resolve_to_the_base_table() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(8);
+        let b = c.base(&key("m", 1), &m);
+        let s = c.scaled(&key("m", 1), 1.0, 1.0, &m);
+        assert!(Arc::ptr_eq(&b, &s));
+        assert_eq!(c.stats.rescales, 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(8);
+        c.base(&key("m", 1), &m);
+        c.base(&key("m", 2), &m);
+        c.base(&key("other", 1), &m);
+        assert_eq!(c.stats.base_misses, 3);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn eviction_prefers_scaled_entries_and_respects_capacity() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(2);
+        c.base(&key("m", 1), &m);
+        c.scaled(&key("m", 1), 2.0, 1.0, &m); // fills capacity
+        c.scaled(&key("m", 1), 3.0, 1.0, &m); // evicts the 2.0 rescale
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 1);
+        // the base table survived: a unit-factor lookup still hits
+        c.scaled(&key("m", 1), 1.0, 1.0, &m);
+        assert_eq!(c.stats.base_misses, 1);
+    }
+
+    #[test]
+    fn own_base_is_never_evicted_even_at_capacity_one() {
+        let calls = Cell::new(0);
+        let m = Counting { calls: &calls };
+        let mut c = CostTableCache::new(1);
+        // every rescale needs the base: a capacity-1 cache must keep it
+        // (briefly exceeding capacity) rather than densify per delta
+        c.scaled(&key("m", 1), 2.0, 1.0, &m);
+        c.scaled(&key("m", 1), 3.0, 1.0, &m);
+        c.scaled(&key("m", 1), 4.0, 1.0, &m);
+        assert_eq!(c.stats.base_misses, 1, "{:?}", c.stats);
+        assert_eq!(c.stats.rescales, 3);
+    }
+}

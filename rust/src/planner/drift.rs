@@ -1,0 +1,265 @@
+//! Drift detection over live latency samples, and the hysteresis rule
+//! that decides when a detected drift is worth a plan switch.
+//!
+//! The planner owns a model it last solved against. Live samples — the
+//! `(i, j, ms)` stage-time observations the measurement harness
+//! ([`crate::perfmodel::measure`]) produces on the real runtime — stream
+//! in; when the observed latencies depart from the solved-against model
+//! by more than `rel_threshold` (windowed mean relative error), the
+//! detector reports drift together with a **fitted rescale factor** (the
+//! median observed/predicted ratio — robust to outlier samples the same
+//! way `measure`'s median-of-repeats is). The planner folds that factor
+//! into its cumulative compute scale and re-solves warm; for shape drift
+//! (the ratio spread is wide, a single factor cannot explain the window)
+//! the samples can instead be refit through the full Eq. 9 pipeline
+//! ([`DriftDetector::refit_ctx`] → [`crate::perfmodel::linear`]).
+//!
+//! Switching is **hysteretic**: a fresh solve replaces the active plan
+//! only when its predicted Eq. 5 latency beats the active plan's
+//! (re-evaluated under the *new* model) by more than `hysteresis_rel` —
+//! replanning is cheap with the warm engine, but a plan switch
+//! resteers the runtime (new slice buckets, new schedule), so marginal
+//! wins are not worth the churn.
+
+use std::collections::VecDeque;
+
+use crate::perfmodel::linear::{CtxCoeffs, LinearCtxModel};
+use crate::perfmodel::CostModel;
+
+/// One observed stage-time sample: a slice of `i` tokens over `j` tokens
+/// of context took `ms` (computation + transmission, as Eq. 4 counts it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySample {
+    pub i: u32,
+    pub j: u32,
+    pub ms: f64,
+}
+
+/// Detector configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Samples kept in the sliding window (and the minimum needed before
+    /// drift is ever reported).
+    pub window: usize,
+    /// Mean relative |observed − predicted| / predicted above which the
+    /// window counts as drifted.
+    pub rel_threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            window: 16,
+            rel_threshold: 0.05,
+        }
+    }
+}
+
+/// Verdict over the current sample window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftVerdict {
+    /// Not enough samples yet.
+    Warmup,
+    /// Window agrees with the model within the threshold.
+    Stable { mean_rel_err: f64 },
+    /// Window departs from the model: `factor` is the median
+    /// observed/predicted ratio to fold into the compute scale.
+    Drifted { mean_rel_err: f64, factor: f64 },
+}
+
+/// Sliding-window drift detector.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    samples: VecDeque<LatencySample>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> Self {
+        DriftDetector {
+            cfg,
+            samples: VecDeque::with_capacity(cfg.window.max(1)),
+        }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Push one observation, evicting the oldest beyond the window.
+    pub fn push(&mut self, s: LatencySample) {
+        if self.samples.len() == self.cfg.window.max(1) {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(s);
+    }
+
+    /// Drop the window (after the planner has acted on a verdict, so the
+    /// same samples don't trigger twice).
+    pub fn clear(&mut self) {
+        self.samples.clear();
+    }
+
+    /// Judge the window against `model` — the model the active plan was
+    /// solved against.
+    pub fn verdict<M: CostModel>(&self, model: &M) -> DriftVerdict {
+        if self.samples.len() < self.cfg.window.max(1) {
+            return DriftVerdict::Warmup;
+        }
+        let mut ratios = Vec::with_capacity(self.samples.len());
+        let mut sum_rel = 0.0;
+        for s in &self.samples {
+            let pred = model.t(s.i, s.j) + model.t_comm(s.i);
+            ratios.push(s.ms / pred);
+            sum_rel += ((s.ms - pred) / pred).abs();
+        }
+        let mean_rel_err = sum_rel / self.samples.len() as f64;
+        if mean_rel_err <= self.cfg.rel_threshold {
+            return DriftVerdict::Stable { mean_rel_err };
+        }
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let factor = ratios[ratios.len() / 2];
+        DriftVerdict::Drifted { mean_rel_err, factor }
+    }
+
+    /// Shape-drift escape hatch: refit the Eq. 9 context coefficients
+    /// from the window's samples (observed minus the base model's
+    /// zero-context prediction), via the same least-squares path
+    /// `perfmodel::measure::fit` uses. Needs ≥ 4 samples with `j > 0`
+    /// spanning the feature space.
+    pub fn refit_ctx<M: CostModel>(&self, base: &M) -> Result<CtxCoeffs, String> {
+        let ctx: Vec<(u32, u32, f64)> = self
+            .samples
+            .iter()
+            .filter(|s| s.j > 0)
+            .map(|s| (s.i, s.j, s.ms - (base.t(s.i, 0) + base.t_comm(s.i))))
+            .collect();
+        LinearCtxModel::fit_ctx(&ctx)
+    }
+}
+
+/// The hysteresis rule, factored out so the planner, the autotune CLI and
+/// the tests share one definition: switch iff the fresh solve's predicted
+/// latency beats the active plan's (both under the *new* model) by more
+/// than `hysteresis_rel` of the active plan's latency.
+pub fn should_switch(active_ms: f64, fresh_ms: f64, hysteresis_rel: f64) -> bool {
+    fresh_ms < active_ms * (1.0 - hysteresis_rel.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Toy;
+    impl CostModel for Toy {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            1.0 + 0.01 * i as f64 + 1e-4 * i as f64 * j as f64
+        }
+        fn t_comm(&self, i: u32) -> f64 {
+            0.05 + 0.001 * i as f64
+        }
+    }
+
+    fn stage_time(m: &impl CostModel, i: u32, j: u32) -> f64 {
+        m.t(i, j) + m.t_comm(i)
+    }
+
+    fn fill(det: &mut DriftDetector, factor: f64) {
+        for k in 0..det.config().window {
+            let i = 32 + 16 * (k as u32 % 4);
+            let j = 64 * (k as u32 % 3);
+            det.push(LatencySample { i, j, ms: factor * stage_time(&Toy, i, j) });
+        }
+    }
+
+    #[test]
+    fn warmup_until_window_full() {
+        let mut d = DriftDetector::new(DriftConfig { window: 8, rel_threshold: 0.05 });
+        for _ in 0..7 {
+            d.push(LatencySample { i: 32, j: 0, ms: 1.0 });
+        }
+        assert_eq!(d.verdict(&Toy), DriftVerdict::Warmup);
+    }
+
+    #[test]
+    fn exact_samples_are_stable() {
+        let mut d = DriftDetector::new(DriftConfig::default());
+        fill(&mut d, 1.0);
+        match d.verdict(&Toy) {
+            DriftVerdict::Stable { mean_rel_err } => assert!(mean_rel_err < 1e-12),
+            v => panic!("expected Stable, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn uniform_slowdown_is_detected_with_the_right_factor() {
+        let mut d = DriftDetector::new(DriftConfig::default());
+        fill(&mut d, 1.3);
+        match d.verdict(&Toy) {
+            DriftVerdict::Drifted { mean_rel_err, factor } => {
+                assert!((factor - 1.3).abs() < 1e-9, "factor {factor}");
+                assert!((mean_rel_err - 0.3).abs() < 1e-9);
+            }
+            v => panic!("expected Drifted, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn small_noise_stays_below_threshold() {
+        let mut d = DriftDetector::new(DriftConfig { window: 16, rel_threshold: 0.05 });
+        for k in 0..16u32 {
+            let i = 32 + 16 * (k % 4);
+            let noise = if k % 2 == 0 { 1.02 } else { 0.98 };
+            d.push(LatencySample { i, j: 0, ms: noise * stage_time(&Toy, i, 0) });
+        }
+        assert!(matches!(d.verdict(&Toy), DriftVerdict::Stable { .. }));
+    }
+
+    #[test]
+    fn median_factor_is_robust_to_one_outlier() {
+        let mut d = DriftDetector::new(DriftConfig { window: 9, rel_threshold: 0.05 });
+        fill(&mut d, 1.5);
+        // one wild outlier replaces the oldest sample
+        d.push(LatencySample { i: 32, j: 0, ms: 100.0 * stage_time(&Toy, 32, 0) });
+        match d.verdict(&Toy) {
+            DriftVerdict::Drifted { factor, .. } => {
+                assert!((factor - 1.5).abs() < 1e-9, "factor {factor}");
+            }
+            v => panic!("expected Drifted, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn refit_recovers_planted_ctx_coefficients() {
+        let truth = CtxCoeffs { a0: 0.2, a1: 0.001, a2: 0.0005, a3: 2e-6 };
+        let mut d = DriftDetector::new(DriftConfig { window: 32, rel_threshold: 0.05 });
+        for &i in &[32u32, 64, 128, 256] {
+            for &j in &[64u32, 128, 512, 1024] {
+                d.push(LatencySample {
+                    i,
+                    j,
+                    ms: stage_time(&Toy, i, 0) + truth.eval(i, j),
+                });
+            }
+        }
+        let fit = d.refit_ctx(&Toy).unwrap();
+        assert!((fit.a0 - truth.a0).abs() < 1e-9);
+        assert!((fit.a3 - truth.a3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hysteresis_rule() {
+        assert!(should_switch(100.0, 90.0, 0.05));
+        assert!(!should_switch(100.0, 96.0, 0.05));
+        assert!(!should_switch(100.0, 100.0, 0.0));
+        assert!(should_switch(100.0, 99.9, 0.0));
+    }
+}

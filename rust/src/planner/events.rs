@@ -1,0 +1,174 @@
+//! Scripted cluster-event traces for `terapipe autotune`.
+//!
+//! A trace is a JSON array of timestamped events replayed against a
+//! [`super::Planner`] — the offline stand-in for the live feeds a
+//! deployment would wire in (scheduler topology updates, fabric
+//! telemetry, the runtime's per-slice timings):
+//!
+//! ```json
+//! { "events": [
+//!   { "step": 10, "kind": "stages",    "stages": 48 },
+//!   { "step": 20, "kind": "bandwidth", "factor": 0.5 },
+//!   { "step": 30, "kind": "slowdown",  "factor": 1.25 },
+//!   { "step": 40, "kind": "samples",   "factor": 1.2, "count": 16 }
+//! ] }
+//! ```
+//!
+//! * `stages` — pipeline depth change (K → K′): nodes joined or left.
+//! * `bandwidth` — inter-stage bandwidth multiplied by `factor`
+//!   (comm times scale by 1/factor).
+//! * `slowdown` — per-stage compute slowed by `factor` (thermal
+//!   throttling, a degraded replica pinning the stage time).
+//! * `samples` — `count` live latency observations whose stage times run
+//!   `factor` slower than the planner's *current* model believes — a
+//!   drift the planner is NOT told about and must detect from the
+//!   samples alone. The factor is relative, so two successive
+//!   `factor: 1.25` events script two successive 25% degradations
+//!   (drift marching on), not a repeat of one absolute state.
+
+use crate::util::json::Json;
+
+/// One scripted event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EventKind {
+    /// K → K′.
+    Stages(u32),
+    /// Bandwidth multiplied by the factor (> 1 = faster network).
+    Bandwidth(f64),
+    /// Compute slowed by the factor (> 1 = slower stages).
+    Slowdown(f64),
+    /// Emit `count` latency samples running `true_factor` slower than
+    /// the planner's current model — undisclosed (relative) drift the
+    /// planner must detect.
+    Samples { true_factor: f64, count: u32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Training step at which the event fires (informational; events are
+    /// replayed in array order).
+    pub step: u64,
+    pub kind: EventKind,
+}
+
+/// Parse a trace from JSON text.
+pub fn parse_trace(text: &str) -> Result<Vec<Event>, String> {
+    let v = Json::parse(text)?;
+    let events = v
+        .req("events")?
+        .as_arr()
+        .ok_or("'events' must be an array")?;
+    let mut out = Vec::with_capacity(events.len());
+    for (idx, e) in events.iter().enumerate() {
+        let ctx = |msg: &str| format!("event {idx}: {msg}");
+        let step = e
+            .get("step")
+            .and_then(|s| s.as_f64())
+            .map(|f| f as u64)
+            .unwrap_or(idx as u64);
+        let kind = e
+            .req("kind")
+            .map_err(|m| ctx(&m))?
+            .as_str()
+            .ok_or_else(|| ctx("'kind' must be a string"))?;
+        let f = |key: &str| -> Result<f64, String> {
+            e.req(key)
+                .map_err(|m| ctx(&m))?
+                .as_f64()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or_else(|| ctx(&format!("'{key}' must be a positive number")))
+        };
+        let kind = match kind {
+            "stages" => {
+                let s = f("stages")?;
+                if s.fract() != 0.0 || s < 1.0 || s > u32::MAX as f64 {
+                    return Err(ctx("'stages' must be a positive integer"));
+                }
+                EventKind::Stages(s as u32)
+            }
+            "bandwidth" => EventKind::Bandwidth(f("factor")?),
+            "slowdown" => EventKind::Slowdown(f("factor")?),
+            "samples" => EventKind::Samples {
+                true_factor: f("factor")?,
+                count: e
+                    .get("count")
+                    .and_then(|c| c.as_u32())
+                    .unwrap_or(16)
+                    .max(1),
+            },
+            other => return Err(ctx(&format!("unknown kind '{other}'"))),
+        };
+        out.push(Event { step, kind });
+    }
+    Ok(out)
+}
+
+/// The built-in demo trace `terapipe autotune` replays when no
+/// `--events` file is given: a node-count change, a bandwidth
+/// degradation, and an undisclosed slowdown surfaced only through
+/// samples.
+pub fn demo_trace(stages: u32) -> Vec<Event> {
+    vec![
+        Event { step: 100, kind: EventKind::Stages((stages / 2).max(1)) },
+        Event { step: 200, kind: EventKind::Bandwidth(0.5) },
+        Event { step: 300, kind: EventKind::Stages(stages) },
+        Event { step: 400, kind: EventKind::Samples { true_factor: 1.25, count: 32 } },
+        Event { step: 500, kind: EventKind::Samples { true_factor: 1.25, count: 32 } },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_kinds() {
+        let text = r#"{ "events": [
+            { "step": 10, "kind": "stages", "stages": 48 },
+            { "step": 20, "kind": "bandwidth", "factor": 0.5 },
+            { "step": 30, "kind": "slowdown", "factor": 1.25 },
+            { "step": 40, "kind": "samples", "factor": 1.2, "count": 8 },
+            { "kind": "samples", "factor": 1.0 }
+        ] }"#;
+        let evs = parse_trace(text).unwrap();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0], Event { step: 10, kind: EventKind::Stages(48) });
+        assert_eq!(evs[1].kind, EventKind::Bandwidth(0.5));
+        assert_eq!(evs[2].kind, EventKind::Slowdown(1.25));
+        assert_eq!(
+            evs[3].kind,
+            EventKind::Samples { true_factor: 1.2, count: 8 }
+        );
+        // step defaults to the index, count to 16
+        assert_eq!(evs[4].step, 4);
+        assert_eq!(
+            evs[4].kind,
+            EventKind::Samples { true_factor: 1.0, count: 16 }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_traces() {
+        assert!(parse_trace("{}").is_err());
+        assert!(parse_trace(r#"{ "events": [ { "kind": "warp", "factor": 2 } ] }"#)
+            .unwrap_err()
+            .contains("unknown kind"));
+        assert!(parse_trace(r#"{ "events": [ { "kind": "bandwidth", "factor": -1 } ] }"#)
+            .unwrap_err()
+            .contains("positive"));
+        assert!(parse_trace(r#"{ "events": [ { "kind": "stages" } ] }"#).is_err());
+        // fractional or zero stage counts are parse errors, not panics
+        // downstream in Planner::on_stages_change
+        assert!(parse_trace(r#"{ "events": [ { "kind": "stages", "stages": 0.5 } ] }"#)
+            .unwrap_err()
+            .contains("positive integer"));
+        assert!(parse_trace(r#"{ "events": [ { "kind": "stages", "stages": 0 } ] }"#).is_err());
+    }
+
+    #[test]
+    fn demo_trace_is_well_formed() {
+        let evs = demo_trace(48);
+        assert!(!evs.is_empty());
+        assert!(evs.windows(2).all(|w| w[0].step <= w[1].step));
+    }
+}

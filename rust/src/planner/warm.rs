@@ -1,0 +1,349 @@
+//! Warm-started `t_max` enumeration.
+//!
+//! A cold solve spends its probe budget binary-searching the *whole*
+//! candidate pool for the feasibility boundary (the first budget
+//! Algorithm 1 can satisfy) — `O(log |pool|)` full feasibility DPs —
+//! before the blocked parallel scan runs. After a small cluster delta the
+//! boundary barely moves, so the warm path **seeds the search from the
+//! previous winner's neighborhood** instead of from scratch:
+//!
+//! 1. Probe the candidate nearest the (delta-rescaled) previous winner's
+//!    `t_max`.
+//! 2. Gallop (exponentially growing steps) toward the boundary until it
+//!    is bracketed — `O(log shift)` probes when the boundary moved by
+//!    `shift` candidates, so a good hint costs ~3 probes where the cold
+//!    search pays ~`log₂ |pool|`.
+//! 3. Binary-search inside the bracket; when the gallop had to leave the
+//!    `[hint/γ, hint·γ]` window, that *is* the cold fallback — the
+//!    bracket has degenerated to the full-pool search and the report
+//!    marks the window as missed.
+//! 4. Run the engine's **identical** blocked parallel scan
+//!    ([`engine::scan_from`]) from the boundary.
+//!
+//! Because feasibility is monotone in `t_max`, galloping + bracketed
+//! binary search finds *exactly* the index the cold binary search finds,
+//! and the scan is the same code — so the warm solve is **bit-identical**
+//! to the cold one (plan, latency, tie-breaks), which
+//! `rust/tests/planner_warm_equivalence.rs` pins across 100+ randomized
+//! cluster-delta sequences. Only the probe count changes.
+//!
+//! (The scan itself cannot be narrowed without breaking exactness: a
+//! feasible candidate below any window can still be the Eq. 5 winner, so
+//! every candidate from the boundary to the pruning break must be
+//! evaluated — warm or cold. The planner's other warm lever is the
+//! cost-table cache, which removes the densification cost entirely on
+//! scale-only deltas.)
+
+use crate::perfmodel::TableCostModel;
+use crate::solver::dp::{self, SolveStats};
+use crate::solver::engine::{self, EnumResult};
+use crate::solver::SliceScheme;
+
+/// What the warm enumeration did — telemetry for the replan log and the
+/// planner bench.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WarmReport {
+    /// Candidate-index window `[lo, hi]` implied by the hint and γ.
+    pub window: (usize, usize),
+    /// First-feasible candidate index the search settled on.
+    pub boundary: usize,
+    /// The boundary's budget value (ms) — the seed the planner stores for
+    /// the *next* warm solve (rescaled by the cluster delta).
+    pub boundary_tmax: f64,
+    /// Feasibility probes spent (backstop + gallop + bracket search).
+    pub probes: usize,
+    /// Full evaluations the scan ran (same count as a cold scan).
+    pub evals: usize,
+    /// True when the boundary lay inside the window — the warm seed did
+    /// its job. False is the documented cold fallback.
+    pub hit: bool,
+}
+
+/// Default multiplicative half-width of the warm window: a hint is
+/// considered "good" while the boundary stays within `[hint/γ, hint·γ]`.
+pub const DEFAULT_WINDOW: f64 = 1.3;
+
+/// Warm-started equivalent of `engine::enumerate_par`: same contract
+/// (`eval`, monotone `feasible`), bit-identical result, with the
+/// feasibility search seeded at `hint` — the previous solve's boundary
+/// budget, rescaled by the caller for the cluster delta.
+pub(crate) fn enumerate_warm<P, E, F>(
+    stages: u32,
+    cands: &[f64],
+    hint: f64,
+    gamma: f64,
+    feasible: F,
+    eval: E,
+) -> (EnumResult<P>, WarmReport)
+where
+    P: Send,
+    E: Fn(f64) -> Option<(f64, P)> + Sync,
+    F: Fn(f64) -> bool,
+{
+    let mut rep = WarmReport::default();
+    if cands.is_empty() {
+        rep.hit = true;
+        return (
+            EnumResult { best: None, dps_run: 0, probe_dps: 0 },
+            rep,
+        );
+    }
+    let gamma = if gamma > 1.0 { gamma } else { DEFAULT_WINDOW };
+    let last = cands.len() - 1;
+
+    // Backstop: if even the loosest budget is infeasible, the cold search
+    // finds nothing either.
+    rep.probes += 1;
+    if !feasible(cands[last]) {
+        rep.hit = true;
+        rep.window = (last, last);
+        return (
+            EnumResult { best: None, dps_run: 0, probe_dps: rep.probes },
+            rep,
+        );
+    }
+
+    let h = cands.partition_point(|&c| c < hint).min(last);
+    rep.window = (
+        cands.partition_point(|&c| c < hint / gamma).min(last),
+        cands
+            .partition_point(|&c| c <= hint * gamma)
+            .saturating_sub(1)
+            .min(last),
+    );
+
+    // Gallop from the hint to bracket the feasibility boundary:
+    // afterwards `lb == 0 || !feasible(cands[lb-1])` is NOT yet known,
+    // but `cands[ub]` is feasible and every probed index < lb was
+    // infeasible — the invariants the bracketed binary search needs.
+    let mut lb; // lowest index that may still be the boundary
+    let mut ub; // known-feasible index
+    rep.probes += 1;
+    if feasible(cands[h]) {
+        ub = h;
+        lb = 0;
+        let mut off = 1usize;
+        while ub > 0 {
+            let p = ub.saturating_sub(off);
+            rep.probes += 1;
+            if feasible(cands[p]) {
+                ub = p;
+                off *= 2;
+            } else {
+                lb = p + 1;
+                break;
+            }
+        }
+    } else {
+        lb = h + 1;
+        ub = last;
+        let mut off = 1usize;
+        loop {
+            let p = h + off;
+            if p >= last {
+                break; // `last` is the known-feasible bound
+            }
+            rep.probes += 1;
+            if feasible(cands[p]) {
+                ub = p;
+                break;
+            }
+            lb = p + 1;
+            off *= 2;
+        }
+    }
+    // Binary search inside the bracket — exactly the cold search's loop,
+    // on a (usually much) smaller range.
+    while lb < ub {
+        let mid = lb + (ub - lb) / 2;
+        rep.probes += 1;
+        if feasible(cands[mid]) {
+            ub = mid;
+        } else {
+            lb = mid + 1;
+        }
+    }
+    rep.boundary = lb;
+    rep.boundary_tmax = cands[lb];
+    rep.hit = lb >= rep.window.0 && lb <= rep.window.1;
+
+    let (best, dps_run) = engine::scan_from(stages, cands, lb, eval);
+    rep.evals = dps_run;
+    (
+        EnumResult {
+            best,
+            dps_run,
+            probe_dps: rep.probes,
+        },
+        rep,
+    )
+}
+
+/// Warm-started §3.3 token solve over a pre-densified table: identical
+/// candidate pool and eval closure as [`dp::solve_tokens_table`], with
+/// the feasibility search seeded at `hint_tmax`. Bit-identical output
+/// (scheme and latency) to the cold solve.
+pub fn solve_tokens_table_warm(
+    table: &TableCostModel,
+    stages: u32,
+    eps_ms: f64,
+    hint_tmax: f64,
+    gamma: f64,
+) -> (SliceScheme, SolveStats, WarmReport) {
+    let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
+    let (r, rep) = enumerate_warm(
+        stages,
+        &cands,
+        hint_tmax,
+        gamma,
+        |tmax| dp::solve_fixed_tmax(table, tmax).is_some(),
+        dp::token_eval(table, stages),
+    );
+    let (scheme, stats) = dp::finish(table.granularity(), cands.len(), r);
+    (scheme, stats, rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::CostModel;
+    use crate::solver::dp::solve_tokens_table;
+    use crate::util::prop;
+
+    struct Affine {
+        over: f64,
+        lin: f64,
+        ctx: f64,
+        comm: f64,
+    }
+    impl CostModel for Affine {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64
+        }
+        fn t_comm(&self, _i: u32) -> f64 {
+            self.comm
+        }
+    }
+
+    fn random_table(g: &mut prop::Gen) -> TableCostModel {
+        let m = Affine {
+            over: g.float(0.01, 2.0),
+            lin: g.float(0.001, 0.1),
+            ctx: g.float(0.0, 3e-4),
+            comm: g.float(0.0, 0.3),
+        };
+        let gran = *g.choose(&[8u32, 16, 32]);
+        let l = g.int(2, 20) * gran;
+        TableCostModel::build(&m, l, gran)
+    }
+
+    /// Any hint — good, terrible, or degenerate — must still produce the
+    /// cold solve's exact result.
+    #[test]
+    fn prop_warm_matches_cold_for_arbitrary_hints() {
+        prop::run_cases(120, |g| {
+            let table = random_table(g);
+            let stages = g.int(1, 24);
+            let eps = *g.choose(&[0.0f64, 0.1]);
+            let (cold, cold_stats) = solve_tokens_table(&table, stages, eps);
+            let hint = match g.int(0, 3) {
+                0 => cold.t_max_ms,                     // near-perfect
+                1 => cold.t_max_ms * g.float(0.3, 3.0), // off by a delta
+                2 => g.float(1e-6, 1e4),                // wild
+                _ => 0.0,                               // degenerate
+            };
+            let (warm, warm_stats, rep) =
+                solve_tokens_table_warm(&table, stages, eps, hint, DEFAULT_WINDOW);
+            assert_eq!(warm.lens, cold.lens, "case {} hint={hint}", g.case);
+            assert!(
+                warm.total_ms == cold.total_ms
+                    && warm.t_max_ms == cold.t_max_ms
+                    && warm.latency_ms == cold.latency_ms,
+                "case {}: warm {warm:?} vs cold {cold:?}",
+                g.case
+            );
+            // the scan is shared code: identical evaluation count
+            assert_eq!(warm_stats.dps_run, cold_stats.dps_run, "case {}", g.case);
+            assert_eq!(rep.evals, warm_stats.dps_run);
+        });
+    }
+
+    /// Seeding at the previous boundary finds it in O(1) probes — fewer
+    /// than the cold full-pool binary search on any pool where log₂ is
+    /// non-trivial.
+    #[test]
+    fn good_hint_beats_cold_probe_count() {
+        let mut g = prop::Gen::new(42);
+        for _ in 0..20 {
+            let table = random_table(&mut g);
+            let stages = 16;
+            let (_, cold_stats) = solve_tokens_table(&table, stages, 0.0);
+            if cold_stats.probe_dps < 6 {
+                continue; // pool too small for the comparison to mean much
+            }
+            // the exact seed a planner would carry: the previous solve's
+            // boundary budget
+            let cands = engine::dedup_candidates(table.stage_time_candidates(), 0.0);
+            let boundary = cands
+                .iter()
+                .copied()
+                .find(|&t| dp::solve_fixed_tmax(&table, t).is_some())
+                .expect("loosest budget is feasible");
+            let (_, warm_stats, rep) =
+                solve_tokens_table_warm(&table, stages, 0.0, boundary, DEFAULT_WINDOW);
+            assert!(rep.hit, "boundary hint must land in the window: {rep:?}");
+            assert!(
+                warm_stats.probe_dps < cold_stats.probe_dps,
+                "warm probes {} vs cold {} (report {rep:?})",
+                warm_stats.probe_dps,
+                cold_stats.probe_dps
+            );
+        }
+    }
+
+    #[test]
+    fn empty_pool_and_infeasible_pool_behave_like_cold() {
+        let mut g = prop::Gen::new(7);
+        let table = random_table(&mut g);
+        let (r, rep) = enumerate_warm(
+            4,
+            &[],
+            1.0,
+            DEFAULT_WINDOW,
+            |t| dp::solve_fixed_tmax(&table, t).is_some(),
+            dp::token_eval(&table, 4),
+        );
+        assert!(r.best.is_none() && rep.hit);
+        // all-infeasible pool: the backstop probe answers immediately
+        let tiny = table.at(1, 0) * 0.25;
+        let (r, rep) = enumerate_warm(
+            4,
+            &[tiny * 0.5, tiny],
+            tiny,
+            DEFAULT_WINDOW,
+            |t| dp::solve_fixed_tmax(&table, t).is_some(),
+            dp::token_eval(&table, 4),
+        );
+        assert!(r.best.is_none());
+        assert_eq!(rep.probes, 1);
+        assert_eq!(rep.evals, 0);
+    }
+
+    /// A hint far outside the pool still terminates and reports the miss
+    /// (the documented cold fallback).
+    #[test]
+    fn wild_hints_report_window_miss() {
+        let mut g = prop::Gen::new(3);
+        let table = random_table(&mut g);
+        let (cold, _) = solve_tokens_table(&table, 8, 0.0);
+        for hint in [1e-9, 1e9] {
+            let (warm, _, rep) = solve_tokens_table_warm(&table, 8, 0.0, hint, DEFAULT_WINDOW);
+            assert_eq!(warm.lens, cold.lens, "hint={hint}");
+            // boundary may coincidentally sit at a pool edge the window
+            // covers; for these extreme hints it should not
+            if !rep.hit {
+                assert!(rep.boundary < rep.window.0 || rep.boundary > rep.window.1);
+            }
+        }
+    }
+}

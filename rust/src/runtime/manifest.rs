@@ -239,7 +239,10 @@ impl Manifest {
     }
 
     /// Load an init tensor group from its raw f32 files.
-    pub fn load_init(&self, entries: &[InitEntry]) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
+    pub fn load_init(
+        &self,
+        entries: &[InitEntry],
+    ) -> Result<Vec<crate::runtime::tensor::HostTensor>> {
         entries
             .iter()
             .map(|e| {

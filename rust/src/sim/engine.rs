@@ -68,7 +68,8 @@ pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
     let mut idle_at: Vec<f64> = vec![0.0; k];
     let mut busy: Vec<f64> = vec![0.0; k];
     // ready queue per stage: (priority, id), min-heap
-    let mut queues: Vec<BinaryHeap<Reverse<(u64, usize)>>> = (0..k).map(|_| BinaryHeap::new()).collect();
+    let mut queues: Vec<BinaryHeap<Reverse<(u64, usize)>>> =
+        (0..k).map(|_| BinaryHeap::new()).collect();
     // flush barrier: remaining fwd items per stage
     let mut fwd_left: Vec<usize> = vec![0; k];
     for it in &plan.items {
@@ -163,7 +164,11 @@ pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
         }
         if let Some(id) = chosen {
             let it = &plan.items[id];
-            if it.phase == Phase::Fwd && has_bwd_stage[s] && plan.mem_cap_parts.is_some() && !holds[s][it.part] {
+            if it.phase == Phase::Fwd
+                && has_bwd_stage[s]
+                && plan.mem_cap_parts.is_some()
+                && !holds[s][it.part]
+            {
                 holds[s][it.part] = true;
                 used_slots[s] += 1;
             }
@@ -263,7 +268,15 @@ mod tests {
     use super::*;
     use crate::sim::Item;
 
-    fn item(id: usize, stage: usize, phase: Phase, part: usize, slice: usize, dur: f64, deps: Vec<(usize, f64)>) -> Item {
+    fn item(
+        id: usize,
+        stage: usize,
+        phase: Phase,
+        part: usize,
+        slice: usize,
+        dur: f64,
+        deps: Vec<(usize, f64)>,
+    ) -> Item {
         Item { id, stage, phase, part, slice, dur_ms: dur, deps, priority: id as u64 }
     }
 
@@ -351,11 +364,19 @@ mod tests {
             item(1, 0, Phase::Bwd, 0, 0, 1.0, vec![(0, 0.0)]),
             item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
         ];
-        let r = simulate(&Plan { stages: 1, items: items.clone(), mem_cap_parts: None, flush_barrier: true }).unwrap();
+        let plan = Plan {
+            stages: 1,
+            items: items.clone(),
+            mem_cap_parts: None,
+            flush_barrier: true,
+        };
+        let r = simulate(&plan).unwrap();
         let bwd_span = r.trace.iter().find(|s| s.phase == Phase::Bwd).unwrap();
         assert!((bwd_span.start_ms - 2.0).abs() < 1e-9, "bwd must wait for the flush");
         // without the barrier the bwd (ready at t=1, priority 1 < 2) runs first
-        let r2 = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false }).unwrap();
+        let r2 =
+            simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false })
+                .unwrap();
         let bwd_span2 = r2.trace.iter().find(|s| s.phase == Phase::Bwd).unwrap();
         assert!((bwd_span2.start_ms - 1.0).abs() < 1e-9);
     }
@@ -370,7 +391,9 @@ mod tests {
             item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
             item(3, 0, Phase::Bwd, 1, 0, 1.0, vec![(2, 0.0)]),
         ];
-        let r = simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: false }).unwrap();
+        let r =
+            simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: false })
+                .unwrap();
         let f2 = r.trace.iter().find(|s| s.phase == Phase::Fwd && s.part == 1).unwrap();
         assert!(f2.start_ms >= 2.0 - 1e-9, "fwd(part 1) at {} must wait for bwd(part 0)", f2.start_ms);
     }
@@ -385,7 +408,9 @@ mod tests {
             item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
             item(3, 0, Phase::Bwd, 1, 0, 1.0, vec![(2, 0.0)]),
         ];
-        let err = simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: true }).unwrap_err();
+        let err =
+            simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: true })
+                .unwrap_err();
         assert!(err.contains("deadlock"));
     }
 
@@ -402,10 +427,30 @@ mod tests {
     fn priority_breaks_ties_among_ready_items() {
         // two independent fwd items on one stage: lower priority runs first
         let items = vec![
-            Item { id: 0, stage: 0, phase: Phase::Fwd, part: 0, slice: 0, dur_ms: 1.0, deps: vec![], priority: 10 },
-            Item { id: 1, stage: 0, phase: Phase::Fwd, part: 1, slice: 0, dur_ms: 1.0, deps: vec![], priority: 5 },
+            Item {
+                id: 0,
+                stage: 0,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: 0,
+                dur_ms: 1.0,
+                deps: vec![],
+                priority: 10,
+            },
+            Item {
+                id: 1,
+                stage: 0,
+                phase: Phase::Fwd,
+                part: 1,
+                slice: 0,
+                dur_ms: 1.0,
+                deps: vec![],
+                priority: 5,
+            },
         ];
-        let r = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false }).unwrap();
+        let r =
+            simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false })
+                .unwrap();
         assert_eq!(r.trace[0].part, 1);
     }
 }

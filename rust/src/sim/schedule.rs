@@ -229,8 +229,10 @@ mod tests {
             }
         }
         let k = 4;
-        let single = simulate(&build_plan(&Linear, &scheme(vec![vec![64]]), k, None, true)).unwrap();
-        let sliced = simulate(&build_plan(&Linear, &scheme(vec![vec![16; 4]]), k, None, true)).unwrap();
+        let single =
+            simulate(&build_plan(&Linear, &scheme(vec![vec![64]]), k, None, true)).unwrap();
+        let sliced =
+            simulate(&build_plan(&Linear, &scheme(vec![vec![16; 4]]), k, None, true)).unwrap();
         assert!(
             sliced.makespan_ms < 0.6 * single.makespan_ms,
             "sliced {} vs single {}",

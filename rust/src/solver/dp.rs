@@ -40,10 +40,87 @@ pub struct FixedTmaxSolution {
     pub total_ms: f64,
 }
 
-/// Algorithm 1: minimal total forward(+backward) time under `t_max`,
-/// over `n` grid units. Returns `None` when no feasible slicing exists
-/// (some position unreachable without exceeding `t_max`).
-pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxSolution> {
+/// The Alg-1 inner reduction at position `i`, unrolled into 4 independent
+/// accumulator lanes (ROADMAP "SIMD inner loop"): lane `l` scans
+/// `k ≡ 1 + l (mod 4)`, so the four `min(s[i-k] + t + comm[k])` chains
+/// carry no cross-iteration dependency and auto-vectorize; a horizontal
+/// min combines them.
+///
+/// Bit-identical to the scalar scan ([`inner_min_scalar`]): each lane's
+/// strict-`<` update keeps the *first* (smallest-`k`) candidate achieving
+/// the lane minimum, and the horizontal min prefers the smallest `k` among
+/// value-tied lanes — exactly the scalar first-best tie-break. `f64` min
+/// over finite/+∞ sums is order-insensitive, so the value is identical
+/// too. Pinned by `prop_lanes_inner_reduction_bit_identical_to_scalar`.
+#[inline]
+fn inner_min_lanes(diag: &[f64], comm: &[f64], s: &[f64], i: usize, t_max: f64) -> (f64, usize) {
+    let mut bl = [f64::INFINITY; 4];
+    let mut bk = [0usize; 4];
+    let mut k = 1usize;
+    while k + 3 <= i {
+        for lane in 0..4 {
+            let kk = k + lane;
+            let t = diag[kk - 1] + comm[kk];
+            if t <= t_max {
+                let cand = s[i - kk] + t;
+                if cand < bl[lane] {
+                    bl[lane] = cand;
+                    bk[lane] = kk;
+                }
+            }
+        }
+        k += 4;
+    }
+    // tail (≤ 3 candidates): folding into lane 0 keeps the within-lane
+    // first-best property — every tail k is larger than every chunked k
+    while k <= i {
+        let t = diag[k - 1] + comm[k];
+        if t <= t_max {
+            let cand = s[i - k] + t;
+            if cand < bl[0] {
+                bl[0] = cand;
+                bk[0] = k;
+            }
+        }
+        k += 1;
+    }
+    // horizontal min, smallest k on value ties (bk = 0 ⟺ lane empty)
+    let mut best = f64::INFINITY;
+    let mut bestk = 0usize;
+    for lane in 0..4 {
+        if bl[lane] < best || (bl[lane] == best && bk[lane] != 0 && bk[lane] < bestk) {
+            best = bl[lane];
+            bestk = bk[lane];
+        }
+    }
+    (best, bestk)
+}
+
+/// The scalar reference for the inner reduction — the paper's literal
+/// `min_{1≤k≤i}` scan. Retained as the property-test oracle for
+/// [`inner_min_lanes`] and as the baseline `benches/planner.rs` times.
+#[inline]
+fn inner_min_scalar(diag: &[f64], comm: &[f64], s: &[f64], i: usize, t_max: f64) -> (f64, usize) {
+    let mut best = f64::INFINITY;
+    let mut bestk = 0usize;
+    for k in 1..=i {
+        let t = diag[k - 1] + comm[k];
+        if t <= t_max {
+            let cand = s[i - k] + t;
+            if cand < best {
+                best = cand;
+                bestk = k;
+            }
+        }
+    }
+    (best, bestk)
+}
+
+fn solve_fixed_tmax_with(
+    table: &TableCostModel,
+    t_max: f64,
+    inner: impl Fn(&[f64], &[f64], &[f64], usize, f64) -> (f64, usize),
+) -> Option<FixedTmaxSolution> {
     let n = table.units();
     let comm = table.comms();
     // s[i] = S*(i; t_max); q[i] = argmin k (last-slice length in units)
@@ -54,18 +131,7 @@ pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxS
         // diag[k-1] = t(k, i-k): the whole inner loop reads one
         // contiguous anti-diagonal instead of striding n-1 per candidate.
         let diag = table.diag(i);
-        let mut best = f64::INFINITY;
-        let mut bestk = 0usize;
-        for k in 1..=i {
-            let t = diag[k - 1] + comm[k];
-            if t <= t_max {
-                let cand = s[i - k] + t;
-                if cand < best {
-                    best = cand;
-                    bestk = k;
-                }
-            }
-        }
+        let (best, bestk) = inner(diag, comm, &s, i, t_max);
         s[i] = best;
         q[i] = bestk;
     }
@@ -85,6 +151,22 @@ pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxS
         lens_units: lens,
         total_ms: s[n],
     })
+}
+
+/// Algorithm 1: minimal total forward(+backward) time under `t_max`,
+/// over `n` grid units. Returns `None` when no feasible slicing exists
+/// (some position unreachable without exceeding `t_max`). Runs the
+/// 4-lane unrolled inner reduction; bit-identical to
+/// [`solve_fixed_tmax_ref`].
+pub fn solve_fixed_tmax(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxSolution> {
+    solve_fixed_tmax_with(table, t_max, inner_min_lanes)
+}
+
+/// The retained scalar-scan reference for [`solve_fixed_tmax`] — the
+/// property-test oracle and the honest per-DP baseline for the planner
+/// bench.
+pub fn solve_fixed_tmax_ref(table: &TableCostModel, t_max: f64) -> Option<FixedTmaxSolution> {
+    solve_fixed_tmax_with(table, t_max, inner_min_scalar)
 }
 
 /// Solver statistics (for the §3.3 "within a minute" bench and EXPERIMENTS).
@@ -134,7 +216,11 @@ pub(crate) fn token_eval<'a>(
 
 /// Same, over a pre-densified table (the hot path for the joint solver and
 /// the benches, which reuse one table across runs).
-pub fn solve_tokens_table(table: &TableCostModel, stages: u32, eps_ms: f64) -> (SliceScheme, SolveStats) {
+pub fn solve_tokens_table(
+    table: &TableCostModel,
+    stages: u32,
+    eps_ms: f64,
+) -> (SliceScheme, SolveStats) {
     let cands = engine::dedup_candidates(table.stage_time_candidates(), eps_ms);
     let r = engine::enumerate_par(
         stages,
@@ -170,7 +256,9 @@ pub fn solve_tokens_table_seq(
     finish(table.granularity(), cands.len(), r)
 }
 
-fn finish(
+/// Package an enumeration result as a token [`SliceScheme`] + stats —
+/// shared by the cold front-ends here and the planner's warm path.
+pub(crate) fn finish(
     granularity: u32,
     candidates: usize,
     r: engine::EnumResult<(FixedTmaxSolution, f64)>,
@@ -332,6 +420,46 @@ mod tests {
             assert!(p.latency_ms == s.latency_ms && p.total_ms == s.total_ms);
             assert_eq!(ps.candidates, ss.candidates);
         }
+    }
+
+    /// The 4-lane unrolled inner reduction must be **bit-identical** to
+    /// the scalar scan — same `s` values (f64 `==`), same argmin
+    /// tie-breaks (first smallest `k`), across random models, grid sizes
+    /// (covering the ≤3-unit tail-only case), and budgets spanning
+    /// infeasible → loose.
+    #[test]
+    fn prop_lanes_inner_reduction_bit_identical_to_scalar() {
+        use crate::util::prop;
+        prop::run_cases(120, |g| {
+            let m = Affine {
+                over: g.float(0.01, 2.0),
+                lin: g.float(0.001, 0.1),
+                ctx: g.float(0.0, 3e-4),
+            };
+            let gran = *g.choose(&[8u32, 16]);
+            let l = g.int(1, 24) * gran; // incl. n ∈ {1, 2, 3}: tail-only
+            let table = TableCostModel::build(&m, l, gran);
+            let n = table.units();
+            let top = table.at(n, 0) + table.comm_at(n);
+            for f in [0.05f64, 0.3, 0.6, 0.9, 1.0, 1.4] {
+                let tmax = top * f;
+                let lanes = solve_fixed_tmax(&table, tmax);
+                let scalar = solve_fixed_tmax_ref(&table, tmax);
+                match (lanes, scalar) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.lens_units, b.lens_units, "case {} f={f}", g.case);
+                        assert!(a.total_ms == b.total_ms, "case {} f={f}", g.case);
+                    }
+                    (a, b) => panic!(
+                        "feasibility disagreement at case {} f={f}: lanes={} scalar={}",
+                        g.case,
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        });
     }
 
     #[test]

@@ -169,8 +169,6 @@ where
             probe_dps: 0,
         };
     }
-    let k_f = stages as f64 - 1.0;
-
     // Feasibility binary search (monotone in t_max): find the first
     // feasible candidate; everything before it contributes nothing to the
     // sequential scan either.
@@ -198,10 +196,36 @@ where
     }
     let first = lo;
 
-    // Blocked parallel scan with a shared atomic best-latency bound.
-    // Latencies are positive finite f64s, whose IEEE-754 bit patterns
-    // order identically to their values — so an AtomicU64 + fetch_min is a
-    // lock-free shared upper bound.
+    let (best, dps_run) = scan_from(stages, cands, first, eval);
+    EnumResult {
+        best,
+        dps_run,
+        probe_dps,
+    }
+}
+
+/// The blocked parallel scan with the shared atomic best-latency bound —
+/// the back half of [`enumerate_par`], starting at candidate index
+/// `first` (all candidates below it must be infeasible, which is what the
+/// caller's feasibility search established). Exposed crate-wide so the
+/// planner's warm-started front-end (which finds `first` by galloping
+/// from the previous solve's boundary instead of a full binary search)
+/// runs the *identical* scan. Returns `(best, dps_run)`.
+///
+/// Latencies are positive finite f64s, whose IEEE-754 bit patterns order
+/// identically to their values — so an AtomicU64 + fetch_min is a
+/// lock-free shared upper bound.
+pub(crate) fn scan_from<P, E>(
+    stages: u32,
+    cands: &[f64],
+    first: usize,
+    eval: E,
+) -> (Option<(f64, P)>, usize)
+where
+    P: Send,
+    E: Fn(f64) -> Option<(f64, P)> + Sync,
+{
+    let k_f = stages as f64 - 1.0;
     let threads = rayon::current_num_threads().max(1);
     let block = (4 * threads).max(16);
     let mut best: Option<(f64, P)> = None;
@@ -256,12 +280,7 @@ where
         }
         start = end;
     }
-
-    EnumResult {
-        best,
-        dps_run,
-        probe_dps,
-    }
+    (best, dps_run)
 }
 
 #[cfg(test)]

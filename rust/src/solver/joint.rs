@@ -332,7 +332,12 @@ pub fn evaluate_joint_with<M: CostModel>(
 
 /// The w/o-TeraPipe baseline plan: GPipe microbatches of one full-length
 /// sequence each — the `[(1, [2048])] * B` rows of Table 2.
-pub fn gpipe_plan<M: CostModel>(model_for: &dyn Fn(u32) -> M, batch: u32, seq_len: u32, stages: u32) -> JointScheme {
+pub fn gpipe_plan<M: CostModel>(
+    model_for: &dyn Fn(u32) -> M,
+    batch: u32,
+    seq_len: u32,
+    stages: u32,
+) -> JointScheme {
     let m = model_for(1);
     let t = m.t(seq_len, 0) + m.t_comm(seq_len);
     let scheme = SliceScheme {
@@ -362,7 +367,8 @@ mod tests {
     #[test]
     fn joint_covers_batch() {
         let m = model(5);
-        let j = solve_joint_analytic(&m, 4, 2048, 40, &JointOpts { granularity: 64, ..Default::default() });
+        let opts = JointOpts { granularity: 64, ..Default::default() };
+        let j = solve_joint_analytic(&m, 4, 2048, 40, &opts);
         assert_eq!(j.batch(), 4);
         for (_, s) in &j.parts {
             assert_eq!(s.seq_len(), 2048);

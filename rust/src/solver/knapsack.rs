@@ -187,7 +187,8 @@ mod tests {
             let total = g.int(1, 10);
             let stages = g.int(1, 24);
             let k_f = stages as f64 - 1.0;
-            let (parts, latency) = min_latency_composition(&totals, &tmaxes, total, stages).unwrap();
+            let (parts, latency) =
+                min_latency_composition(&totals, &tmaxes, total, stages).unwrap();
             assert_eq!(parts.iter().sum::<u32>(), total);
             let recomputed: f64 = parts.iter().map(|&p| totals[p as usize - 1]).sum::<f64>()
                 + k_f

@@ -107,6 +107,7 @@ fn run_training(slicing: Vec<usize>, steps: usize, microbatches: usize) -> Vec<f
         steps,
         lr: 1e-3,
         seed: 42,
+        replan_every: None,
     };
     let mut t = Trainer::new(&dir, cfg).unwrap();
     let m = t.manifest.model.clone();
@@ -175,6 +176,7 @@ fn trainer_rejects_invalid_slicing() {
         steps: 1,
         lr: 1e-3,
         seed: 0,
+        replan_every: None,
     };
     assert!(Trainer::new(&dir, bad).is_err());
 }
@@ -192,6 +194,7 @@ fn checkpoint_resume_continues_trajectory() {
         steps,
         lr: 1e-3,
         seed: 42,
+        replan_every: None,
     };
 
     // uninterrupted 4-step reference

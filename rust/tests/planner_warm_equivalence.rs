@@ -1,0 +1,238 @@
+//! Warm-start equivalence suite: the planner's warm-started, cache-served
+//! re-solve must be **bit-identical** — plan and latency, `==` on every
+//! f64, no tolerance — to a cold `solve_tokens` call over a freshly
+//! densified model at the same cluster state, across randomized sequences
+//! of cluster deltas (K changes, bandwidth rescales, per-stage slowdowns,
+//! drift-sample batches).
+//!
+//! This is the contract that makes the online planner safe to trust: no
+//! matter how the service arrived at a state — which deltas, in which
+//! order, which tables were cached or rescaled, which hints seeded the
+//! enumeration — its proposed plan is *exactly* the one a from-scratch
+//! solver would produce. The acceptance criterion's 1e-9 sim replay rides
+//! on top (`prop_emitted_plans_replay_through_the_simulator`).
+
+use terapipe::perfmodel::{CostModel, ScaledModel};
+use terapipe::planner::drift::LatencySample;
+use terapipe::planner::{validate, Planner, PlannerConfig, ReplanTrigger};
+use terapipe::solver::dp::solve_tokens;
+use terapipe::util::prop;
+
+/// Random affine-with-context cost model drawn per case (same family as
+/// the solver equivalence suites).
+#[derive(Clone)]
+struct RandModel {
+    over: f64,
+    lin: f64,
+    ctx: f64,
+    comm: f64,
+}
+impl CostModel for RandModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        self.over + self.lin * i as f64 + self.ctx * i as f64 * j as f64
+    }
+    fn t_comm(&self, _i: u32) -> f64 {
+        self.comm
+    }
+}
+
+fn random_model(g: &mut prop::Gen) -> RandModel {
+    RandModel {
+        over: g.float(0.01, 2.0),
+        lin: g.float(0.001, 0.1),
+        ctx: g.float(0.0, 3e-4),
+        comm: g.float(0.0, 0.3),
+    }
+}
+
+struct Instance {
+    model: RandModel,
+    seq_len: u32,
+    gran: u32,
+    eps: f64,
+}
+
+fn random_instance(g: &mut prop::Gen) -> Instance {
+    let model = random_model(g);
+    let gran = *g.choose(&[8u32, 16, 32]);
+    Instance {
+        model,
+        seq_len: g.int(2, 16) * gran,
+        gran,
+        eps: *g.choose(&[0.0f64, 0.1]),
+    }
+}
+
+fn planner_for(inst: &Instance, stages: u32, hysteresis: f64) -> Planner<RandModel> {
+    Planner::new(
+        "rand",
+        inst.model.clone(),
+        inst.seq_len,
+        stages,
+        PlannerConfig {
+            granularity: inst.gran,
+            eps_ms: inst.eps,
+            hysteresis_rel: hysteresis,
+            ..Default::default()
+        },
+    )
+}
+
+/// Cold reference at an arbitrary cluster state: fresh densification of
+/// the scaled model (the exact table the planner's rescale path promises
+/// to reproduce bit-for-bit), cold enumeration.
+fn cold_solve(
+    inst: &Instance,
+    stages: u32,
+    compute: f64,
+    comm: f64,
+) -> terapipe::solver::SliceScheme {
+    let scaled = ScaledModel { inner: inst.model.clone(), compute, comm };
+    let (scheme, _) = solve_tokens(&scaled, inst.seq_len, stages, inst.gran, inst.eps);
+    scheme
+}
+
+/// (a) The core contract: 120 randomized delta sequences, every decision
+/// bit-identical to the cold solve at that state.
+#[test]
+fn prop_warm_planner_bit_identical_to_cold_across_delta_sequences() {
+    prop::run_cases(120, |g| {
+        let inst = random_instance(g);
+        let mut stages = g.int(1, 24);
+        let mut p = planner_for(&inst, stages, 0.02);
+
+        // initial solve
+        let got = p.plan().clone();
+        let want = cold_solve(&inst, stages, 1.0, 1.0);
+        assert_eq!(got.lens, want.lens, "case {} initial", g.case);
+        assert!(got.latency_ms == want.latency_ms, "case {} initial", g.case);
+
+        // 3–8 random deltas
+        let deltas = g.int(3, 8);
+        for step in 0..deltas {
+            let d = match g.int(0, 2) {
+                0 => {
+                    stages = g.int(1, 24);
+                    p.on_stages_change(stages)
+                }
+                1 => p.on_bandwidth_change(g.float(0.25, 4.0)),
+                _ => p.on_slowdown(g.float(0.5, 2.0)),
+            };
+            let (compute, comm) = p.scales();
+            let want = cold_solve(&inst, stages, compute, comm);
+            assert_eq!(
+                d.scheme.lens, want.lens,
+                "case {} delta {step} (K={stages}, c={compute}, m={comm})",
+                g.case
+            );
+            assert!(
+                d.scheme.total_ms == want.total_ms
+                    && d.scheme.t_max_ms == want.t_max_ms
+                    && d.scheme.latency_ms == want.latency_ms,
+                "case {} delta {step}: warm {:?} vs cold {:?}",
+                g.case,
+                d.scheme,
+                want
+            );
+            assert!(d.warm.is_some(), "every re-solve after the first is warm");
+        }
+    });
+}
+
+/// (b) Drift path: samples from an undisclosed uniform slowdown trip the
+/// detector; the resulting decision is still bit-identical to a cold
+/// solve at the fitted scale.
+#[test]
+fn prop_drift_replans_are_bit_identical_to_cold() {
+    prop::run_cases(40, |g| {
+        let inst = random_instance(g);
+        let stages = g.int(2, 16);
+        let mut p = planner_for(&inst, stages, 0.02);
+        p.plan();
+
+        let factor = g.float(1.2, 2.0);
+        let truth = ScaledModel { inner: inst.model.clone(), compute: factor, comm: factor };
+        let n_units = inst.seq_len / inst.gran;
+        let mut decision = None;
+        for k in 0..64u32 {
+            let iu = 1 + (k % n_units.min(6));
+            let ju = k % (n_units - iu + 1);
+            let (i, j) = (iu * inst.gran, ju * inst.gran);
+            let ms = truth.t(i, j) + truth.t_comm(i);
+            if let Some(d) = p.on_sample(LatencySample { i, j, ms }) {
+                decision = Some(d);
+                break;
+            }
+        }
+        let d = decision.expect("a ≥20% uniform slowdown must trip the detector");
+        assert_eq!(d.trigger, ReplanTrigger::Drift);
+        let (compute, comm) = p.scales();
+        let want = cold_solve(&inst, stages, compute, comm);
+        assert_eq!(d.scheme.lens, want.lens, "case {}", g.case);
+        assert!(d.scheme.latency_ms == want.latency_ms, "case {}", g.case);
+    });
+}
+
+/// (c) The acceptance criterion's validation leg: every decision's
+/// predicted Eq. 5 latency replays through the discrete-event simulator
+/// within 1e-9 at its own cluster state.
+#[test]
+fn prop_emitted_plans_replay_through_the_simulator() {
+    prop::run_cases(60, |g| {
+        let inst = random_instance(g);
+        let mut p = planner_for(&inst, g.int(1, 16), 0.02);
+        let first = p.plan().clone();
+        validate::validate_scheme(&p.current_model(), &first, p.stages(), 1e-9)
+            .unwrap_or_else(|e| panic!("case {} initial: {e}", g.case));
+        // factor ranges kept moderate so the cumulative scale never
+        // inflates absolute latencies to where f64 accumulation noise
+        // could brush the 1e-9 acceptance tolerance
+        for step in 0..g.int(2, 5) {
+            let d = match g.int(0, 2) {
+                0 => p.on_stages_change(g.int(1, 16)),
+                1 => p.on_bandwidth_change(g.float(0.5, 2.0)),
+                _ => p.on_slowdown(g.float(0.6, 1.6)),
+            };
+            validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9)
+                .unwrap_or_else(|e| panic!("case {} delta {step}: {e}", g.case));
+        }
+    });
+}
+
+/// (d) Cache behaviour along a delta sequence: exactly one densification
+/// per instance, scale-only deltas served by rescales, repeated states by
+/// hits.
+#[test]
+fn cache_serves_repeat_states_without_rebuilding() {
+    let mut g = prop::Gen::new(5);
+    let inst = random_instance(&mut g);
+    let mut p = planner_for(&inst, 8, 0.02);
+    p.plan();
+    p.on_slowdown(1.5);
+    p.on_stages_change(4); // same scales: hits the 1.5 rescale
+    p.on_slowdown(1.0 / 1.5); // back to... a *new* cumulative factor bits-wise
+    let cs = p.cache_stats();
+    assert_eq!(cs.base_misses, 1, "one densification ever: {cs:?}");
+    assert!(cs.rescales >= 1, "{cs:?}");
+    assert!(cs.scaled_hits >= 1, "{cs:?}");
+}
+
+/// (e) Hysteresis: with an sky-high threshold the active plan never
+/// churns, yet every decision still reports the cold-identical fresh
+/// solve.
+#[test]
+fn hysteresis_keeps_active_plan_but_decisions_stay_exact() {
+    let mut g = prop::Gen::new(9);
+    let inst = random_instance(&mut g);
+    let mut p = planner_for(&inst, 12, f64::INFINITY);
+    let initial = p.plan().clone();
+    for factor in [1.5, 0.5, 2.0] {
+        let d = p.on_slowdown(factor);
+        assert!(!d.switched);
+        let (compute, comm) = p.scales();
+        let want = cold_solve(&inst, 12, compute, comm);
+        assert_eq!(d.scheme.lens, want.lens);
+        assert!(d.scheme.latency_ms == want.latency_ms);
+    }
+    assert_eq!(p.plan().lens, initial.lens, "active plan must not churn");
+}
