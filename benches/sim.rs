@@ -1,0 +1,272 @@
+//! Bench: the simulator fast path. Plan validation moved onto the hot
+//! path once the solvers went interactive (PR 1–3): `planner::validate`,
+//! `terapipe autotune`, and the 220-case differential suite all replay
+//! plans through the simulator. This bench times the three engines plus
+//! the batched fan-out and emits a machine-readable `BENCH_sim.json` at
+//! the workspace root (same protocol as `BENCH_dp_solver.json` /
+//! `BENCH_planner.json`).
+//!
+//! Measured per setting (paper Table 1 scales (5)/(8)/(9)):
+//!
+//! * full fwd+bwd schedules (irregular — the backward chains run in
+//!   reverse id order): `simulate_ref` (retained oracle) vs the arena DES
+//!   core, trace on and trace off;
+//! * regular replay streams (the validation workload): oracle vs the
+//!   auto-selected closed-form wavefront path;
+//! * a batch of independent replays: sequential single-arena loop vs
+//!   `simulate_many` across rayon.
+//!
+//! `--quick` runs a reduced matrix with few reps and no acceptance
+//! gates — the CI bench-smoke job uses it to catch hot-path regressions
+//! (compile errors, asserts, order-of-magnitude blowups) without full
+//! bench runtimes.
+
+use terapipe::config::presets;
+use terapipe::perfmodel::analytic::{AnalyticModel, AnalyticPhase};
+use terapipe::perfmodel::CostModel;
+use terapipe::sim::engine::{simulate_many, simulate_opts, simulate_ref, SimArena};
+use terapipe::sim::schedule::{build_plan, stream_plan};
+use terapipe::sim::wavefront;
+use terapipe::sim::Plan;
+use terapipe::solver::uniform::uniform_scheme;
+use terapipe::solver::JointScheme;
+use terapipe::util::json::Json;
+use terapipe::util::{time_ms, Stats};
+
+/// Full fwd+bwd schedule of one Table 1 setting under the analytic
+/// model: `parts` microbatches, each sliced uniformly at `gran` tokens.
+fn fwd_bwd_plan(setting_id: u32, gran: u32) -> (Plan, u32, u32, u32) {
+    let st = presets::setting(setting_id);
+    let base = AnalyticModel::from_setting(&st, 1);
+    let cost = AnalyticPhase { base: &base };
+    let k = st.parallel.pipeline_stages;
+    let parts = st.batch_per_pipeline();
+    let slices = st.model.seq_len / gran;
+    let scheme = uniform_scheme(&base, st.model.seq_len, k, slices, gran);
+    let joint = JointScheme {
+        parts: (0..parts).map(|_| (1u32, scheme.clone())).collect(),
+        latency_ms: 0.0,
+    };
+    let plan = build_plan(&cost, &joint, k as usize, None, false);
+    (plan, k, parts, slices)
+}
+
+/// Regular validation replay at the same scale: the K-stage replay
+/// stream over the concatenated slice durations (`parts × slices` items
+/// per stage) from the analytic model — exactly the plan shape
+/// `planner::validate::replay_plan` builds (shared builder:
+/// `sim::schedule::stream_plan`).
+fn replay_stream_plan(setting_id: u32, gran: u32, jitter: f64) -> Plan {
+    let st = presets::setting(setting_id);
+    let base = AnalyticModel::from_setting(&st, 1);
+    let parts = st.batch_per_pipeline();
+    let mut durs = Vec::new();
+    for _ in 0..parts {
+        let mut ctx = 0u32;
+        for _ in 0..st.model.seq_len / gran {
+            durs.push((base.t(gran, ctx) + base.t_comm(gran)) * jitter);
+            ctx += gran;
+        }
+    }
+    stream_plan(&durs, st.parallel.pipeline_stages as usize)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let reps = if quick { 2 } else { 7 };
+    let threads = rayon::current_num_threads();
+    println!("# simulator fast path (reps={reps}, threads={threads}{})", if quick { ", --quick" } else { "" });
+
+    // (setting, granularity) chosen so each full plan lands ~10–50k items
+    // (hundreds of thousands of heap events in the reference engine)
+    let matrix: &[(u32, u32)] = if quick { &[(5, 512)] } else { &[(5, 128), (8, 32), (9, 16)] };
+
+    let mut des_rows: Vec<Json> = Vec::new();
+    let mut wf_rows: Vec<Json> = Vec::new();
+    let mut arena = SimArena::new();
+    let mut setting9_arena_speedup = f64::NAN;
+    let mut setting9_wavefront_speedup = f64::NAN;
+
+    println!("\n## discrete-event core: reference vs arena (full fwd+bwd schedules)");
+    println!("| setting | K | parts | slices | items | ref (ms) | arena+trace (ms) | arena no-trace (ms) | speedup |");
+    for &(id, gran) in matrix {
+        let (plan, k, parts, slices) = fwd_bwd_plan(id, gran);
+        assert!(!wavefront::is_regular(&plan), "fwd+bwd plan must exercise the DES");
+        let n = plan.items.len();
+        let mut ref_wall = Vec::with_capacity(reps);
+        let mut tr_wall = Vec::with_capacity(reps);
+        let mut nt_wall = Vec::with_capacity(reps);
+        let mut ref_mk = 0.0f64;
+        let mut arena_mk = 0.0f64;
+        for _ in 0..reps {
+            let (r, ms) = time_ms(|| simulate_ref(&plan).unwrap());
+            ref_wall.push(ms);
+            ref_mk = r.makespan_ms;
+            let (a, ms) = time_ms(|| arena.simulate_des(&plan, true).unwrap());
+            tr_wall.push(ms);
+            arena_mk = a.makespan_ms;
+            let (a, ms) = time_ms(|| arena.simulate_des(&plan, false).unwrap());
+            nt_wall.push(ms);
+            assert_eq!(a.makespan_ms.to_bits(), arena_mk.to_bits());
+        }
+        // tolerance, not bit-equality: these plans have coincident finish
+        // instants (identical parts), where the engines may legally
+        // resolve ties differently (PERF.md §7) — in practice they have
+        // agreed exactly on every tested shape, but CI should not bet on
+        // unguaranteed tie behavior
+        assert!(
+            (ref_mk - arena_mk).abs() < 1e-9,
+            "setting ({id}): arena {arena_mk} diverged from the reference {ref_mk}"
+        );
+        let rs = Stats::from_samples(&ref_wall);
+        let ts = Stats::from_samples(&tr_wall);
+        let ns = Stats::from_samples(&nt_wall);
+        // min-over-reps is the steadiest estimator on a shared box
+        let speedup = rs.min / ns.min.max(1e-9);
+        if id == 9 {
+            setting9_arena_speedup = speedup;
+        }
+        println!(
+            "| ({id}) | {k} | {parts} | {slices} | {n} | {} | {} | {} | {speedup:.1}x |",
+            rs.pm(),
+            ts.pm(),
+            ns.pm()
+        );
+        des_rows.push(Json::obj(vec![
+            ("setting", Json::Num(id as f64)),
+            ("granularity", Json::Num(gran as f64)),
+            ("stages", Json::Num(k as f64)),
+            ("parts", Json::Num(parts as f64)),
+            ("slices_per_part", Json::Num(slices as f64)),
+            ("items", Json::Num(n as f64)),
+            ("ref_ms_min", Json::Num(rs.min)),
+            ("ref_ms_mean", Json::Num(rs.mean)),
+            ("arena_trace_ms_min", Json::Num(ts.min)),
+            ("arena_trace_ms_mean", Json::Num(ts.mean)),
+            ("arena_notrace_ms_min", Json::Num(ns.min)),
+            ("arena_notrace_ms_mean", Json::Num(ns.mean)),
+            ("speedup_min_over_min", Json::Num(speedup)),
+        ]));
+    }
+
+    println!("\n## wavefront closed form vs reference (regular validation replays)");
+    println!("| setting | K | stream | items | ref (ms) | wavefront (ms) | speedup |");
+    for &(id, gran) in matrix {
+        let plan = replay_stream_plan(id, gran, 1.0);
+        assert!(wavefront::is_regular(&plan), "replay stream must probe regular");
+        let n = plan.items.len();
+        let stages = plan.stages;
+        let stream = n / stages;
+        let mut ref_wall = Vec::with_capacity(reps);
+        let mut wf_wall = Vec::with_capacity(reps);
+        let mut ref_mk = 0.0f64;
+        let mut wf_mk = 0.0f64;
+        for _ in 0..reps {
+            let (r, ms) = time_ms(|| simulate_ref(&plan).unwrap());
+            ref_wall.push(ms);
+            ref_mk = r.makespan_ms;
+            // the production path: probe + closed form, trace off
+            let (w, ms) = time_ms(|| simulate_opts(&plan, false).unwrap());
+            wf_wall.push(ms);
+            wf_mk = w.makespan_ms;
+        }
+        assert!(
+            (ref_mk - wf_mk).abs() < 1e-9,
+            "setting ({id}): wavefront {wf_mk} diverged from reference {ref_mk}"
+        );
+        let rs = Stats::from_samples(&ref_wall);
+        let ws = Stats::from_samples(&wf_wall);
+        let speedup = rs.min / ws.min.max(1e-9);
+        if id == 9 {
+            setting9_wavefront_speedup = speedup;
+        }
+        println!("| ({id}) | {stages} | {stream} | {n} | {} | {} | {speedup:.0}x |", rs.pm(), ws.pm());
+        wf_rows.push(Json::obj(vec![
+            ("setting", Json::Num(id as f64)),
+            ("granularity", Json::Num(gran as f64)),
+            ("stages", Json::Num(stages as f64)),
+            ("stream_len", Json::Num(stream as f64)),
+            ("items", Json::Num(n as f64)),
+            ("ref_ms_min", Json::Num(rs.min)),
+            ("ref_ms_mean", Json::Num(rs.mean)),
+            ("wavefront_ms_min", Json::Num(ws.min)),
+            ("wavefront_ms_mean", Json::Num(ws.mean)),
+            ("speedup_min_over_min", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- batched replay: sequential single-arena loop vs simulate_many ----
+    let batch_setting = if quick { 5 } else { 9 };
+    let batch_gran = if quick { 512 } else { 16 };
+    let nplans = if quick { 8 } else { 32 };
+    println!("\n## batched replay: {nplans} validation plans, sequential vs simulate_many");
+    let plans: Vec<Plan> = (0..nplans)
+        .map(|i| replay_stream_plan(batch_setting, batch_gran, 1.0 + 0.002 * i as f64))
+        .collect();
+    let mut seq_wall = Vec::with_capacity(reps);
+    let mut par_wall = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let (seq_mks, ms) = time_ms(|| {
+            plans
+                .iter()
+                .map(|p| arena.simulate(p, false).unwrap().makespan_ms)
+                .collect::<Vec<f64>>()
+        });
+        seq_wall.push(ms);
+        let (par_mks, ms) = time_ms(|| simulate_many(&plans, false));
+        par_wall.push(ms);
+        for (s, p) in seq_mks.iter().zip(&par_mks) {
+            assert_eq!(s.to_bits(), p.as_ref().unwrap().makespan_ms.to_bits());
+        }
+    }
+    let ss = Stats::from_samples(&seq_wall);
+    let ps = Stats::from_samples(&par_wall);
+    let batch_speedup = ss.min / ps.min.max(1e-9);
+    println!("sequential: {} ms (min {:.2})", ss.pm(), ss.min);
+    println!("batched:    {} ms (min {:.2})", ps.pm(), ps.min);
+    println!("speedup: {batch_speedup:.2}x on {threads} threads");
+
+    // ---- machine-readable report (workspace root) ----
+    let report = Json::obj(vec![
+        ("bench", Json::Str("sim".into())),
+        ("quick", Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("reps", Json::Num(reps as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("des", Json::arr(des_rows)),
+        ("wavefront", Json::arr(wf_rows)),
+        (
+            "batched",
+            Json::obj(vec![
+                ("setting", Json::Num(batch_setting as f64)),
+                ("plans", Json::Num(nplans as f64)),
+                ("seq_wall_ms_min", Json::Num(ss.min)),
+                ("seq_wall_ms_mean", Json::Num(ss.mean)),
+                ("par_wall_ms_min", Json::Num(ps.min)),
+                ("par_wall_ms_mean", Json::Num(ps.mean)),
+                ("speedup_min_over_min", Json::Num(batch_speedup)),
+            ]),
+        ),
+    ]);
+    // resolve at runtime: the binary may run on a different machine /
+    // checkout than it was built on (cargo sets the var for bench runs;
+    // fall back to the current directory elsewhere)
+    let path = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/../BENCH_sim.json"))
+        .unwrap_or_else(|_| "BENCH_sim.json".into());
+    std::fs::write(&path, report.to_string() + "\n").expect("write BENCH_sim.json");
+    println!("\nwrote {path}");
+
+    // Acceptance gates (ISSUE 4), checked last so the JSON above records
+    // the run even when a gate fails. Both speedups are algorithmic
+    // (single replay, one thread), so no thread-count guard applies.
+    if !quick {
+        assert!(
+            setting9_arena_speedup >= 5.0,
+            "acceptance: arena DES must be ≥5x the reference on setting (9) replay, got {setting9_arena_speedup:.2}x"
+        );
+        assert!(
+            setting9_wavefront_speedup >= 20.0,
+            "acceptance: wavefront must be ≥20x the reference on regular plans, got {setting9_wavefront_speedup:.2}x"
+        );
+    }
+}

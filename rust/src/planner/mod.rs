@@ -504,14 +504,22 @@ mod tests {
     #[test]
     fn emitted_plans_validate_against_the_simulator() {
         // each decision must be judged against the cluster state it was
-        // solved under, immediately after its event
+        // solved under, immediately after its event: the replay plan is
+        // built right away (baking the model snapshot into durations),
+        // then the whole batch fans through simulate_many at the end
         let mut p = planner(8);
         p.plan();
+        let mut plans = Vec::new();
+        let mut preds = Vec::new();
         let d = p.on_stages_change(16);
-        validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9).unwrap();
+        plans.push(validate::replay_plan(&p.current_model(), &d.scheme.lens, d.stages));
+        preds.push(d.scheme.latency_ms);
         let d = p.on_slowdown(1.3);
-        validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9).unwrap();
+        plans.push(validate::replay_plan(&p.current_model(), &d.scheme.lens, d.stages));
+        preds.push(d.scheme.latency_ms);
         let d = p.on_bandwidth_change(0.7);
-        validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9).unwrap();
+        plans.push(validate::replay_plan(&p.current_model(), &d.scheme.lens, d.stages));
+        preds.push(d.scheme.latency_ms);
+        validate::validate_plans(&plans, &preds, 1e-9).unwrap();
     }
 }

@@ -1,6 +1,6 @@
 //! Sim-backed plan validation: replay an emitted plan through the
-//! discrete-event engine and check the planner's predicted Eq. 5 latency
-//! against the simulated makespan.
+//! simulator and check the planner's predicted Eq. 5 latency against the
+//! simulated makespan.
 //!
 //! The replay regime is the one where Eq. 5 is exact (the same regime the
 //! `solver_sim_differential` suite pins): every stage executes the plan's
@@ -10,55 +10,48 @@
 //! mis-predicts (stale totals, wrong scale factor, budget-vs-achieved
 //! `t_max` confusion) diverges within 1e-9 and `terapipe autotune`
 //! refuses the plan.
+//!
+//! Validation is the fast path now: replay plans are *regular* (per-stage
+//! chains, no barrier/cap), so [`crate::sim::engine::simulate_opts`]
+//! routes them to the closed-form wavefront evaluator with trace
+//! collection off — no event heap, no span bookkeeping. Batch consumers
+//! (the autotune trace replayer, the planner property suites) build their
+//! replay plans with [`replay_plan`] and fan them through
+//! [`validate_plans`], which rides [`crate::sim::engine::simulate_many`]
+//! across rayon with one reusable `SimArena` per worker.
 
 use crate::perfmodel::CostModel;
-use crate::sim::engine::simulate;
-use crate::sim::{Item, Phase, Plan};
+use crate::sim::engine::{simulate_many, simulate_opts};
+use crate::sim::schedule::stream_plan;
+use crate::sim::Plan;
 use crate::solver::SliceScheme;
 
-/// Simulated pipeline latency (ms) of slicing `lens` on a `stages`-deep
-/// pipeline under `model` — the independent judge for a planner
-/// prediction.
-pub fn replay_latency<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> f64 {
+/// Build the Eq. 5-exact replay plan for slicing `lens` on a
+/// `stages`-deep pipeline under `model`: the K×M replay stream
+/// ([`stream_plan`]) with each slice's duration the Eq. 4 stage time
+/// `t(lᵢ, ctxᵢ) + t_comm(lᵢ)`. The model snapshot is baked into the item
+/// durations, so the plan can be validated later (batched) even after
+/// the planner's live model has drifted on.
+pub fn replay_plan<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> Plan {
     assert!(!lens.is_empty() && stages >= 1);
-    let stages = stages as usize;
     let mut durs = Vec::with_capacity(lens.len());
     let mut ctx = 0u32;
     for &l in lens {
         durs.push(model.t(l, ctx) + model.t_comm(l));
         ctx += l;
     }
-    let m = durs.len();
-    let mut items = Vec::with_capacity(m * stages);
-    for s in 0..stages {
-        for (i, &d) in durs.iter().enumerate() {
-            let mut deps = Vec::new();
-            if s > 0 {
-                deps.push(((s - 1) * m + i, 0.0));
-            }
-            if i > 0 {
-                deps.push((s * m + i - 1, 0.0));
-            }
-            items.push(Item {
-                id: s * m + i,
-                stage: s,
-                phase: Phase::Fwd,
-                part: 0,
-                slice: i,
-                dur_ms: d,
-                deps,
-                priority: (s * m + i) as u64,
-            });
-        }
-    }
-    simulate(&Plan {
-        stages,
-        items,
-        mem_cap_parts: None,
-        flush_barrier: false,
-    })
-    .expect("replay plan has no cap/barrier, cannot deadlock")
-    .makespan_ms
+    stream_plan(&durs, stages as usize)
+}
+
+/// Simulated pipeline latency (ms) of slicing `lens` on a `stages`-deep
+/// pipeline under `model` — the independent judge for a planner
+/// prediction. Single-plan convenience over the wavefront fast path
+/// (trace off); use [`replay_plan`] + [`validate_plans`] to batch.
+/// `Err` when the plan cannot be simulated at all — a degenerate model
+/// (NaN/negative stage times) is a validation failure, not a panic: this
+/// runs inside the long-lived planner service.
+pub fn replay_latency<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> Result<f64, String> {
+    Ok(simulate_opts(&replay_plan(model, lens, stages), false)?.makespan_ms)
 }
 
 /// Replay `scheme` and compare against its own predicted latency.
@@ -70,7 +63,7 @@ pub fn validate_scheme<M: CostModel>(
     stages: u32,
     tol_ms: f64,
 ) -> Result<f64, String> {
-    let sim = replay_latency(model, &scheme.lens, stages);
+    let sim = replay_latency(model, &scheme.lens, stages)?;
     if (sim - scheme.latency_ms).abs() <= tol_ms {
         Ok(sim)
     } else {
@@ -84,9 +77,60 @@ pub fn validate_scheme<M: CostModel>(
     }
 }
 
+/// Batched validation: replay every plan (built with [`replay_plan`]
+/// against the model snapshot it was solved under) through
+/// `simulate_many` with trace collection off, and compare each simulated
+/// makespan to its predicted latency. Returns the simulated latencies in
+/// input order, or the first divergence.
+pub fn validate_plans(
+    plans: &[Plan],
+    predicted_ms: &[f64],
+    tol_ms: f64,
+) -> Result<Vec<f64>, String> {
+    if plans.len() != predicted_ms.len() {
+        // Err, not assert: this runs inside the long-lived planner
+        // service, which must survive a caller that drops an infeasible
+        // scheme from one of the two lists
+        return Err(format!(
+            "one prediction per replay plan: {} plans vs {} predictions",
+            plans.len(),
+            predicted_ms.len()
+        ));
+    }
+    let results = simulate_many(plans, false);
+    let mut sims = Vec::with_capacity(plans.len());
+    for (i, (r, &pred)) in results.into_iter().zip(predicted_ms).enumerate() {
+        let sim = r
+            .map_err(|e| format!("replay plan #{i} failed to simulate: {e}"))?
+            .makespan_ms;
+        if (sim - pred).abs() > tol_ms {
+            return Err(format!(
+                "plan #{i} predicts {pred:.9} ms but replays at {sim:.9} ms (Δ {:.3e} > {tol_ms:.1e})",
+                (sim - pred).abs()
+            ));
+        }
+        sims.push(sim);
+    }
+    Ok(sims)
+}
+
+/// Batched [`validate_scheme`]: all schemes solved under one `model`
+/// snapshot, each with its own stage count.
+pub fn validate_schemes<M: CostModel>(
+    model: &M,
+    schemes: &[(&SliceScheme, u32)],
+    tol_ms: f64,
+) -> Result<Vec<f64>, String> {
+    let plans: Vec<Plan> =
+        schemes.iter().map(|(s, k)| replay_plan(model, &s.lens, *k)).collect();
+    let preds: Vec<f64> = schemes.iter().map(|(s, _)| s.latency_ms).collect();
+    validate_plans(&plans, &preds, tol_ms)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::wavefront;
     use crate::solver::dp::solve_tokens;
 
     struct Toy;
@@ -117,8 +161,48 @@ mod tests {
     #[test]
     fn replay_matches_closed_form_eq5() {
         let lens = [64u32, 128, 64];
-        let sim = replay_latency(&Toy, &lens, 5);
+        let sim = replay_latency(&Toy, &lens, 5).unwrap();
         let want = crate::perfmodel::pipeline_latency(&Toy, &lens, 5);
         assert!((sim - want).abs() < 1e-9, "{sim} vs {want}");
+    }
+
+    #[test]
+    fn degenerate_model_is_an_error_not_a_panic() {
+        struct Nan;
+        impl CostModel for Nan {
+            fn t(&self, _i: u32, _j: u32) -> f64 {
+                f64::NAN
+            }
+            fn t_comm(&self, _i: u32) -> f64 {
+                0.0
+            }
+        }
+        let err = replay_latency(&Nan, &[64, 64], 4).unwrap_err();
+        assert!(err.contains("duration"), "{err}");
+    }
+
+    #[test]
+    fn replay_plans_are_regular_so_validation_takes_the_wavefront_path() {
+        let p = replay_plan(&Toy, &[64, 128, 64], 5);
+        assert!(wavefront::is_regular(&p));
+    }
+
+    #[test]
+    fn batched_validation_matches_per_scheme_validation() {
+        let (a, _) = solve_tokens(&Toy, 256, 8, 8, 0.0);
+        let (b, _) = solve_tokens(&Toy, 128, 4, 8, 0.0);
+        let sims = validate_schemes(&Toy, &[(&a, 8), (&b, 4)], 1e-9).unwrap();
+        assert_eq!(sims.len(), 2);
+        assert!((sims[0] - validate_scheme(&Toy, &a, 8, 1e-9).unwrap()).abs() == 0.0);
+        assert!((sims[1] - validate_scheme(&Toy, &b, 4, 1e-9).unwrap()).abs() == 0.0);
+    }
+
+    #[test]
+    fn batched_validation_reports_the_first_divergence() {
+        let (a, _) = solve_tokens(&Toy, 256, 8, 8, 0.0);
+        let plans = vec![replay_plan(&Toy, &a.lens, 8), replay_plan(&Toy, &a.lens, 8)];
+        let preds = vec![a.latency_ms, a.latency_ms * 1.5];
+        let err = validate_plans(&plans, &preds, 1e-9).unwrap_err();
+        assert!(err.contains("plan #1"), "{err}");
     }
 }

@@ -8,12 +8,503 @@
 //! forward slice of a batch part on that stage — an activation slot is
 //! free. Backward completion of a part's last slice releases the slot
 //! (Appendix A's memory constraint).
+//!
+//! Two implementations share this contract:
+//!
+//! * [`simulate_ref`] — the original engine, retained verbatim as the
+//!   property-test oracle (repo style: every rewritten hot path keeps its
+//!   reference implementation; see `solve_tokens_seq`,
+//!   `solve_fixed_tmax_ref`).
+//! * [`SimArena`] — the production core. All per-run buffers live in the
+//!   arena and are reused across replays; dependency *and* dependent
+//!   edges are CSR-flattened with the edge delay stored per edge (the
+//!   reference does a linear `find` over the dependent's deps on every
+//!   completion); completions re-dispatch only the finishing stage
+//!   instead of all K (every other unblock path already has a pending
+//!   event — see `dispatch` for the case analysis); the deferred-items
+//!   scratch buffer is reused instead of allocated per dispatch; and
+//!   trace collection is optional so validation replays skip [`Span`]
+//!   bookkeeping entirely.
+//!
+//! The free functions [`simulate`] / [`simulate_opts`] are the public
+//! entry points: they run a plan-shape probe ([`wavefront::is_regular`])
+//! and route regular plans (per-stage chains, no barrier, no memory cap —
+//! the class token-level pipeline schedules actually produce) to the
+//! closed-form [`wavefront`] evaluator, everything else to a thread-local
+//! [`SimArena`]. [`simulate_many`] fans independent replays across rayon
+//! with one arena per worker.
+//!
+//! Equivalence is pinned by `tests/sim_equivalence.rs`: arena vs
+//! reference is bit-identical (makespan, busy, trace) on randomized DAGs
+//! including barriers, memory caps, edge delays and priority ties;
+//! wavefront vs DES agrees within 1e-9 on regular plans.
 
+use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use rayon::prelude::*;
+
 use super::trace::Span;
+use super::wavefront;
 use super::{Phase, Plan, SimResult};
+
+/// The paper's "pipeline bubble" share, guarded against the empty /
+/// zero-makespan plans where the naive ratio is 0/0 (NaN): a plan with no
+/// work has no bubbles.
+#[inline]
+pub(crate) fn bubble_frac(total_busy: f64, stages: usize, makespan: f64) -> f64 {
+    if makespan <= 0.0 {
+        0.0
+    } else {
+        1.0 - total_busy / (stages as f64 * makespan)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (probe + thread-local arena)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static TL_ARENA: RefCell<SimArena> = RefCell::new(SimArena::new());
+}
+
+/// Simulate the plan (trace collection on). Regular plans take the
+/// closed-form wavefront path, everything else the arena-backed
+/// discrete-event core; both reuse a thread-local [`SimArena`] so repeated
+/// calls on one thread allocate nothing beyond the returned result.
+/// Returns an error on malformed input or deadlock (e.g. a memory cap
+/// that can never be satisfied under a flush barrier — Appendix A's
+/// failure mode) instead of looping forever.
+pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
+    simulate_opts(plan, true)
+}
+
+/// [`simulate`] with trace collection optional: validation replays that
+/// only need the makespan pass `collect_trace = false` and skip all
+/// [`Span`] bookkeeping (the returned trace is empty).
+pub fn simulate_opts(plan: &Plan, collect_trace: bool) -> Result<SimResult, String> {
+    TL_ARENA.with(|a| a.borrow_mut().simulate(plan, collect_trace))
+}
+
+/// Replay many independent plans in parallel (one [`SimArena`] per rayon
+/// worker, reused across the plans it processes). Results come back in
+/// input order. This is the batched path behind `planner::validate` and
+/// the solver-vs-sim differential suite.
+pub fn simulate_many(plans: &[Plan], collect_trace: bool) -> Vec<Result<SimResult, String>> {
+    plans
+        .par_iter()
+        .map_init(SimArena::new, |arena, p| arena.simulate(p, collect_trace))
+        .collect()
+}
+
+/// Structural validation shared by both engines' entry points. The
+/// reference engine `assert!`s; the production path returns `Err` so a
+/// malformed plan (NaN duration, dangling dep, off-by-one stage) can
+/// never panic the simulator — `planner::validate` runs inside a
+/// long-lived service.
+fn check_plan(plan: &Plan) -> Result<(), String> {
+    if plan.stages == 0 {
+        return Err("plan must have at least one stage".into());
+    }
+    let n = plan.items.len();
+    for (idx, it) in plan.items.iter().enumerate() {
+        if it.id != idx {
+            return Err(format!("item ids must be dense and sorted: index {idx} holds id {}", it.id));
+        }
+        if it.stage >= plan.stages {
+            return Err(format!("item {} on stage {} ≥ {}", it.id, it.stage, plan.stages));
+        }
+        if !(it.dur_ms >= 0.0) {
+            return Err(format!("item {} has negative or non-finite duration {}", it.id, it.dur_ms));
+        }
+        for &(d, del) in &it.deps {
+            if d >= n {
+                return Err(format!("item {} depends on out-of-range id {d}", it.id));
+            }
+            if !(del >= 0.0) {
+                return Err(format!("item {} has negative or non-finite edge delay {del}", it.id));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Arena-backed discrete-event core
+// ---------------------------------------------------------------------------
+
+/// Event in the arena core's heap. Ordering matches the reference
+/// engine's: time, then kind (0 = finish before 1 = wake at ties), then
+/// item id — via `total_cmp`, so a NaN time can never panic the heap.
+/// `stage` is deliberately not part of the order (same as the reference);
+/// equal-time wakes on different stages commute because a dispatch only
+/// touches its own stage's state. The heaps live in the arena —
+/// `BinaryHeap::clear()` retains capacity, so reuse stays allocation-free.
+#[derive(Clone, Copy, PartialEq)]
+struct AEv {
+    time: f64,
+    kind: u8,
+    stage: u32,
+    item: u32,
+}
+
+impl Eq for AEv {}
+impl PartialOrd for AEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for AEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.kind.cmp(&other.kind))
+            .then(self.item.cmp(&other.item))
+    }
+}
+
+/// Reusable simulation arena: every per-run buffer is allocated once and
+/// reused across replays, so steady-state replay does no heap allocation
+/// beyond the returned [`SimResult`] (and, in trace mode, its spans).
+///
+/// Reuse protocol: one arena per thread (`&mut self` enforces exclusive
+/// use); call [`SimArena::simulate`] — or [`SimArena::simulate_des`] to
+/// bypass the wavefront probe — as many times as you like. Buffers grow to
+/// the largest plan seen and stay there. The free functions
+/// [`simulate`] / [`simulate_opts`] wrap a thread-local arena;
+/// [`simulate_many`] builds one per rayon worker.
+pub struct SimArena {
+    // CSR dependents: for item i, `dept_edge[dept_off[i]..dept_off[i+1]]`
+    // holds `(dependent id, edge delay)` — the delay is stored per edge so
+    // a completion releases each dependent in O(1) (the reference engine
+    // re-finds the delay with a linear scan of the dependent's deps).
+    dept_off: Vec<u32>,
+    dept_edge: Vec<(u32, f64)>,
+    csr_cursor: Vec<u32>,
+    // per-item
+    missing: Vec<u32>,
+    ready_time: Vec<f64>,
+    finish: Vec<f64>,
+    started: Vec<bool>,
+    // per-stage
+    idle_at: Vec<f64>,
+    busy: Vec<f64>,
+    fwd_left: Vec<u32>,
+    used_slots: Vec<u32>,
+    has_bwd: Vec<bool>,
+    queues: Vec<BinaryHeap<Reverse<(u64, u32)>>>,
+    // per (stage, part), stage-major
+    holds: Vec<bool>,
+    bwd_left: Vec<u32>,
+    // event heap + dispatch scratch
+    events: BinaryHeap<Reverse<AEv>>,
+    deferred: Vec<(u64, u32)>,
+}
+
+impl Default for SimArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimArena {
+    pub fn new() -> SimArena {
+        SimArena {
+            dept_off: Vec::new(),
+            dept_edge: Vec::new(),
+            csr_cursor: Vec::new(),
+            missing: Vec::new(),
+            ready_time: Vec::new(),
+            finish: Vec::new(),
+            started: Vec::new(),
+            idle_at: Vec::new(),
+            busy: Vec::new(),
+            fwd_left: Vec::new(),
+            used_slots: Vec::new(),
+            has_bwd: Vec::new(),
+            queues: Vec::new(),
+            holds: Vec::new(),
+            bwd_left: Vec::new(),
+            events: BinaryHeap::new(),
+            deferred: Vec::new(),
+        }
+    }
+
+    /// Simulate `plan`, auto-selecting the engine: regular plans (see
+    /// [`wavefront::is_regular`]) take the closed-form evaluator, the
+    /// rest the discrete-event core. The probe runs first — it rejects
+    /// every malformed shape `check_plan` would (non-dense ids, stage
+    /// bounds, NaN/negative durations and delays), so the regular fast
+    /// path pays exactly one O(items + edges) structural scan and
+    /// irregular/malformed plans fall through to the DES entry, whose
+    /// `check_plan` produces the descriptive error.
+    pub fn simulate(&mut self, plan: &Plan, collect_trace: bool) -> Result<SimResult, String> {
+        if wavefront::is_regular(plan) {
+            // reuse the arena's finish buffer as the recurrence scratch
+            return Ok(wavefront::evaluate_into(plan, collect_trace, &mut self.finish));
+        }
+        self.simulate_des(plan, collect_trace)
+    }
+
+    /// Simulate `plan` through the discrete-event core unconditionally
+    /// (no wavefront probe) — the engine the equivalence suite compares
+    /// bit-for-bit against [`simulate_ref`].
+    pub fn simulate_des(&mut self, plan: &Plan, collect_trace: bool) -> Result<SimResult, String> {
+        check_plan(plan)?;
+        self.run_des(plan, collect_trace)
+    }
+
+    fn reset(&mut self, n: usize, k: usize, parts: usize) {
+        self.dept_off.clear();
+        self.dept_off.resize(n + 1, 0);
+        self.csr_cursor.clear();
+        self.missing.clear();
+        self.missing.resize(n, 0);
+        self.ready_time.clear();
+        self.ready_time.resize(n, 0.0);
+        self.finish.clear();
+        self.finish.resize(n, f64::NAN);
+        self.started.clear();
+        self.started.resize(n, false);
+        self.idle_at.clear();
+        self.idle_at.resize(k, 0.0);
+        self.busy.clear();
+        self.busy.resize(k, 0.0);
+        self.fwd_left.clear();
+        self.fwd_left.resize(k, 0);
+        self.used_slots.clear();
+        self.used_slots.resize(k, 0);
+        self.has_bwd.clear();
+        self.has_bwd.resize(k, false);
+        while self.queues.len() < k {
+            self.queues.push(BinaryHeap::new());
+        }
+        for q in &mut self.queues {
+            q.clear();
+        }
+        self.holds.clear();
+        self.holds.resize(k * parts, false);
+        self.bwd_left.clear();
+        self.bwd_left.resize(k * parts, 0);
+        self.events.clear();
+        self.deferred.clear();
+    }
+
+    /// The event loop. Identical scheduling decisions to [`simulate_ref`]
+    /// on tie-free plans — no two events at bit-identical times, which
+    /// continuous durations guarantee and the equivalence suite pins
+    /// bit-for-bit. (At exactly coincident instants the engines may
+    /// resolve ties into different, equally legal schedules: the
+    /// reference dispatches stages against stale same-instant state.
+    /// See PERF.md §7.) Three structural differences, none of which
+    /// change tie-free decisions:
+    ///
+    /// * a completion re-dispatches only its own stage. Every other way an
+    ///   item can become dispatchable already has a pending event: stage
+    ///   idle / barrier lift / memory-slot release all happen via a finish
+    ///   on the item's own stage, and readiness pushes a wake at the
+    ///   item's final `ready_time` the moment its last dep completes.
+    /// * no wake is pushed when a dispatch defers a not-yet-ready item —
+    ///   the readiness wake above is already in the heap (the reference
+    ///   pushes a redundant duplicate on every scan).
+    /// * the t=0 wakes are replaced by direct dispatch calls before the
+    ///   loop (nothing can precede them in the heap).
+    fn run_des(&mut self, plan: &Plan, collect_trace: bool) -> Result<SimResult, String> {
+        let n = plan.items.len();
+        let k = plan.stages;
+        let parts = plan.items.iter().map(|i| i.part).max().map_or(0, |p| p + 1);
+        self.reset(n, k, parts);
+
+        // pass 1: per-item/per-stage counts, CSR edge counts
+        for it in &plan.items {
+            self.missing[it.id] = it.deps.len() as u32;
+            for &(d, _) in &it.deps {
+                self.dept_off[d + 1] += 1;
+            }
+            if it.phase == Phase::Fwd {
+                self.fwd_left[it.stage] += 1;
+            } else {
+                self.bwd_left[it.stage * parts + it.part] += 1;
+                self.has_bwd[it.stage] = true;
+            }
+        }
+        for i in 0..n {
+            self.dept_off[i + 1] += self.dept_off[i];
+        }
+        // pass 2: place edges
+        let edges = self.dept_off[n] as usize;
+        self.dept_edge.clear();
+        self.dept_edge.resize(edges, (0, 0.0));
+        self.csr_cursor.extend_from_slice(&self.dept_off[..n]);
+        for it in &plan.items {
+            for &(d, del) in &it.deps {
+                let c = self.csr_cursor[d] as usize;
+                self.dept_edge[c] = (it.id as u32, del);
+                self.csr_cursor[d] += 1;
+            }
+        }
+
+        let mut trace: Vec<Span> = Vec::with_capacity(if collect_trace { n } else { 0 });
+
+        // items with no deps are ready at t=0; dispatch every stage once
+        for it in &plan.items {
+            if it.deps.is_empty() {
+                self.queues[it.stage].push(Reverse((it.priority, it.id as u32)));
+            }
+        }
+        for s in 0..k {
+            self.dispatch(0.0, s, plan, parts, collect_trace, &mut trace);
+        }
+
+        let mut done = 0usize;
+        while let Some(Reverse(ev)) = self.events.pop() {
+            let now = ev.time;
+            if ev.kind == 0 {
+                // item finished
+                let id = ev.item as usize;
+                self.finish[id] = now;
+                done += 1;
+                let it = &plan.items[id];
+                let s = it.stage;
+                if it.phase == Phase::Fwd {
+                    self.fwd_left[s] -= 1;
+                } else {
+                    let hp = s * parts + it.part;
+                    self.bwd_left[hp] -= 1;
+                    if self.bwd_left[hp] == 0 && self.holds[hp] {
+                        self.holds[hp] = false;
+                        self.used_slots[s] -= 1;
+                    }
+                }
+                // release dependents (O(1) per edge via the CSR delay)
+                let (a, b) = (self.dept_off[id] as usize, self.dept_off[id + 1] as usize);
+                for e in a..b {
+                    let (dep_id, delay) = self.dept_edge[e];
+                    let di = dep_id as usize;
+                    self.ready_time[di] = self.ready_time[di].max(now + delay);
+                    self.missing[di] -= 1;
+                    if self.missing[di] == 0 {
+                        let ds = plan.items[di].stage;
+                        self.queues[ds].push(Reverse((plan.items[di].priority, dep_id)));
+                        self.events.push(Reverse(AEv {
+                            time: self.ready_time[di].max(now),
+                            kind: 1,
+                            stage: ds as u32,
+                            item: u32::MAX,
+                        }));
+                    }
+                }
+                // targeted wakeup: only the finishing stage can have
+                // gained dispatchability from this completion
+                self.dispatch(now, s, plan, parts, collect_trace, &mut trace);
+            } else {
+                self.dispatch(now, ev.stage as usize, plan, parts, collect_trace, &mut trace);
+            }
+        }
+
+        if done != n {
+            // unreachable items ⇒ same report as the reference engine
+            return Err(format!(
+                "deadlock: {done}/{n} items completed (memory cap {:?} with flush_barrier={} is unsatisfiable)",
+                plan.mem_cap_parts, plan.flush_barrier
+            ));
+        }
+
+        let makespan = self.finish[..n].iter().copied().fold(0.0f64, f64::max);
+        let total_busy: f64 = self.busy[..k].iter().sum();
+        trace.sort_by(|x, y| x.stage.cmp(&y.stage).then(x.start_ms.total_cmp(&y.start_ms)));
+        Ok(SimResult {
+            makespan_ms: makespan,
+            bubble_fraction: bubble_frac(total_busy, k, makespan),
+            busy_ms: self.busy[..k].to_vec(),
+            trace,
+        })
+    }
+
+    /// Dispatch as much as possible on stage `s` at `now`: scan the ready
+    /// queue for the best dispatchable item, deferring blocked ones into
+    /// the reused scratch buffer (the reference allocates a fresh `Vec`
+    /// per call).
+    fn dispatch(
+        &mut self,
+        now: f64,
+        s: usize,
+        plan: &Plan,
+        parts: usize,
+        collect_trace: bool,
+        trace: &mut Vec<Span>,
+    ) {
+        if self.idle_at[s] > now {
+            return;
+        }
+        debug_assert!(self.deferred.is_empty());
+        let mut chosen: Option<u32> = None;
+        while let Some(Reverse((prio, id))) = self.queues[s].pop() {
+            let idu = id as usize;
+            if self.started[idu] {
+                continue;
+            }
+            let it = &plan.items[idu];
+            let mut blocked = self.ready_time[idu] > now;
+            if !blocked && plan.flush_barrier && it.phase == Phase::Bwd && self.fwd_left[s] > 0 {
+                blocked = true; // barrier lifts when this stage's last fwd finishes
+            }
+            if !blocked && it.phase == Phase::Fwd && self.has_bwd[s] {
+                if let Some(cap) = plan.mem_cap_parts {
+                    if !self.holds[s * parts + it.part] && self.used_slots[s] >= cap {
+                        blocked = true; // slot frees on a bwd completion here
+                    }
+                }
+            }
+            if blocked {
+                // no wake push: a not-yet-ready item already has its
+                // readiness wake in the heap (pushed when its last dep
+                // finished), and barrier/memory blocks can only lift via a
+                // finish on this stage, which re-dispatches it.
+                self.deferred.push((prio, id));
+            } else {
+                chosen = Some(id);
+                break;
+            }
+        }
+        for i in 0..self.deferred.len() {
+            let d = self.deferred[i];
+            self.queues[s].push(Reverse(d));
+        }
+        self.deferred.clear();
+        if let Some(id) = chosen {
+            let idu = id as usize;
+            let it = &plan.items[idu];
+            if it.phase == Phase::Fwd && self.has_bwd[s] && plan.mem_cap_parts.is_some() {
+                let hp = s * parts + it.part;
+                if !self.holds[hp] {
+                    self.holds[hp] = true;
+                    self.used_slots[s] += 1;
+                }
+            }
+            self.started[idu] = true;
+            let end = now + it.dur_ms;
+            self.idle_at[s] = end;
+            self.busy[s] += it.dur_ms;
+            if collect_trace {
+                trace.push(Span {
+                    stage: s,
+                    start_ms: now,
+                    end_ms: end,
+                    phase: it.phase,
+                    part: it.part,
+                    slice: it.slice,
+                });
+            }
+            self.events.push(Reverse(AEv { time: end, kind: 0, stage: s as u32, item: id }));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference engine (oracle)
+// ---------------------------------------------------------------------------
 
 #[derive(Debug, PartialEq)]
 struct Ev {
@@ -33,17 +524,21 @@ impl PartialOrd for Ev {
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.time
-            .partial_cmp(&other.time)
-            .unwrap()
+            .total_cmp(&other.time)
             .then(self.kind.cmp(&other.kind))
             .then(self.item.cmp(&other.item))
     }
 }
 
-/// Simulate the plan. Returns an error on deadlock (e.g. a memory cap that
-/// can never be satisfied under a flush barrier — Appendix A's failure
-/// mode) instead of looping forever.
-pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
+/// The original discrete-event engine, retained as the property-test
+/// oracle (`tests/sim_equivalence.rs` pins the arena core to it
+/// bit-for-bit). Allocates every buffer per call and re-dispatches all K
+/// stages on every completion — do not use on a hot path.
+///
+/// Returns an error on deadlock (e.g. a memory cap that can never be
+/// satisfied under a flush barrier — Appendix A's failure mode) instead
+/// of looping forever.
+pub fn simulate_ref(plan: &Plan) -> Result<SimResult, String> {
     let n = plan.items.len();
     let k = plan.stages;
     assert!(k >= 1);
@@ -254,10 +749,10 @@ pub fn simulate(plan: &Plan) -> Result<SimResult, String> {
 
     let makespan = finish.iter().copied().fold(0.0f64, f64::max);
     let total_busy: f64 = busy.iter().sum();
-    trace.sort_by(|a, b| (a.stage, a.start_ms).partial_cmp(&(b.stage, b.start_ms)).unwrap());
+    trace.sort_by(|a, b| a.stage.cmp(&b.stage).then(a.start_ms.total_cmp(&b.start_ms)));
     Ok(SimResult {
         makespan_ms: makespan,
-        bubble_fraction: 1.0 - total_busy / (k as f64 * makespan),
+        bubble_fraction: bubble_frac(total_busy, k, makespan),
         busy_ms: busy,
         trace,
     })
@@ -408,10 +903,12 @@ mod tests {
             item(2, 0, Phase::Fwd, 1, 0, 1.0, vec![]),
             item(3, 0, Phase::Bwd, 1, 0, 1.0, vec![(2, 0.0)]),
         ];
-        let err =
-            simulate(&Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: true })
-                .unwrap_err();
+        let plan =
+            Plan { stages: 1, items, mem_cap_parts: Some(1), flush_barrier: true };
+        let err = simulate(&plan).unwrap_err();
         assert!(err.contains("deadlock"));
+        // oracle agrees
+        assert!(simulate_ref(&plan).unwrap_err().contains("deadlock"));
     }
 
     #[test]
@@ -452,5 +949,109 @@ mod tests {
             simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false })
                 .unwrap();
         assert_eq!(r.trace[0].part, 1);
+    }
+
+    // ---- fast-path / robustness pins (this PR) ----
+
+    #[test]
+    fn empty_plan_has_zero_makespan_and_zero_bubble() {
+        // the naive bubble ratio is 0/0 here; the guard pins it to 0.0
+        let r = simulate(&Plan {
+            stages: 3,
+            items: vec![],
+            mem_cap_parts: None,
+            flush_barrier: false,
+        })
+        .unwrap();
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.bubble_fraction, 0.0);
+        assert!(r.bubble_fraction.is_finite());
+    }
+
+    #[test]
+    fn zero_duration_plan_has_zero_bubble_not_nan() {
+        // all-zero durations ⇒ zero makespan through the DES path too
+        // (the barrier forces the discrete-event engine)
+        let items = vec![
+            item(0, 0, Phase::Fwd, 0, 0, 0.0, vec![]),
+            item(1, 0, Phase::Bwd, 0, 0, 0.0, vec![(0, 0.0)]),
+        ];
+        let plan = Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: true };
+        let r = simulate(&plan).unwrap();
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.bubble_fraction, 0.0);
+        let r = simulate_ref(&plan).unwrap();
+        assert_eq!(r.bubble_fraction, 0.0);
+    }
+
+    #[test]
+    fn nan_duration_is_an_error_not_a_panic() {
+        let items = vec![item(0, 0, Phase::Fwd, 0, 0, f64::NAN, vec![])];
+        let err = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false })
+            .unwrap_err();
+        assert!(err.contains("duration"), "{err}");
+    }
+
+    #[test]
+    fn nan_edge_delay_is_an_error_not_a_panic() {
+        let items = vec![
+            item(0, 0, Phase::Fwd, 0, 0, 1.0, vec![]),
+            item(1, 0, Phase::Fwd, 0, 1, 1.0, vec![(0, f64::NAN)]),
+        ];
+        let err = simulate(&Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false })
+            .unwrap_err();
+        assert!(err.contains("delay"), "{err}");
+    }
+
+    #[test]
+    fn chain_plans_take_the_wavefront_path_and_agree_with_the_oracle() {
+        let p = chain_plan(4, &[1.0, 2.5, 0.5]);
+        assert!(wavefront::is_regular(&p));
+        let fast = simulate(&p).unwrap();
+        let oracle = simulate_ref(&p).unwrap();
+        assert_eq!(fast.makespan_ms.to_bits(), oracle.makespan_ms.to_bits());
+        assert_eq!(fast.busy_ms, oracle.busy_ms);
+        assert_eq!(fast.trace.len(), oracle.trace.len());
+    }
+
+    #[test]
+    fn arena_is_reusable_across_plans_of_different_shapes() {
+        let mut arena = SimArena::new();
+        let big = chain_plan(5, &[1.0, 2.0, 3.0, 4.0]);
+        let small = chain_plan(2, &[1.0]);
+        for p in [&big, &small, &big] {
+            let a = arena.simulate_des(p, true).unwrap();
+            let r = simulate_ref(p).unwrap();
+            assert_eq!(a.makespan_ms.to_bits(), r.makespan_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn notrace_mode_returns_empty_trace_and_same_numbers() {
+        let p = chain_plan(3, &[1.0, 2.0, 0.5]);
+        let full = simulate_opts(&p, true).unwrap();
+        let bare = simulate_opts(&p, false).unwrap();
+        assert!(bare.trace.is_empty());
+        assert!(!full.trace.is_empty());
+        assert_eq!(full.makespan_ms.to_bits(), bare.makespan_ms.to_bits());
+        assert_eq!(full.busy_ms, bare.busy_ms);
+        assert_eq!(full.bubble_fraction.to_bits(), bare.bubble_fraction.to_bits());
+    }
+
+    #[test]
+    fn simulate_many_matches_single_replays_in_order() {
+        let plans = vec![
+            chain_plan(2, &[1.0, 2.0]),
+            chain_plan(4, &[0.5, 0.5, 3.0]),
+            chain_plan(1, &[2.0]),
+        ];
+        let batched = simulate_many(&plans, false);
+        for (p, b) in plans.iter().zip(&batched) {
+            let single = simulate(p).unwrap();
+            assert_eq!(
+                single.makespan_ms.to_bits(),
+                b.as_ref().unwrap().makespan_ms.to_bits()
+            );
+        }
     }
 }

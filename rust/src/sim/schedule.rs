@@ -47,6 +47,42 @@ where
     }
 }
 
+/// Build the K-stage × M-slice *replay stream* for per-slice stage times
+/// `durs`: every stage executes the slice stream in order — slice `i` on
+/// stage `k` depends on slice `i` on stage `k-1` and slice `i-1` on stage
+/// `k`, with no extra edge delay (Eq. 4's computation + transmission are
+/// folded into the durations). This is the regime where Eq. 5 is exact —
+/// the shape `planner::validate` replays, the solver-vs-sim differential
+/// suite pins, and `benches/sim.rs` measures — and it is *regular*
+/// (`wavefront::is_regular`), so it takes the closed-form path.
+pub fn stream_plan(durs: &[f64], stages: usize) -> Plan {
+    assert!(!durs.is_empty() && stages >= 1);
+    let m = durs.len();
+    let mut items = Vec::with_capacity(m * stages);
+    for s in 0..stages {
+        for (i, &d) in durs.iter().enumerate() {
+            let mut deps = Vec::new();
+            if s > 0 {
+                deps.push(((s - 1) * m + i, 0.0));
+            }
+            if i > 0 {
+                deps.push((s * m + i - 1, 0.0));
+            }
+            items.push(Item {
+                id: s * m + i,
+                stage: s,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: i,
+                dur_ms: d,
+                deps,
+                priority: (s * m + i) as u64,
+            });
+        }
+    }
+    Plan { stages, items, mem_cap_parts: None, flush_barrier: false }
+}
+
 /// Build the simulator plan for a joint (batch, token) scheme on a
 /// `stages`-deep pipeline.
 pub fn build_plan<C: PhaseCost>(
@@ -193,6 +229,16 @@ mod tests {
                 .collect(),
             latency_ms: 0.0,
         }
+    }
+
+    #[test]
+    fn stream_plan_is_regular_and_matches_eq5() {
+        let durs = [1.0, 3.0, 2.0];
+        let p = stream_plan(&durs, 4);
+        assert!(crate::sim::wavefront::is_regular(&p));
+        let r = simulate(&p).unwrap();
+        // Σt + (K-1)·max t = 6 + 3·3
+        assert!((r.makespan_ms - 15.0).abs() < 1e-9, "{}", r.makespan_ms);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Closed-form wavefront evaluator for *regular* plans — the DAG class
+//! token-level pipeline schedules actually produce.
+//!
+//! A plan is regular ([`is_regular`]) when:
+//!
+//! * there is no flush barrier and no per-stage memory cap (the two
+//!   features that make dispatch order depend on global state), and
+//! * every dependency points to a lower item id (one forward pass is a
+//!   topological order), and
+//! * on each stage, the items form a single dependency chain in id order:
+//!   every item after the stage's first depends on the stage's previous
+//!   item.
+//!
+//! Under those conditions the unit-capacity resource constraint is
+//! subsumed by the dependency structure — each stage's execution order is
+//! forced by its chain, priorities are irrelevant, and an item's start
+//! time is exactly the max over its dependency finish times plus edge
+//! delays. For the canonical K-stage × M-slice replay stream this is the
+//! Eq. 5 wavefront recurrence
+//!
+//! ```text
+//! c[s][i] = max(c[s-1][i] + delay, c[s][i-1]) + dur[s][i]
+//! ```
+//!
+//! evaluated in O(K·M) with no event heap, no ready queues, and no
+//! per-item scheduling state at all. The float operations are the same
+//! `max`/`+` the discrete-event core performs in event order, so the two
+//! engines agree to the bit on this class (`tests/sim_equivalence.rs`
+//! pins ≤1e-9; in practice the makespans are identical).
+//!
+//! [`engine::simulate`](super::engine::simulate) runs the probe and
+//! auto-selects this path; irregular plans fall back to the
+//! discrete-event core.
+
+use super::engine::bubble_frac;
+use super::trace::Span;
+use super::{Plan, SimResult};
+
+/// Plan-shape probe: `true` iff `plan` is in the regular class the
+/// closed-form evaluator handles exactly (see module docs). O(items +
+/// edges); also rejects malformed shapes (non-dense ids, NaN/negative
+/// durations or delays) so the caller can fall back to the engine whose
+/// validation reports them.
+pub fn is_regular(plan: &Plan) -> bool {
+    if plan.stages == 0 || plan.flush_barrier || plan.mem_cap_parts.is_some() {
+        return false;
+    }
+    // last item seen per stage (usize::MAX = none yet)
+    let mut last: Vec<usize> = vec![usize::MAX; plan.stages];
+    for (idx, it) in plan.items.iter().enumerate() {
+        if it.id != idx || it.stage >= plan.stages || !(it.dur_ms >= 0.0) {
+            return false;
+        }
+        let prev = last[it.stage];
+        // the stage head needs no chain edge; everyone else must depend
+        // on the stage's previous item so execution order is forced
+        let mut chained = prev == usize::MAX;
+        for &(d, del) in &it.deps {
+            if d >= idx || !(del >= 0.0) {
+                return false;
+            }
+            if d == prev {
+                chained = true;
+            }
+        }
+        if !chained {
+            return false;
+        }
+        last[it.stage] = idx;
+    }
+    true
+}
+
+/// Evaluate a regular plan in closed form. Returns `Err` when the plan
+/// is outside the regular class (the closed form would silently ignore
+/// the resource/barrier/memory constraints there) — route those through
+/// the discrete-event engine instead, or use the auto-selecting
+/// [`super::engine::simulate`].
+pub fn evaluate(plan: &Plan, collect_trace: bool) -> Result<SimResult, String> {
+    if !is_regular(plan) {
+        return Err(
+            "plan is outside the wavefront's regular class (barrier/cap/irregular deps); \
+             use the discrete-event engine"
+                .into(),
+        );
+    }
+    let mut fin = Vec::new();
+    Ok(evaluate_into(plan, collect_trace, &mut fin))
+}
+
+/// [`evaluate`] with a caller-provided scratch buffer for the finish
+/// times, so arena-backed callers replay with zero transient allocation
+/// (beyond the returned result's own vectors).
+pub(crate) fn evaluate_into(plan: &Plan, collect_trace: bool, fin: &mut Vec<f64>) -> SimResult {
+    debug_assert!(is_regular(plan), "wavefront::evaluate on an irregular plan");
+    let n = plan.items.len();
+    let k = plan.stages;
+    fin.clear();
+    fin.resize(n, 0.0);
+    let mut busy = vec![0.0f64; k];
+    let mut trace: Vec<Span> = Vec::with_capacity(if collect_trace { n } else { 0 });
+    for it in &plan.items {
+        // start = max over deps of (finish + edge delay); the resource
+        // constraint is implied by the chain dep (see module docs)
+        let mut start = 0.0f64;
+        for &(d, del) in &it.deps {
+            start = start.max(fin[d] + del);
+        }
+        let end = start + it.dur_ms;
+        fin[it.id] = end;
+        busy[it.stage] += it.dur_ms;
+        if collect_trace {
+            trace.push(Span {
+                stage: it.stage,
+                start_ms: start,
+                end_ms: end,
+                phase: it.phase,
+                part: it.part,
+                slice: it.slice,
+            });
+        }
+    }
+    let makespan = fin.iter().copied().fold(0.0f64, f64::max);
+    let total_busy: f64 = busy.iter().sum();
+    trace.sort_by(|a, b| a.stage.cmp(&b.stage).then(a.start_ms.total_cmp(&b.start_ms)));
+    SimResult {
+        makespan_ms: makespan,
+        bubble_fraction: bubble_frac(total_busy, k, makespan),
+        busy_ms: busy,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Item, Phase};
+
+    fn item(id: usize, stage: usize, dur: f64, deps: Vec<(usize, f64)>) -> Item {
+        Item {
+            id,
+            stage,
+            phase: Phase::Fwd,
+            part: 0,
+            slice: id,
+            dur_ms: dur,
+            deps,
+            priority: id as u64,
+        }
+    }
+
+    /// The canonical replay stream — the shared builder, so these tests
+    /// always validate the exact shape `planner::validate` replays.
+    fn chain_plan(k: usize, t: &[f64]) -> Plan {
+        crate::sim::schedule::stream_plan(t, k)
+    }
+
+    #[test]
+    fn chain_plans_are_regular_and_match_eq5() {
+        for t in [vec![1.0, 3.0], vec![2.0, 5.0, 1.0, 4.0], vec![1.0; 8]] {
+            for k in [1usize, 2, 5] {
+                let p = chain_plan(k, &t);
+                assert!(is_regular(&p));
+                let r = evaluate(&p, false).unwrap();
+                let want: f64 = t.iter().sum::<f64>()
+                    + (k as f64 - 1.0) * t.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                assert!((r.makespan_ms - want).abs() < 1e-9, "k={k}: {} vs {want}", r.makespan_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_or_cap_is_irregular() {
+        let mut p = chain_plan(2, &[1.0, 2.0]);
+        p.flush_barrier = true;
+        assert!(!is_regular(&p));
+        p.flush_barrier = false;
+        p.mem_cap_parts = Some(1);
+        assert!(!is_regular(&p));
+    }
+
+    #[test]
+    fn independent_items_on_one_stage_are_irregular() {
+        // no chain edge between the two stage-0 items ⇒ dispatch order is
+        // a scheduling decision, not a dependency — must route to the DES
+        let items = vec![item(0, 0, 1.0, vec![]), item(1, 0, 1.0, vec![])];
+        let p = Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false };
+        assert!(!is_regular(&p));
+        // the public evaluator refuses rather than silently dropping the
+        // resource constraint (the closed form would report 1.0, not 2.0)
+        let err = evaluate(&p, false).unwrap_err();
+        assert!(err.contains("regular class"), "{err}");
+    }
+
+    #[test]
+    fn backward_edge_is_irregular() {
+        // dep on a higher id: a single forward pass is no longer a
+        // topological order
+        let items = vec![item(0, 0, 1.0, vec![(1, 0.0)]), item(1, 0, 1.0, vec![])];
+        let p = Plan { stages: 1, items, mem_cap_parts: None, flush_barrier: false };
+        assert!(!is_regular(&p));
+    }
+
+    #[test]
+    fn extra_cross_stage_and_in_stage_edges_stay_regular() {
+        // chain + a long-range cross-stage edge and an older in-stage
+        // edge: order is still forced, longest path still exact
+        let items = vec![
+            item(0, 0, 1.0, vec![]),
+            item(1, 0, 1.0, vec![(0, 0.0)]),
+            item(2, 1, 1.0, vec![(0, 0.5)]),
+            item(3, 1, 1.0, vec![(2, 0.0), (1, 0.25), (0, 3.0)]),
+        ];
+        let p = Plan { stages: 2, items, mem_cap_parts: None, flush_barrier: false };
+        assert!(is_regular(&p));
+        let r = evaluate(&p, true).unwrap();
+        // item 3: max(fin2=2.5? fin0+3=4, fin1+0.25=2.25, fin2+0=2.5) + 1
+        // fin0=1, fin1=2, fin2=1+0.5+1=2.5 ⇒ start3=4, fin3=5
+        assert!((r.makespan_ms - 5.0).abs() < 1e-12, "{}", r.makespan_ms);
+        assert_eq!(r.trace.len(), 4);
+    }
+
+    #[test]
+    fn comm_delays_on_the_chain_edge_are_honoured() {
+        let mut p = chain_plan(3, &[1.0, 1.0]);
+        for it in &mut p.items {
+            let id = it.id;
+            for d in &mut it.deps {
+                // cross-stage edges are at stride m=2 in the chain plan
+                if id >= 2 && d.0 == id - 2 {
+                    d.1 = 0.5;
+                }
+            }
+        }
+        assert!(is_regular(&p));
+        let r = evaluate(&p, false).unwrap();
+        // plain eq5 = 4.0, two cross-stage hops on the critical path add 1.0
+        assert!((r.makespan_ms - 5.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn empty_plan_evaluates_to_zero_with_zero_bubble() {
+        let p = Plan { stages: 2, items: vec![], mem_cap_parts: None, flush_barrier: false };
+        assert!(is_regular(&p));
+        let r = evaluate(&p, true).unwrap();
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.bubble_fraction, 0.0);
+        assert!(r.trace.is_empty());
+    }
+}

@@ -174,28 +174,31 @@ fn prop_drift_replans_are_bit_identical_to_cold() {
 }
 
 /// (c) The acceptance criterion's validation leg: every decision's
-/// predicted Eq. 5 latency replays through the discrete-event simulator
-/// within 1e-9 at its own cluster state.
+/// predicted Eq. 5 latency replays through the simulator within 1e-9 at
+/// its own cluster state. Replay plans are built per decision (baking in
+/// the model snapshot) and fanned through the batched no-trace path.
 #[test]
 fn prop_emitted_plans_replay_through_the_simulator() {
     prop::run_cases(60, |g| {
         let inst = random_instance(g);
         let mut p = planner_for(&inst, g.int(1, 16), 0.02);
         let first = p.plan().clone();
-        validate::validate_scheme(&p.current_model(), &first, p.stages(), 1e-9)
-            .unwrap_or_else(|e| panic!("case {} initial: {e}", g.case));
+        let mut plans = vec![validate::replay_plan(&p.current_model(), &first.lens, p.stages())];
+        let mut preds = vec![first.latency_ms];
         // factor ranges kept moderate so the cumulative scale never
         // inflates absolute latencies to where f64 accumulation noise
         // could brush the 1e-9 acceptance tolerance
-        for step in 0..g.int(2, 5) {
+        for _step in 0..g.int(2, 5) {
             let d = match g.int(0, 2) {
                 0 => p.on_stages_change(g.int(1, 16)),
                 1 => p.on_bandwidth_change(g.float(0.5, 2.0)),
                 _ => p.on_slowdown(g.float(0.6, 1.6)),
             };
-            validate::validate_scheme(&p.current_model(), &d.scheme, d.stages, 1e-9)
-                .unwrap_or_else(|e| panic!("case {} delta {step}: {e}", g.case));
+            plans.push(validate::replay_plan(&p.current_model(), &d.scheme.lens, d.stages));
+            preds.push(d.scheme.latency_ms);
         }
+        validate::validate_plans(&plans, &preds, 1e-9)
+            .unwrap_or_else(|e| panic!("case {}: {e}", g.case));
     });
 }
 

@@ -11,10 +11,19 @@
 //! DPs optimize. A solver that mis-reports `latency_ms` (stale totals,
 //! double-counted bubble, budget-vs-achieved `t_max` confusion) diverges
 //! from the replay and fails here within 1e-9.
+//!
+//! Replays run on the batched fast path: each property test first solves
+//! all of its cases (collecting one replay [`Plan`] per prediction), then
+//! fans the whole batch through `sim::engine::simulate_many` with trace
+//! collection off — regular replay plans take the closed-form wavefront
+//! evaluator, and the fan-out reuses one `SimArena` per rayon worker.
+//! `prop::run_cases` still reports the failing solve case; replay
+//! divergences carry the case id through [`ReplayCase`].
 
 use terapipe::perfmodel::CostModel;
-use terapipe::sim::engine::simulate;
-use terapipe::sim::{Item, Phase, Plan};
+use terapipe::sim::engine::simulate_many;
+use terapipe::sim::schedule::stream_plan;
+use terapipe::sim::Plan;
 use terapipe::solver::bucketed::solve_tokens_bucketed;
 use terapipe::solver::dp::solve_tokens;
 use terapipe::solver::joint::{solve_joint, solve_joint_exact, JointOpts};
@@ -56,43 +65,30 @@ fn random_model(g: &mut prop::Gen) -> RandModel {
     }
 }
 
-/// Replay a stream of per-slice stage times through the discrete-event
-/// engine: a K-stage pipeline where every stage executes the same slice
-/// stream in order (slice i on stage k depends on slice i on stage k-1
-/// and slice i-1 on stage k). Returns the simulated makespan.
-fn replay_stream(durs: &[f64], stages: usize) -> f64 {
-    assert!(!durs.is_empty() && stages >= 1);
-    let m = durs.len();
-    let mut items = Vec::with_capacity(m * stages);
-    for s in 0..stages {
-        for (i, &d) in durs.iter().enumerate() {
-            let mut deps = Vec::new();
-            if s > 0 {
-                deps.push(((s - 1) * m + i, 0.0));
-            }
-            if i > 0 {
-                deps.push((s * m + i - 1, 0.0));
-            }
-            items.push(Item {
-                id: s * m + i,
-                stage: s,
-                phase: Phase::Fwd,
-                part: 0,
-                slice: i,
-                dur_ms: d,
-                deps,
-                priority: (s * m + i) as u64,
-            });
-        }
+/// One solver prediction awaiting its batched replay.
+struct ReplayCase {
+    case: u64,
+    label: &'static str,
+    predicted_ms: f64,
+}
+
+/// Fan the collected plans through `simulate_many` (no trace) and check
+/// every simulated makespan against its solver's prediction.
+fn assert_replays(cases: &[ReplayCase], plans: &[Plan]) {
+    assert_eq!(cases.len(), plans.len());
+    let sims = simulate_many(plans, false);
+    for (c, r) in cases.iter().zip(sims) {
+        let sim = r
+            .unwrap_or_else(|e| panic!("case {}: {} replay failed to simulate: {e}", c.case, c.label))
+            .makespan_ms;
+        assert!(
+            (sim - c.predicted_ms).abs() < 1e-9,
+            "case {}: {} predicted {} vs simulated {sim}",
+            c.case,
+            c.label,
+            c.predicted_ms
+        );
     }
-    simulate(&Plan {
-        stages,
-        items,
-        mem_cap_parts: None,
-        flush_barrier: false,
-    })
-    .expect("replay plan has no cap/barrier, cannot deadlock")
-    .makespan_ms
 }
 
 /// Slice stage times of a single-part token scheme under `model`.
@@ -120,6 +116,8 @@ fn stream_of_joint<M: CostModel>(model_for: &dyn Fn(u32) -> M, plan: &JointSchem
 /// pipeline makespan of its scheme.
 #[test]
 fn prop_dp_solver_matches_simulated_replay() {
+    let mut cases = Vec::new();
+    let mut plans = Vec::new();
     prop::run_cases(60, |g| {
         let m = random_model(g);
         let gran = *g.choose(&[8u32, 16, 32]);
@@ -127,19 +125,17 @@ fn prop_dp_solver_matches_simulated_replay() {
         let k = g.int(1, 16);
         let eps = *g.choose(&[0.0f64, 0.1]);
         let (scheme, _) = solve_tokens(&m, l, k, gran, eps);
-        let sim = replay_stream(&stream_of_lens(&m, &scheme.lens), k as usize);
-        assert!(
-            (sim - scheme.latency_ms).abs() < 1e-9,
-            "case {}: dp predicted {} vs simulated {sim}",
-            g.case,
-            scheme.latency_ms
-        );
+        cases.push(ReplayCase { case: g.case, label: "dp", predicted_ms: scheme.latency_ms });
+        plans.push(stream_plan(&stream_of_lens(&m, &scheme.lens), k as usize));
     });
+    assert_replays(&cases, &plans);
 }
 
 /// (b) Uniform baseline: same contract for every slice count.
 #[test]
 fn prop_uniform_scheme_matches_simulated_replay() {
+    let mut cases = Vec::new();
+    let mut plans = Vec::new();
     prop::run_cases(60, |g| {
         let m = random_model(g);
         let gran = 8u32;
@@ -147,35 +143,33 @@ fn prop_uniform_scheme_matches_simulated_replay() {
         let k = g.int(1, 12);
         let n = g.int(1, l / gran);
         let u = uniform_scheme(&m, l, k, n, gran);
-        let sim = replay_stream(&stream_of_lens(&m, &u.lens), k as usize);
-        assert!(
-            (sim - u.latency_ms).abs() < 1e-9,
-            "case {}: uniform predicted {} vs simulated {sim}",
-            g.case,
-            u.latency_ms
-        );
+        cases.push(ReplayCase { case: g.case, label: "uniform", predicted_ms: u.latency_ms });
+        plans.push(stream_plan(&stream_of_lens(&m, &u.lens), k as usize));
     });
+    assert_replays(&cases, &plans);
 }
 
 /// (c) Bucketed DP: when the bucket set can compose the sequence, its
 /// reported latency replays exactly too.
 #[test]
 fn prop_bucketed_solver_matches_simulated_replay() {
+    let mut cases = Vec::new();
+    let mut plans = Vec::new();
     prop::run_cases(60, |g| {
         let m = random_model(g);
         let l = g.int(2, 12) * 16;
         let k = g.int(1, 12);
         let buckets = [16u32, 32, 64];
         if let Some((scheme, _)) = solve_tokens_bucketed(&m, l, k, &buckets, 0.0) {
-            let sim = replay_stream(&stream_of_lens(&m, &scheme.lens), k as usize);
-            assert!(
-                (sim - scheme.latency_ms).abs() < 1e-9,
-                "case {}: bucketed predicted {} vs simulated {sim}",
-                g.case,
-                scheme.latency_ms
-            );
+            cases.push(ReplayCase {
+                case: g.case,
+                label: "bucketed",
+                predicted_ms: scheme.latency_ms,
+            });
+            plans.push(stream_plan(&stream_of_lens(&m, &scheme.lens), k as usize));
         }
     });
+    assert_replays(&cases, &plans);
 }
 
 /// (d) Joint solvers (§3.4): both the exact global-t_max search and the
@@ -185,6 +179,8 @@ fn prop_bucketed_solver_matches_simulated_replay() {
 /// faster than predicted.
 #[test]
 fn prop_joint_solvers_match_simulated_replay() {
+    let mut cases = Vec::new();
+    let mut plans = Vec::new();
     prop::run_cases(40, |g| {
         let base = random_model(g);
         let gran = *g.choose(&[8u32, 16]);
@@ -201,21 +197,20 @@ fn prop_joint_solvers_match_simulated_replay() {
         let mk = |b: u32| RandModel { b, ..base.clone() };
 
         let exact = solve_joint_exact(&mk, batch, l, k, &opts);
-        let sim = replay_stream(&stream_of_joint(&mk, &exact), k as usize);
-        assert!(
-            (sim - exact.latency_ms).abs() < 1e-9,
-            "case {}: joint-exact predicted {} vs simulated {sim}",
-            g.case,
-            exact.latency_ms
-        );
+        cases.push(ReplayCase {
+            case: g.case,
+            label: "joint-exact",
+            predicted_ms: exact.latency_ms,
+        });
+        plans.push(stream_plan(&stream_of_joint(&mk, &exact), k as usize));
 
         let reduction = solve_joint(&mk, batch, l, k, &opts);
-        let sim = replay_stream(&stream_of_joint(&mk, &reduction), k as usize);
-        assert!(
-            (sim - reduction.latency_ms).abs() < 1e-9,
-            "case {}: joint-reduction predicted {} vs simulated {sim}",
-            g.case,
-            reduction.latency_ms
-        );
+        cases.push(ReplayCase {
+            case: g.case,
+            label: "joint-reduction",
+            predicted_ms: reduction.latency_ms,
+        });
+        plans.push(stream_plan(&stream_of_joint(&mk, &reduction), k as usize));
     });
+    assert_replays(&cases, &plans);
 }
