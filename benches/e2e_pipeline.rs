@@ -92,10 +92,8 @@ fn main() {
     ] {
         let cfg = TrainConfig {
             slicing: slicing.clone(),
-            microbatches: 1,
             steps,
-            lr: 1e-3,
-            seed: 0,
+            ..Default::default()
         };
         let mut t = match Trainer::new(&dir, cfg) {
             Ok(t) => t,
@@ -104,7 +102,7 @@ fn main() {
                 continue;
             }
         };
-        let m = t.manifest.model.clone();
+        let m = t.model.clone();
         let corpus = synthetic_corpus(1 << 15, 3);
         let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 1);
         let reports = t.train(|| batcher.next_batch(), |_| {}).unwrap();

@@ -32,11 +32,9 @@ fn main() {
         println!("\n=== {label}: slicing {slicing:?}, {steps} steps ===");
         let cfg = TrainConfig {
             slicing,
-            microbatches: 1,
             steps,
-            lr: 1e-3,
             seed: 42,
-            replan_every: None,
+            ..Default::default()
         };
         let reports = train(&dir, cfg, &corpus, |r| {
             if r.step < 3 || r.step % 20 == 0 || r.step == steps - 1 {

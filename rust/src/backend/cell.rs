@@ -1,0 +1,677 @@
+//! The sliced transformer cell: native-Rust forward and backward for one
+//! pipeline stage, plus the embedding and LM-head cells.
+//!
+//! This is a line-for-line transcription of `python/compile/model.py`
+//! (the functions `aot.py` lowers to the PJRT executables): pre-LN GPT
+//! blocks over one token slice, causal attention over a padded KV context
+//! buffer, tanh-GELU MLP, final layernorm + cross-entropy head, with the
+//! VJPs written out by hand so the backward is *exact* — not approximate —
+//! and `stage_bwd` returns the context K/V gradients the coordinator
+//! accumulates into earlier slices (the dependency structure that makes
+//! token-level pipelining a pure scheduling choice).
+//!
+//! Layouts (row-major, `H = num_heads · head_dim`):
+//!
+//! * hidden states `h`: `[B, S, H]` for slice length S
+//! * per-layer KV context: `[B, T, H]` (T = full sequence length), the
+//!   `[B, T, NH, HD]` view with the head axes merged
+//! * stage KV buffers: `[NL, B, T, H]`; per-slice K/V: `[NL, B, S, H]`
+//!
+//! The backward recomputes the forward (rematerialization, exactly like
+//! the `jax.vjp`-based executables) so callers only keep each slice's
+//! *input* activation and the grown KV buffers.
+
+use super::math::{
+    add_bias, add_into, colsum_into, gelu, gelu_grad, layernorm, layernorm_bwd, matmul, matmul_nt,
+    matmul_tn, LnStats, PAR_THRESHOLD,
+};
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::HostTensor;
+use rayon::prelude::*;
+
+/// Parameters per transformer layer, in canonical flat order (mirrors
+/// `LAYER_PARAM_NAMES` in model.py).
+pub const PARAMS_PER_LAYER: usize = 12;
+
+/// Canonical per-layer parameter names (order is the contract).
+pub const LAYER_PARAM_NAMES: [&str; PARAMS_PER_LAYER] = [
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_proj", "b_proj", "ln2_g", "ln2_b", "w_fc1", "b_fc1",
+    "w_fc2", "b_fc2",
+];
+
+// ---------------------------------------------------------------------------
+// Attention over the padded KV context
+// ---------------------------------------------------------------------------
+
+/// Causal attention for one slice: query position `t` (global `off + t`)
+/// attends to buffer positions `0..=off+t`. `q` is `[B,S,H]`, `k_buf` /
+/// `v_buf` are `[B,T,H]` with this slice's K/V already scattered at
+/// `off`. Returns `[B,S,H]`.
+fn attention_fwd(d: &ModelDims, s: usize, off: usize, q: &[f32], k_buf: &[f32], v_buf: &[f32]) -> Vec<f32> {
+    let (b_n, t_len, h, nh, hd) = (d.batch, d.seq_len, d.hidden, d.num_heads, d.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0f32; b_n * s * h];
+    let per_b = |b: usize, out_b: &mut [f32]| {
+        let q_b = &q[b * s * h..(b + 1) * s * h];
+        let k_b = &k_buf[b * t_len * h..(b + 1) * t_len * h];
+        let v_b = &v_buf[b * t_len * h..(b + 1) * t_len * h];
+        let mut scores = vec![0f32; off + s];
+        for head in 0..nh {
+            let hoff = head * hd;
+            for t in 0..s {
+                let p = off + t; // attends to 0..=p
+                let qv = &q_b[t * h + hoff..t * h + hoff + hd];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate().take(p + 1) {
+                    let kv = &k_b[j * h + hoff..j * h + hoff + hd];
+                    let mut dot = 0f32;
+                    for (&a, &b2) in qv.iter().zip(kv) {
+                        dot += a * b2;
+                    }
+                    let v = dot * scale;
+                    *sc = v;
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+                let mut z = 0f32;
+                for sc in scores.iter_mut().take(p + 1) {
+                    *sc = (*sc - mx).exp();
+                    z += *sc;
+                }
+                let o = &mut out_b[t * h + hoff..t * h + hoff + hd];
+                for (j, &w) in scores.iter().enumerate().take(p + 1) {
+                    let wv = w / z;
+                    let vv = &v_b[j * h + hoff..j * h + hoff + hd];
+                    for (ov, &x) in o.iter_mut().zip(vv) {
+                        *ov += wv * x;
+                    }
+                }
+            }
+        }
+    };
+    let work = b_n * nh * s * (off + s) * hd;
+    if work >= PAR_THRESHOLD && b_n > 1 {
+        out.par_chunks_mut(s * h).enumerate().for_each(|(b, o)| per_b(b, o));
+    } else {
+        for (b, o) in out.chunks_mut(s * h).enumerate() {
+            per_b(b, o);
+        }
+    }
+    out
+}
+
+/// VJP of [`attention_fwd`]: recomputes the softmax weights and returns
+/// `(g_q [B,S,H], g_kbuf [B,T,H], g_vbuf [B,T,H])`.
+fn attention_bwd(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    q: &[f32],
+    k_buf: &[f32],
+    v_buf: &[f32],
+    g_out: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b_n, t_len, h, nh, hd) = (d.batch, d.seq_len, d.hidden, d.num_heads, d.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut g_q = vec![0f32; b_n * s * h];
+    let mut g_k = vec![0f32; b_n * t_len * h];
+    let mut g_v = vec![0f32; b_n * t_len * h];
+    let per_b = |b: usize, gq_b: &mut [f32], gk_b: &mut [f32], gv_b: &mut [f32]| {
+        let q_b = &q[b * s * h..(b + 1) * s * h];
+        let k_b = &k_buf[b * t_len * h..(b + 1) * t_len * h];
+        let v_b = &v_buf[b * t_len * h..(b + 1) * t_len * h];
+        let go_b = &g_out[b * s * h..(b + 1) * s * h];
+        let mut w = vec![0f32; off + s];
+        let mut gw = vec![0f32; off + s];
+        for head in 0..nh {
+            let hoff = head * hd;
+            for t in 0..s {
+                let p = off + t;
+                let qv = &q_b[t * h + hoff..t * h + hoff + hd];
+                // recompute softmax weights w[0..=p]
+                let mut mx = f32::NEG_INFINITY;
+                for (j, sc) in w.iter_mut().enumerate().take(p + 1) {
+                    let kv = &k_b[j * h + hoff..j * h + hoff + hd];
+                    let mut dot = 0f32;
+                    for (&a, &b2) in qv.iter().zip(kv) {
+                        dot += a * b2;
+                    }
+                    let v = dot * scale;
+                    *sc = v;
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+                let mut z = 0f32;
+                for sc in w.iter_mut().take(p + 1) {
+                    *sc = (*sc - mx).exp();
+                    z += *sc;
+                }
+                for sc in w.iter_mut().take(p + 1) {
+                    *sc /= z;
+                }
+                let go = &go_b[t * h + hoff..t * h + hoff + hd];
+                // g_w[j] = g_out · v_j ; g_v[j] += w[j] * g_out
+                let mut dot_wgw = 0f32;
+                for j in 0..=p {
+                    let vv = &v_b[j * h + hoff..j * h + hoff + hd];
+                    let mut acc = 0f32;
+                    for (&a, &b2) in go.iter().zip(vv) {
+                        acc += a * b2;
+                    }
+                    gw[j] = acc;
+                    dot_wgw += w[j] * acc;
+                    let gvj = &mut gv_b[j * h + hoff..j * h + hoff + hd];
+                    for (o, &x) in gvj.iter_mut().zip(go) {
+                        *o += w[j] * x;
+                    }
+                }
+                // softmax VJP: g_s[j] = w[j]*(g_w[j] - Σ w·g_w), then the
+                // scaled dot-product grads
+                let gq_t = &mut gq_b[t * h + hoff..t * h + hoff + hd];
+                for j in 0..=p {
+                    let gs = w[j] * (gw[j] - dot_wgw) * scale;
+                    let kv = &k_b[j * h + hoff..j * h + hoff + hd];
+                    for (o, &x) in gq_t.iter_mut().zip(kv) {
+                        *o += gs * x;
+                    }
+                    let gkj = &mut gk_b[j * h + hoff..j * h + hoff + hd];
+                    for (o, &x) in gkj.iter_mut().zip(qv) {
+                        *o += gs * x;
+                    }
+                }
+            }
+        }
+    };
+    let work = b_n * nh * s * (off + s) * hd;
+    if work >= PAR_THRESHOLD && b_n > 1 {
+        g_q.par_chunks_mut(s * h)
+            .zip(g_k.par_chunks_mut(t_len * h).zip(g_v.par_chunks_mut(t_len * h)))
+            .enumerate()
+            .for_each(|(b, (gq, (gk, gv)))| per_b(b, gq, gk, gv));
+    } else {
+        for (b, ((gq, gk), gv)) in g_q
+            .chunks_mut(s * h)
+            .zip(g_k.chunks_mut(t_len * h))
+            .zip(g_v.chunks_mut(t_len * h))
+            .enumerate()
+        {
+            per_b(b, gq, gk, gv);
+        }
+    }
+    (g_q, g_k, g_v)
+}
+
+// ---------------------------------------------------------------------------
+// One pre-LN GPT block over a token slice
+// ---------------------------------------------------------------------------
+
+/// Forward intermediates one layer's backward needs (rematerialized).
+struct LayerCache {
+    h_in: Vec<f32>,
+    ln1: LnStats,
+    x1: Vec<f32>,
+    q: Vec<f32>,
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    att: Vec<f32>,
+    h2: Vec<f32>,
+    ln2: LnStats,
+    x2: Vec<f32>,
+    mpre: Vec<f32>,
+    gm: Vec<f32>,
+}
+
+/// Split `[rows, 3H]` into three `[rows, H]` buffers (jnp.split order).
+fn split_qkv(qkv: &[f32], rows: usize, h: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut q = vec![0f32; rows * h];
+    let mut k = vec![0f32; rows * h];
+    let mut v = vec![0f32; rows * h];
+    for r in 0..rows {
+        let src = &qkv[r * 3 * h..(r + 1) * 3 * h];
+        q[r * h..(r + 1) * h].copy_from_slice(&src[..h]);
+        k[r * h..(r + 1) * h].copy_from_slice(&src[h..2 * h]);
+        v[r * h..(r + 1) * h].copy_from_slice(&src[2 * h..]);
+    }
+    (q, k, v)
+}
+
+/// Scatter a `[B,S,H]` slice tensor into a `[B,T,H]` buffer at `off`.
+fn scatter_slice(d: &ModelDims, s: usize, off: usize, src: &[f32], buf: &mut [f32]) {
+    let (h, t_len) = (d.hidden, d.seq_len);
+    for b in 0..d.batch {
+        for t in 0..s {
+            let dst = (b * t_len + off + t) * h;
+            let sr = (b * s + t) * h;
+            buf[dst..dst + h].copy_from_slice(&src[sr..sr + h]);
+        }
+    }
+}
+
+/// Gather the `[off, off+s)` window of a `[B,T,H]` buffer into `[B,S,H]`.
+fn gather_slice(d: &ModelDims, s: usize, off: usize, buf: &[f32]) -> Vec<f32> {
+    let (h, t_len) = (d.hidden, d.seq_len);
+    let mut out = vec![0f32; d.batch * s * h];
+    for b in 0..d.batch {
+        for t in 0..s {
+            let src = (b * t_len + off + t) * h;
+            let dst = (b * s + t) * h;
+            out[dst..dst + h].copy_from_slice(&buf[src..src + h]);
+        }
+    }
+    out
+}
+
+/// Zero the `[off, off+s)` window of a `[B,T,H]` buffer (VJP of the
+/// scatter w.r.t. the pre-scatter buffer).
+fn zero_slice_window(d: &ModelDims, s: usize, off: usize, buf: &mut [f32]) {
+    let (h, t_len) = (d.hidden, d.seq_len);
+    for b in 0..d.batch {
+        for t in 0..s {
+            let dst = (b * t_len + off + t) * h;
+            buf[dst..dst + h].iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+}
+
+/// One transformer layer forward. `lp` is the layer's 12 parameters in
+/// canonical order; `k_ctx_l`/`v_ctx_l` are the layer's `[B,T,H]` context
+/// buffers. Returns `(h_out, k_slice, v_slice, cache?)`.
+#[allow(clippy::too_many_arguments)]
+fn layer_forward(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    lp: &[HostTensor],
+    h: &[f32],
+    k_ctx_l: &[f32],
+    v_ctx_l: &[f32],
+    want_cache: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Option<LayerCache>) {
+    let hd = d.hidden;
+    let rows = d.batch * s;
+    let f = 4 * hd;
+    let (ln1_g, ln1_b) = (lp[0].as_f32(), lp[1].as_f32());
+    let (w_qkv, b_qkv) = (lp[2].as_f32(), lp[3].as_f32());
+    let (w_proj, b_proj) = (lp[4].as_f32(), lp[5].as_f32());
+    let (ln2_g, ln2_b) = (lp[6].as_f32(), lp[7].as_f32());
+    let (w_fc1, b_fc1) = (lp[8].as_f32(), lp[9].as_f32());
+    let (w_fc2, b_fc2) = (lp[10].as_f32(), lp[11].as_f32());
+
+    let (x1, ln1) = layernorm(h, ln1_g, ln1_b, hd);
+    let mut qkv = matmul(&x1, w_qkv, rows, hd, 3 * hd);
+    add_bias(&mut qkv, b_qkv);
+    let (q, k_slice, v_slice) = split_qkv(&qkv, rows, hd);
+
+    let mut k_buf = k_ctx_l.to_vec();
+    let mut v_buf = v_ctx_l.to_vec();
+    scatter_slice(d, s, off, &k_slice, &mut k_buf);
+    scatter_slice(d, s, off, &v_slice, &mut v_buf);
+
+    let att = attention_fwd(d, s, off, &q, &k_buf, &v_buf);
+    let mut h2 = matmul(&att, w_proj, rows, hd, hd);
+    add_bias(&mut h2, b_proj);
+    add_into(&mut h2, h);
+
+    let (x2, ln2) = layernorm(&h2, ln2_g, ln2_b, hd);
+    let mut mpre = matmul(&x2, w_fc1, rows, hd, f);
+    add_bias(&mut mpre, b_fc1);
+    let gm = gelu(&mpre);
+    let mut h3 = matmul(&gm, w_fc2, rows, f, hd);
+    add_bias(&mut h3, b_fc2);
+    add_into(&mut h3, &h2);
+
+    let cache = want_cache.then(|| LayerCache {
+        h_in: h.to_vec(),
+        ln1,
+        x1,
+        q,
+        k_buf,
+        v_buf,
+        att,
+        h2,
+        ln2,
+        x2,
+        mpre,
+        gm,
+    });
+    (h3, k_slice, v_slice, cache)
+}
+
+/// One layer's VJP. `g_h3` is the upstream hidden-state grad; `g_k_ext` /
+/// `g_v_ext` (`[B,S,H]`) are the accumulated grads w.r.t. this slice's
+/// own K/V contributed by later slices. Parameter grads accumulate into
+/// `grads` (12 tensors, canonical order). Returns
+/// `(g_h_in, g_kctx_l, g_vctx_l)` — the latter two `[B,T,H]` with the
+/// slice's own window zeroed (those grads flowed into `g_qkv` instead).
+#[allow(clippy::too_many_arguments)]
+fn layer_backward(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    lp: &[HostTensor],
+    cache: &LayerCache,
+    g_h3: &[f32],
+    g_k_ext: &[f32],
+    g_v_ext: &[f32],
+    grads: &mut [HostTensor],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let hd = d.hidden;
+    let rows = d.batch * s;
+    let f = 4 * hd;
+    let (ln1_g, w_qkv, w_proj, ln2_g, w_fc1, w_fc2) = (
+        lp[0].as_f32(),
+        lp[2].as_f32(),
+        lp[4].as_f32(),
+        lp[6].as_f32(),
+        lp[8].as_f32(),
+        lp[10].as_f32(),
+    );
+
+    // --- MLP: h3 = h2 + gelu(x2 @ w_fc1 + b_fc1) @ w_fc2 + b_fc2 ---
+    let g_gm = matmul_nt(g_h3, w_fc2, rows, hd, f);
+    add_into(grads[10].as_f32_mut(), &matmul_tn(&cache.gm, g_h3, rows, f, hd));
+    colsum_into(g_h3, hd, grads[11].as_f32_mut());
+    let gp = gelu_grad(&cache.mpre);
+    let g_mpre: Vec<f32> = g_gm.iter().zip(&gp).map(|(&a, &b)| a * b).collect();
+    let g_x2 = matmul_nt(&g_mpre, w_fc1, rows, f, hd);
+    add_into(grads[8].as_f32_mut(), &matmul_tn(&cache.x2, &g_mpre, rows, hd, f));
+    colsum_into(&g_mpre, f, grads[9].as_f32_mut());
+    let (gg, gb) = {
+        let (a, b) = grads.split_at_mut(7);
+        (a[6].as_f32_mut(), b[0].as_f32_mut())
+    };
+    let mut g_h2 = layernorm_bwd(&cache.h2, &cache.ln2, ln2_g, &g_x2, hd, gg, gb);
+    add_into(&mut g_h2, g_h3); // residual
+
+    // --- attention block: h2 = h + att @ w_proj + b_proj ---
+    let g_att = matmul_nt(&g_h2, w_proj, rows, hd, hd);
+    add_into(grads[4].as_f32_mut(), &matmul_tn(&cache.att, &g_h2, rows, hd, hd));
+    colsum_into(&g_h2, hd, grads[5].as_f32_mut());
+    let (g_q, mut g_kbuf, mut g_vbuf) =
+        attention_bwd(d, s, off, &cache.q, &cache.k_buf, &cache.v_buf, &g_att);
+
+    // VJP of the scatter: the slice window of the buffer grad flows into
+    // this slice's K/V (plus the externally accumulated later-slice
+    // grads); the rest is the context grad returned to the coordinator.
+    let mut g_k_slice = gather_slice(d, s, off, &g_kbuf);
+    let mut g_v_slice = gather_slice(d, s, off, &g_vbuf);
+    add_into(&mut g_k_slice, g_k_ext);
+    add_into(&mut g_v_slice, g_v_ext);
+    zero_slice_window(d, s, off, &mut g_kbuf);
+    zero_slice_window(d, s, off, &mut g_vbuf);
+
+    // --- QKV projection: qkv = x1 @ w_qkv + b_qkv ---
+    let mut g_qkv = vec![0f32; rows * 3 * hd];
+    for r in 0..rows {
+        let dst = &mut g_qkv[r * 3 * hd..(r + 1) * 3 * hd];
+        dst[..hd].copy_from_slice(&g_q[r * hd..(r + 1) * hd]);
+        dst[hd..2 * hd].copy_from_slice(&g_k_slice[r * hd..(r + 1) * hd]);
+        dst[2 * hd..].copy_from_slice(&g_v_slice[r * hd..(r + 1) * hd]);
+    }
+    let g_x1 = matmul_nt(&g_qkv, w_qkv, rows, 3 * hd, hd);
+    add_into(grads[2].as_f32_mut(), &matmul_tn(&cache.x1, &g_qkv, rows, hd, 3 * hd));
+    colsum_into(&g_qkv, 3 * hd, grads[3].as_f32_mut());
+    let (gg, gb) = {
+        let (a, b) = grads.split_at_mut(1);
+        (a[0].as_f32_mut(), b[0].as_f32_mut())
+    };
+    let mut g_h = layernorm_bwd(&cache.h_in, &cache.ln1, ln1_g, &g_x1, hd, gg, gb);
+    add_into(&mut g_h, &g_h2); // residual
+
+    (g_h, g_kbuf, g_vbuf)
+}
+
+// ---------------------------------------------------------------------------
+// Stage, embedding and head cells
+// ---------------------------------------------------------------------------
+
+/// One pipeline cell forward over one token slice (model.py `stage_fwd`).
+///
+/// `params`: `NL · 12` tensors; `h`: `[B,S,H]`; `k_ctx`/`v_ctx`:
+/// `[NL,B,T,H]`. Returns `(h_out [B,S,H], k_new [NL,B,S,H], v_new)`.
+pub fn stage_fwd(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    params: &[HostTensor],
+    h: &[f32],
+    k_ctx: &[f32],
+    v_ctx: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (out, k_new, v_new, _) = stage_fwd_cached(d, s, off, params, h, k_ctx, v_ctx, false);
+    (out, k_new, v_new)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_fwd_cached(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    params: &[HostTensor],
+    h: &[f32],
+    k_ctx: &[f32],
+    v_ctx: &[f32],
+    want_cache: bool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<LayerCache>) {
+    let nl = d.layers_per_stage;
+    assert_eq!(params.len(), nl * PARAMS_PER_LAYER, "stage param arity");
+    let per_ctx = d.batch * d.seq_len * d.hidden;
+    let per_new = d.batch * s * d.hidden;
+    let mut k_new = vec![0f32; nl * per_new];
+    let mut v_new = vec![0f32; nl * per_new];
+    let mut caches = Vec::with_capacity(if want_cache { nl } else { 0 });
+    let mut cur = h.to_vec();
+    for l in 0..nl {
+        let lp = &params[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER];
+        let (next, k_s, v_s, cache) = layer_forward(
+            d,
+            s,
+            off,
+            lp,
+            &cur,
+            &k_ctx[l * per_ctx..(l + 1) * per_ctx],
+            &v_ctx[l * per_ctx..(l + 1) * per_ctx],
+            want_cache,
+        );
+        k_new[l * per_new..(l + 1) * per_new].copy_from_slice(&k_s);
+        v_new[l * per_new..(l + 1) * per_new].copy_from_slice(&v_s);
+        if let Some(c) = cache {
+            caches.push(c);
+        }
+        cur = next;
+    }
+    (cur, k_new, v_new, caches)
+}
+
+/// VJP of [`stage_fwd`] (recompute-based). Parameter grads accumulate
+/// into `grads` (`NL · 12`, canonical order); returns
+/// `(g_h_in [B,S,H], g_kctx [NL,B,T,H], g_vctx [NL,B,T,H])`.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_bwd(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    params: &[HostTensor],
+    h_in: &[f32],
+    k_ctx: &[f32],
+    v_ctx: &[f32],
+    g_hout: &[f32],
+    g_know: &[f32],
+    g_vnow: &[f32],
+    grads: &mut [HostTensor],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let nl = d.layers_per_stage;
+    let per_ctx = d.batch * d.seq_len * d.hidden;
+    let per_new = d.batch * s * d.hidden;
+    let (_, _, _, caches) = stage_fwd_cached(d, s, off, params, h_in, k_ctx, v_ctx, true);
+    let mut g = g_hout.to_vec();
+    let mut g_kctx = vec![0f32; nl * per_ctx];
+    let mut g_vctx = vec![0f32; nl * per_ctx];
+    for l in (0..nl).rev() {
+        let lp = &params[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER];
+        let (g_new, g_kl, g_vl) = layer_backward(
+            d,
+            s,
+            off,
+            lp,
+            &caches[l],
+            &g,
+            &g_know[l * per_new..(l + 1) * per_new],
+            &g_vnow[l * per_new..(l + 1) * per_new],
+            &mut grads[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER],
+        );
+        g = g_new;
+        g_kctx[l * per_ctx..(l + 1) * per_ctx].copy_from_slice(&g_kl);
+        g_vctx[l * per_ctx..(l + 1) * per_ctx].copy_from_slice(&g_vl);
+    }
+    (g, g_kctx, g_vctx)
+}
+
+/// Token + position embedding for one slice (model.py `embed_fwd`).
+/// `params`: `[tok_emb [V,H], pos_emb [T,H]]`; `tokens`: `B·S` ids.
+pub fn embed_fwd(d: &ModelDims, s: usize, off: usize, params: &[HostTensor], tokens: &[i32]) -> Vec<f32> {
+    let h = d.hidden;
+    let tok_emb = params[0].as_f32();
+    let pos_emb = params[1].as_f32();
+    let mut out = vec![0f32; d.batch * s * h];
+    for b in 0..d.batch {
+        for t in 0..s {
+            let tok = tokens[b * s + t] as usize;
+            let dst = &mut out[(b * s + t) * h..(b * s + t + 1) * h];
+            let te = &tok_emb[tok * h..(tok + 1) * h];
+            let pe = &pos_emb[(off + t) * h..(off + t + 1) * h];
+            for ((o, &a), &p) in dst.iter_mut().zip(te).zip(pe) {
+                *o = a + p;
+            }
+        }
+    }
+    out
+}
+
+/// VJP of [`embed_fwd`]: scatter-add into the embedding grads.
+pub fn embed_bwd(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    tokens: &[i32],
+    g_h: &[f32],
+    grads: &mut [HostTensor],
+) {
+    let h = d.hidden;
+    {
+        let g_tok = grads[0].as_f32_mut();
+        for b in 0..d.batch {
+            for t in 0..s {
+                let tok = tokens[b * s + t] as usize;
+                let src = &g_h[(b * s + t) * h..(b * s + t + 1) * h];
+                let dst = &mut g_tok[tok * h..(tok + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+    }
+    let g_pos = grads[1].as_f32_mut();
+    for b in 0..d.batch {
+        for t in 0..s {
+            let src = &g_h[(b * s + t) * h..(b * s + t + 1) * h];
+            let dst = &mut g_pos[(off + t) * h..(off + t + 1) * h];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+    }
+}
+
+/// Final LN + LM head + summed token cross-entropy (model.py `head_fwd`).
+/// `params`: `[lnf_g, lnf_b, w_out [H,V], b_out [V]]`. Returns the loss
+/// summed over the slice's `B·S` tokens.
+pub fn head_fwd(d: &ModelDims, s: usize, params: &[HostTensor], h: &[f32], targets: &[i32]) -> f32 {
+    let (hd, v) = (d.hidden, d.vocab);
+    let rows = d.batch * s;
+    let (x, _) = layernorm(h, params[0].as_f32(), params[1].as_f32(), hd);
+    let mut logits = matmul(&x, params[2].as_f32(), rows, hd, v);
+    add_bias(&mut logits, params[3].as_f32());
+    let mut loss = 0f32;
+    for r in 0..rows {
+        let row = &logits[r * v..(r + 1) * v];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let z: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
+        let gold = row[targets[r] as usize] - mx;
+        loss += z.ln() - gold;
+    }
+    loss
+}
+
+/// VJP of [`head_fwd`] with cotangent 1.0 on the loss: accumulates the
+/// head parameter grads and returns `g_h [B,S,H]`.
+pub fn head_bwd(
+    d: &ModelDims,
+    s: usize,
+    params: &[HostTensor],
+    h: &[f32],
+    targets: &[i32],
+    grads: &mut [HostTensor],
+) -> Vec<f32> {
+    let (hd, v) = (d.hidden, d.vocab);
+    let rows = d.batch * s;
+    let lnf_g = params[0].as_f32();
+    let w_out = params[2].as_f32();
+    let (x, stats) = layernorm(h, lnf_g, params[1].as_f32(), hd);
+    let mut logits = matmul(&x, w_out, rows, hd, v);
+    add_bias(&mut logits, params[3].as_f32());
+    // g_logits = softmax(logits) - onehot(target)
+    let mut g_logits = logits;
+    for r in 0..rows {
+        let row = &mut g_logits[r * v..(r + 1) * v];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0f32;
+        for l in row.iter_mut() {
+            *l = (*l - mx).exp();
+            z += *l;
+        }
+        for l in row.iter_mut() {
+            *l /= z;
+        }
+        row[targets[r] as usize] -= 1.0;
+    }
+    let g_x = matmul_nt(&g_logits, w_out, rows, v, hd);
+    add_into(grads[2].as_f32_mut(), &matmul_tn(&x, &g_logits, rows, hd, v));
+    colsum_into(&g_logits, v, grads[3].as_f32_mut());
+    let (gg, gb) = {
+        let (a, b) = grads.split_at_mut(1);
+        (a[0].as_f32_mut(), b[0].as_f32_mut())
+    };
+    layernorm_bwd(h, &stats, lnf_g, &g_x, hd, gg, gb)
+}
+
+/// Fused Adam over one parameter set (model.py `adam_step`): bias-corrected
+/// moments, `p -= lr · (m/c1) / (sqrt(v/c2) + eps)`.
+pub fn adam_step(
+    params: &mut [HostTensor],
+    grads: &[HostTensor],
+    m: &mut [HostTensor],
+    v: &mut [HostTensor],
+    step: i32,
+    lr: f32,
+) {
+    const BETA1: f32 = 0.9;
+    const BETA2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let t = step as f32;
+    let c1 = 1.0 - BETA1.powf(t);
+    let c2 = 1.0 - BETA2.powf(t);
+    for (((p, g), mi), vi) in params.iter_mut().zip(grads).zip(m.iter_mut()).zip(v.iter_mut()) {
+        let pd = p.as_f32_mut();
+        let gd = g.as_f32();
+        let md = mi.as_f32_mut();
+        let vd = vi.as_f32_mut();
+        for i in 0..pd.len() {
+            md[i] = BETA1 * md[i] + (1.0 - BETA1) * gd[i];
+            vd[i] = BETA2 * vd[i] + (1.0 - BETA2) * gd[i] * gd[i];
+            pd[i] -= lr * (md[i] / c1) / ((vd[i] / c2).sqrt() + EPS);
+        }
+    }
+}

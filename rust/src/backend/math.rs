@@ -1,0 +1,397 @@
+//! Dense f32 kernels for the native CPU stage backend.
+//!
+//! Everything here is deliberately boring: row-major matmuls, layernorm,
+//! GELU — the exact formulas `python/compile/model.py` lowers through XLA,
+//! transcribed so the native backend and the PJRT backend compute the same
+//! function. Two properties matter more than raw speed:
+//!
+//! * **Determinism.** Results must not depend on the rayon thread count or
+//!   scheduling: row-parallel kernels give each output row to exactly one
+//!   worker (no cross-thread accumulation), and the transposed-product
+//!   reduction ([`matmul_tn`]) splits the contraction into a *fixed* number
+//!   of chunks whose partials are summed in chunk order. Same inputs →
+//!   bit-identical outputs, single-threaded or not.
+//! * **Parallelism.** The big products (QKV, MLP, LM head and their
+//!   gradients) fan out across rayon once the work crosses
+//!   [`PAR_THRESHOLD`] multiply-adds; tiny test-sized problems stay serial
+//!   to skip the fork/join overhead.
+
+use rayon::prelude::*;
+
+/// Multiply-add count below which kernels run serially.
+pub const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Fixed chunk count for deterministic reductions (independent of the
+/// rayon pool size, so results don't vary with `RAYON_NUM_THREADS`).
+const REDUCE_CHUNKS: usize = 8;
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (row-major).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    let row = |i: usize, out_row: &mut [f32]| {
+        let ar = &a[i * k..(i + 1) * k];
+        for (l, &av) in ar.iter().enumerate() {
+            let br = &b[l * n..(l + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    };
+    if m * k * n >= PAR_THRESHOLD && m > 1 {
+        out.par_chunks_mut(n).enumerate().for_each(|(i, r)| row(i, r));
+    } else {
+        for (i, r) in out.chunks_mut(n).enumerate() {
+            row(i, r);
+        }
+    }
+    out
+}
+
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` — the backward-through-weights product
+/// (`grad @ Wᵀ`). Each output row is an independent set of dot products.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * k];
+    let row = |i: usize, out_row: &mut [f32]| {
+        let ar = &a[i * n..(i + 1) * n];
+        for (j, o) in out_row.iter_mut().enumerate() {
+            let br = &b[j * n..(j + 1) * n];
+            let mut acc = 0f32;
+            for (&x, &y) in ar.iter().zip(br) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    };
+    if m * n * k >= PAR_THRESHOLD && m > 1 {
+        out.par_chunks_mut(k).enumerate().for_each(|(i, r)| row(i, r));
+    } else {
+        for (i, r) in out.chunks_mut(k).enumerate() {
+            row(i, r);
+        }
+    }
+    out
+}
+
+/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` — the weight-gradient product
+/// (`xᵀ @ grad`). The contraction runs over `m`, so parallel workers must
+/// accumulate into shared output: we split `m` into [`REDUCE_CHUNKS`]
+/// fixed ranges, let each produce a private partial, and sum the partials
+/// in chunk order — deterministic for any pool size.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let accumulate = |range: std::ops::Range<usize>, out: &mut [f32]| {
+        for r in range {
+            let ar = &a[r * k..(r + 1) * k];
+            let br = &b[r * n..(r + 1) * n];
+            for (i, &av) in ar.iter().enumerate() {
+                let o = &mut out[i * n..(i + 1) * n];
+                for (ov, &bv) in o.iter_mut().zip(br) {
+                    *ov += av * bv;
+                }
+            }
+        }
+    };
+    if m * k * n >= PAR_THRESHOLD && m >= 2 * REDUCE_CHUNKS {
+        let chunk = m.div_ceil(REDUCE_CHUNKS);
+        let partials: Vec<Vec<f32>> = (0..REDUCE_CHUNKS)
+            .into_par_iter()
+            .map(|c| {
+                let mut p = vec![0f32; k * n];
+                let lo = c * chunk;
+                let hi = ((c + 1) * chunk).min(m);
+                if lo < hi {
+                    accumulate(lo..hi, &mut p);
+                }
+                p
+            })
+            .collect();
+        let mut out = vec![0f32; k * n];
+        for p in partials {
+            for (o, v) in out.iter_mut().zip(&p) {
+                *o += v;
+            }
+        }
+        out
+    } else {
+        let mut out = vec![0f32; k * n];
+        accumulate(0..m, &mut out);
+        out
+    }
+}
+
+/// Add `bias[n]` to every row of `x[rows,n]` in place.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_mut(n) {
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// Column sums of `g[rows,n]` added into `out[n]` — the bias gradient.
+pub fn colsum_into(g: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), n);
+    for row in g.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Elementwise add into the left operand.
+pub fn add_into(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Per-row layernorm statistics: (mean, 1/sqrt(var + eps)) with the
+/// population variance `jnp.var` uses.
+pub struct LnStats {
+    pub mean: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// `y = (x - mean) / sqrt(var + eps) * gamma + beta`, per row of `x[rows,n]`.
+pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], n: usize) -> (Vec<f32>, LnStats) {
+    let rows = x.len() / n;
+    let mut y = vec![0f32; x.len()];
+    let mut mean = vec![0f32; rows];
+    let mut rstd = vec![0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * n..(r + 1) * n];
+        let mu = xr.iter().sum::<f32>() / n as f32;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mean[r] = mu;
+        rstd[r] = rs;
+        let yr = &mut y[r * n..(r + 1) * n];
+        for ((o, &xv), (&g, &b)) in yr.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+            *o = (xv - mu) * rs * g + b;
+        }
+    }
+    (y, LnStats { mean, rstd })
+}
+
+/// VJP of [`layernorm`]: returns grad w.r.t. `x` and accumulates the
+/// gamma/beta grads into `g_gamma`/`g_beta`.
+pub fn layernorm_bwd(
+    x: &[f32],
+    stats: &LnStats,
+    gamma: &[f32],
+    g_y: &[f32],
+    n: usize,
+    g_gamma: &mut [f32],
+    g_beta: &mut [f32],
+) -> Vec<f32> {
+    let rows = x.len() / n;
+    let mut g_x = vec![0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * n..(r + 1) * n];
+        let gyr = &g_y[r * n..(r + 1) * n];
+        let mu = stats.mean[r];
+        let rs = stats.rstd[r];
+        // dxhat = g_y * gamma; dx = rs*(dxhat - mean(dxhat) - xhat*mean(dxhat*xhat))
+        let mut sum_dxhat = 0f32;
+        let mut sum_dxhat_xhat = 0f32;
+        for i in 0..n {
+            let xhat = (xr[i] - mu) * rs;
+            let dxhat = gyr[i] * gamma[i];
+            sum_dxhat += dxhat;
+            sum_dxhat_xhat += dxhat * xhat;
+            g_gamma[i] += gyr[i] * xhat;
+            g_beta[i] += gyr[i];
+        }
+        let m1 = sum_dxhat / n as f32;
+        let m2 = sum_dxhat_xhat / n as f32;
+        let gxr = &mut g_x[r * n..(r + 1) * n];
+        for i in 0..n {
+            let xhat = (xr[i] - mu) * rs;
+            let dxhat = gyr[i] * gamma[i];
+            gxr[i] = rs * (dxhat - m1 - xhat * m2);
+        }
+    }
+    g_x
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi), matching model.py's constant
+const GELU_A: f32 = 0.044_715;
+
+/// Tanh-approximation GELU, elementwise (model.py's `gelu`).
+pub fn gelu(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let u = GELU_C * (v + GELU_A * v * v * v);
+            0.5 * v * (1.0 + u.tanh())
+        })
+        .collect()
+}
+
+/// d gelu(x) / dx, elementwise.
+pub fn gelu_grad(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let u = GELU_C * (v + GELU_A * v * v * v);
+            let t = u.tanh();
+            let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_identity() {
+        // [2,3] @ [3,2]
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        let c = matmul(&a, &b, 2, 3, 2);
+        assert_eq!(c, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_explicit_transposes() {
+        let m = 5;
+        let k = 4;
+        let n = 3;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.23).cos()).collect();
+        let c = matmul(&a, &b, m, k, n);
+        // bᵀ laid out [n,k]; a @ (bᵀ)ᵀ via matmul_nt must equal c
+        let mut bt = vec![0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let c2 = matmul_nt(&a, &bt, m, k, n);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-6);
+        }
+        // aᵀ laid out [k,m]; (aᵀ)ᵀ @ b via matmul_tn must equal c
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = a[i * k + j];
+            }
+        }
+        let c3 = matmul_tn(&at, &b, k, m, n);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_tn_parallel_matches_serial() {
+        // Force the parallel path and compare against the serial chunking.
+        let m = 64;
+        let k = 16;
+        let n = 64; // 64*16*64 = 65536 ≥ PAR_THRESHOLD
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 37) % 101) as f32 * 0.01).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| ((i * 53) % 97) as f32 * 0.02 - 0.5).collect();
+        let par = matmul_tn(&a, &b, m, k, n);
+        let mut serial = vec![0f32; k * n];
+        // chunked in the same fixed order, single-threaded
+        let chunk = m.div_ceil(8);
+        for c in 0..8 {
+            let mut p = vec![0f32; k * n];
+            for r in c * chunk..((c + 1) * chunk).min(m) {
+                for i in 0..k {
+                    for j in 0..n {
+                        p[i * n + j] += a[r * k + i] * b[r * n + j];
+                    }
+                }
+            }
+            for (o, v) in serial.iter_mut().zip(&p) {
+                *o += v;
+            }
+        }
+        for (x, y) in par.iter().zip(&serial) {
+            assert_eq!(x.to_bits(), y.to_bits(), "nondeterministic reduction");
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized() {
+        let n = 8;
+        let x: Vec<f32> = (0..2 * n).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let gamma = vec![1.0; n];
+        let beta = vec![0.0; n];
+        let (y, _) = layernorm(&x, &gamma, &beta, n);
+        for r in 0..2 {
+            let row = &y[r * n..(r + 1) * n];
+            let mu: f32 = row.iter().sum::<f32>() / n as f32;
+            let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_finite_difference() {
+        let n = 6;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 1.3).sin()).collect();
+        let gamma: Vec<f32> = (0..n).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let beta: Vec<f32> = (0..n).map(|i| 0.05 * i as f32).collect();
+        let g_y: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).cos()).collect();
+        let loss = |xv: &[f32]| -> f32 {
+            let (y, _) = layernorm(xv, &gamma, &beta, n);
+            y.iter().zip(&g_y).map(|(a, b)| a * b).sum()
+        };
+        let (_, stats) = layernorm(&x, &gamma, &beta, n);
+        let mut gg = vec![0f32; n];
+        let mut gb = vec![0f32; n];
+        let g_x = layernorm_bwd(&x, &stats, &gamma, &g_y, n, &mut gg, &mut gb);
+        let eps = 1e-3f32;
+        for i in 0..n {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - g_x[i]).abs() < 2e-2,
+                "dx[{i}]: fd {fd} vs analytic {}",
+                g_x[i]
+            );
+        }
+        // beta grad is just g_y
+        for i in 0..n {
+            assert!((gb[i] - g_y[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &v in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let fp = gelu(&[v + eps])[0];
+            let fm = gelu(&[v - eps])[0];
+            let fd = (fp - fm) / (2.0 * eps);
+            let an = gelu_grad(&[v])[0];
+            assert!((fd - an).abs() < 1e-3, "gelu'({v}): fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn bias_helpers() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0]);
+        assert_eq!(x, vec![11.0, 22.0, 13.0, 24.0]);
+        let mut out = vec![0f32; 2];
+        colsum_into(&x, 2, &mut out);
+        assert_eq!(out, vec![24.0, 46.0]);
+    }
+}

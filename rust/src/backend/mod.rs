@@ -1,0 +1,248 @@
+//! Pluggable stage-compute backends for the token-level pipeline.
+//!
+//! TeraPipe's coordinator is pure schedule: token slices flow downstream,
+//! gradients flow back upstream, KV context buffers grow per slice. What
+//! *computes* each slice on each stage is a backend behind the
+//! [`StageBackend`] trait — the same pluggable-executor split GPipe and
+//! Megatron-LM make between schedule and cell compute:
+//!
+//! * [`native::NativeBackend`] — the default: a pure-Rust, multi-threaded
+//!   CPU implementation of the sliced transformer cell (embedding, causal
+//!   attention over the padded KV context, MLP, layernorm, head loss)
+//!   with exact forward *and* backward plus fused Adam. Always available;
+//!   this is what `cargo test` and `terapipe train`/`measure` exercise.
+//! * [`pjrt::PjrtBackend`] — (feature `pjrt`) the AOT-compiled XLA
+//!   executables through the PJRT runtime, one client per stage worker.
+//!
+//! A backend owns its stage's parameters and optimizer state; the
+//! coordinator never sees a weight. Construction happens on the worker
+//! thread via a [`BackendSpec`] (the only thing that crosses threads), so
+//! non-`Send` backend internals — PJRT handles, scratch arenas — are
+//! fine. See `backend/README.md` for the full trait contract, numerics
+//! and threading model.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::perfmodel::linear::LinearCtxModel;
+use crate::perfmodel::measure;
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::HostTensor;
+
+pub mod cell;
+pub mod math;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::{NativeBackend, NativeSpec, ParamSet};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtSpec;
+
+/// One pipeline cell's compute + state: slice-shaped forward/backward
+/// with explicit KV-context plumbing, gradient accumulation, the
+/// optimizer step and checkpoint I/O. All tensor traffic is
+/// [`HostTensor`]; shapes follow `ModelDims` (`[B,S,H]` activations,
+/// `[NL,B,T,NH,HD]` KV buffers).
+///
+/// Contract (what the coordinator relies on):
+///
+/// * `stage_fwd` reads the context buffers for positions `< off` only
+///   (later positions may hold garbage) and returns this slice's K/V for
+///   the coordinator to scatter at `off`.
+/// * `stage_bwd` is the exact VJP of `stage_fwd`: `g_know`/`g_vnow` are
+///   the accumulated grads w.r.t. this slice's own K/V from *later*
+///   slices; the returned `g_kctx`/`g_vctx` are grads w.r.t. the padded
+///   context buffers (the slice's own window zeroed), which the
+///   coordinator accumulates for *earlier* slices.
+/// * `head_bwd`/`stage_bwd`/`embed_bwd` accumulate parameter grads
+///   internally; `update` applies Adam with the accumulated grads (bias
+///   correction uses the 1-based `step`) and zeroes them.
+/// * `checkpoint` writes every owned tensor under `dir` such that a
+///   backend rebuilt with `resume_from = dir` continues the exact
+///   trajectory.
+pub trait StageBackend {
+    fn dims(&self) -> &ModelDims;
+
+    /// Token + position embedding for a slice (first stage only):
+    /// `tokens` is `B·len` ids, `off` the slice's position offset.
+    fn embed_fwd(&mut self, tokens: &[i32], len: usize, off: usize) -> Result<HostTensor>;
+
+    /// One cell forward: `(h_out, k_new, v_new)` for a `[B,S,H]` slice
+    /// against the `[NL,B,T,NH,HD]` context buffers.
+    fn stage_fwd(
+        &mut self,
+        h: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)>;
+
+    /// Summed token cross-entropy of a slice (last stage only).
+    fn head_loss(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<f32>;
+
+    /// Head VJP (last stage only): accumulates head param grads, returns
+    /// the grad w.r.t. the stage output `h_out`.
+    fn head_bwd(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<HostTensor>;
+
+    /// Cell VJP: returns `(g_h_in, g_kctx, g_vctx)`; see trait docs.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_bwd(
+        &mut self,
+        h_in: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+        g_h: &HostTensor,
+        g_know: &HostTensor,
+        g_vnow: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)>;
+
+    /// Embedding VJP (first stage only): accumulates embedding grads.
+    fn embed_bwd(&mut self, tokens: &[i32], len: usize, off: usize, g_h: &HostTensor) -> Result<()>;
+
+    /// Apply the optimizer with the accumulated gradients, then zero them.
+    fn update(&mut self, step: i32, lr: f32) -> Result<()>;
+
+    /// Persist this stage's parameters (+ optimizer moments) under `dir`.
+    fn checkpoint(&self, dir: &Path) -> Result<()>;
+}
+
+/// Recipe for building the per-stage backends of one pipeline. The spec
+/// is the only backend object that crosses threads: each worker calls
+/// [`BackendSpec::build`] on its own thread.
+pub trait BackendSpec: Clone + Send + Sync + 'static {
+    type Backend: StageBackend;
+
+    /// Model geometry all stages share.
+    fn model(&self) -> ModelDims;
+
+    /// Slice lengths the backend supports (the planner's bucket set).
+    fn buckets(&self) -> Vec<usize>;
+
+    /// Build stage `stage` of a `num_stages`-deep pipeline, loading
+    /// parameters from `resume_from` when given.
+    fn build(&self, stage: usize, num_stages: usize, resume_from: Option<&Path>) -> Result<Self::Backend>;
+}
+
+/// `init/stage0.w.bin` → `init/m.stage0.w.bin` (same dir, prefixed stem) —
+/// the shared moment-file convention for checkpoints.
+pub fn moment_path(file: &Path, prefix: &str) -> PathBuf {
+    let name = file.file_name().unwrap().to_string_lossy();
+    file.parent()
+        .unwrap_or_else(|| Path::new(""))
+        .join(format!("{prefix}.{name}"))
+}
+
+/// Read one checkpoint tensor: raw little-endian f32, size-checked
+/// against `shape` — the cross-backend file format both `checkpoint`
+/// implementations share.
+pub fn read_f32_file(path: &Path, shape: &[usize]) -> Result<HostTensor> {
+    use anyhow::Context;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(
+        bytes.len() == 4 * n,
+        "{}: expected {} bytes, got {}",
+        path.display(),
+        4 * n,
+        bytes.len()
+    );
+    let floats = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(HostTensor::f32(shape, floats))
+}
+
+/// Write one checkpoint tensor (raw LE f32), the inverse of
+/// [`read_f32_file`].
+pub fn write_f32_file(path: &Path, t: &HostTensor) -> Result<()> {
+    let bytes: Vec<u8> = t.as_f32().iter().flat_map(|x| x.to_le_bytes()).collect();
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// The §3.5 measurement harness on a real backend: wall-clock one slice
+/// of `i` tokens over `j` tokens of context through `stage_fwd` +
+/// `stage_bwd` (the combined fwd+bwd latency [`crate::perfmodel::CostModel`]
+/// models). Returns a [`measure::SliceTimer`]-compatible pair.
+pub fn slice_timer<B: StageBackend>(
+    mut backend: B,
+    buckets: Vec<usize>,
+) -> (impl FnMut(u32, u32) -> f64, Vec<u32>) {
+    let d = backend.dims().clone();
+    let timer = move |i: u32, j: u32| -> f64 {
+        let len = i as usize;
+        let off = j as usize;
+        let h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let k_ctx = HostTensor::zeros_f32(&d.kv_shape());
+        let v_ctx = HostTensor::zeros_f32(&d.kv_shape());
+        let g_h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let g_know = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let g_vnow = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let (_, ms) = crate::util::time_ms(|| {
+            let _ = backend
+                .stage_fwd(&h, &k_ctx, &v_ctx, off)
+                .expect("measure stage_fwd");
+            let _ = backend
+                .stage_bwd(&h, &k_ctx, &v_ctx, off, &g_h, &g_know, &g_vnow)
+                .expect("measure stage_bwd");
+        });
+        ms
+    };
+    (timer, buckets.into_iter().map(|b| b as u32).collect())
+}
+
+/// Measure a representative cell of `spec` on real backend timings and
+/// fit the Eq. 9 linear context model — the `perfmodel::measure` → `fit`
+/// path behind `terapipe measure`, `--auto` slicing, and the drift
+/// loop's re-measure, shared by both backends.
+pub fn measure_fit<S: BackendSpec>(spec: &S, repeats: u32) -> Result<LinearCtxModel> {
+    let m = spec.model();
+    // a middle stage (no embed/head) is the representative cell
+    let stage = 1 % m.num_stages;
+    let backend = spec.build(stage, m.num_stages, None)?;
+    let mut timer = slice_timer(backend, spec.buckets());
+    let meas = measure::measure(&mut timer, m.seq_len as u32, 4, repeats);
+    measure::fit(&meas, m.seq_len as u32).map_err(|e| anyhow::anyhow!(e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moment_path_prefixes_stem() {
+        let p = moment_path(Path::new("ckpt/init/stage0.w.bin"), "m");
+        assert_eq!(p, Path::new("ckpt/init/m.stage0.w.bin"));
+    }
+
+    #[test]
+    fn measure_fit_produces_queryable_model() {
+        use crate::perfmodel::CostModel;
+        let dims = ModelDims {
+            vocab: 17,
+            hidden: 8,
+            num_heads: 2,
+            layers_per_stage: 1,
+            num_stages: 2,
+            seq_len: 8,
+            batch: 1,
+            block_ctx: 4,
+            seed: 5,
+        };
+        let spec = NativeSpec::new(dims, 2);
+        let fitted = measure_fit(&spec, 1).unwrap();
+        // every on-grid (i, j) with i + j ≤ L answers with a finite time
+        for i in [2u32, 4, 8] {
+            for j in [0u32, 2, 4] {
+                if i + j <= 8 {
+                    let t = fitted.t(i, j);
+                    assert!(t.is_finite() && t >= 0.0, "t({i},{j}) = {t}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,472 @@
+//! The native CPU stage backend: pure-Rust parameters + compute, no AOT
+//! artifacts, no PJRT — the default build's execution engine.
+//!
+//! A [`NativeBackend`] is one pipeline cell: the stage's transformer
+//! layers (plus the embedding on the first stage and the LM head on the
+//! last), their Adam state, and the [`cell`](super::cell) compute. It is
+//! constructed from a [`NativeSpec`] on the worker thread that owns it.
+//!
+//! Initialization mirrors model.py's GPT-2-style scheme (normal 0.02,
+//! residual projections scaled by `1/sqrt(2·num_layers)`, positional
+//! embeddings 0.01, ones/zeros for layernorm), drawn from a seeded
+//! SplitMix64 stream per tensor, so two backends built from the same spec
+//! hold bit-identical parameters. The exact draws differ from the JAX
+//! init (different RNG), which is fine: the artifacts carry their own
+//! weights, and equivalence claims are always *within* a backend.
+//!
+//! Checkpoints use the same layout the PJRT worker writes: one raw
+//! little-endian f32 file per tensor under `dir/init/`, with Adam moments
+//! beside them as `m.<file>` / `v.<file>`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::cell;
+use super::{moment_path, read_f32_file, write_f32_file, BackendSpec, StageBackend};
+use crate::runtime::manifest::ModelDims;
+use crate::runtime::tensor::HostTensor;
+use crate::util::Rng;
+
+/// A named parameter group with its gradient accumulators and Adam state.
+pub struct ParamSet {
+    /// File-stem names, aligned with `params` (e.g. `stage0.layer0.w_qkv`).
+    pub names: Vec<String>,
+    pub params: Vec<HostTensor>,
+    pub grads: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+}
+
+impl ParamSet {
+    pub fn new(entries: Vec<(String, HostTensor)>) -> ParamSet {
+        let names = entries.iter().map(|(n, _)| n.clone()).collect();
+        let params: Vec<HostTensor> = entries.into_iter().map(|(_, t)| t).collect();
+        let zeros: Vec<HostTensor> = params.iter().map(|p| HostTensor::zeros_f32(&p.shape)).collect();
+        ParamSet {
+            names,
+            grads: zeros.clone(),
+            m: zeros.clone(),
+            v: zeros,
+            params,
+        }
+    }
+
+    /// Apply bias-corrected Adam with the accumulated grads, then zero
+    /// the accumulators for the next step.
+    pub fn adam(&mut self, step: i32, lr: f32) {
+        cell::adam_step(&mut self.params, &self.grads, &mut self.m, &mut self.v, step, lr);
+        for g in &mut self.grads {
+            g.fill_zero();
+        }
+    }
+
+    /// Max |grad| across the set (test/telemetry helper).
+    pub fn grad_max_abs(&self) -> f32 {
+        self.grads.iter().fold(0f32, |acc, g| acc.max(g.max_abs()))
+    }
+
+    fn file(dir: &Path, name: &str) -> PathBuf {
+        dir.join("init").join(format!("{name}.bin"))
+    }
+
+    /// Write params + moments under `dir/init/` (raw LE f32).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir.join("init"))?;
+        for (i, name) in self.names.iter().enumerate() {
+            let f = Self::file(dir, name);
+            write_f32_file(&f, &self.params[i])?;
+            write_f32_file(&moment_path(&f, "m"), &self.m[i])?;
+            write_f32_file(&moment_path(&f, "v"), &self.v[i])?;
+        }
+        Ok(())
+    }
+
+    /// Load params (and moments when present) from a checkpoint written
+    /// by [`ParamSet::save`]. Shapes must match the current set.
+    pub fn load(&mut self, dir: &Path) -> Result<()> {
+        for (i, name) in self.names.iter().enumerate() {
+            let f = Self::file(dir, name);
+            self.params[i] = read_f32_file(&f, &self.params[i].shape)?;
+        }
+        // Moments are optional: params-only checkpoints load too.
+        let have_moments = self
+            .names
+            .iter()
+            .all(|n| moment_path(&Self::file(dir, n), "m").exists());
+        if have_moments {
+            for (i, name) in self.names.iter().enumerate() {
+                let f = Self::file(dir, name);
+                self.m[i] = read_f32_file(&moment_path(&f, "m"), &self.m[i].shape)?;
+                self.v[i] = read_f32_file(&moment_path(&f, "v"), &self.v[i].shape)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic init
+// ---------------------------------------------------------------------------
+
+/// Standard normal via Box–Muller over the SplitMix64 stream.
+fn normal_tensor(rng: &mut Rng, shape: &[usize], std: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    while data.len() < n {
+        let u1 = rng.f64().max(1e-12);
+        let u2 = rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        data.push((r * th.cos()) as f32 * std);
+        if data.len() < n {
+            data.push((r * th.sin()) as f32 * std);
+        }
+    }
+    HostTensor::f32(shape, data)
+}
+
+fn const_tensor(shape: &[usize], v: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::f32(shape, vec![v; n])
+}
+
+/// Per-tensor RNG: independent stream keyed on (seed, group, index).
+fn tensor_rng(seed: u64, group: u64, index: u64) -> Rng {
+    Rng::new(
+        seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ group.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ index.wrapping_add(0x94D0_49BB_1331_11EB),
+    )
+}
+
+/// Embedding group: `tok_emb [V,H]`, `pos_emb [T,H]`.
+pub fn init_embed(d: &ModelDims) -> ParamSet {
+    let mut entries = Vec::new();
+    let mut r0 = tensor_rng(d.seed, 1, 0);
+    entries.push(("embed.tok_emb".to_string(), normal_tensor(&mut r0, &[d.vocab, d.hidden], 0.02)));
+    let mut r1 = tensor_rng(d.seed, 1, 1);
+    entries.push(("embed.pos_emb".to_string(), normal_tensor(&mut r1, &[d.seq_len, d.hidden], 0.01)));
+    ParamSet::new(entries)
+}
+
+/// Head group: `lnf_g [H]`, `lnf_b [H]`, `w_out [H,V]`, `b_out [V]`.
+pub fn init_head(d: &ModelDims) -> ParamSet {
+    let h = d.hidden;
+    let mut rng = tensor_rng(d.seed, 2, 0);
+    ParamSet::new(vec![
+        ("head.lnf_g".to_string(), const_tensor(&[h], 1.0)),
+        ("head.lnf_b".to_string(), const_tensor(&[h], 0.0)),
+        ("head.w_out".to_string(), normal_tensor(&mut rng, &[h, d.vocab], 0.02)),
+        ("head.b_out".to_string(), const_tensor(&[d.vocab], 0.0)),
+    ])
+}
+
+/// One stage's transformer-layer group (`layers_per_stage · 12` tensors,
+/// canonical order).
+pub fn init_stage(d: &ModelDims, stage: usize) -> ParamSet {
+    let h = d.hidden;
+    let f = 4 * h;
+    let num_layers = d.layers_per_stage * d.num_stages;
+    let resid_std = 0.02 / (2.0 * num_layers as f32).sqrt();
+    let mut entries = Vec::new();
+    for l in 0..d.layers_per_stage {
+        let global = (stage * d.layers_per_stage + l) as u64;
+        let mk = |idx: u64| tensor_rng(d.seed, 3 + global, idx);
+        let shapes: [(&str, Vec<usize>, Option<(u64, f32)>); 12] = [
+            ("ln1_g", vec![h], None),
+            ("ln1_b", vec![h], None),
+            ("w_qkv", vec![h, 3 * h], Some((0, 0.02))),
+            ("b_qkv", vec![3 * h], None),
+            ("w_proj", vec![h, h], Some((1, resid_std))),
+            ("b_proj", vec![h], None),
+            ("ln2_g", vec![h], None),
+            ("ln2_b", vec![h], None),
+            ("w_fc1", vec![h, f], Some((2, 0.02))),
+            ("b_fc1", vec![f], None),
+            ("w_fc2", vec![f, h], Some((3, resid_std))),
+            ("b_fc2", vec![h], None),
+        ];
+        for (name, shape, draw) in shapes {
+            let t = match draw {
+                Some((idx, std)) => normal_tensor(&mut mk(idx), &shape, std),
+                // layernorm gains are ones, every bias zero
+                None => const_tensor(&shape, if name.ends_with("_g") { 1.0 } else { 0.0 }),
+            };
+            entries.push((format!("stage{stage}.layer{l}.{name}"), t));
+        }
+    }
+    ParamSet::new(entries)
+}
+
+// ---------------------------------------------------------------------------
+// The backend
+// ---------------------------------------------------------------------------
+
+/// Spec for building native pipeline cells: model geometry + the slice
+/// buckets the planner may use. The native backend has no static-shape
+/// constraint, so the bucket set is simply every multiple of
+/// `granularity` up to the sequence length.
+#[derive(Debug, Clone)]
+pub struct NativeSpec {
+    pub model: ModelDims,
+    /// Slice-length granularity (buckets are g, 2g, …, L).
+    pub granularity: usize,
+}
+
+impl NativeSpec {
+    pub fn new(model: ModelDims, granularity: usize) -> NativeSpec {
+        assert!(granularity >= 1 && model.seq_len % granularity == 0, "granularity must divide L");
+        NativeSpec { model, granularity }
+    }
+}
+
+impl BackendSpec for NativeSpec {
+    type Backend = NativeBackend;
+
+    fn model(&self) -> ModelDims {
+        self.model.clone()
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        (1..=self.model.seq_len / self.granularity)
+            .map(|a| a * self.granularity)
+            .collect()
+    }
+
+    fn build(&self, stage: usize, num_stages: usize, resume_from: Option<&Path>) -> Result<NativeBackend> {
+        if num_stages != self.model.num_stages {
+            bail!("spec has {} stages, pipeline has {num_stages}", self.model.num_stages);
+        }
+        if stage >= num_stages {
+            bail!("stage {stage} out of range");
+        }
+        NativeBackend::new(self.model.clone(), stage, num_stages, resume_from)
+    }
+}
+
+/// One native pipeline cell (see module docs).
+pub struct NativeBackend {
+    dims: ModelDims,
+    #[allow(dead_code)]
+    stage: usize,
+    pub stage_p: ParamSet,
+    pub embed_p: Option<ParamSet>,
+    pub head_p: Option<ParamSet>,
+}
+
+impl NativeBackend {
+    pub fn new(
+        dims: ModelDims,
+        stage: usize,
+        num_stages: usize,
+        resume_from: Option<&Path>,
+    ) -> Result<NativeBackend> {
+        let is_first = stage == 0;
+        let is_last = stage == num_stages - 1;
+        let mut b = NativeBackend {
+            stage_p: init_stage(&dims, stage),
+            embed_p: is_first.then(|| init_embed(&dims)),
+            head_p: is_last.then(|| init_head(&dims)),
+            dims,
+            stage,
+        };
+        if let Some(dir) = resume_from {
+            b.stage_p.load(dir)?;
+            if let Some(g) = b.embed_p.as_mut() {
+                g.load(dir)?;
+            }
+            if let Some(g) = b.head_p.as_mut() {
+                g.load(dir)?;
+            }
+        }
+        Ok(b)
+    }
+
+    fn check_tokens(&self, tokens: &[i32], len: usize) -> Result<()> {
+        if tokens.len() != self.dims.batch * len {
+            bail!("expected {} tokens, got {}", self.dims.batch * len, tokens.len());
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.dims.vocab) {
+            bail!("token id {t} outside vocab 0..{}", self.dims.vocab);
+        }
+        Ok(())
+    }
+}
+
+impl StageBackend for NativeBackend {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn embed_fwd(&mut self, tokens: &[i32], len: usize, off: usize) -> Result<HostTensor> {
+        self.check_tokens(tokens, len)?;
+        let eg = self.embed_p.as_ref().ok_or_else(|| anyhow::anyhow!("no embedding on this stage"))?;
+        let h = cell::embed_fwd(&self.dims, len, off, &eg.params, tokens);
+        Ok(HostTensor::f32(&[self.dims.batch, len, self.dims.hidden], h))
+    }
+
+    fn stage_fwd(
+        &mut self,
+        h: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let d = &self.dims;
+        let len = h.shape[1];
+        let (h_out, k_new, v_new) =
+            cell::stage_fwd(d, len, off, &self.stage_p.params, h.as_f32(), k_ctx.as_f32(), v_ctx.as_f32());
+        Ok((
+            HostTensor::f32(&[d.batch, len, d.hidden], h_out),
+            HostTensor::f32(&d.kv_new_shape(len), k_new),
+            HostTensor::f32(&d.kv_new_shape(len), v_new),
+        ))
+    }
+
+    fn head_loss(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<f32> {
+        self.check_tokens(targets, len)?;
+        let hg = self.head_p.as_ref().ok_or_else(|| anyhow::anyhow!("no head on this stage"))?;
+        Ok(cell::head_fwd(&self.dims, len, &hg.params, h_out.as_f32(), targets))
+    }
+
+    fn head_bwd(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<HostTensor> {
+        self.check_tokens(targets, len)?;
+        let d = self.dims.clone();
+        let hg = self.head_p.as_mut().ok_or_else(|| anyhow::anyhow!("no head on this stage"))?;
+        let g_h = cell::head_bwd(&d, len, &hg.params, h_out.as_f32(), targets, &mut hg.grads);
+        Ok(HostTensor::f32(&[d.batch, len, d.hidden], g_h))
+    }
+
+    fn stage_bwd(
+        &mut self,
+        h_in: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+        g_h: &HostTensor,
+        g_know: &HostTensor,
+        g_vnow: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let d = self.dims.clone();
+        let len = h_in.shape[1];
+        let (g_h_in, g_kctx, g_vctx) = cell::stage_bwd(
+            &d,
+            len,
+            off,
+            &self.stage_p.params,
+            h_in.as_f32(),
+            k_ctx.as_f32(),
+            v_ctx.as_f32(),
+            g_h.as_f32(),
+            g_know.as_f32(),
+            g_vnow.as_f32(),
+            &mut self.stage_p.grads,
+        );
+        Ok((
+            HostTensor::f32(&[d.batch, len, d.hidden], g_h_in),
+            HostTensor::f32(&d.kv_shape(), g_kctx),
+            HostTensor::f32(&d.kv_shape(), g_vctx),
+        ))
+    }
+
+    fn embed_bwd(&mut self, tokens: &[i32], len: usize, off: usize, g_h: &HostTensor) -> Result<()> {
+        self.check_tokens(tokens, len)?;
+        let d = self.dims.clone();
+        let eg = self.embed_p.as_mut().ok_or_else(|| anyhow::anyhow!("no embedding on this stage"))?;
+        cell::embed_bwd(&d, len, off, tokens, g_h.as_f32(), &mut eg.grads);
+        Ok(())
+    }
+
+    fn update(&mut self, step: i32, lr: f32) -> Result<()> {
+        self.stage_p.adam(step, lr);
+        if let Some(g) = self.embed_p.as_mut() {
+            g.adam(step, lr);
+        }
+        if let Some(g) = self.head_p.as_mut() {
+            g.adam(step, lr);
+        }
+        Ok(())
+    }
+
+    fn checkpoint(&self, dir: &Path) -> Result<()> {
+        self.stage_p.save(dir)?;
+        if let Some(g) = &self.embed_p {
+            g.save(dir)?;
+        }
+        if let Some(g) = &self.head_p {
+            g.save(dir)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims {
+            vocab: 17,
+            hidden: 8,
+            num_heads: 2,
+            layers_per_stage: 1,
+            num_stages: 2,
+            seq_len: 8,
+            batch: 2,
+            block_ctx: 4,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_role_scoped() {
+        let spec = NativeSpec::new(tiny_dims(), 2);
+        let a = spec.build(0, 2, None).unwrap();
+        let b = spec.build(0, 2, None).unwrap();
+        for (x, y) in a.stage_p.params.iter().zip(&b.stage_p.params) {
+            assert_eq!(x, y);
+        }
+        assert!(a.embed_p.is_some() && a.head_p.is_none());
+        let last = spec.build(1, 2, None).unwrap();
+        assert!(last.embed_p.is_none() && last.head_p.is_some());
+        // different stages draw different weights
+        assert_ne!(a.stage_p.params[2], last.stage_p.params[2]);
+    }
+
+    #[test]
+    fn buckets_are_multiples_of_granularity() {
+        let spec = NativeSpec::new(tiny_dims(), 2);
+        assert_eq!(spec.buckets(), vec![2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_params_and_moments() {
+        let spec = NativeSpec::new(tiny_dims(), 2);
+        let dir = std::env::temp_dir().join(format!("terapipe-native-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut a = spec.build(0, 2, None).unwrap();
+        // take one optimizer step so moments are nonzero
+        for g in &mut a.stage_p.grads {
+            g.as_f32_mut().iter_mut().for_each(|x| *x = 0.01);
+        }
+        a.update(1, 1e-3).unwrap();
+        a.checkpoint(&dir).unwrap();
+        let b = spec.build(0, 2, Some(&dir)).unwrap();
+        for (x, y) in a.stage_p.params.iter().zip(&b.stage_p.params) {
+            assert_eq!(x, y);
+        }
+        for (x, y) in a.stage_p.m.iter().zip(&b.stage_p.m) {
+            assert_eq!(x, y);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_tokens() {
+        let spec = NativeSpec::new(tiny_dims(), 2);
+        let mut b = spec.build(0, 2, None).unwrap();
+        let bad = vec![99i32; 2 * 2];
+        assert!(b.embed_fwd(&bad, 2, 0).is_err());
+    }
+}

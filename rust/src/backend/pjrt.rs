@@ -1,0 +1,349 @@
+//! The PJRT stage backend: AOT-compiled XLA executables behind the
+//! [`StageBackend`] trait (feature `pjrt`).
+//!
+//! This is the execution engine the coordinator originally hard-wired:
+//! one `StageRuntime` (own PJRT client + compiled executables) per
+//! worker, parameters kept both as host tensors (optimizer step,
+//! checkpoints) and as pre-converted PJRT literals (they are inputs to
+//! every slice executable, so caching the upload halves the per-slice
+//! host work — EXPERIMENTS.md §Perf L3). The refactor moved all of that
+//! here unchanged; the worker now only speaks the trait.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{moment_path, read_f32_file, write_f32_file, BackendSpec, StageBackend};
+use crate::runtime::manifest::{InitEntry, Manifest, ModelDims};
+use crate::runtime::tensor::HostTensor;
+use crate::runtime::{stage_exe_names, StageRuntime};
+
+/// An optimizer-managed parameter group backed by an `adam_<group>`
+/// executable, with cached literal uploads of the current parameters.
+struct ParamGroup {
+    exe: String,
+    params: Vec<HostTensor>,
+    /// Cached literal uploads of `params` (invalidated by `apply`).
+    lits: Vec<xla::Literal>,
+    grads: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+}
+
+impl ParamGroup {
+    fn new(exe: &str, params: Vec<HostTensor>) -> Result<Self> {
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::zeros_f32(&p.shape))
+            .collect();
+        let lits = params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamGroup {
+            exe: exe.to_string(),
+            lits,
+            grads: zeros.clone(),
+            m: zeros.clone(),
+            v: zeros,
+            params,
+        })
+    }
+
+    fn accumulate(&mut self, slice_grads: &[HostTensor]) {
+        assert_eq!(slice_grads.len(), self.grads.len(), "{} grad arity", self.exe);
+        for (g, s) in self.grads.iter_mut().zip(slice_grads) {
+            g.add_assign(s);
+        }
+    }
+
+    fn apply(&mut self, rt: &StageRuntime, step: i32, lr: f32) -> Result<()> {
+        let n = self.params.len();
+        let mut inputs = Vec::with_capacity(4 * n + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.grads.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar_i32(step));
+        inputs.push(HostTensor::scalar_f32(lr));
+        let mut out = rt.run(&self.exe, &inputs)?;
+        // outputs: params, m, v — in that order
+        self.v = out.split_off(2 * n);
+        self.m = out.split_off(n);
+        self.params = out;
+        self.lits = self
+            .params
+            .iter()
+            .map(|p| p.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        for g in &mut self.grads {
+            g.fill_zero();
+        }
+        Ok(())
+    }
+}
+
+/// Spec for the PJRT pipeline: the artifact dir (manifest + HLO text +
+/// init weights produced by `make artifacts`).
+#[derive(Debug, Clone)]
+pub struct PjrtSpec {
+    pub artifacts: PathBuf,
+    model: ModelDims,
+    buckets: Vec<usize>,
+}
+
+impl PjrtSpec {
+    pub fn new(artifacts: &Path) -> Result<PjrtSpec> {
+        let manifest = Manifest::load(artifacts)?;
+        Ok(PjrtSpec {
+            artifacts: artifacts.to_path_buf(),
+            model: manifest.model.clone(),
+            buckets: manifest.buckets.clone(),
+        })
+    }
+}
+
+impl BackendSpec for PjrtSpec {
+    type Backend = PjrtBackend;
+
+    fn model(&self) -> ModelDims {
+        self.model.clone()
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn build(&self, stage: usize, num_stages: usize, resume_from: Option<&Path>) -> Result<PjrtBackend> {
+        PjrtBackend::new(&self.artifacts, stage, num_stages, resume_from)
+    }
+}
+
+/// One PJRT pipeline cell (see module docs).
+pub struct PjrtBackend {
+    stage: usize,
+    rt: StageRuntime,
+    dims: ModelDims,
+    stage_group: ParamGroup,
+    embed_group: Option<ParamGroup>,
+    head_group: Option<ParamGroup>,
+}
+
+impl PjrtBackend {
+    pub fn new(
+        artifacts: &Path,
+        stage: usize,
+        num_stages: usize,
+        resume_from: Option<&Path>,
+    ) -> Result<PjrtBackend> {
+        let is_first = stage == 0;
+        let is_last = stage == num_stages - 1;
+        let manifest = Manifest::load(artifacts)?;
+        let names = stage_exe_names(stage, num_stages, &manifest.buckets);
+        let rt = StageRuntime::load(artifacts, &names)
+            .with_context(|| format!("stage {stage}: loading runtime"))?;
+        let dims = rt.manifest.model.clone();
+
+        // Parameters (and, when resuming, Adam moments) from artifacts/init
+        // or a checkpoint dir (same file layout — see `checkpoint`).
+        let mk_group = |exe: &str, entries: &[InitEntry]| -> Result<ParamGroup> {
+            match resume_from {
+                None => ParamGroup::new(exe, rt.manifest.load_init(entries)?),
+                Some(dir) => {
+                    let params = entries
+                        .iter()
+                        .map(|e| read_f32_file(&dir.join(&e.file), &e.shape))
+                        .collect::<Result<Vec<_>>>()?;
+                    let mut g = ParamGroup::new(exe, params)?;
+                    // moments are optional (params-only checkpoints load too)
+                    if entries
+                        .iter()
+                        .all(|e| moment_path(&dir.join(&e.file), "m").exists())
+                    {
+                        g.m = entries
+                            .iter()
+                            .map(|e| read_f32_file(&moment_path(&dir.join(&e.file), "m"), &e.shape))
+                            .collect::<Result<Vec<_>>>()?;
+                        g.v = entries
+                            .iter()
+                            .map(|e| read_f32_file(&moment_path(&dir.join(&e.file), "v"), &e.shape))
+                            .collect::<Result<Vec<_>>>()?;
+                    }
+                    Ok(g)
+                }
+            }
+        };
+        let stage_group = mk_group("adam_stage", &rt.manifest.init_stages[stage])?;
+        let embed_group = is_first
+            .then(|| mk_group("adam_embed", &rt.manifest.init_embed))
+            .transpose()?;
+        let head_group = is_last
+            .then(|| mk_group("adam_head", &rt.manifest.init_head))
+            .transpose()?;
+        drop(manifest);
+        Ok(PjrtBackend {
+            stage,
+            rt,
+            dims,
+            stage_group,
+            embed_group,
+            head_group,
+        })
+    }
+}
+
+impl StageBackend for PjrtBackend {
+    fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    fn embed_fwd(&mut self, tokens: &[i32], len: usize, off: usize) -> Result<HostTensor> {
+        let eg = self
+            .embed_group
+            .as_ref()
+            .ok_or_else(|| anyhow!("tokens arrived at non-first stage {}", self.stage))?;
+        let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens.to_vec()).to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
+        args.push(&tok_l);
+        args.push(&off_l);
+        Ok(self
+            .rt
+            .run_literal_refs(&format!("embed_fwd_s{len}"), &args)?
+            .remove(0))
+    }
+
+    fn stage_fwd(
+        &mut self,
+        h: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let len = h.shape[1];
+        let h_l = h.to_literal()?;
+        let k_l = k_ctx.to_literal()?;
+        let v_l = v_ctx.to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
+        args.extend([&h_l, &k_l, &v_l, &off_l]);
+        let mut out = self.rt.run_literal_refs(&format!("stage_fwd_s{len}"), &args)?;
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let h_out = out.pop().unwrap();
+        Ok((h_out, k_new, v_new))
+    }
+
+    fn head_loss(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<f32> {
+        let hg = self
+            .head_group
+            .as_ref()
+            .ok_or_else(|| anyhow!("head_loss on non-last stage {}", self.stage))?;
+        let tg_l = HostTensor::i32(&[self.dims.batch, len], targets.to_vec()).to_literal()?;
+        let h_l = h_out.to_literal()?;
+        let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
+        args.extend([&h_l, &tg_l]);
+        let loss = self
+            .rt
+            .run_literal_refs(&format!("head_fwd_s{len}"), &args)?
+            .remove(0);
+        Ok(loss.as_f32()[0])
+    }
+
+    fn head_bwd(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<HostTensor> {
+        let hg = self
+            .head_group
+            .as_ref()
+            .ok_or_else(|| anyhow!("head_bwd on non-last stage {}", self.stage))?;
+        let tg_l = HostTensor::i32(&[self.dims.batch, len], targets.to_vec()).to_literal()?;
+        let h_l = h_out.to_literal()?;
+        let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
+        args.extend([&h_l, &tg_l]);
+        let mut out = self.rt.run_literal_refs(&format!("head_bwd_s{len}"), &args)?;
+        let g_h = out.pop().unwrap();
+        self.head_group.as_mut().unwrap().accumulate(&out);
+        Ok(g_h)
+    }
+
+    fn stage_bwd(
+        &mut self,
+        h_in: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+        g_h: &HostTensor,
+        g_know: &HostTensor,
+        g_vnow: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let len = h_in.shape[1];
+        let h_l = h_in.to_literal()?;
+        let k_l = k_ctx.to_literal()?;
+        let v_l = v_ctx.to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let gh_l = g_h.to_literal()?;
+        let gk_l = g_know.to_literal()?;
+        let gv_l = g_vnow.to_literal()?;
+        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
+        args.extend([&h_l, &k_l, &v_l, &off_l, &gh_l, &gk_l, &gv_l]);
+        let mut out = self.rt.run_literal_refs(&format!("stage_bwd_s{len}"), &args)?;
+        let g_vctx = out.pop().unwrap();
+        let g_kctx = out.pop().unwrap();
+        let g_h_in = out.pop().unwrap();
+        self.stage_group.accumulate(&out);
+        Ok((g_h_in, g_kctx, g_vctx))
+    }
+
+    fn embed_bwd(&mut self, tokens: &[i32], len: usize, off: usize, g_h: &HostTensor) -> Result<()> {
+        let eg = self
+            .embed_group
+            .as_ref()
+            .ok_or_else(|| anyhow!("embed_bwd on non-first stage {}", self.stage))?;
+        let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens.to_vec()).to_literal()?;
+        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
+        let gh_l = g_h.to_literal()?;
+        let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
+        args.extend([&tok_l, &off_l, &gh_l]);
+        let out = self.rt.run_literal_refs(&format!("embed_bwd_s{len}"), &args)?;
+        self.embed_group.as_mut().unwrap().accumulate(&out);
+        Ok(())
+    }
+
+    fn update(&mut self, step: i32, lr: f32) -> Result<()> {
+        self.stage_group.apply(&self.rt, step, lr)?;
+        if let Some(g) = self.embed_group.as_mut() {
+            g.apply(&self.rt, step, lr)?;
+        }
+        if let Some(g) = self.head_group.as_mut() {
+            g.apply(&self.rt, step, lr)?;
+        }
+        Ok(())
+    }
+
+    /// Write this stage's parameter groups under `dir` in the init-file
+    /// layout (init/stage{k}.name.bin etc.), so checkpoints are loadable
+    /// via `resume_from`.
+    fn checkpoint(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir.join("init"))?;
+        let manifest = &self.rt.manifest;
+        let groups: Vec<(&[InitEntry], &ParamGroup)> = {
+            let mut v: Vec<(&[InitEntry], &ParamGroup)> =
+                vec![(manifest.init_stages[self.stage].as_slice(), &self.stage_group)];
+            if let Some(g) = &self.embed_group {
+                v.push((manifest.init_embed.as_slice(), g));
+            }
+            if let Some(g) = &self.head_group {
+                v.push((manifest.init_head.as_slice(), g));
+            }
+            v
+        };
+        for (entries, group) in groups {
+            for (i, e) in entries.iter().enumerate() {
+                write_f32_file(&dir.join(&e.file), &group.params[i])?;
+                // optimizer moments beside the params, "m."/"v." prefixed
+                write_f32_file(&moment_path(&dir.join(&e.file), "m"), &group.m[i])?;
+                write_f32_file(&moment_path(&dir.join(&e.file), "v"), &group.v[i])?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -47,11 +47,38 @@ pub enum Msg {
     Shutdown,
 }
 
+/// Which half of a slice's work a timing sample covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimedPhase {
+    /// Embedding (first stage) + stage forward + head loss (last stage).
+    Fwd,
+    /// Head backward (last stage) + stage backward + embedding backward
+    /// (first stage) — recompute included, like the executables.
+    Bwd,
+}
+
+/// One measured slice execution on one stage — the live counterpart of
+/// [`crate::perfmodel::measure`]'s offline samples. `off` is the slice's
+/// context length (the model's `j`), `len` the slice length (`i`).
+#[derive(Debug, Clone, Copy)]
+pub struct SliceTime {
+    pub stage: usize,
+    pub mb: usize,
+    pub slice: usize,
+    pub off: usize,
+    pub len: usize,
+    pub phase: TimedPhase,
+    pub ms: f64,
+}
+
 /// Driver inbox.
 #[derive(Debug)]
 pub enum DriverMsg {
     /// Stage 0 finished backward for one (mb, slice).
     BwdDone { mb: usize, slice: usize },
+    /// A per-slice wall-clock sample (sent only when timing collection is
+    /// on: `TrainConfig::trace` or an active replan cadence).
+    SliceTime(SliceTime),
     /// Last stage's summed token cross-entropy for one (mb, slice).
     Loss { mb: usize, slice: usize, loss_sum: f32 },
     /// A worker applied its optimizer update.

@@ -1,14 +1,17 @@
 //! The token-level pipeline training coordinator — TeraPipe's mechanism,
-//! actually executed.
+//! actually executed, in the default build.
 //!
-//! One OS thread per pipeline cell (stage), each owning its own PJRT
-//! client, compiled executables, parameters and Adam state. Token slices
-//! flow downstream as [`runtime::tensor::HostTensor`] activations over
-//! mpsc channels; gradients flow back upstream in reverse slice order,
-//! carrying the context-gradient accumulation that makes the pipelined
-//! backward *exactly* equal the unsliced one (validated by
-//! `rust/tests/coordinator_equivalence.rs` and by the python oracle tests
-//! on the same executables).
+//! One OS thread per pipeline cell (stage), each owning its own
+//! [`crate::backend::StageBackend`] — parameters, Adam state and the
+//! slice compute (the native CPU cell by default; AOT PJRT executables
+//! behind the `pjrt` feature). Token slices flow downstream as
+//! [`crate::runtime::tensor::HostTensor`] activations over mpsc channels;
+//! gradients flow back upstream in reverse slice order, carrying the
+//! context-gradient accumulation that makes the pipelined backward
+//! *exactly* equal the unsliced one (validated by
+//! `rust/tests/pipeline_integration.rs` and
+//! `rust/tests/backend_equivalence.rs` on the native backend, and by the
+//! python oracle tests on the PJRT executables).
 //!
 //! Execution schedule (paper §3.2/3.4, per microbatch `mb` with slices
 //! s_1..s_M of one training sequence batch):
@@ -31,14 +34,17 @@ pub mod messages;
 pub mod trainer;
 pub mod worker;
 
-pub use trainer::{train, StepReport, Trainer};
+pub use messages::{SliceTime, TimedPhase};
+#[cfg(feature = "pjrt")]
+pub use trainer::train;
+pub use trainer::{train_native, DriftReplanReport, StepReport, Trainer};
 
 use anyhow::{bail, Result};
 
 /// Training-run configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
-    /// Token slice lengths (each must be an AOT bucket; sum must be L).
+    /// Token slice lengths (each must be a backend bucket; sum must be L).
     pub slicing: Vec<usize>,
     /// Microbatches per step (each is `batch` sequences; gradients
     /// accumulate across them before the Adam step).
@@ -48,11 +54,29 @@ pub struct TrainConfig {
     /// RNG seed for the batcher.
     pub seed: u64,
     /// Solver-in-the-loop cadence: every N steps the trainer invokes its
-    /// replan callback ([`Trainer::train_with_replan`]) and adopts the
-    /// returned slicing if it validates against the manifest — the
+    /// replan callback ([`Trainer::train_with_replan`], or the window
+    /// verdict in [`Trainer::train_with_drift_replan`]) and adopts the
+    /// returned slicing if it validates against the bucket set — the
     /// coordinator-side hook of the online planner service
     /// (`crate::planner`). `None` keeps one slicing for the whole run.
     pub replan_every: Option<usize>,
+    /// Collect per-slice fwd/bwd wall-clock samples every step
+    /// ([`Trainer::last_timings`]). Implied by `replan_every`.
+    pub trace: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            slicing: Vec::new(),
+            microbatches: 1,
+            steps: 1,
+            lr: 1e-3,
+            seed: 0,
+            replan_every: None,
+            trace: false,
+        }
+    }
 }
 
 impl TrainConfig {
@@ -99,11 +123,7 @@ mod tests {
     fn validate_accepts_bucketed_cover() {
         let c = TrainConfig {
             slicing: vec![64, 32, 16, 16],
-            microbatches: 1,
-            steps: 1,
-            lr: 1e-3,
-            seed: 0,
-            replan_every: None,
+            ..Default::default()
         };
         c.validate(128, &[16, 32, 64, 128]).unwrap();
         assert_eq!(c.offsets(), vec![0, 64, 96, 112]);
@@ -113,11 +133,7 @@ mod tests {
     fn validate_rejects_bad_sum_and_bucket() {
         let mut c = TrainConfig {
             slicing: vec![64, 32],
-            microbatches: 1,
-            steps: 1,
-            lr: 1e-3,
-            seed: 0,
-            replan_every: None,
+            ..Default::default()
         };
         assert!(c.validate(128, &[16, 32, 64]).is_err()); // sums to 96
         c.slicing = vec![100, 28];
@@ -130,11 +146,8 @@ mod tests {
     fn validate_rejects_zero_replan_cadence() {
         let c = TrainConfig {
             slicing: vec![64, 64],
-            microbatches: 1,
-            steps: 1,
-            lr: 1e-3,
-            seed: 0,
             replan_every: Some(0),
+            ..Default::default()
         };
         assert!(c.validate(128, &[64]).is_err());
     }

@@ -1,5 +1,8 @@
 //! The driver: spawns stage workers, streams token slices into the
-//! pipeline, collects losses, and coordinates optimizer updates.
+//! pipeline, collects losses and timing samples, and coordinates
+//! optimizer updates. Generic over the stage backend via
+//! [`BackendSpec`] — the native CPU backend in the default build, PJRT
+//! behind the feature.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -8,11 +11,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::messages::{DriverMsg, FwdPayload, Msg};
+use super::messages::{DriverMsg, FwdPayload, Msg, SliceTime, TimedPhase};
 use super::worker::{run_worker, WorkerCfg};
 use super::TrainConfig;
+use crate::backend::BackendSpec;
 use crate::data::Batch;
-use crate::runtime::manifest::Manifest;
+use crate::perfmodel::{CostModel, ScaledModel};
+use crate::planner::drift::{DriftConfig, DriftDetector, DriftVerdict, LatencySample};
+use crate::runtime::manifest::ModelDims;
 
 /// Per-step telemetry.
 #[derive(Debug, Clone)]
@@ -21,13 +27,33 @@ pub struct StepReport {
     /// Mean per-token cross-entropy (nats).
     pub loss: f64,
     pub wall_ms: f64,
+    /// Wall time from step start until the last slice's loss arrived —
+    /// the executed forward-sweep makespan the wavefront model predicts.
+    pub fwd_ms: f64,
     /// Tokens processed this step (microbatches · batch · L).
     pub tokens: usize,
 }
 
+/// Outcome of the drift-gated replan loop ([`Trainer::train_with_drift_replan`]).
+#[derive(Debug, Clone, Default)]
+pub struct DriftReplanReport {
+    /// Replan-cadence checks whose window verdict was `Drifted` (each
+    /// triggers exactly one `resolve` call).
+    pub resolves: usize,
+    /// Replan-cadence checks whose window verdict was `Stable` (no
+    /// re-solve paid — the point of routing samples through the detector).
+    pub stable_checks: usize,
+    /// Cadence checks skipped because the sample window wasn't full yet.
+    pub warmups: usize,
+    /// Latency samples fed to the detector.
+    pub samples_seen: usize,
+}
+
 /// A running pipeline: workers + channel endpoints.
-pub struct Trainer {
-    pub manifest: Manifest,
+pub struct Trainer<S: BackendSpec> {
+    pub model: ModelDims,
+    /// Slice lengths the backend supports (the planner's bucket set).
+    pub buckets: Vec<usize>,
     cfg: TrainConfig,
     /// Global step counter (continues across checkpoint resume).
     steps_done: usize,
@@ -35,25 +61,29 @@ pub struct Trainer {
     to_all: Vec<Sender<Msg>>,
     from_workers: Receiver<DriverMsg>,
     handles: Vec<JoinHandle<()>>,
+    /// Per-slice timing samples collected during the most recent step.
+    timings: Vec<SliceTime>,
 }
 
-impl Trainer {
-    /// Spawn one worker thread per stage (each compiles its own
-    /// executables on its own PJRT client).
-    pub fn new(artifacts: &Path, cfg: TrainConfig) -> Result<Trainer> {
-        Self::new_with_resume(artifacts, cfg, None)
+impl<S: BackendSpec> Trainer<S> {
+    /// Spawn one worker thread per stage, each building its own backend
+    /// from `spec` on its own thread.
+    pub fn with_spec(spec: S, cfg: TrainConfig) -> Result<Trainer<S>> {
+        Self::with_spec_resume(spec, cfg, None)
     }
 
-    /// Like [`Trainer::new`] but loading parameters from a checkpoint dir
-    /// written by [`Trainer::save_checkpoint`].
-    pub fn new_with_resume(
-        artifacts: &Path,
+    /// Like [`Trainer::with_spec`] but loading parameters from a
+    /// checkpoint dir written by [`Trainer::save_checkpoint`].
+    pub fn with_spec_resume(
+        spec: S,
         cfg: TrainConfig,
         resume_from: Option<PathBuf>,
-    ) -> Result<Trainer> {
-        let manifest = Manifest::load(artifacts)?;
-        cfg.validate(manifest.model.seq_len, &manifest.buckets)?;
-        let k = manifest.model.num_stages;
+    ) -> Result<Trainer<S>> {
+        let model = spec.model();
+        let buckets = spec.buckets();
+        cfg.validate(model.seq_len, &buckets)?;
+        let k = model.num_stages;
+        let timings = cfg.trace || cfg.replan_every.is_some();
 
         let (driver_tx, from_workers) = channel::<DriverMsg>();
         let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(k);
@@ -69,8 +99,9 @@ impl Trainer {
             let cfg_w = WorkerCfg {
                 stage,
                 num_stages: k,
-                artifacts: PathBuf::from(artifacts),
+                spec: spec.clone(),
                 resume_from: resume_from.clone(),
+                timings,
                 inbox: receivers[stage].take().unwrap(),
                 next: (stage + 1 < k).then(|| senders[stage + 1].clone()),
                 prev: (stage > 0).then(|| senders[stage - 1].clone()),
@@ -91,24 +122,28 @@ impl Trainer {
             .unwrap_or(0);
 
         Ok(Trainer {
-            manifest,
+            model,
+            buckets,
             cfg,
             steps_done,
             to_first: senders[0].clone(),
             to_all: senders,
             from_workers,
             handles,
+            timings: Vec::new(),
         })
     }
 
     /// One synchronous training step over `microbatches` batches.
-    /// Returns (mean per-token loss, tokens processed).
-    pub fn step(&mut self, step_idx: usize, batches: &[Batch]) -> Result<(f64, usize)> {
-        let m = &self.manifest.model;
+    /// Returns (mean per-token loss, tokens processed, fwd makespan ms).
+    pub fn step(&mut self, step_idx: usize, batches: &[Batch]) -> Result<(f64, usize, f64)> {
+        let m = &self.model;
         let cfg = &self.cfg;
         assert_eq!(batches.len(), cfg.microbatches);
         let offs = cfg.offsets();
         let num_slices = cfg.slicing.len();
+        self.timings.clear();
+        let t0 = Instant::now();
 
         // ---- stream forward slices into the pipe ----
         for (mb, batch) in batches.iter().enumerate() {
@@ -141,13 +176,18 @@ impl Trainer {
         let mut losses = 0f64;
         let mut loss_cnt = 0usize;
         let mut bwd_done = 0usize;
+        let mut fwd_ms = 0f64;
         while loss_cnt < expected || bwd_done < expected {
             match self.from_workers.recv() {
                 Ok(DriverMsg::Loss { loss_sum, .. }) => {
                     losses += loss_sum as f64;
                     loss_cnt += 1;
+                    if loss_cnt == expected {
+                        fwd_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    }
                 }
                 Ok(DriverMsg::BwdDone { .. }) => bwd_done += 1,
+                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
                 Ok(DriverMsg::Fatal { stage, error }) => {
                     bail!("stage {stage} failed: {error}")
                 }
@@ -170,6 +210,7 @@ impl Trainer {
         while updates < self.to_all.len() {
             match self.from_workers.recv() {
                 Ok(DriverMsg::UpdateDone { .. }) => updates += 1,
+                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
                 Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
                 Ok(_) => bail!("unexpected message during update"),
                 Err(_) => bail!("all workers hung up"),
@@ -177,9 +218,14 @@ impl Trainer {
         }
 
         self.steps_done += 1;
-        let tokens =
-            self.cfg.microbatches * self.manifest.model.batch * self.manifest.model.seq_len;
-        Ok((losses / tokens as f64, tokens))
+        let tokens = self.cfg.microbatches * self.model.batch * self.model.seq_len;
+        Ok((losses / tokens as f64, tokens, fwd_ms))
+    }
+
+    /// Per-slice wall-clock samples from the most recent step (empty
+    /// unless `cfg.trace` or a replan cadence enabled collection).
+    pub fn last_timings(&self) -> &[SliceTime] {
+        &self.timings
     }
 
     /// Drive `cfg.steps` steps pulling microbatches from `next_batch`.
@@ -191,14 +237,49 @@ impl Trainer {
         self.train_with_replan(next_batch, on_step, |_| None)
     }
 
+    fn run_one_step(
+        &mut self,
+        step: usize,
+        next_batch: &mut impl FnMut() -> Batch,
+    ) -> Result<StepReport> {
+        let batches: Vec<Batch> = (0..self.cfg.microbatches).map(|_| next_batch()).collect();
+        let t0 = Instant::now();
+        let (loss, tokens, fwd_ms) = self.step(step, &batches)?;
+        Ok(StepReport {
+            step,
+            loss,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            fwd_ms,
+            tokens,
+        })
+    }
+
+    /// Adopt `slicing` if it validates against the model geometry and
+    /// bucket set; report and keep the current slicing otherwise, so a
+    /// bad replan can never kill a long training run.
+    fn try_adopt_slicing(&mut self, step: usize, slicing: Vec<usize>) {
+        let mut cand = self.cfg.clone();
+        cand.slicing = slicing;
+        match cand.validate(self.model.seq_len, &self.buckets) {
+            Ok(()) => {
+                if cand.slicing != self.cfg.slicing {
+                    eprintln!(
+                        "replan at step {step}: slicing {:?} -> {:?}",
+                        self.cfg.slicing, cand.slicing
+                    );
+                }
+                self.cfg = cand;
+            }
+            Err(e) => eprintln!("replan at step {step} rejected: {e}"),
+        }
+    }
+
     /// Like [`Trainer::train`], with the online planner in the loop: when
     /// `cfg.replan_every = Some(n)`, `replan(step)` is invoked every `n`
     /// steps (before the step runs) and may return a new slicing — e.g.
     /// from a fresh measure → fit → bucketed-DP solve, or a
     /// `crate::planner::Planner` decision. A returned slicing is adopted
-    /// only if it validates against the manifest (sum = L, every slice an
-    /// AOT bucket); an invalid one is reported and the current slicing
-    /// kept, so a bad replan can never kill a long training run.
+    /// only if it validates against the bucket set.
     pub fn train_with_replan(
         &mut self,
         mut next_batch: impl FnMut() -> Batch,
@@ -206,42 +287,105 @@ impl Trainer {
         mut replan: impl FnMut(usize) -> Option<Vec<usize>>,
     ) -> Result<Vec<StepReport>> {
         let steps = self.cfg.steps;
-        let mbs = self.cfg.microbatches;
         let mut reports = Vec::with_capacity(steps);
         for step in 0..steps {
             if let Some(n) = self.cfg.replan_every {
                 if step > 0 && step % n == 0 {
                     if let Some(slicing) = replan(step) {
-                        let mut cand = self.cfg.clone();
-                        cand.slicing = slicing;
-                        match cand.validate(self.manifest.model.seq_len, &self.manifest.buckets) {
-                            Ok(()) => {
-                                if cand.slicing != self.cfg.slicing {
-                                    eprintln!(
-                                        "replan at step {step}: slicing {:?} -> {:?}",
-                                        self.cfg.slicing, cand.slicing
-                                    );
-                                }
-                                self.cfg = cand;
-                            }
-                            Err(e) => eprintln!("replan at step {step} rejected: {e}"),
-                        }
+                        self.try_adopt_slicing(step, slicing);
                     }
                 }
             }
-            let batches: Vec<Batch> = (0..mbs).map(|_| next_batch()).collect();
-            let t0 = Instant::now();
-            let (loss, tokens) = self.step(step, &batches)?;
-            let rep = StepReport {
-                step,
-                loss,
-                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-                tokens,
-            };
+            let rep = self.run_one_step(step, &mut next_batch)?;
             on_step(&rep);
             reports.push(rep);
         }
         Ok(reports)
+    }
+
+    /// The drift-aware replan loop (ROADMAP "planner on the real
+    /// runtime"): live per-slice samples from the executing pipeline
+    /// stream into a [`DriftDetector`] judged against `solved_against`
+    /// (the model the active slicing was solved on). On the
+    /// `replan_every` cadence the trainer consults the window verdict and
+    /// pays for `resolve` — a re-measure/re-solve — **only when the
+    /// samples say the model drifted**; drift-free steps trigger zero
+    /// re-solves. A detected drift folds the fitted rescale factor into
+    /// the solved-against model (the same `ScaledModel` representation
+    /// the planner service uses), so repeated verdicts judge against the
+    /// updated belief.
+    ///
+    /// Samples are taken from stage 0 (every pipeline has one), as
+    /// combined fwd+bwd latency per slice — the [`CostModel`] unit. Note
+    /// stage 0's samples include the embedding, which the measurement
+    /// harness's middle-cell model does not; that constant offset is one
+    /// reason the drift threshold should stay comfortably above fit
+    /// error (the CLI defaults to 0.35).
+    pub fn train_with_drift_replan<M: CostModel>(
+        &mut self,
+        mut next_batch: impl FnMut() -> Batch,
+        mut on_step: impl FnMut(&StepReport),
+        solved_against: M,
+        drift_cfg: DriftConfig,
+        mut resolve: impl FnMut(usize, f64) -> Option<Vec<usize>>,
+    ) -> Result<(Vec<StepReport>, DriftReplanReport)> {
+        let steps = self.cfg.steps;
+        let cadence = self.cfg.replan_every;
+        let mut detector = DriftDetector::new(drift_cfg);
+        let mut scale = 1.0f64;
+        let mut report = DriftReplanReport::default();
+        let mut reports = Vec::with_capacity(steps);
+        for step in 0..steps {
+            if let Some(n) = cadence {
+                if step > 0 && step % n == 0 {
+                    let current = ScaledModel {
+                        inner: &solved_against,
+                        compute: scale,
+                        comm: scale,
+                    };
+                    match detector.verdict(&current) {
+                        DriftVerdict::Warmup => report.warmups += 1,
+                        DriftVerdict::Stable { .. } => report.stable_checks += 1,
+                        DriftVerdict::Drifted { factor, .. } => {
+                            report.resolves += 1;
+                            scale *= factor;
+                            if let Some(slicing) = resolve(step, factor) {
+                                self.try_adopt_slicing(step, slicing);
+                            }
+                            detector.clear();
+                        }
+                    }
+                }
+            }
+            let rep = self.run_one_step(step, &mut next_batch)?;
+            // fold this step's stage-0 samples into the window: one
+            // combined fwd+bwd latency per (mb, slice)
+            let mut fwd: Vec<(usize, usize, usize, usize, f64)> = Vec::new();
+            for t in &self.timings {
+                if t.stage == 0 && t.phase == TimedPhase::Fwd {
+                    fwd.push((t.mb, t.slice, t.len, t.off, t.ms));
+                }
+            }
+            for (mb, slice, len, off, fwd_ms) in fwd {
+                let bwd_ms = self
+                    .timings
+                    .iter()
+                    .find(|t| {
+                        t.stage == 0 && t.phase == TimedPhase::Bwd && t.mb == mb && t.slice == slice
+                    })
+                    .map(|t| t.ms)
+                    .unwrap_or(0.0);
+                detector.push(LatencySample {
+                    i: len as u32,
+                    j: off as u32,
+                    ms: fwd_ms + bwd_ms,
+                });
+                report.samples_seen += 1;
+            }
+            on_step(&rep);
+            reports.push(rep);
+        }
+        Ok((reports, report))
     }
 
     pub fn config(&self) -> &TrainConfig {
@@ -249,7 +393,7 @@ impl Trainer {
     }
 
     /// Persist all stages' parameters under `dir` (init-file layout; load
-    /// with [`Trainer::new_with_resume`]).
+    /// with [`Trainer::with_spec_resume`]).
     pub fn save_checkpoint(&mut self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(
@@ -264,6 +408,7 @@ impl Trainer {
         while done < self.to_all.len() {
             match self.from_workers.recv() {
                 Ok(DriverMsg::CheckpointDone { .. }) => done += 1,
+                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
                 Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
                 Ok(_) => bail!("unexpected message during checkpoint"),
                 Err(_) => bail!("all workers hung up"),
@@ -283,13 +428,50 @@ impl Trainer {
     }
 }
 
-impl Drop for Trainer {
+impl<S: BackendSpec> Drop for Trainer<S> {
     fn drop(&mut self) {
         self.shutdown();
     }
 }
 
-/// Convenience one-call API: spawn, train on a batcher, shut down.
+// ---- PJRT-flavored constructors (the original API) ----
+
+#[cfg(feature = "pjrt")]
+impl Trainer<crate::backend::PjrtSpec> {
+    /// Spawn a PJRT pipeline from an artifact dir (each worker compiles
+    /// its own executables on its own PJRT client).
+    pub fn new(artifacts: &Path, cfg: TrainConfig) -> Result<Self> {
+        Self::new_with_resume(artifacts, cfg, None)
+    }
+
+    /// Like [`Trainer::new`] but loading parameters from a checkpoint.
+    pub fn new_with_resume(
+        artifacts: &Path,
+        cfg: TrainConfig,
+        resume_from: Option<PathBuf>,
+    ) -> Result<Self> {
+        let spec = crate::backend::PjrtSpec::new(artifacts)?;
+        Self::with_spec_resume(spec, cfg, resume_from)
+    }
+}
+
+/// Convenience one-call API on the native backend: spawn, train on a
+/// batcher, shut down.
+pub fn train_native(
+    spec: crate::backend::NativeSpec,
+    cfg: TrainConfig,
+    corpus: &str,
+    mut on_step: impl FnMut(&StepReport),
+) -> Result<Vec<StepReport>> {
+    let seed = cfg.seed;
+    let mut trainer = Trainer::with_spec(spec, cfg)?;
+    let m = trainer.model.clone();
+    let mut batcher = crate::data::Batcher::new(corpus, m.batch, m.seq_len, seed);
+    trainer.train(|| batcher.next_batch(), &mut on_step)
+}
+
+/// Convenience one-call API on the PJRT backend: spawn, train, shut down.
+#[cfg(feature = "pjrt")]
 pub fn train(
     artifacts: &Path,
     cfg: TrainConfig,
@@ -297,7 +479,7 @@ pub fn train(
     mut on_step: impl FnMut(&StepReport),
 ) -> Result<Vec<StepReport>> {
     let mut trainer = Trainer::new(artifacts, cfg)?;
-    let m = trainer.manifest.model.clone();
+    let m = trainer.model.clone();
     let seed = trainer.cfg.seed;
     let mut batcher = crate::data::Batcher::new(corpus, m.batch, m.seq_len, seed);
     trainer.train(|| batcher.next_batch(), &mut on_step)

@@ -1,21 +1,28 @@
 //! Stage worker: one OS thread per pipeline cell.
 //!
-//! Owns parameters + Adam state for its layers (plus the embedding on the
-//! first stage and the LM head on the last), the per-microbatch KV context
-//! buffers, stored slice inputs for the recompute-based backward, and the
-//! context-gradient accumulators. All compute goes through AOT
-//! executables; this file is pure orchestration and buffer bookkeeping.
+//! Pure schedule + buffer bookkeeping: the worker owns the per-microbatch
+//! KV context buffers, stored slice inputs for the recompute-based
+//! backward, and the context-gradient accumulators, and routes messages.
+//! All compute — and all parameter/optimizer state — lives behind the
+//! [`StageBackend`] the worker builds from its [`BackendSpec`] on this
+//! thread (so non-`Send` backend internals never cross threads).
+//!
+//! When timing collection is on, every slice's forward and backward
+//! compute is wall-clocked and reported to the driver as
+//! [`DriverMsg::SliceTime`] — the live samples the measurement harness
+//! and the drift detector consume.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
-use super::messages::{DriverMsg, FwdPayload, Msg};
+use super::messages::{DriverMsg, FwdPayload, Msg, SliceTime, TimedPhase};
+use crate::backend::{BackendSpec, StageBackend};
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
-use crate::runtime::{stage_exe_names, StageRuntime};
 
 /// Bookkeeping for one token slice of one microbatch.
 #[derive(Debug, Clone)]
@@ -57,90 +64,16 @@ impl MbState {
     }
 }
 
-/// An optimizer-managed parameter group backed by `adam_<group>`.
-///
-/// Parameters are kept both as host tensors (for the optimizer step) and
-/// as pre-converted PJRT literals: they only change at `apply`, but are
-/// inputs to *every* slice executable — caching the upload halves the
-/// per-slice host work (EXPERIMENTS.md §Perf L3 iteration 2).
-struct ParamGroup {
-    exe: String,
-    params: Vec<HostTensor>,
-    /// Cached literal uploads of `params` (invalidated by `apply`).
-    lits: Vec<xla::Literal>,
-    grads: Vec<HostTensor>,
-    m: Vec<HostTensor>,
-    v: Vec<HostTensor>,
-}
-
-impl ParamGroup {
-    fn new(exe: &str, params: Vec<HostTensor>) -> Result<Self> {
-        let zeros: Vec<HostTensor> = params
-            .iter()
-            .map(|p| HostTensor::zeros_f32(&p.shape))
-            .collect();
-        let lits = params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ParamGroup {
-            exe: exe.to_string(),
-            lits,
-            grads: zeros.clone(),
-            m: zeros.clone(),
-            v: zeros,
-            params,
-        })
-    }
-
-    fn accumulate(&mut self, slice_grads: &[HostTensor]) {
-        assert_eq!(slice_grads.len(), self.grads.len(), "{} grad arity", self.exe);
-        for (g, s) in self.grads.iter_mut().zip(slice_grads) {
-            g.add_assign(s);
-        }
-    }
-
-    fn apply(&mut self, rt: &StageRuntime, step: i32, lr: f32) -> Result<()> {
-        let n = self.params.len();
-        let mut inputs = Vec::with_capacity(4 * n + 2);
-        inputs.extend(self.params.iter().cloned());
-        inputs.extend(self.grads.iter().cloned());
-        inputs.extend(self.m.iter().cloned());
-        inputs.extend(self.v.iter().cloned());
-        inputs.push(HostTensor::scalar_i32(step));
-        inputs.push(HostTensor::scalar_f32(lr));
-        let mut out = rt.run(&self.exe, &inputs)?;
-        // outputs: params, m, v — in that order
-        self.v = out.split_off(2 * n);
-        self.m = out.split_off(n);
-        self.params = out;
-        self.lits = self
-            .params
-            .iter()
-            .map(|p| p.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        for g in &mut self.grads {
-            g.fill_zero();
-        }
-        Ok(())
-    }
-}
-
-/// `init/stage0.w.bin` → `init/m.stage0.w.bin` (same dir, prefixed stem).
-fn moment_path(dir: &std::path::Path, file: &str, prefix: &str) -> PathBuf {
-    let p = std::path::Path::new(file);
-    let name = p.file_name().unwrap().to_string_lossy();
-    dir.join(p.parent().unwrap_or_else(|| std::path::Path::new("")))
-        .join(format!("{prefix}.{name}"))
-}
-
 /// Worker configuration handed to [`run_worker`].
-pub struct WorkerCfg {
+pub struct WorkerCfg<S: BackendSpec> {
     pub stage: usize,
     pub num_stages: usize,
-    pub artifacts: PathBuf,
-    /// Load parameters from this checkpoint dir instead of artifacts/init.
+    pub spec: S,
+    /// Load parameters from this checkpoint dir instead of the spec's
+    /// initial weights.
     pub resume_from: Option<PathBuf>,
+    /// Report per-slice fwd/bwd wall times to the driver.
+    pub timings: bool,
     pub inbox: Receiver<Msg>,
     /// Next stage's inbox (forward direction), if any.
     pub next: Option<Sender<Msg>>,
@@ -150,10 +83,10 @@ pub struct WorkerCfg {
 }
 
 /// Thread body. Errors are reported to the driver as `Fatal`.
-pub fn run_worker(cfg: WorkerCfg) {
+pub fn run_worker<S: BackendSpec>(cfg: WorkerCfg<S>) {
     let stage = cfg.stage;
     let driver = cfg.driver.clone();
-    if let Err(e) = Worker::init_and_run(cfg) {
+    if let Err(e) = Worker::<S::Backend>::init_and_run(cfg) {
         let _ = driver.send(DriverMsg::Fatal {
             stage,
             error: format!("{e:#}"),
@@ -161,104 +94,41 @@ pub fn run_worker(cfg: WorkerCfg) {
     }
 }
 
-struct Worker {
+struct Worker<B: StageBackend> {
     stage: usize,
     is_first: bool,
     is_last: bool,
-    rt: StageRuntime,
+    backend: B,
     dims: ModelDims,
-    stage_group: ParamGroup,
-    embed_group: Option<ParamGroup>,
-    head_group: Option<ParamGroup>,
+    timings: bool,
     mbs: HashMap<usize, MbState>,
     next: Option<Sender<Msg>>,
     prev: Option<Sender<Msg>>,
     driver: Sender<DriverMsg>,
 }
 
-impl Worker {
-    fn init_and_run(cfg: WorkerCfg) -> Result<()> {
+impl<B: StageBackend> Worker<B> {
+    fn init_and_run<S: BackendSpec<Backend = B>>(cfg: WorkerCfg<S>) -> Result<()> {
         let WorkerCfg {
             stage,
             num_stages,
-            artifacts,
+            spec,
             resume_from,
+            timings,
             inbox,
             next,
             prev,
             driver,
         } = cfg;
-        let is_first = stage == 0;
-        let is_last = stage == num_stages - 1;
-
-        let manifest = crate::runtime::manifest::Manifest::load(&artifacts)?;
-        let names = stage_exe_names(stage, num_stages, &manifest.buckets);
-        let rt = StageRuntime::load(&artifacts, &names)
-            .with_context(|| format!("stage {stage}: loading runtime"))?;
-        let dims = rt.manifest.model.clone();
-
-        // Parameters come from artifacts/init, or from a checkpoint dir
-        // (same file layout — see Msg::Checkpoint).
-        // Parameters (and, when resuming, Adam moments) from artifacts/init
-        // or a checkpoint dir.
-        let read_file = |path: std::path::PathBuf, shape: &[usize]| -> Result<HostTensor> {
-            let bytes = std::fs::read(&path)
-                .with_context(|| format!("reading checkpoint {}", path.display()))?;
-            let n: usize = shape.iter().product::<usize>().max(1);
-            anyhow::ensure!(bytes.len() == 4 * n, "{}: wrong size", path.display());
-            let floats = bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            Ok(HostTensor::f32(shape, floats))
-        };
-        let mk_group = |exe: &str,
-                        entries: &[crate::runtime::manifest::InitEntry]|
-         -> Result<ParamGroup> {
-            match &resume_from {
-                None => ParamGroup::new(exe, rt.manifest.load_init(entries)?),
-                Some(dir) => {
-                    let params = entries
-                        .iter()
-                        .map(|e| read_file(dir.join(&e.file), &e.shape))
-                        .collect::<Result<Vec<_>>>()?;
-                    let mut g = ParamGroup::new(exe, params)?;
-                    // moments are optional (params-only checkpoints load too)
-                    if entries
-                        .iter()
-                        .all(|e| moment_path(dir, &e.file, "m").exists())
-                    {
-                        g.m = entries
-                            .iter()
-                            .map(|e| read_file(moment_path(dir, &e.file, "m"), &e.shape))
-                            .collect::<Result<Vec<_>>>()?;
-                        g.v = entries
-                            .iter()
-                            .map(|e| read_file(moment_path(dir, &e.file, "v"), &e.shape))
-                            .collect::<Result<Vec<_>>>()?;
-                    }
-                    Ok(g)
-                }
-            }
-        };
-        let stage_group = mk_group("adam_stage", &rt.manifest.init_stages[stage])?;
-        let embed_group = is_first
-            .then(|| mk_group("adam_embed", &rt.manifest.init_embed))
-            .transpose()?;
-        let head_group = is_last
-            .then(|| mk_group("adam_head", &rt.manifest.init_head))
-            .transpose()?;
-        drop(manifest);
-
+        let backend = spec.build(stage, num_stages, resume_from.as_deref())?;
+        let dims = backend.dims().clone();
         let mut w = Worker {
             stage,
-            is_first,
-            is_last,
-            rt,
+            is_first: stage == 0,
+            is_last: stage == num_stages - 1,
+            backend,
             dims,
-            stage_group,
-            embed_group,
-            head_group,
+            timings,
             mbs: HashMap::new(),
             next,
             prev,
@@ -291,38 +161,24 @@ impl Worker {
         Ok(())
     }
 
-    /// Write this stage's parameter groups under `dir` in the init-file
-    /// layout (init/stage{k}.name.bin etc.), so checkpoints are loadable
-    /// via `resume_from`.
-    fn handle_checkpoint(&mut self, dir: &std::path::Path) -> Result<()> {
-        std::fs::create_dir_all(dir.join("init"))?;
-        let manifest = &self.rt.manifest;
-        let groups: Vec<(&[crate::runtime::manifest::InitEntry], &ParamGroup)> = {
-            let mut v: Vec<(&[crate::runtime::manifest::InitEntry], &ParamGroup)> = vec![(
-                manifest.init_stages[self.stage].as_slice(),
-                &self.stage_group,
-            )];
-            if let Some(g) = &self.embed_group {
-                v.push((manifest.init_embed.as_slice(), g));
-            }
-            if let Some(g) = &self.head_group {
-                v.push((manifest.init_head.as_slice(), g));
-            }
-            v
-        };
-        let write = |path: std::path::PathBuf, t: &HostTensor| -> Result<()> {
-            let bytes: Vec<u8> = t.as_f32().iter().flat_map(|x| x.to_le_bytes()).collect();
-            std::fs::write(path, bytes)?;
-            Ok(())
-        };
-        for (entries, group) in groups {
-            for (i, e) in entries.iter().enumerate() {
-                write(dir.join(&e.file), &group.params[i])?;
-                // optimizer moments beside the params, "m."/"v." prefixed
-                write(moment_path(dir, &e.file, "m"), &group.m[i])?;
-                write(moment_path(dir, &e.file, "v"), &group.v[i])?;
-            }
+    fn send_time(&self, mb: usize, slice: usize, off: usize, len: usize, phase: TimedPhase, ms: f64) {
+        if self.timings {
+            self.driver
+                .send(DriverMsg::SliceTime(SliceTime {
+                    stage: self.stage,
+                    mb,
+                    slice,
+                    off,
+                    len,
+                    phase,
+                    ms,
+                }))
+                .ok();
         }
+    }
+
+    fn handle_checkpoint(&mut self, dir: &std::path::Path) -> Result<()> {
+        self.backend.checkpoint(dir)?;
         self.driver
             .send(DriverMsg::CheckpointDone { stage: self.stage })
             .ok();
@@ -330,13 +186,7 @@ impl Worker {
     }
 
     fn handle_update(&mut self, step: i32, lr: f32) -> Result<()> {
-        self.stage_group.apply(&self.rt, step, lr)?;
-        if let Some(g) = self.embed_group.as_mut() {
-            g.apply(&self.rt, step, lr)?;
-        }
-        if let Some(g) = self.head_group.as_mut() {
-            g.apply(&self.rt, step, lr)?;
-        }
+        self.backend.update(step, lr)?;
         self.mbs.clear();
         self.driver
             .send(DriverMsg::UpdateDone { stage: self.stage })
@@ -355,39 +205,21 @@ impl Worker {
         payload: FwdPayload,
         targets: Vec<i32>,
     ) -> Result<()> {
+        let t0 = Instant::now();
         // 1. Materialize this stage's input activation.
         let (h_in, tokens) = match payload {
             FwdPayload::Tokens(tokens) => {
-                let eg = self
-                    .embed_group
-                    .as_ref()
-                    .ok_or_else(|| anyhow!("tokens arrived at non-first stage {}", self.stage))?;
-                let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens.clone()).to_literal()?;
-                let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
-                let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
-                args.push(&tok_l);
-                args.push(&off_l);
-                let h = self
-                    .rt
-                    .run_literal_refs(&format!("embed_fwd_s{len}"), &args)?
-                    .remove(0);
-                (h, Some(tokens))
+                if !self.is_first {
+                    return Err(anyhow!("tokens arrived at non-first stage {}", self.stage));
+                }
+                (self.backend.embed_fwd(&tokens, len, off)?, Some(tokens))
             }
             FwdPayload::Act(h) => (h, None),
         };
 
         // 2. Stage forward with the KV context accumulated so far.
         let st = self.mbs.entry(mb).or_insert_with(|| MbState::new(&self.dims));
-        let h_l = h_in.to_literal()?;
-        let k_l = st.k_ctx.to_literal()?;
-        let v_l = st.v_ctx.to_literal()?;
-        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
-        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
-        args.extend([&h_l, &k_l, &v_l, &off_l]);
-        let mut out = self.rt.run_literal_refs(&format!("stage_fwd_s{len}"), &args)?;
-        let v_new = out.pop().unwrap();
-        let k_new = out.pop().unwrap();
-        let h_out = out.pop().unwrap();
+        let (h_out, k_new, v_new) = self.backend.stage_fwd(&h_in, &st.k_ctx, &st.v_ctx, off)?;
 
         // 3. Grow the context buffers (axis 2 = token position) and stash
         // what backward will need.
@@ -406,17 +238,13 @@ impl Worker {
 
         if self.is_last {
             // 4a. Head loss for this slice (reported to the driver).
-            let hg = self.head_group.as_ref().unwrap();
-            let tg_l = HostTensor::i32(&[self.dims.batch, len], targets).to_literal()?;
-            let h_l = h_out.to_literal()?;
-            let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
-            args.extend([&h_l, &tg_l]);
-            let loss = self.rt.run_literal_refs(&format!("head_fwd_s{len}"), &args)?.remove(0);
+            let loss_sum = self.backend.head_loss(&h_out, &targets, len)?;
+            self.send_time(mb, slice, off, len, TimedPhase::Fwd, t0.elapsed().as_secs_f64() * 1e3);
             self.driver
                 .send(DriverMsg::Loss {
                     mb,
                     slice,
-                    loss_sum: loss.as_f32()[0],
+                    loss_sum,
                 })
                 .ok();
             self.mbs.get_mut(&mb).unwrap().h_out.insert(slice, h_out);
@@ -429,6 +257,7 @@ impl Worker {
             }
         } else {
             // 4. Hand the activation to the next stage.
+            self.send_time(mb, slice, off, len, TimedPhase::Fwd, t0.elapsed().as_secs_f64() * 1e3);
             self.next
                 .as_ref()
                 .unwrap()
@@ -454,8 +283,9 @@ impl Worker {
         len: usize,
         g_h: HostTensor,
     ) -> Result<()> {
+        let t0 = Instant::now();
         let g_h_in = self.backward_one_slice(mb, slice, off, len, g_h)?;
-        self.finish_bwd_slice(mb, slice, off, len, g_h_in)?;
+        self.finish_bwd_slice(mb, slice, off, len, g_h_in, t0)?;
         if self.mbs.get(&mb).map(|s| s.h_in.is_empty()).unwrap_or(false) {
             self.mbs.remove(&mb);
         }
@@ -463,9 +293,9 @@ impl Worker {
     }
 
     /// Backward for one slice on this stage: reads the accumulated K/V
-    /// grads for the slice's own keys, runs the recompute-based stage_bwd,
-    /// folds returned context grads into the accumulators and param grads
-    /// into the group. Returns grad w.r.t. the stage input.
+    /// grads for the slice's own keys, runs the recompute-based stage
+    /// backward, folds returned context grads into the accumulators.
+    /// Returns grad w.r.t. the stage input.
     fn backward_one_slice(
         &mut self,
         mb: usize,
@@ -487,27 +317,18 @@ impl Worker {
         let g_know = st.g_kacc.read_at_axis(2, off, len);
         let g_vnow = st.g_vacc.read_at_axis(2, off, len);
 
-        let h_l = h_in.to_literal()?;
-        let k_l = st.k_ctx.to_literal()?;
-        let v_l = st.v_ctx.to_literal()?;
-        let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
-        let gh_l = g_h.to_literal()?;
-        let gk_l = g_know.to_literal()?;
-        let gv_l = g_vnow.to_literal()?;
-        let mut args: Vec<&xla::Literal> = self.stage_group.lits.iter().collect();
-        args.extend([&h_l, &k_l, &v_l, &off_l, &gh_l, &gk_l, &gv_l]);
-        let mut out = self.rt.run_literal_refs(&format!("stage_bwd_s{len}"), &args)?;
-        let g_vctx = out.pop().unwrap();
-        let g_kctx = out.pop().unwrap();
-        let g_h_in = out.pop().unwrap();
-        self.stage_group.accumulate(&out);
+        let (g_h_in, g_kctx, g_vctx) =
+            self.backend
+                .stage_bwd(&h_in, &st.k_ctx, &st.v_ctx, off, &g_h, &g_know, &g_vnow)?;
         st.g_kacc.add_assign(&g_kctx);
         st.g_vacc.add_assign(&g_vctx);
         Ok(g_h_in)
     }
 
     /// Route the input-gradient of a finished backward slice: upstream, or
-    /// into embed_bwd on the first stage (+ notify the driver).
+    /// into the embedding backward on the first stage (+ notify the
+    /// driver). `t0` is when this slice's backward compute began (for the
+    /// timing sample, which must cover embed_bwd too).
     fn finish_bwd_slice(
         &mut self,
         mb: usize,
@@ -515,6 +336,7 @@ impl Worker {
         off: usize,
         len: usize,
         g_h_in: HostTensor,
+        t0: Instant,
     ) -> Result<()> {
         if self.is_first {
             let meta = self
@@ -526,17 +348,11 @@ impl Worker {
             let tokens = meta
                 .tokens
                 .ok_or_else(|| anyhow!("first stage lost slice tokens"))?;
-            let eg = self.embed_group.as_ref().unwrap();
-            let tok_l = HostTensor::i32(&[self.dims.batch, len], tokens).to_literal()?;
-            let off_l = HostTensor::scalar_i32(off as i32).to_literal()?;
-            let gh_l = g_h_in.to_literal()?;
-            let mut args: Vec<&xla::Literal> = eg.lits.iter().collect();
-            args.extend([&tok_l, &off_l, &gh_l]);
-            let out = self.rt.run_literal_refs(&format!("embed_bwd_s{len}"), &args)?;
-            let eg = self.embed_group.as_mut().unwrap();
-            eg.accumulate(&out);
+            self.backend.embed_bwd(&tokens, len, off, &g_h_in)?;
+            self.send_time(mb, slice, off, len, TimedPhase::Bwd, t0.elapsed().as_secs_f64() * 1e3);
             self.driver.send(DriverMsg::BwdDone { mb, slice }).ok();
         } else {
+            self.send_time(mb, slice, off, len, TimedPhase::Bwd, t0.elapsed().as_secs_f64() * 1e3);
             self.prev
                 .as_ref()
                 .unwrap()
@@ -563,6 +379,7 @@ impl Worker {
         order.sort_unstable_by(|a, b| b.cmp(a)); // reverse slice order
 
         for slice in order {
+            let t0 = Instant::now();
             let (meta, h_out) = {
                 let st = self.mbs.get_mut(&mb).unwrap();
                 let meta = st.meta.get(&slice).cloned().unwrap();
@@ -572,19 +389,9 @@ impl Worker {
                     .ok_or_else(|| anyhow!("missing head input for slice {slice}"))?;
                 (meta, h_out)
             };
-            let hg = self.head_group.as_ref().unwrap();
-            let tg_l = HostTensor::i32(&[self.dims.batch, meta.len], meta.targets.clone())
-                .to_literal()?;
-            let h_l = h_out.to_literal()?;
-            let mut args: Vec<&xla::Literal> = hg.lits.iter().collect();
-            args.extend([&h_l, &tg_l]);
-            let mut out = self.rt.run_literal_refs(&format!("head_bwd_s{}", meta.len), &args)?;
-            let hg = self.head_group.as_mut().unwrap();
-            let g_h = out.pop().unwrap();
-            hg.accumulate(&out);
-
+            let g_h = self.backend.head_bwd(&h_out, &meta.targets, meta.len)?;
             let g_h_in = self.backward_one_slice(mb, slice, meta.off, meta.len, g_h)?;
-            self.finish_bwd_slice(mb, slice, meta.off, meta.len, g_h_in)?;
+            self.finish_bwd_slice(mb, slice, meta.off, meta.len, g_h_in, t0)?;
         }
         Ok(())
     }

@@ -12,13 +12,19 @@
 //! * [`sim`] — a discrete-event pipeline simulator standing in for the
 //!   48-node GPU testbed (DESIGN.md §2): executes GPipe, TeraPipe and
 //!   memory-capped (Appendix A) schedules under the cost model.
-//! * [`runtime`] — (feature `pjrt`) a PJRT wrapper (via the `xla` crate) that loads the HLO
-//!   text artifacts lowered by `python/compile/aot.py` and executes them on
-//!   the CPU device; python never runs on the request path.
-//! * [`coordinator`] — (feature `pjrt`) the real execution engine: one worker thread per
+//! * [`backend`] — pluggable stage compute behind the `StageBackend`
+//!   trait: the default pure-Rust multi-threaded CPU cell (exact
+//!   transformer forward/backward + Adam, no artifacts needed) and, with
+//!   the `pjrt` feature, the AOT-compiled XLA executables.
+//! * [`runtime`] — host tensors + the artifact manifest; with `pjrt`, a
+//!   PJRT wrapper (via the `xla` crate) that loads the HLO text artifacts
+//!   lowered by `python/compile/aot.py` and executes them on the CPU
+//!   device; python never runs on the request path.
+//! * [`coordinator`] — the real execution engine: one worker thread per
 //!   pipeline cell, token slices flowing downstream and gradients flowing
 //!   back upstream, with the context-gradient accumulation that makes the
-//!   pipelined backward exactly equal the unsliced one.
+//!   pipelined backward exactly equal the unsliced one. Generic over the
+//!   stage backend; runs in the default build.
 //! * [`planner`] — the online planner service: long-lived plan ownership
 //!   with a cost-table cache, warm-started re-solves on cluster deltas,
 //!   and a drift-aware replan loop with hysteresis (`terapipe autotune`).
@@ -27,14 +33,13 @@
 //! * [`data`] — synthetic corpus + byte-level tokenizer + batcher for the
 //!   end-to-end training example.
 
+pub mod backend;
 pub mod config;
-#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod perfmodel;
 pub mod planner;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod solver;

@@ -10,22 +10,24 @@
 //!   timeline --setting N            ASCII (or --chrome) schedule timeline
 //!   fig3 | fig5 | fig6 | fig7 | appendix-a
 //!                                   regenerate the paper's figures/tables
-//!   train    [--artifacts DIR] …    real pipelined training (AOT + PJRT)
-//!   measure  [--artifacts DIR]      measure t(i,j) on the real runtime and
+//!   train    […]                    real pipelined training — native CPU
+//!                                   backend by default, AOT + PJRT with
+//!                                   --artifacts (feature `pjrt`)
+//!   measure  […]                    measure t(i,j) on the real backend and
 //!                                   fit the Eq. 9 linear context model
 //!
 //! Flags use `--key value` / `--key=value` (see util::cli).
 
-#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 
+use terapipe::backend::{BackendSpec, NativeSpec};
 use terapipe::config::{dump_setting, presets};
-#[cfg(feature = "pjrt")]
 use terapipe::data::synthetic_corpus;
 use terapipe::experiments as exp;
 use terapipe::perfmodel::analytic::AnalyticModel;
-#[cfg(feature = "pjrt")]
-use terapipe::perfmodel::{measure, CostModel};
+use terapipe::perfmodel::linear::LinearCtxModel;
+use terapipe::perfmodel::CostModel;
+use terapipe::runtime::manifest::ModelDims;
 use terapipe::sim::schedule::build_plan;
 use terapipe::sim::{engine::simulate, trace};
 use terapipe::solver::joint::{gpipe_plan, solve_joint_analytic, JointOpts};
@@ -47,14 +49,8 @@ fn main() {
         "fig7" => cmd_fig7(&args),
         "appendix-a" => cmd_appendix_a(),
         "calibrate" => cmd_calibrate(&args),
-        #[cfg(feature = "pjrt")]
         "train" => cmd_train(&args),
-        #[cfg(feature = "pjrt")]
         "measure" => cmd_measure(&args),
-        #[cfg(not(feature = "pjrt"))]
-        "train" | "measure" => Err(anyhow::anyhow!(
-            "this build has no PJRT runtime; rebuild with `--features pjrt` (requires the xla crate)"
-        )),
         _ => {
             print!("{}", HELP);
             Ok(())
@@ -81,10 +77,15 @@ USAGE: terapipe <command> [--options]
   fig6     [--setting 8|9] [--max-slices N]
   fig7
   appendix-a
-  train    [--artifacts artifacts] [--slicing 64,32,16,16] [--steps 50]
-           [--microbatches 1] [--lr 0.001] [--corpus FILE] [--auto]
-           [--replan-every N] [--save-checkpoint DIR] [--resume DIR]
-  measure  [--artifacts artifacts] [--repeats 5]
+  train    [--slicing 32,32,32,32] [--steps 50] [--microbatches 1]
+           [--lr 0.001] [--corpus FILE] [--auto] [--replan-every N]
+           [--drift-threshold 0.35] [--drift-window 16]
+           [--save-checkpoint DIR] [--resume DIR]
+           native model: [--hidden 64] [--heads 4] [--layers 2] [--stages 2]
+           [--seq-len 128] [--batch 4] [--vocab 256] [--granularity 16]
+           [--seed 42]; or [--artifacts DIR] for the AOT/PJRT backend
+           (requires a `--features pjrt` build)
+  measure  [--repeats 5] [native model flags as for train | --artifacts DIR]
 ";
 
 fn opts_from(args: &Args, default_gran: u32) -> JointOpts {
@@ -433,21 +434,177 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
-fn artifacts_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.get_or("artifacts", "artifacts"))
+/// Native model geometry from CLI flags (defaults: a small byte-level GPT
+/// the CPU backend trains comfortably).
+fn native_spec(args: &Args) -> anyhow::Result<NativeSpec> {
+    let granularity = args.usize("granularity", 16);
+    let dims = ModelDims {
+        vocab: args.usize("vocab", 256),
+        hidden: args.usize("hidden", 64),
+        num_heads: args.usize("heads", 4),
+        layers_per_stage: args.usize("layers", 2),
+        num_stages: args.usize("stages", 2),
+        seq_len: args.usize("seq-len", 128),
+        batch: args.usize("batch", 4),
+        block_ctx: granularity,
+        seed: args.u32("seed", 42) as u64,
+    };
+    anyhow::ensure!(dims.num_heads >= 1 && dims.hidden % dims.num_heads == 0, "--hidden must be a multiple of --heads");
+    anyhow::ensure!(granularity >= 1 && dims.seq_len % granularity == 0, "--granularity must divide --seq-len");
+    anyhow::ensure!(dims.num_stages >= 1 && dims.layers_per_stage >= 1, "--stages and --layers must be ≥ 1");
+    Ok(NativeSpec::new(dims, granularity))
+}
+
+/// Bucket-restricted DP over a fitted cost model (solver::bucketed).
+fn dp_bucketed(fitted: &LinearCtxModel, seq_len: usize, stages: usize, buckets: &[usize]) -> Vec<usize> {
+    let bu: Vec<u32> = buckets.iter().map(|&b| b as u32).collect();
+    let (scheme, _) = terapipe::solver::bucketed::solve_tokens_bucketed(
+        fitted, seq_len as u32, stages as u32, &bu, 0.0,
+    )
+    .expect("buckets must compose the sequence length");
+    scheme.lens.into_iter().map(|l| l as usize).collect()
+}
+
+/// Uniform 4-way split when it lands on buckets, else one full slice.
+fn default_slicing(seq_len: usize, buckets: &[usize]) -> Vec<usize> {
+    let quarter = seq_len / 4;
+    if quarter > 0 && seq_len % 4 == 0 && buckets.contains(&quarter) {
+        vec![quarter; 4]
+    } else {
+        vec![seq_len]
+    }
+}
+
+fn step_printer(r: &terapipe::coordinator::StepReport) {
+    if r.step % 10 == 0 || r.step < 5 {
+        println!(
+            "step {:>4}  loss {:.4}  {:>7.1} ms  {:.0} tok/s",
+            r.step,
+            r.loss,
+            r.wall_ms,
+            r.tokens as f64 / (r.wall_ms / 1e3)
+        );
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if args.get("artifacts").is_some() {
+        return cmd_train_pjrt(args);
+    }
+    let spec = native_spec(args)?;
+    let m = spec.model();
+    let buckets = spec.buckets();
+
+    // One measured model serves both --auto slicing and (when
+    // --replan-every is set) the drift gate's solved-against belief.
+    let mut auto_fit: Option<LinearCtxModel> = None;
+    let slicing: Vec<usize> = if args.flag("auto") {
+        // measure real native timings → fit Eq. 9 → DP over the buckets
+        let fitted = terapipe::backend::measure_fit(&spec, 3)?;
+        let lens = dp_bucketed(&fitted, m.seq_len, m.num_stages, &buckets);
+        println!("auto slicing from measured model: {lens:?}");
+        auto_fit = Some(fitted);
+        lens
+    } else if args.get("slicing").is_some() {
+        args.u32_list("slicing", &[]).into_iter().map(|x| x as usize).collect()
+    } else {
+        default_slicing(m.seq_len, &buckets)
+    };
+
+    let cfg = terapipe::coordinator::TrainConfig {
+        slicing,
+        microbatches: args.usize("microbatches", 1),
+        steps: args.usize("steps", 50),
+        lr: args.f64("lr", 1e-3) as f32,
+        seed: args.u32("seed", 42) as u64,
+        replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
+        trace: false,
+    };
+    let corpus = match args.get("corpus") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => synthetic_corpus(1 << 16, 7),
+    };
+    let resume = args.get("resume").map(PathBuf::from);
+    let save = args.get("save-checkpoint").map(PathBuf::from);
+
+    println!(
+        "training {} params (native CPU backend), {} stages × {} layers, L={}, B={}, slicing {:?}",
+        m.total_params(),
+        m.num_stages,
+        m.layers_per_stage,
+        m.seq_len,
+        m.batch,
+        cfg.slicing
+    );
+    let replan = cfg.replan_every;
+    let mut trainer =
+        terapipe::coordinator::Trainer::with_spec_resume(spec.clone(), cfg, resume)?;
+    let seed = trainer.config().seed;
+    let mut batcher = terapipe::data::Batcher::new(&corpus, m.batch, m.seq_len, seed);
+
+    let reports = if replan.is_some() {
+        // Solver-in-the-loop with the drift gate (ROADMAP "planner on the
+        // real runtime"): live per-slice samples stream into the
+        // DriftDetector; a re-measure + re-solve is paid only when the
+        // window says the solved-against model drifted.
+        let solved_against = match auto_fit {
+            Some(f) => f,
+            None => terapipe::backend::measure_fit(&spec, 3)?,
+        };
+        let dcfg = terapipe::planner::drift::DriftConfig {
+            window: args.usize("drift-window", 16),
+            rel_threshold: args.f64("drift-threshold", 0.35),
+        };
+        let respec = spec.clone();
+        let (reports, drift) = trainer.train_with_drift_replan(
+            || batcher.next_batch(),
+            step_printer,
+            solved_against,
+            dcfg,
+            |step, factor| {
+                println!("drift at step {step} (×{factor:.3}): re-measuring + re-solving");
+                match terapipe::backend::measure_fit(&respec, 3) {
+                    Ok(f2) => Some(dp_bucketed(&f2, m.seq_len, m.num_stages, &buckets)),
+                    Err(e) => {
+                        eprintln!("re-measure failed, keeping slicing: {e:#}");
+                        None
+                    }
+                }
+            },
+        )?;
+        println!(
+            "drift gate: {} re-solves, {} stable checks, {} warmups over {} samples",
+            drift.resolves, drift.stable_checks, drift.warmups, drift.samples_seen
+        );
+        reports
+    } else {
+        trainer.train(|| batcher.next_batch(), step_printer)?
+    };
+    if let Some(ckpt) = save {
+        trainer.save_checkpoint(&ckpt)?;
+        println!("checkpoint written to {}", ckpt.display());
+    }
+    let first = reports.first().unwrap();
+    let last = reports.last().unwrap();
+    println!(
+        "done: loss {:.4} -> {:.4} over {} steps",
+        first.loss,
+        last.loss,
+        reports.len()
+    );
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let dir = artifacts_dir(args);
+fn cmd_train_pjrt(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let manifest = terapipe::runtime::manifest::Manifest::load(&dir)?;
     let m = manifest.model.clone();
 
     let slicing: Vec<usize> = if args.flag("auto") {
         // measure → fit → DP restricted to the AOT buckets
-        let fitted = measured_model(&dir, 3)?;
-        let lens = dp_bucketed(&fitted, &m, &manifest.buckets);
+        let fitted = measured_model_pjrt(&dir, 3)?;
+        let lens = dp_bucketed(&fitted, m.seq_len, m.num_stages, &manifest.buckets);
         println!("auto slicing from measured model: {lens:?}");
         lens
     } else {
@@ -464,6 +621,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         lr: args.f64("lr", 1e-3) as f32,
         seed: args.u32("seed", 42) as u64,
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
+        trace: false,
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,
@@ -473,7 +631,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let save = args.get("save-checkpoint").map(PathBuf::from);
 
     println!(
-        "training {} params, {} stages × {} layers, L={}, B={}, slicing {:?}",
+        "training {} params (PJRT backend), {} stages × {} layers, L={}, B={}, slicing {:?}",
         m.total_params(),
         m.num_stages,
         m.layers_per_stage,
@@ -482,32 +640,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.slicing
     );
     let mut trainer = terapipe::coordinator::Trainer::new_with_resume(&dir, cfg, resume)?;
-    let mm = trainer.manifest.model.clone();
     let seed = trainer.config().seed;
-    let mut batcher = terapipe::data::Batcher::new(&corpus, mm.batch, mm.seq_len, seed);
+    let mut batcher = terapipe::data::Batcher::new(&corpus, m.batch, m.seq_len, seed);
     // solver-in-the-loop: on the replan cadence, re-measure the real
     // stage latency, refit Eq. 9, and re-solve the bucketed DP
     let replan_dir = dir.clone();
     let reports = trainer.train_with_replan(
         || batcher.next_batch(),
-        |r| {
-            if r.step % 10 == 0 || r.step < 5 {
-                println!(
-                    "step {:>4}  loss {:.4}  {:>7.1} ms  {:.0} tok/s",
-                    r.step,
-                    r.loss,
-                    r.wall_ms,
-                    r.tokens as f64 / (r.wall_ms / 1e3)
-                );
-            }
-        },
+        step_printer,
         |step| {
             println!("replan at step {step}: re-measuring stage latency");
-            match measured_model(&replan_dir, 3) {
+            match measured_model_pjrt(&replan_dir, 3) {
                 Ok(fitted) => {
                     let manifest =
                         terapipe::runtime::manifest::Manifest::load(&replan_dir).ok()?;
-                    Some(dp_bucketed(&fitted, &manifest.model, &manifest.buckets))
+                    Some(dp_bucketed(
+                        &fitted,
+                        manifest.model.seq_len,
+                        manifest.model.num_stages,
+                        &manifest.buckets,
+                    ))
                 }
                 Err(e) => {
                     eprintln!("replan measure failed, keeping slicing: {e:#}");
@@ -531,78 +683,71 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Measure the real per-slice latency of stage_fwd through the PJRT
-/// runtime and fit the paper's Eq. 9 model.
-#[cfg(feature = "pjrt")]
-fn measured_model(
-    dir: &std::path::Path,
-    repeats: u32,
-) -> anyhow::Result<terapipe::perfmodel::linear::LinearCtxModel> {
-    use terapipe::runtime::tensor::HostTensor;
-    use terapipe::runtime::{stage_exe_names, StageRuntime};
-    let manifest = terapipe::runtime::manifest::Manifest::load(dir)?;
-    let m = manifest.model.clone();
-    let buckets: Vec<u32> = manifest.buckets.iter().map(|&b| b as u32).collect();
-    // a middle stage (no embed/head) is the representative cell
-    let exe_names = stage_exe_names(1 % m.num_stages, m.num_stages, &manifest.buckets);
-    let rt = StageRuntime::load(dir, &exe_names)?;
-    let params = rt.manifest.load_init(&rt.manifest.init_stages[0])?;
-
-    let timer_fn = move |i: u32, j: u32| -> f64 {
-        let len = i as usize;
-        let kv = HostTensor::zeros_f32(&m.kv_shape());
-        let h = HostTensor::zeros_f32(&[m.batch, len, m.hidden]);
-        let mut inputs: Vec<HostTensor> = params.clone();
-        inputs.push(h);
-        inputs.push(kv.clone());
-        inputs.push(kv);
-        inputs.push(HostTensor::scalar_i32(j as i32));
-        let (_, ms) = terapipe::util::time_ms(|| {
-            rt.run(&format!("stage_fwd_s{len}"), &inputs)
-                .expect("measure run")
-        });
-        ms
-    };
-    let manifest2 = terapipe::runtime::manifest::Manifest::load(dir)?;
-    let mut timer = (timer_fn, buckets);
-    let meas = measure::measure(&mut timer, manifest2.model.seq_len as u32, 4, repeats);
-    measure::fit(&meas, manifest2.model.seq_len as u32).map_err(|e| anyhow::anyhow!(e))
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args) -> anyhow::Result<()> {
+    Err(anyhow::anyhow!(
+        "--artifacts selects the PJRT backend, which this build omits; rebuild with `--features pjrt` or drop the flag to train on the native backend"
+    ))
 }
 
-/// Bucket-restricted DP over a fitted cost model (solver::bucketed).
+/// Measure the real per-slice fwd+bwd latency through the PJRT backend
+/// and fit the paper's Eq. 9 model (shared harness with the native path).
 #[cfg(feature = "pjrt")]
-fn dp_bucketed(
-    fitted: &terapipe::perfmodel::linear::LinearCtxModel,
-    m: &terapipe::runtime::manifest::ModelDims,
-    buckets: &[usize],
-) -> Vec<usize> {
-    let bu: Vec<u32> = buckets.iter().map(|&b| b as u32).collect();
-    let (scheme, _) = terapipe::solver::bucketed::solve_tokens_bucketed(
-        fitted, m.seq_len as u32, m.num_stages as u32, &bu, 0.0,
-    )
-    .expect("buckets must compose the sequence length");
-    scheme.lens.into_iter().map(|l| l as usize).collect()
+fn measured_model_pjrt(dir: &std::path::Path, repeats: u32) -> anyhow::Result<LinearCtxModel> {
+    let spec = terapipe::backend::PjrtSpec::new(dir)?;
+    terapipe::backend::measure_fit(&spec, repeats)
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_measure(args: &Args) -> anyhow::Result<()> {
-    let dir = artifacts_dir(args);
-    let fitted = measured_model(&dir, args.u32("repeats", 5))?;
+    if args.get("artifacts").is_some() {
+        return cmd_measure_pjrt(args);
+    }
+    let spec = native_spec(args)?;
+    let m = spec.model();
+    let buckets = spec.buckets();
+    let fitted = terapipe::backend::measure_fit(&spec, args.u32("repeats", 5))?;
+    print_measure(&fitted, &buckets, m.seq_len, m.num_stages, "native CPU");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_measure_pjrt(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let fitted = measured_model_pjrt(&dir, args.u32("repeats", 5))?;
     let manifest = terapipe::runtime::manifest::Manifest::load(&dir)?;
-    println!("# measured stage_fwd latency (real PJRT runtime) + Eq. 9 fit");
+    print_measure(
+        &fitted,
+        &manifest.buckets,
+        manifest.model.seq_len,
+        manifest.model.num_stages,
+        "PJRT",
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_measure_pjrt(_args: &Args) -> anyhow::Result<()> {
+    Err(anyhow::anyhow!(
+        "--artifacts selects the PJRT backend, which this build omits; rebuild with `--features pjrt` or drop the flag to measure the native backend"
+    ))
+}
+
+fn print_measure(fitted: &LinearCtxModel, buckets: &[usize], seq_len: usize, stages: usize, label: &str) {
+    println!("# measured stage fwd+bwd latency (real {label} backend) + Eq. 9 fit");
     println!(
         "t_ctx(i,j) = {:.4} + {:.6}·i + {:.6}·j + {:.8}·ij  (ms)",
         fitted.coeffs.a0, fitted.coeffs.a1, fitted.coeffs.a2, fitted.coeffs.a3
     );
     println!("| i (slice) | j (ctx) | predicted ms |");
-    let g = *manifest.buckets.iter().min().unwrap();
-    for &i in &manifest.buckets {
-        for j in [0usize, manifest.model.seq_len / 2] {
+    let g = *buckets.iter().min().unwrap();
+    for &i in buckets {
+        for j in [0usize, seq_len / 2] {
             let jj = (j / g) * g;
-            println!("| {i} | {jj} | {:.3} |", fitted.t(i as u32, jj as u32));
+            if i + jj <= seq_len {
+                println!("| {i} | {jj} | {:.3} |", fitted.t(i as u32, jj as u32));
+            }
         }
     }
-    let lens = dp_bucketed(&fitted, &manifest.model, &manifest.buckets);
+    let lens = dp_bucketed(fitted, seq_len, stages, buckets);
     println!("DP slicing over measured model (bucketed): {lens:?}");
-    Ok(())
 }

@@ -1,5 +1,12 @@
-//! PJRT runtime: load the AOT HLO-text artifacts, compile them once, and
-//! execute them on the hot path. Python never runs here.
+//! Host-side runtime substrate: tensors, the artifact manifest, and (with
+//! the `pjrt` feature) the PJRT execution layer.
+//!
+//! The always-available parts — [`tensor::HostTensor`] (the coordinator's
+//! interchange format, with the strided KV-buffer copies) and
+//! [`manifest::ModelDims`]/[`manifest::Manifest`] — carry no XLA
+//! dependency and back both stage backends. The PJRT pieces below load
+//! the AOT HLO-text artifacts, compile them once, and execute them on the
+//! hot path; python never runs here.
 //!
 //! Each [`StageRuntime`] owns its own `PjRtClient` — one per stage worker
 //! thread, mirroring one-process-per-GPU deployments and sidestepping the
@@ -13,20 +20,27 @@
 pub mod manifest;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use manifest::{ExeSpec, Manifest};
+#[cfg(feature = "pjrt")]
 use tensor::HostTensor;
 
 /// A compiled executable plus its manifest signature.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     pub spec: ExeSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with shape/dtype validation against the manifest spec.
     /// Inputs are uploaded, the tuple output is decomposed into host
@@ -119,12 +133,14 @@ impl Executable {
 
 /// One stage worker's runtime: a CPU PJRT client plus the compiled
 /// executables that worker needs.
+#[cfg(feature = "pjrt")]
 pub struct StageRuntime {
     pub manifest: Manifest,
     client: xla::PjRtClient,
     exes: HashMap<String, Executable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl StageRuntime {
     /// Create a client and compile `names` from the artifact dir.
     pub fn load(artifacts: &Path, names: &[String]) -> Result<StageRuntime> {

@@ -1,12 +1,14 @@
-//! Host-side tensors exchanged with PJRT and between stage workers.
+//! Host-side tensors exchanged between stage workers (and, with the
+//! `pjrt` feature, with PJRT).
 //!
 //! The coordinator moves activations/gradients between OS threads as plain
-//! `Vec<f32>`/`Vec<i32>` with explicit shapes; [`HostTensor`] converts
-//! to/from `xla::Literal` at the PJRT boundary and provides the strided
-//! copies the KV-buffer bookkeeping needs (writing a slice's K/V into the
-//! padded context buffer at `ctx_len`, reading a slice's accumulated
-//! context gradients back out).
+//! `Vec<f32>`/`Vec<i32>` with explicit shapes; [`HostTensor`] provides the
+//! strided copies the KV-buffer bookkeeping needs (writing a slice's K/V
+//! into the padded context buffer at `ctx_len`, reading a slice's
+//! accumulated context gradients back out) and — behind `pjrt` — converts
+//! to/from `xla::Literal` at the PJRT boundary.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context, Result};
 
 /// Element payload.
@@ -121,6 +123,7 @@ impl HostTensor {
 
     // ---- PJRT boundary ----
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -130,6 +133,7 @@ impl HostTensor {
         Ok(lit)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
         let shape = lit.array_shape().context("literal has no array shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -1,117 +1,61 @@
-//! Integration tests over the real AOT artifacts (skipped with a notice
-//! if `make artifacts` hasn't run).
+//! Integration tests over the threaded pipeline on the **native CPU
+//! backend** — they run in the default build, no artifacts, no PJRT.
 //!
-//! The load-bearing test is `pipelined_training_is_slicing_invariant`: the
-//! paper's synchronous-training claim means the *schedule* must not change
-//! the math — any token slicing, pipelined across stages, must produce the
-//! same losses and the same updated parameters as any other.
+//! The load-bearing test is `pipelined_training_is_slicing_invariant`:
+//! the paper's synchronous-training claim means the *schedule* must not
+//! change the math — any token slicing, pipelined across stages, must
+//! produce the same losses as any other. (The gradient-level version of
+//! the claim — sliced backward bit-matching the unsliced oracle before
+//! the optimizer — is pinned in `tests/backend_equivalence.rs`; loss
+//! curves after Adam tolerate slightly more because near-zero gradients
+//! make the first bias-corrected step sign-like.)
 //!
-//! The whole file is compiled only with the `pjrt` feature (the PJRT
-//! runtime binds the `xla` crate, which the default build omits).
-#![cfg(feature = "pjrt")]
+//! Also here: the drift-gated replan loop (ROADMAP "planner on the real
+//! runtime") — live samples routed through `planner::drift::DriftDetector`
+//! so drift-free steps trigger **zero** re-solves.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 
-use terapipe::coordinator::{Trainer, TrainConfig};
+use terapipe::backend::{BackendSpec, NativeSpec};
+use terapipe::coordinator::{TrainConfig, Trainer};
 use terapipe::data::{synthetic_corpus, Batcher};
-use terapipe::runtime::tensor::HostTensor;
-use terapipe::runtime::{stage_exe_names, StageRuntime};
+use terapipe::perfmodel::{CostModel, ScaledModel};
+use terapipe::planner::drift::DriftConfig;
+use terapipe::runtime::manifest::ModelDims;
 
-fn artifacts() -> Option<PathBuf> {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if d.join("manifest.json").exists() {
-        Some(d)
-    } else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        None
-    }
+fn tiny_spec() -> NativeSpec {
+    NativeSpec::new(
+        ModelDims {
+            vocab: 256, // byte-level corpus
+            hidden: 16,
+            num_heads: 2,
+            layers_per_stage: 1,
+            num_stages: 2,
+            seq_len: 16,
+            batch: 2,
+            block_ctx: 4,
+            seed: 3,
+        },
+        4,
+    )
 }
 
-/// Runtime-level: composing bucketed slices with KV-context writes equals
-/// one full-length slice — the token-dimension dependency structure,
-/// exercised through the actual PJRT executables and the rust KV
-/// bookkeeping (no python anywhere).
-#[test]
-fn slice_composition_matches_full_forward() {
-    let Some(dir) = artifacts() else { return };
-    let rt = StageRuntime::load(&dir, &stage_exe_names(0, 2, &[32, 64, 128])).unwrap();
-    let m = rt.manifest.model.clone();
-    assert_eq!(m.seq_len, 128, "test assumes default artifact geometry");
-    let params = rt.manifest.load_init(&rt.manifest.init_stages[0]).unwrap();
-
-    // deterministic pseudo-random input activation
-    let n = m.batch * m.seq_len * m.hidden;
-    let h_full: Vec<f32> = (0..n).map(|i| ((i * 2654435761 % 1000) as f32 / 500.0) - 1.0).collect();
-
-    // full pass: one slice of length L, empty context
-    let kv = HostTensor::zeros_f32(&m.kv_shape());
-    let mut inputs: Vec<HostTensor> = params.clone();
-    inputs.push(HostTensor::f32(&[m.batch, 128, m.hidden], h_full.clone()));
-    inputs.push(kv.clone());
-    inputs.push(kv.clone());
-    inputs.push(HostTensor::scalar_i32(0));
-    let full = rt.run("stage_fwd_s128", &inputs).unwrap().remove(0);
-
-    // sliced pass: 64 + 32 + 32 with growing context
-    let mut k_ctx = HostTensor::zeros_f32(&m.kv_shape());
-    let mut v_ctx = HostTensor::zeros_f32(&m.kv_shape());
-    let mut outs: Vec<HostTensor> = Vec::new();
-    let mut off = 0usize;
-    for len in [64usize, 32, 32] {
-        let mut h = vec![0f32; m.batch * len * m.hidden];
-        for b in 0..m.batch {
-            let src = (b * m.seq_len + off) * m.hidden;
-            let dst = b * len * m.hidden;
-            h[dst..dst + len * m.hidden].copy_from_slice(&h_full[src..src + len * m.hidden]);
-        }
-        let mut inputs: Vec<HostTensor> = params.clone();
-        inputs.push(HostTensor::f32(&[m.batch, len, m.hidden], h));
-        inputs.push(k_ctx.clone());
-        inputs.push(v_ctx.clone());
-        inputs.push(HostTensor::scalar_i32(off as i32));
-        let mut out = rt.run(&format!("stage_fwd_s{len}"), &inputs).unwrap();
-        let v_new = out.pop().unwrap();
-        let k_new = out.pop().unwrap();
-        let h_out = out.pop().unwrap();
-        k_ctx.write_at_axis(2, off, &k_new);
-        v_ctx.write_at_axis(2, off, &v_new);
-        outs.push(h_out);
-        off += len;
-    }
-
-    // compare per-row slices against the full output
-    let full_data = full.as_f32();
-    let mut max_err = 0f32;
-    let mut off = 0usize;
-    for (h_out, len) in outs.iter().zip([64usize, 32, 32]) {
-        let d = h_out.as_f32();
-        for b in 0..m.batch {
-            for t in 0..len {
-                for c in 0..m.hidden {
-                    let got = d[(b * len + t) * m.hidden + c];
-                    let want = full_data[(b * m.seq_len + off + t) * m.hidden + c];
-                    max_err = max_err.max((got - want).abs());
-                }
-            }
-        }
-        off += len;
-    }
-    assert!(max_err < 2e-4, "slice composition diverged: max err {max_err}");
-}
-
-fn run_training(slicing: Vec<usize>, steps: usize, microbatches: usize) -> Vec<f64> {
-    let dir = artifacts().unwrap();
-    let cfg = TrainConfig {
+fn cfg_for(slicing: Vec<usize>, steps: usize, microbatches: usize) -> TrainConfig {
+    TrainConfig {
         slicing,
         microbatches,
         steps,
-        lr: 1e-3,
+        lr: 1e-2,
         seed: 42,
-        replan_every: None,
-    };
-    let mut t = Trainer::new(&dir, cfg).unwrap();
-    let m = t.manifest.model.clone();
-    let corpus = synthetic_corpus(1 << 15, 7);
+        ..Default::default()
+    }
+}
+
+fn run_training(slicing: Vec<usize>, steps: usize, microbatches: usize) -> Vec<f64> {
+    let mut t = Trainer::with_spec(tiny_spec(), cfg_for(slicing, steps, microbatches)).unwrap();
+    let m = t.model.clone();
+    let corpus = synthetic_corpus(1 << 13, 7);
     let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
     let reports = t.train(|| batcher.next_batch(), |_| {}).unwrap();
     reports.iter().map(|r| r.loss).collect()
@@ -119,32 +63,28 @@ fn run_training(slicing: Vec<usize>, steps: usize, microbatches: usize) -> Vec<f
 
 /// The paper's central correctness claim, end to end on the real threaded
 /// pipeline: losses are identical (fp32 tolerance) whatever the slicing.
+/// This is a multi-stage, multi-slice pipelined step matching the
+/// unsliced oracle (slicing `[L]`) in the default build.
 #[test]
 fn pipelined_training_is_slicing_invariant() {
-    if artifacts().is_none() {
-        return;
-    }
-    let unsliced = run_training(vec![128], 3, 1);
-    let sliced = run_training(vec![64, 32, 16, 16], 3, 1);
-    let uniform = run_training(vec![32, 32, 32, 32], 3, 1);
+    let unsliced = run_training(vec![16], 3, 1);
+    let sliced = run_training(vec![8, 4, 4], 3, 1);
+    let uniform = run_training(vec![4, 4, 4, 4], 3, 1);
     for (a, b) in unsliced.iter().zip(&sliced) {
-        assert!((a - b).abs() < 5e-4, "unsliced {a} vs sliced {b}");
+        assert!((a - b).abs() < 1e-3, "unsliced {a} vs sliced {b}");
     }
     for (a, b) in unsliced.iter().zip(&uniform) {
-        assert!((a - b).abs() < 5e-4, "unsliced {a} vs uniform {b}");
+        assert!((a - b).abs() < 1e-3, "unsliced {a} vs uniform {b}");
     }
 }
 
 /// Gradient accumulation across microbatches composes with slicing.
 #[test]
 fn microbatched_training_is_slicing_invariant() {
-    if artifacts().is_none() {
-        return;
-    }
-    let a = run_training(vec![128], 2, 2);
-    let b = run_training(vec![64, 64], 2, 2);
+    let a = run_training(vec![16], 2, 2);
+    let b = run_training(vec![8, 8], 2, 2);
     for (x, y) in a.iter().zip(&b) {
-        assert!((x - y).abs() < 5e-4, "{x} vs {y}");
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
     }
 }
 
@@ -152,10 +92,7 @@ fn microbatched_training_is_slicing_invariant() {
 /// gradients point downhill through the whole pipelined stack.
 #[test]
 fn pipelined_training_reduces_loss() {
-    if artifacts().is_none() {
-        return;
-    }
-    let losses = run_training(vec![64, 64], 8, 1);
+    let losses = run_training(vec![8, 8], 8, 1);
     let first = losses[0];
     let last = *losses.last().unwrap();
     assert!(
@@ -169,37 +106,23 @@ fn pipelined_training_reduces_loss() {
 /// Config validation surfaces bad slicings before any thread spawns.
 #[test]
 fn trainer_rejects_invalid_slicing() {
-    let Some(dir) = artifacts() else { return };
-    let bad = TrainConfig {
-        slicing: vec![100, 28],
-        microbatches: 1,
-        steps: 1,
-        lr: 1e-3,
-        seed: 0,
-        replan_every: None,
-    };
-    assert!(Trainer::new(&dir, bad).is_err());
+    // 5 + 11 = 16 but neither is a granularity-4 bucket
+    assert!(Trainer::with_spec(tiny_spec(), cfg_for(vec![5, 11], 1, 1)).is_err());
+    // buckets, but wrong sum
+    assert!(Trainer::with_spec(tiny_spec(), cfg_for(vec![8, 4], 1, 1)).is_err());
+    assert!(Trainer::with_spec(tiny_spec(), cfg_for(vec![], 1, 1)).is_err());
 }
 
 /// Checkpoint → resume reproduces the exact training trajectory: train 2
-/// steps, save; fresh trainer resumed from the checkpoint continues with
-/// the same losses a 4-step uninterrupted run sees at steps 3–4.
+/// steps, save; a fresh trainer resumed from the checkpoint continues
+/// with the same losses a 4-step uninterrupted run sees at steps 3–4.
 #[test]
 fn checkpoint_resume_continues_trajectory() {
-    let Some(dir) = artifacts() else { return };
-    let corpus = synthetic_corpus(1 << 15, 7);
-    let mk_cfg = |steps: usize| TrainConfig {
-        slicing: vec![64, 64],
-        microbatches: 1,
-        steps,
-        lr: 1e-3,
-        seed: 42,
-        replan_every: None,
-    };
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let m = tiny_spec().model();
 
     // uninterrupted 4-step reference
-    let mut t = Trainer::new(&dir, mk_cfg(4)).unwrap();
-    let m = t.manifest.model.clone();
+    let mut t = Trainer::with_spec(tiny_spec(), cfg_for(vec![8, 8], 4, 1)).unwrap();
     let mut b = Batcher::new(&corpus, m.batch, m.seq_len, 42);
     let full: Vec<f64> = t
         .train(|| b.next_batch(), |_| {})
@@ -210,15 +133,17 @@ fn checkpoint_resume_continues_trajectory() {
     drop(t);
 
     // 2 steps → checkpoint
-    let ckpt = tempdir();
-    let mut t1 = Trainer::new(&dir, mk_cfg(2)).unwrap();
+    let ckpt = tempdir("resume");
+    let mut t1 = Trainer::with_spec(tiny_spec(), cfg_for(vec![8, 8], 2, 1)).unwrap();
     let mut b1 = Batcher::new(&corpus, m.batch, m.seq_len, 42);
     t1.train(|| b1.next_batch(), |_| {}).unwrap();
     t1.save_checkpoint(&ckpt).unwrap();
     drop(t1);
 
     // resume for 2 more steps, feeding the same batch stream continuation
-    let mut t2 = Trainer::new_with_resume(&dir, mk_cfg(2), Some(ckpt.clone())).unwrap();
+    let mut t2 =
+        Trainer::with_spec_resume(tiny_spec(), cfg_for(vec![8, 8], 2, 1), Some(ckpt.clone()))
+            .unwrap();
     let mut b2 = Batcher::new(&corpus, m.batch, m.seq_len, 42);
     b2.next_batch();
     b2.next_batch(); // skip the two consumed batches
@@ -229,15 +154,158 @@ fn checkpoint_resume_continues_trajectory() {
         .map(|r| r.loss)
         .collect();
 
-    // Full state (params + Adam moments + step counter) is checkpointed,
-    // so the resumed trajectory is exact to fp32 noise.
+    // Full state (params + Adam moments + step counter) is checkpointed
+    // and the native backend is deterministic, so the resumed trajectory
+    // is exact to fp32 noise.
     assert!((resumed[0] - full[2]).abs() < 1e-6, "{} vs {}", resumed[0], full[2]);
     assert!((resumed[1] - full[3]).abs() < 1e-6, "{} vs {}", resumed[1], full[3]);
     let _ = std::fs::remove_dir_all(&ckpt);
 }
 
-fn tempdir() -> PathBuf {
-    let d = std::env::temp_dir().join(format!("terapipe-ckpt-{}", std::process::id()));
+/// Timing collection: with `trace` on, every (stage, slice) reports one
+/// Fwd and one Bwd sample per step, and the forward-sweep makespan is
+/// recorded.
+#[test]
+fn trace_collects_per_slice_timings() {
+    let mut cfg = cfg_for(vec![8, 4, 4], 2, 1);
+    cfg.trace = true;
+    let mut t = Trainer::with_spec(tiny_spec(), cfg).unwrap();
+    let m = t.model.clone();
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
+    let reports = t.train(|| batcher.next_batch(), |_| {}).unwrap();
+    // 2 stages × 3 slices × 2 phases from the final step
+    assert_eq!(t.last_timings().len(), 12, "{:?}", t.last_timings());
+    assert!(t.last_timings().iter().all(|s| s.ms >= 0.0));
+    assert!(reports.iter().all(|r| r.fwd_ms > 0.0 && r.fwd_ms <= r.wall_ms));
+}
+
+// ---------------------------------------------------------------------------
+// Drift-gated replanning (ROADMAP: "planner on the real runtime")
+// ---------------------------------------------------------------------------
+
+/// Cost model tabulated from observed samples: median ms per (i, j).
+struct MedianModel(HashMap<(u32, u32), f64>);
+
+impl MedianModel {
+    /// Warm up the real pipeline for a few steps and tabulate the
+    /// observed stage-0 fwd+bwd latency per (slice len, context len).
+    fn from_warmup(slicing: Vec<usize>, steps: usize) -> MedianModel {
+        let mut cfg = cfg_for(slicing, steps, 1);
+        cfg.trace = true;
+        let mut t = Trainer::with_spec(tiny_spec(), cfg).unwrap();
+        let m = t.model.clone();
+        let corpus = synthetic_corpus(1 << 13, 7);
+        let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
+        let mut samples: HashMap<(u32, u32), Vec<f64>> = HashMap::new();
+        for step in 0..steps {
+            let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
+            t.step(step, &batches).unwrap();
+            let timings = t.last_timings().to_vec();
+            for f in timings.iter().filter(|s| {
+                s.stage == 0 && s.phase == terapipe::coordinator::TimedPhase::Fwd
+            }) {
+                let bwd = timings
+                    .iter()
+                    .find(|s| {
+                        s.stage == 0
+                            && s.phase == terapipe::coordinator::TimedPhase::Bwd
+                            && s.mb == f.mb
+                            && s.slice == f.slice
+                    })
+                    .map(|s| s.ms)
+                    .unwrap_or(0.0);
+                samples
+                    .entry((f.len as u32, f.off as u32))
+                    .or_default()
+                    .push(f.ms + bwd);
+            }
+        }
+        let med = samples
+            .into_iter()
+            .map(|(k, mut v)| {
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (k, v[v.len() / 2])
+            })
+            .collect();
+        MedianModel(med)
+    }
+}
+
+impl CostModel for MedianModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        *self.0.get(&(i, j)).expect("sample for every (i, j) the slicing produces")
+    }
+}
+
+/// Drift-free execution must trigger **zero** re-solves: the live samples
+/// agree with the solved-against model, so every cadence check lands on
+/// `Stable` and the re-measure/re-solve is never paid.
+#[test]
+fn drift_free_steps_trigger_zero_resolves() {
+    let model = MedianModel::from_warmup(vec![8, 4, 4], 3);
+    let mut cfg = cfg_for(vec![8, 4, 4], 6, 1);
+    cfg.replan_every = Some(2);
+    let mut t = Trainer::with_spec(tiny_spec(), cfg).unwrap();
+    let m = t.model.clone();
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
+    let mut resolve_calls = 0usize;
+    let (_, report) = t
+        .train_with_drift_replan(
+            || batcher.next_batch(),
+            |_| {},
+            model,
+            // generous threshold: scheduler noise on a shared box must not
+            // masquerade as drift (mean rel err ≤ 1.0 ⇒ within 2×)
+            DriftConfig { window: 6, rel_threshold: 1.0 },
+            |_, _| {
+                resolve_calls += 1;
+                None
+            },
+        )
+        .unwrap();
+    assert_eq!(report.resolves, 0, "{report:?}");
+    assert_eq!(resolve_calls, 0);
+    assert!(report.stable_checks >= 1, "{report:?}");
+    assert!(report.samples_seen >= 6, "{report:?}");
+}
+
+/// A genuinely wrong solved-against model (8× too fast) must be caught by
+/// the window verdict and pay exactly the gated re-solve path.
+#[test]
+fn drifted_model_triggers_resolve() {
+    let model = MedianModel::from_warmup(vec![8, 4, 4], 3);
+    let wrong = ScaledModel { inner: model, compute: 0.125, comm: 0.125 };
+    // 4 steps with cadence 2 ⇒ exactly one full-window cadence check
+    let mut cfg = cfg_for(vec![8, 4, 4], 4, 1);
+    cfg.replan_every = Some(2);
+    let mut t = Trainer::with_spec(tiny_spec(), cfg).unwrap();
+    let m = t.model.clone();
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
+    let mut resolve_calls = 0usize;
+    let (_, report) = t
+        .train_with_drift_replan(
+            || batcher.next_batch(),
+            |_| {},
+            wrong,
+            DriftConfig { window: 6, rel_threshold: 1.0 },
+            |_, factor| {
+                resolve_calls += 1;
+                assert!(factor > 2.0, "fitted rescale factor {factor} should be ≈8");
+                Some(vec![4, 4, 4, 4]) // adopt a valid new slicing
+            },
+        )
+        .unwrap();
+    assert!(report.resolves >= 1, "{report:?}");
+    assert_eq!(resolve_calls, report.resolves);
+    // the returned slicing was adopted
+    assert_eq!(t.config().slicing, vec![4, 4, 4, 4]);
+}
+
+fn tempdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("terapipe-{tag}-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     std::fs::create_dir_all(&d).unwrap();
     d
