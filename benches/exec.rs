@@ -5,25 +5,68 @@
 //!
 //! Measured:
 //!
+//! * kernel microbench: GFLOP/s of the blocked matmul vs the naive
+//!   reference loops on model-relevant shapes (gated: blocked must be
+//!   ≥1.5× ref in non-quick runs);
 //! * per-bucket cell latency: `stage_fwd` alone and `stage_fwd +
 //!   stage_bwd` (the `CostModel` unit) at empty and near-full context —
 //!   the real-execution analogue of Fig. 3's latency-vs-tokens curve;
+//! * steady-state allocation count of the cell-level `_into` hot path
+//!   (`stage_fwd_into` + `stage_bwd_into`), asserted **zero** once the
+//!   per-thread scratch arena is warm — pinned with a counting global
+//!   allocator;
 //! * one full pipelined training step through the threaded coordinator
 //!   vs *serial* execution of the same slices (the sum of every traced
 //!   per-slice fwd/bwd time across all stages) — how much of the
-//!   schedule's overlap survives on this machine.
+//!   schedule's overlap survives on this machine — plus the step's
+//!   allocation count as telemetry (the trait boundary allocates output
+//!   tensors by design; only the cell hot path is required to be
+//!   allocation-free).
 //!
-//! `--quick` runs a reduced model with few reps and no sanity gate — the
+//! `--quick` runs a reduced model with few reps and no perf gate — the
 //! CI bench-smoke job uses it to catch compile errors and
-//! order-of-magnitude blowups without full bench runtimes.
+//! order-of-magnitude blowups without full bench runtimes. The zero-alloc
+//! assertion runs in both modes.
 
-use terapipe::backend::{BackendSpec, NativeSpec, StageBackend};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use terapipe::backend::math::{matmul_into, matmul_ref};
+use terapipe::backend::native::init_stage;
+use terapipe::backend::{cell, BackendSpec, NativeSpec, StageBackend};
 use terapipe::coordinator::{TrainConfig, Trainer};
 use terapipe::data::{synthetic_corpus, Batcher};
 use terapipe::runtime::manifest::ModelDims;
 use terapipe::runtime::tensor::HostTensor;
 use terapipe::util::json::Json;
 use terapipe::util::{time_ms, Stats};
+
+/// Counting allocator: every alloc/realloc/alloc_zeroed bumps a global
+/// counter, so a code region's heap traffic is observable as a delta.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, s: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, s)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn bench_spec(quick: bool) -> NativeSpec {
     let (hidden, heads, layers, stages, seq_len, batch, gran) = if quick {
@@ -63,6 +106,47 @@ fn main() {
         m.batch,
         if quick { ", --quick" } else { "" }
     );
+
+    // ---- kernel microbench: blocked vs naive reference matmul ----
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(64, 32, 128), (1, 64, 512)]
+    } else {
+        &[(256, 128, 512), (512, 256, 128), (128, 512, 256), (1, 256, 4096)]
+    };
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    println!("\n## matmul GFLOP/s (blocked vs ref)");
+    println!("| m | k | n | blocked | ref | speedup |");
+    for &(mm, kk, nn) in shapes {
+        let a = vec![0.5f32; mm * kk];
+        let b = vec![0.25f32; kk * nn];
+        let mut out = vec![0f32; mm * nn];
+        let flops = 2.0 * (mm * kk * nn) as f64;
+        matmul_into(&a, &b, mm, kk, nn, &mut out); // warm pack buffers
+        let blocked_ms = (0..reps.max(3))
+            .map(|_| time_ms(|| matmul_into(&a, &b, mm, kk, nn, &mut out)).1)
+            .fold(f64::INFINITY, f64::min);
+        let ref_ms = (0..reps.max(3))
+            .map(|_| time_ms(|| std::hint::black_box(matmul_ref(&a, &b, mm, kk, nn))).1)
+            .fold(f64::INFINITY, f64::min);
+        let gf_blocked = flops / (blocked_ms * 1e6);
+        let gf_ref = flops / (ref_ms * 1e6);
+        let speedup = ref_ms / blocked_ms.max(1e-9);
+        println!("| {mm} | {kk} | {nn} | {gf_blocked:.2} | {gf_ref:.2} | {speedup:.2}x |");
+        kernel_rows.push(Json::obj(vec![
+            ("m", Json::Num(mm as f64)),
+            ("k", Json::Num(kk as f64)),
+            ("n", Json::Num(nn as f64)),
+            ("blocked_gflops", Json::Num(gf_blocked)),
+            ("ref_gflops", Json::Num(gf_ref)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+        if !quick {
+            assert!(
+                speedup >= 1.5,
+                "blocked matmul ({mm},{kk},{nn}) only {speedup:.2}x over ref (gate: 1.5x)"
+            );
+        }
+    }
 
     // ---- per-bucket cell latency (middle stage, like `measure`) ----
     let mut be = spec
@@ -107,6 +191,73 @@ fn main() {
     }
     drop(be);
 
+    // ---- allocation-free hot path: cell-level `_into` fwd+bwd ----
+    // The trait boundary (StageBackend) allocates its output HostTensors
+    // by design; the contract pinned here is that the *cell* hot path —
+    // everything inside stage_fwd_into/stage_bwd_into — performs zero
+    // heap allocations once the per-thread scratch arena is warm.
+    let steady_allocs;
+    {
+        let mut ps = init_stage(&m, 1 % m.num_stages);
+        let s = buckets[0];
+        let off = m.seq_len / 2;
+        let per_act = m.batch * s * m.hidden;
+        let per_ctx: usize = m.kv_shape().iter().product();
+        let per_new: usize = m.kv_new_shape(s).iter().product();
+        let h = vec![0.1f32; per_act];
+        let k_ctx = vec![0.1f32; per_ctx];
+        let v_ctx = vec![0.1f32; per_ctx];
+        let g_h = vec![0.1f32; per_act];
+        let g_know = vec![0.01f32; per_new];
+        let g_vnow = vec![0.01f32; per_new];
+        let mut h_out = vec![0f32; per_act];
+        let mut k_new = vec![0f32; per_new];
+        let mut v_new = vec![0f32; per_new];
+        let mut g_h_in = vec![0f32; per_act];
+        let mut g_kctx = vec![0f32; per_ctx];
+        let mut g_vctx = vec![0f32; per_ctx];
+        let mut iter = || {
+            cell::stage_fwd_into(
+                &m, s, off, &ps.params, &h, &k_ctx, &v_ctx, &mut h_out, &mut k_new, &mut v_new,
+            );
+            g_kctx.iter_mut().for_each(|x| *x = 0.0);
+            g_vctx.iter_mut().for_each(|x| *x = 0.0);
+            cell::stage_bwd_into(
+                &m,
+                s,
+                off,
+                &ps.params,
+                &h,
+                &k_ctx,
+                &v_ctx,
+                &g_h,
+                &g_know,
+                &g_vnow,
+                &mut ps.grads,
+                &mut g_h_in,
+                &mut g_kctx,
+                &mut g_vctx,
+            );
+        };
+        for _ in 0..3 {
+            iter(); // warm the scratch arena, cache pool, rayon pool
+        }
+        // min over a few iterations filters one-off lazy init elsewhere
+        let mut deltas = Vec::new();
+        for _ in 0..3 {
+            let before = ALLOCS.load(Ordering::SeqCst);
+            iter();
+            deltas.push(ALLOCS.load(Ordering::SeqCst) - before);
+        }
+        steady_allocs = *deltas.iter().min().unwrap();
+        println!("\n## steady-state hot-path allocations (fwd+bwd, warm arena)");
+        println!("allocations per iteration: {steady_allocs} (deltas {deltas:?})");
+        assert_eq!(
+            steady_allocs, 0,
+            "warm cell hot path must be allocation-free, saw {deltas:?}"
+        );
+    }
+
     // ---- pipelined step vs serial execution of the same slices ----
     let slice_len = spec.buckets()[0];
     let slicing = vec![slice_len; m.seq_len / slice_len];
@@ -123,13 +274,16 @@ fn main() {
     let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 4);
     let mut pipelined = Vec::new();
     let mut serial = Vec::new();
+    let mut step_allocs: u64 = u64::MAX;
     for step in 0..steps {
         let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
+        let allocs_before = ALLOCS.load(Ordering::SeqCst);
         let (res, wall_ms) = time_ms(|| t.step(step, &batches));
         res.expect("bench step");
         if step == 0 {
             continue; // warmup: cold caches, lazy thread spin-up
         }
+        step_allocs = step_allocs.min(ALLOCS.load(Ordering::SeqCst) - allocs_before);
         // serial baseline: the same slices' traced fwd+bwd times summed
         // across all stages — what a one-thread, no-overlap execution of
         // this step's compute would cost
@@ -144,6 +298,7 @@ fn main() {
     println!("serial (Σ traced slice fwd+bwd): {} ms (min {:.2})", ss.pm(), ss.min);
     println!("pipelined step wall:             {} ms (min {:.2})", ps.pm(), ps.min);
     println!("overlap speedup: {speedup:.2}x on {} worker threads", m.num_stages);
+    println!("allocations per pipelined step (min, telemetry): {step_allocs}");
 
     // ---- machine-readable report (workspace root) ----
     let report = Json::obj(vec![
@@ -161,7 +316,15 @@ fn main() {
                 ("batch", Json::Num(m.batch as f64)),
             ]),
         ),
+        ("kernels", Json::arr(kernel_rows)),
         ("per_bucket", Json::arr(bucket_rows)),
+        (
+            "alloc",
+            Json::obj(vec![
+                ("hot_path_steady_allocs", Json::Num(steady_allocs as f64)),
+                ("pipelined_step_allocs_min", Json::Num(step_allocs as f64)),
+            ]),
+        ),
         (
             "step",
             Json::obj(vec![

@@ -20,14 +20,26 @@
 //! The backward recomputes the forward (rematerialization, exactly like
 //! the `jax.vjp`-based executables) so callers only keep each slice's
 //! *input* activation and the grown KV buffers.
+//!
+//! **Hot-path memory discipline.** The `*_into` entry points
+//! ([`stage_fwd_into`] / [`stage_bwd_into`]) write into caller-provided
+//! buffers, and every internal temporary — activations, KV scatter
+//! buffers, rematerialization caches, gradient intermediates, attention
+//! score rows — comes from the per-thread arena in
+//! [`super::native::scratch`] and is returned before the call ends.
+//! All arena traffic happens on the calling thread (rayon workers receive
+//! pre-partitioned slabs), so a warmed-up fwd+bwd performs **zero heap
+//! allocations**; `benches/exec.rs` pins this with a counting allocator.
 
 use super::math::{
-    add_bias, add_into, colsum_into, gelu, gelu_grad, layernorm, layernorm_bwd, matmul, matmul_nt,
-    matmul_tn, LnStats, PAR_THRESHOLD,
+    add_into, colsum_into, gelu_into, gelu_grad_mul, layernorm_into, layernorm_bwd_into,
+    matmul_bias_into, matmul_nt_into, matmul_tn_acc, LnStats, PAR_THRESHOLD,
 };
+use super::native::scratch;
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
 use rayon::prelude::*;
+use std::cell::RefCell;
 
 /// Parameters per transformer layer, in canonical flat order (mirrors
 /// `LAYER_PARAM_NAMES` in model.py).
@@ -46,16 +58,26 @@ pub const LAYER_PARAM_NAMES: [&str; PARAMS_PER_LAYER] = [
 /// Causal attention for one slice: query position `t` (global `off + t`)
 /// attends to buffer positions `0..=off+t`. `q` is `[B,S,H]`, `k_buf` /
 /// `v_buf` are `[B,T,H]` with this slice's K/V already scattered at
-/// `off`. Returns `[B,S,H]`.
-fn attention_fwd(d: &ModelDims, s: usize, off: usize, q: &[f32], k_buf: &[f32], v_buf: &[f32]) -> Vec<f32> {
+/// `off`. Accumulates into `out` (`[B,S,H]`, caller-zeroed).
+fn attention_fwd_into(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    q: &[f32],
+    k_buf: &[f32],
+    v_buf: &[f32],
+    out: &mut [f32],
+) {
     let (b_n, t_len, h, nh, hd) = (d.batch, d.seq_len, d.hidden, d.num_heads, d.head_dim());
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut out = vec![0f32; b_n * s * h];
-    let per_b = |b: usize, out_b: &mut [f32]| {
+    let row = off + s;
+    // per-batch score rows come from one caller-grabbed slab so rayon
+    // workers never touch the arena
+    let mut scores_all = scratch::grab(b_n * row);
+    let per_b = |b: usize, out_b: &mut [f32], scores: &mut [f32]| {
         let q_b = &q[b * s * h..(b + 1) * s * h];
         let k_b = &k_buf[b * t_len * h..(b + 1) * t_len * h];
         let v_b = &v_buf[b * t_len * h..(b + 1) * t_len * h];
-        let mut scores = vec![0f32; off + s];
         for head in 0..nh {
             let hoff = head * hd;
             for t in 0..s {
@@ -90,20 +112,25 @@ fn attention_fwd(d: &ModelDims, s: usize, off: usize, q: &[f32], k_buf: &[f32], 
             }
         }
     };
-    let work = b_n * nh * s * (off + s) * hd;
+    let work = b_n * nh * s * row * hd;
     if work >= PAR_THRESHOLD && b_n > 1 {
-        out.par_chunks_mut(s * h).enumerate().for_each(|(b, o)| per_b(b, o));
+        out.par_chunks_mut(s * h)
+            .zip(scores_all.par_chunks_mut(row))
+            .enumerate()
+            .for_each(|(b, (o, sc))| per_b(b, o, sc));
     } else {
-        for (b, o) in out.chunks_mut(s * h).enumerate() {
-            per_b(b, o);
+        for (b, (o, sc)) in out.chunks_mut(s * h).zip(scores_all.chunks_mut(row)).enumerate() {
+            per_b(b, o, sc);
         }
     }
-    out
+    scratch::give(scores_all);
 }
 
-/// VJP of [`attention_fwd`]: recomputes the softmax weights and returns
-/// `(g_q [B,S,H], g_kbuf [B,T,H], g_vbuf [B,T,H])`.
-fn attention_bwd(
+/// VJP of [`attention_fwd_into`]: recomputes the softmax weights and
+/// accumulates into `g_q` (`[B,S,H]`), `g_k` / `g_v` (`[B,T,H]`), all
+/// caller-zeroed.
+#[allow(clippy::too_many_arguments)]
+fn attention_bwd_into(
     d: &ModelDims,
     s: usize,
     off: usize,
@@ -111,19 +138,20 @@ fn attention_bwd(
     k_buf: &[f32],
     v_buf: &[f32],
     g_out: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    g_q: &mut [f32],
+    g_k: &mut [f32],
+    g_v: &mut [f32],
+) {
     let (b_n, t_len, h, nh, hd) = (d.batch, d.seq_len, d.hidden, d.num_heads, d.head_dim());
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut g_q = vec![0f32; b_n * s * h];
-    let mut g_k = vec![0f32; b_n * t_len * h];
-    let mut g_v = vec![0f32; b_n * t_len * h];
-    let per_b = |b: usize, gq_b: &mut [f32], gk_b: &mut [f32], gv_b: &mut [f32]| {
+    let row = off + s;
+    let mut wg_all = scratch::grab(b_n * 2 * row);
+    let per_b = |b: usize, gq_b: &mut [f32], gk_b: &mut [f32], gv_b: &mut [f32], wg: &mut [f32]| {
         let q_b = &q[b * s * h..(b + 1) * s * h];
         let k_b = &k_buf[b * t_len * h..(b + 1) * t_len * h];
         let v_b = &v_buf[b * t_len * h..(b + 1) * t_len * h];
         let go_b = &g_out[b * s * h..(b + 1) * s * h];
-        let mut w = vec![0f32; off + s];
-        let mut gw = vec![0f32; off + s];
+        let (w, gw) = wg.split_at_mut(row);
         for head in 0..nh {
             let hoff = head * hd;
             for t in 0..s {
@@ -184,23 +212,27 @@ fn attention_bwd(
             }
         }
     };
-    let work = b_n * nh * s * (off + s) * hd;
+    let work = b_n * nh * s * row * hd;
     if work >= PAR_THRESHOLD && b_n > 1 {
         g_q.par_chunks_mut(s * h)
-            .zip(g_k.par_chunks_mut(t_len * h).zip(g_v.par_chunks_mut(t_len * h)))
+            .zip(
+                g_k.par_chunks_mut(t_len * h)
+                    .zip(g_v.par_chunks_mut(t_len * h).zip(wg_all.par_chunks_mut(2 * row))),
+            )
             .enumerate()
-            .for_each(|(b, (gq, (gk, gv)))| per_b(b, gq, gk, gv));
+            .for_each(|(b, (gq, (gk, (gv, wg))))| per_b(b, gq, gk, gv, wg));
     } else {
-        for (b, ((gq, gk), gv)) in g_q
+        for (b, (((gq, gk), gv), wg)) in g_q
             .chunks_mut(s * h)
             .zip(g_k.chunks_mut(t_len * h))
             .zip(g_v.chunks_mut(t_len * h))
+            .zip(wg_all.chunks_mut(2 * row))
             .enumerate()
         {
-            per_b(b, gq, gk, gv);
+            per_b(b, gq, gk, gv, wg);
         }
     }
-    (g_q, g_k, g_v)
+    scratch::give(wg_all);
 }
 
 // ---------------------------------------------------------------------------
@@ -208,6 +240,7 @@ fn attention_bwd(
 // ---------------------------------------------------------------------------
 
 /// Forward intermediates one layer's backward needs (rematerialized).
+/// Every buffer is arena-owned; [`LayerCache::release`] returns them.
 struct LayerCache {
     h_in: Vec<f32>,
     ln1: LnStats,
@@ -223,18 +256,67 @@ struct LayerCache {
     gm: Vec<f32>,
 }
 
+impl LayerCache {
+    fn release(self) {
+        for v in [
+            self.h_in,
+            self.x1,
+            self.q,
+            self.k_buf,
+            self.v_buf,
+            self.att,
+            self.h2,
+            self.x2,
+            self.mpre,
+            self.gm,
+            self.ln1.mean,
+            self.ln1.rstd,
+            self.ln2.mean,
+            self.ln2.rstd,
+        ] {
+            scratch::give(v);
+        }
+    }
+}
+
+// Reusable `Vec<LayerCache>` spines (capacity NL) so `stage_bwd_into`
+// doesn't heap-allocate the cache list each call.
+thread_local! {
+    static CACHE_POOL: RefCell<Vec<Vec<LayerCache>>> = const { RefCell::new(Vec::new()) };
+}
+
+fn take_caches() -> Vec<LayerCache> {
+    CACHE_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+}
+
+fn put_caches(v: Vec<LayerCache>) {
+    debug_assert!(v.is_empty());
+    CACHE_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < 4 {
+            p.push(v);
+        }
+    });
+}
+
 /// Split `[rows, 3H]` into three `[rows, H]` buffers (jnp.split order).
-fn split_qkv(qkv: &[f32], rows: usize, h: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let mut q = vec![0f32; rows * h];
-    let mut k = vec![0f32; rows * h];
-    let mut v = vec![0f32; rows * h];
+fn split_qkv_into(qkv: &[f32], rows: usize, h: usize, q: &mut [f32], k: &mut [f32], v: &mut [f32]) {
     for r in 0..rows {
         let src = &qkv[r * 3 * h..(r + 1) * 3 * h];
         q[r * h..(r + 1) * h].copy_from_slice(&src[..h]);
         k[r * h..(r + 1) * h].copy_from_slice(&src[h..2 * h]);
         v[r * h..(r + 1) * h].copy_from_slice(&src[2 * h..]);
     }
-    (q, k, v)
+}
+
+/// Inverse interleave of [`split_qkv_into`] for the gradient.
+fn merge_qkv(g_q: &[f32], g_k: &[f32], g_v: &[f32], rows: usize, h: usize, g_qkv: &mut [f32]) {
+    for r in 0..rows {
+        let dst = &mut g_qkv[r * 3 * h..(r + 1) * 3 * h];
+        dst[..h].copy_from_slice(&g_q[r * h..(r + 1) * h]);
+        dst[h..2 * h].copy_from_slice(&g_k[r * h..(r + 1) * h]);
+        dst[2 * h..].copy_from_slice(&g_v[r * h..(r + 1) * h]);
+    }
 }
 
 /// Scatter a `[B,S,H]` slice tensor into a `[B,T,H]` buffer at `off`.
@@ -250,9 +332,8 @@ fn scatter_slice(d: &ModelDims, s: usize, off: usize, src: &[f32], buf: &mut [f3
 }
 
 /// Gather the `[off, off+s)` window of a `[B,T,H]` buffer into `[B,S,H]`.
-fn gather_slice(d: &ModelDims, s: usize, off: usize, buf: &[f32]) -> Vec<f32> {
+fn gather_slice_into(d: &ModelDims, s: usize, off: usize, buf: &[f32], out: &mut [f32]) {
     let (h, t_len) = (d.hidden, d.seq_len);
-    let mut out = vec![0f32; d.batch * s * h];
     for b in 0..d.batch {
         for t in 0..s {
             let src = (b * t_len + off + t) * h;
@@ -260,7 +341,6 @@ fn gather_slice(d: &ModelDims, s: usize, off: usize, buf: &[f32]) -> Vec<f32> {
             out[dst..dst + h].copy_from_slice(&buf[src..src + h]);
         }
     }
-    out
 }
 
 /// Zero the `[off, off+s)` window of a `[B,T,H]` buffer (VJP of the
@@ -277,7 +357,9 @@ fn zero_slice_window(d: &ModelDims, s: usize, off: usize, buf: &mut [f32]) {
 
 /// One transformer layer forward. `lp` is the layer's 12 parameters in
 /// canonical order; `k_ctx_l`/`v_ctx_l` are the layer's `[B,T,H]` context
-/// buffers. Returns `(h_out, k_slice, v_slice, cache?)`.
+/// buffers. Writes `h_out [B,S,H]` and this slice's `k_s`/`v_s`
+/// (`[B,S,H]`, typically windows of the stage's `k_new`/`v_new`); `h_out`
+/// must not alias `h`.
 #[allow(clippy::too_many_arguments)]
 fn layer_forward(
     d: &ModelDims,
@@ -288,7 +370,10 @@ fn layer_forward(
     k_ctx_l: &[f32],
     v_ctx_l: &[f32],
     want_cache: bool,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>, Option<LayerCache>) {
+    h_out: &mut [f32],
+    k_s: &mut [f32],
+    v_s: &mut [f32],
+) -> Option<LayerCache> {
     let hd = d.hidden;
     let rows = d.batch * s;
     let f = 4 * hd;
@@ -299,52 +384,68 @@ fn layer_forward(
     let (w_fc1, b_fc1) = (lp[8].as_f32(), lp[9].as_f32());
     let (w_fc2, b_fc2) = (lp[10].as_f32(), lp[11].as_f32());
 
-    let (x1, ln1) = layernorm(h, ln1_g, ln1_b, hd);
-    let mut qkv = matmul(&x1, w_qkv, rows, hd, 3 * hd);
-    add_bias(&mut qkv, b_qkv);
-    let (q, k_slice, v_slice) = split_qkv(&qkv, rows, hd);
+    let mut x1 = scratch::grab(rows * hd);
+    let mut m1 = scratch::grab(rows);
+    let mut r1 = scratch::grab(rows);
+    layernorm_into(h, ln1_g, ln1_b, hd, &mut x1, &mut m1, &mut r1);
+    let mut qkv = scratch::grab(rows * 3 * hd);
+    matmul_bias_into(&x1, w_qkv, b_qkv, rows, hd, 3 * hd, &mut qkv);
+    let mut q = scratch::grab(rows * hd);
+    split_qkv_into(&qkv, rows, hd, &mut q, k_s, v_s);
+    scratch::give(qkv);
 
-    let mut k_buf = k_ctx_l.to_vec();
-    let mut v_buf = v_ctx_l.to_vec();
-    scatter_slice(d, s, off, &k_slice, &mut k_buf);
-    scatter_slice(d, s, off, &v_slice, &mut v_buf);
+    let mut k_buf = scratch::grab_copy(k_ctx_l);
+    let mut v_buf = scratch::grab_copy(v_ctx_l);
+    scatter_slice(d, s, off, k_s, &mut k_buf);
+    scatter_slice(d, s, off, v_s, &mut v_buf);
 
-    let att = attention_fwd(d, s, off, &q, &k_buf, &v_buf);
-    let mut h2 = matmul(&att, w_proj, rows, hd, hd);
-    add_bias(&mut h2, b_proj);
+    let mut att = scratch::grab(rows * hd); // zeroed: attention accumulates
+    attention_fwd_into(d, s, off, &q, &k_buf, &v_buf, &mut att);
+    let mut h2 = scratch::grab(rows * hd);
+    matmul_bias_into(&att, w_proj, b_proj, rows, hd, hd, &mut h2);
     add_into(&mut h2, h);
 
-    let (x2, ln2) = layernorm(&h2, ln2_g, ln2_b, hd);
-    let mut mpre = matmul(&x2, w_fc1, rows, hd, f);
-    add_bias(&mut mpre, b_fc1);
-    let gm = gelu(&mpre);
-    let mut h3 = matmul(&gm, w_fc2, rows, f, hd);
-    add_bias(&mut h3, b_fc2);
-    add_into(&mut h3, &h2);
+    let mut x2 = scratch::grab(rows * hd);
+    let mut m2 = scratch::grab(rows);
+    let mut r2 = scratch::grab(rows);
+    layernorm_into(&h2, ln2_g, ln2_b, hd, &mut x2, &mut m2, &mut r2);
+    let mut mpre = scratch::grab(rows * f);
+    matmul_bias_into(&x2, w_fc1, b_fc1, rows, hd, f, &mut mpre);
+    let mut gm = scratch::grab(rows * f);
+    gelu_into(&mpre, &mut gm);
+    matmul_bias_into(&gm, w_fc2, b_fc2, rows, f, hd, h_out);
+    add_into(h_out, &h2);
 
-    let cache = want_cache.then(|| LayerCache {
-        h_in: h.to_vec(),
-        ln1,
-        x1,
-        q,
-        k_buf,
-        v_buf,
-        att,
-        h2,
-        ln2,
-        x2,
-        mpre,
-        gm,
-    });
-    (h3, k_slice, v_slice, cache)
+    if want_cache {
+        Some(LayerCache {
+            h_in: scratch::grab_copy(h),
+            ln1: LnStats { mean: m1, rstd: r1 },
+            x1,
+            q,
+            k_buf,
+            v_buf,
+            att,
+            h2,
+            ln2: LnStats { mean: m2, rstd: r2 },
+            x2,
+            mpre,
+            gm,
+        })
+    } else {
+        for v in [x1, m1, r1, q, k_buf, v_buf, att, h2, x2, m2, r2, mpre, gm] {
+            scratch::give(v);
+        }
+        None
+    }
 }
 
 /// One layer's VJP. `g_h3` is the upstream hidden-state grad; `g_k_ext` /
 /// `g_v_ext` (`[B,S,H]`) are the accumulated grads w.r.t. this slice's
 /// own K/V contributed by later slices. Parameter grads accumulate into
-/// `grads` (12 tensors, canonical order). Returns
-/// `(g_h_in, g_kctx_l, g_vctx_l)` — the latter two `[B,T,H]` with the
-/// slice's own window zeroed (those grads flowed into `g_qkv` instead).
+/// `grads` (12 tensors, canonical order). Writes `g_h_in [B,S,H]` and the
+/// layer's `[B,T,H]` context grads into `g_kctx_l`/`g_vctx_l`
+/// (caller-zeroed; the slice's own window ends up zeroed — those grads
+/// flowed into `g_qkv` instead).
 #[allow(clippy::too_many_arguments)]
 fn layer_backward(
     d: &ModelDims,
@@ -356,7 +457,10 @@ fn layer_backward(
     g_k_ext: &[f32],
     g_v_ext: &[f32],
     grads: &mut [HostTensor],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    g_h_in: &mut [f32],
+    g_kctx_l: &mut [f32],
+    g_vctx_l: &mut [f32],
+) {
     let hd = d.hidden;
     let rows = d.batch * s;
     let f = 4 * hd;
@@ -370,67 +474,178 @@ fn layer_backward(
     );
 
     // --- MLP: h3 = h2 + gelu(x2 @ w_fc1 + b_fc1) @ w_fc2 + b_fc2 ---
-    let g_gm = matmul_nt(g_h3, w_fc2, rows, hd, f);
-    add_into(grads[10].as_f32_mut(), &matmul_tn(&cache.gm, g_h3, rows, f, hd));
+    let mut g_gm = scratch::grab(rows * f);
+    matmul_nt_into(g_h3, w_fc2, rows, hd, f, &mut g_gm);
+    matmul_tn_acc(&cache.gm, g_h3, rows, f, hd, grads[10].as_f32_mut());
     colsum_into(g_h3, hd, grads[11].as_f32_mut());
-    let gp = gelu_grad(&cache.mpre);
-    let g_mpre: Vec<f32> = g_gm.iter().zip(&gp).map(|(&a, &b)| a * b).collect();
-    let g_x2 = matmul_nt(&g_mpre, w_fc1, rows, f, hd);
-    add_into(grads[8].as_f32_mut(), &matmul_tn(&cache.x2, &g_mpre, rows, hd, f));
-    colsum_into(&g_mpre, f, grads[9].as_f32_mut());
-    let (gg, gb) = {
+    gelu_grad_mul(&cache.mpre, &mut g_gm); // g_gm is g_mpre from here on
+    let mut g_x2 = scratch::grab(rows * hd);
+    matmul_nt_into(&g_gm, w_fc1, rows, f, hd, &mut g_x2);
+    matmul_tn_acc(&cache.x2, &g_gm, rows, hd, f, grads[8].as_f32_mut());
+    colsum_into(&g_gm, f, grads[9].as_f32_mut());
+    scratch::give(g_gm);
+    let mut g_h2 = scratch::grab(rows * hd);
+    {
         let (a, b) = grads.split_at_mut(7);
-        (a[6].as_f32_mut(), b[0].as_f32_mut())
-    };
-    let mut g_h2 = layernorm_bwd(&cache.h2, &cache.ln2, ln2_g, &g_x2, hd, gg, gb);
+        layernorm_bwd_into(
+            &cache.h2,
+            &cache.ln2,
+            ln2_g,
+            &g_x2,
+            hd,
+            a[6].as_f32_mut(),
+            b[0].as_f32_mut(),
+            &mut g_h2,
+        );
+    }
+    scratch::give(g_x2);
     add_into(&mut g_h2, g_h3); // residual
 
     // --- attention block: h2 = h + att @ w_proj + b_proj ---
-    let g_att = matmul_nt(&g_h2, w_proj, rows, hd, hd);
-    add_into(grads[4].as_f32_mut(), &matmul_tn(&cache.att, &g_h2, rows, hd, hd));
+    let mut g_att = scratch::grab(rows * hd);
+    matmul_nt_into(&g_h2, w_proj, rows, hd, hd, &mut g_att);
+    matmul_tn_acc(&cache.att, &g_h2, rows, hd, hd, grads[4].as_f32_mut());
     colsum_into(&g_h2, hd, grads[5].as_f32_mut());
-    let (g_q, mut g_kbuf, mut g_vbuf) =
-        attention_bwd(d, s, off, &cache.q, &cache.k_buf, &cache.v_buf, &g_att);
+    let mut g_q = scratch::grab(rows * hd); // zeroed: attention accumulates
+    attention_bwd_into(
+        d,
+        s,
+        off,
+        &cache.q,
+        &cache.k_buf,
+        &cache.v_buf,
+        &g_att,
+        &mut g_q,
+        g_kctx_l,
+        g_vctx_l,
+    );
+    scratch::give(g_att);
 
     // VJP of the scatter: the slice window of the buffer grad flows into
     // this slice's K/V (plus the externally accumulated later-slice
     // grads); the rest is the context grad returned to the coordinator.
-    let mut g_k_slice = gather_slice(d, s, off, &g_kbuf);
-    let mut g_v_slice = gather_slice(d, s, off, &g_vbuf);
+    let mut g_k_slice = scratch::grab(rows * hd);
+    let mut g_v_slice = scratch::grab(rows * hd);
+    gather_slice_into(d, s, off, g_kctx_l, &mut g_k_slice);
+    gather_slice_into(d, s, off, g_vctx_l, &mut g_v_slice);
     add_into(&mut g_k_slice, g_k_ext);
     add_into(&mut g_v_slice, g_v_ext);
-    zero_slice_window(d, s, off, &mut g_kbuf);
-    zero_slice_window(d, s, off, &mut g_vbuf);
+    zero_slice_window(d, s, off, g_kctx_l);
+    zero_slice_window(d, s, off, g_vctx_l);
 
     // --- QKV projection: qkv = x1 @ w_qkv + b_qkv ---
-    let mut g_qkv = vec![0f32; rows * 3 * hd];
-    for r in 0..rows {
-        let dst = &mut g_qkv[r * 3 * hd..(r + 1) * 3 * hd];
-        dst[..hd].copy_from_slice(&g_q[r * hd..(r + 1) * hd]);
-        dst[hd..2 * hd].copy_from_slice(&g_k_slice[r * hd..(r + 1) * hd]);
-        dst[2 * hd..].copy_from_slice(&g_v_slice[r * hd..(r + 1) * hd]);
+    let mut g_qkv = scratch::grab(rows * 3 * hd);
+    merge_qkv(&g_q, &g_k_slice, &g_v_slice, rows, hd, &mut g_qkv);
+    for v in [g_q, g_k_slice, g_v_slice] {
+        scratch::give(v);
     }
-    let g_x1 = matmul_nt(&g_qkv, w_qkv, rows, 3 * hd, hd);
-    add_into(grads[2].as_f32_mut(), &matmul_tn(&cache.x1, &g_qkv, rows, hd, 3 * hd));
+    let mut g_x1 = scratch::grab(rows * hd);
+    matmul_nt_into(&g_qkv, w_qkv, rows, 3 * hd, hd, &mut g_x1);
+    matmul_tn_acc(&cache.x1, &g_qkv, rows, hd, 3 * hd, grads[2].as_f32_mut());
     colsum_into(&g_qkv, 3 * hd, grads[3].as_f32_mut());
-    let (gg, gb) = {
+    scratch::give(g_qkv);
+    {
         let (a, b) = grads.split_at_mut(1);
-        (a[0].as_f32_mut(), b[0].as_f32_mut())
-    };
-    let mut g_h = layernorm_bwd(&cache.h_in, &cache.ln1, ln1_g, &g_x1, hd, gg, gb);
-    add_into(&mut g_h, &g_h2); // residual
-
-    (g_h, g_kbuf, g_vbuf)
+        layernorm_bwd_into(
+            &cache.h_in,
+            &cache.ln1,
+            ln1_g,
+            &g_x1,
+            hd,
+            a[0].as_f32_mut(),
+            b[0].as_f32_mut(),
+            g_h_in,
+        );
+    }
+    scratch::give(g_x1);
+    add_into(g_h_in, &g_h2); // residual
+    scratch::give(g_h2);
 }
 
 // ---------------------------------------------------------------------------
 // Stage, embedding and head cells
 // ---------------------------------------------------------------------------
 
-/// One pipeline cell forward over one token slice (model.py `stage_fwd`).
+/// Shared forward walk: runs the stage's layers, writing the final hidden
+/// state into `h_out` and each layer's slice K/V into `k_new`/`v_new`
+/// windows. Returns the rematerialization caches when `want_cache`.
+#[allow(clippy::too_many_arguments)]
+fn stage_fwd_walk(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    params: &[HostTensor],
+    h: &[f32],
+    k_ctx: &[f32],
+    v_ctx: &[f32],
+    want_cache: bool,
+    h_out: &mut [f32],
+    k_new: &mut [f32],
+    v_new: &mut [f32],
+) -> Vec<LayerCache> {
+    let nl = d.layers_per_stage;
+    assert_eq!(params.len(), nl * PARAMS_PER_LAYER, "stage param arity");
+    let per_ctx = d.batch * d.seq_len * d.hidden;
+    let per_new = d.batch * s * d.hidden;
+    assert_eq!(h_out.len(), per_new);
+    assert_eq!(k_new.len(), nl * per_new);
+    assert_eq!(v_new.len(), nl * per_new);
+    let mut caches = take_caches();
+    let mut cur = scratch::grab_copy(h);
+    let mut nxt = scratch::grab(per_new);
+    for l in 0..nl {
+        let lp = &params[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER];
+        let target: &mut [f32] = if l == nl - 1 { h_out } else { &mut nxt };
+        let cache = layer_forward(
+            d,
+            s,
+            off,
+            lp,
+            &cur,
+            &k_ctx[l * per_ctx..(l + 1) * per_ctx],
+            &v_ctx[l * per_ctx..(l + 1) * per_ctx],
+            want_cache,
+            target,
+            &mut k_new[l * per_new..(l + 1) * per_new],
+            &mut v_new[l * per_new..(l + 1) * per_new],
+        );
+        if let Some(c) = cache {
+            caches.push(c);
+        }
+        if l < nl - 1 {
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+    }
+    scratch::give(cur);
+    scratch::give(nxt);
+    caches
+}
+
+/// One pipeline cell forward over one token slice (model.py `stage_fwd`)
+/// into caller-provided buffers — the allocation-free hot path.
 ///
 /// `params`: `NL · 12` tensors; `h`: `[B,S,H]`; `k_ctx`/`v_ctx`:
-/// `[NL,B,T,H]`. Returns `(h_out [B,S,H], k_new [NL,B,S,H], v_new)`.
+/// `[NL,B,T,H]`. Writes `h_out [B,S,H]` and `k_new`/`v_new [NL,B,S,H]`
+/// (all fully overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn stage_fwd_into(
+    d: &ModelDims,
+    s: usize,
+    off: usize,
+    params: &[HostTensor],
+    h: &[f32],
+    k_ctx: &[f32],
+    v_ctx: &[f32],
+    h_out: &mut [f32],
+    k_new: &mut [f32],
+    v_new: &mut [f32],
+) {
+    let caches = stage_fwd_walk(d, s, off, params, h, k_ctx, v_ctx, false, h_out, k_new, v_new);
+    put_caches(caches);
+}
+
+/// Allocating wrapper around [`stage_fwd_into`]: returns
+/// `(h_out [B,S,H], k_new [NL,B,S,H], v_new)`.
 pub fn stage_fwd(
     d: &ModelDims,
     s: usize,
@@ -440,53 +655,80 @@ pub fn stage_fwd(
     k_ctx: &[f32],
     v_ctx: &[f32],
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (out, k_new, v_new, _) = stage_fwd_cached(d, s, off, params, h, k_ctx, v_ctx, false);
-    (out, k_new, v_new)
+    let nl = d.layers_per_stage;
+    let per_new = d.batch * s * d.hidden;
+    let mut h_out = vec![0f32; per_new];
+    let mut k_new = vec![0f32; nl * per_new];
+    let mut v_new = vec![0f32; nl * per_new];
+    stage_fwd_into(d, s, off, params, h, k_ctx, v_ctx, &mut h_out, &mut k_new, &mut v_new);
+    (h_out, k_new, v_new)
 }
 
+/// VJP of [`stage_fwd_into`] (recompute-based) into caller-provided
+/// buffers. Parameter grads accumulate into `grads` (`NL · 12`, canonical
+/// order); writes `g_h_in [B,S,H]` (overwritten) and `g_kctx`/`g_vctx`
+/// (`[NL,B,T,H]`, **must be zeroed by the caller**).
 #[allow(clippy::too_many_arguments)]
-fn stage_fwd_cached(
+pub fn stage_bwd_into(
     d: &ModelDims,
     s: usize,
     off: usize,
     params: &[HostTensor],
-    h: &[f32],
+    h_in: &[f32],
     k_ctx: &[f32],
     v_ctx: &[f32],
-    want_cache: bool,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<LayerCache>) {
+    g_hout: &[f32],
+    g_know: &[f32],
+    g_vnow: &[f32],
+    grads: &mut [HostTensor],
+    g_h_in: &mut [f32],
+    g_kctx: &mut [f32],
+    g_vctx: &mut [f32],
+) {
     let nl = d.layers_per_stage;
-    assert_eq!(params.len(), nl * PARAMS_PER_LAYER, "stage param arity");
     let per_ctx = d.batch * d.seq_len * d.hidden;
     let per_new = d.batch * s * d.hidden;
-    let mut k_new = vec![0f32; nl * per_new];
-    let mut v_new = vec![0f32; nl * per_new];
-    let mut caches = Vec::with_capacity(if want_cache { nl } else { 0 });
-    let mut cur = h.to_vec();
-    for l in 0..nl {
+    // rematerialize the forward; the recomputed outputs are scratch
+    let mut h_tmp = scratch::grab(per_new);
+    let mut k_tmp = scratch::grab(nl * per_new);
+    let mut v_tmp = scratch::grab(nl * per_new);
+    let mut caches =
+        stage_fwd_walk(d, s, off, params, h_in, k_ctx, v_ctx, true, &mut h_tmp, &mut k_tmp, &mut v_tmp);
+    for v in [h_tmp, k_tmp, v_tmp] {
+        scratch::give(v);
+    }
+    let mut g = scratch::grab_copy(g_hout);
+    let mut g_next = scratch::grab(per_new);
+    for l in (0..nl).rev() {
         let lp = &params[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER];
-        let (next, k_s, v_s, cache) = layer_forward(
+        let target: &mut [f32] = if l == 0 { g_h_in } else { &mut g_next };
+        layer_backward(
             d,
             s,
             off,
             lp,
-            &cur,
-            &k_ctx[l * per_ctx..(l + 1) * per_ctx],
-            &v_ctx[l * per_ctx..(l + 1) * per_ctx],
-            want_cache,
+            &caches[l],
+            &g,
+            &g_know[l * per_new..(l + 1) * per_new],
+            &g_vnow[l * per_new..(l + 1) * per_new],
+            &mut grads[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER],
+            target,
+            &mut g_kctx[l * per_ctx..(l + 1) * per_ctx],
+            &mut g_vctx[l * per_ctx..(l + 1) * per_ctx],
         );
-        k_new[l * per_new..(l + 1) * per_new].copy_from_slice(&k_s);
-        v_new[l * per_new..(l + 1) * per_new].copy_from_slice(&v_s);
-        if let Some(c) = cache {
-            caches.push(c);
+        if l > 0 {
+            std::mem::swap(&mut g, &mut g_next);
         }
-        cur = next;
     }
-    (cur, k_new, v_new, caches)
+    scratch::give(g);
+    scratch::give(g_next);
+    for c in caches.drain(..) {
+        c.release();
+    }
+    put_caches(caches);
 }
 
-/// VJP of [`stage_fwd`] (recompute-based). Parameter grads accumulate
-/// into `grads` (`NL · 12`, canonical order); returns
+/// Allocating wrapper around [`stage_bwd_into`]: returns
 /// `(g_h_in [B,S,H], g_kctx [NL,B,T,H], g_vctx [NL,B,T,H])`.
 #[allow(clippy::too_many_arguments)]
 pub fn stage_bwd(
@@ -505,28 +747,14 @@ pub fn stage_bwd(
     let nl = d.layers_per_stage;
     let per_ctx = d.batch * d.seq_len * d.hidden;
     let per_new = d.batch * s * d.hidden;
-    let (_, _, _, caches) = stage_fwd_cached(d, s, off, params, h_in, k_ctx, v_ctx, true);
-    let mut g = g_hout.to_vec();
+    let mut g_h_in = vec![0f32; per_new];
     let mut g_kctx = vec![0f32; nl * per_ctx];
     let mut g_vctx = vec![0f32; nl * per_ctx];
-    for l in (0..nl).rev() {
-        let lp = &params[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER];
-        let (g_new, g_kl, g_vl) = layer_backward(
-            d,
-            s,
-            off,
-            lp,
-            &caches[l],
-            &g,
-            &g_know[l * per_new..(l + 1) * per_new],
-            &g_vnow[l * per_new..(l + 1) * per_new],
-            &mut grads[l * PARAMS_PER_LAYER..(l + 1) * PARAMS_PER_LAYER],
-        );
-        g = g_new;
-        g_kctx[l * per_ctx..(l + 1) * per_ctx].copy_from_slice(&g_kl);
-        g_vctx[l * per_ctx..(l + 1) * per_ctx].copy_from_slice(&g_vl);
-    }
-    (g, g_kctx, g_vctx)
+    stage_bwd_into(
+        d, s, off, params, h_in, k_ctx, v_ctx, g_hout, g_know, g_vnow, grads, &mut g_h_in,
+        &mut g_kctx, &mut g_vctx,
+    );
+    (g_h_in, g_kctx, g_vctx)
 }
 
 /// Token + position embedding for one slice (model.py `embed_fwd`).
@@ -587,20 +815,38 @@ pub fn embed_bwd(
 
 /// Final LN + LM head + summed token cross-entropy (model.py `head_fwd`).
 /// `params`: `[lnf_g, lnf_b, w_out [H,V], b_out [V]]`. Returns the loss
-/// summed over the slice's `B·S` tokens.
+/// summed over the slice's `B·S` tokens (rows reduced in ascending order,
+/// so the total is thread-count independent).
 pub fn head_fwd(d: &ModelDims, s: usize, params: &[HostTensor], h: &[f32], targets: &[i32]) -> f32 {
     let (hd, v) = (d.hidden, d.vocab);
     let rows = d.batch * s;
-    let (x, _) = layernorm(h, params[0].as_f32(), params[1].as_f32(), hd);
-    let mut logits = matmul(&x, params[2].as_f32(), rows, hd, v);
-    add_bias(&mut logits, params[3].as_f32());
-    let mut loss = 0f32;
-    for r in 0..rows {
-        let row = &logits[r * v..(r + 1) * v];
+    let mut x = scratch::grab(rows * hd);
+    let mut mean = scratch::grab(rows);
+    let mut rstd = scratch::grab(rows);
+    layernorm_into(h, params[0].as_f32(), params[1].as_f32(), hd, &mut x, &mut mean, &mut rstd);
+    let mut logits = scratch::grab(rows * v);
+    matmul_bias_into(&x, params[2].as_f32(), params[3].as_f32(), rows, hd, v, &mut logits);
+    let mut row_loss = scratch::grab(rows);
+    let per_row = |r: usize, row: &[f32]| -> f32 {
         let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let z: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
         let gold = row[targets[r] as usize] - mx;
-        loss += z.ln() - gold;
+        z.ln() - gold
+    };
+    if rows * v >= PAR_THRESHOLD {
+        row_loss
+            .par_iter_mut()
+            .zip(logits.par_chunks(v))
+            .enumerate()
+            .for_each(|(r, (o, row))| *o = per_row(r, row));
+    } else {
+        for (r, (o, row)) in row_loss.iter_mut().zip(logits.chunks(v)).enumerate() {
+            *o = per_row(r, row);
+        }
+    }
+    let loss = row_loss.iter().sum::<f32>();
+    for b in [x, mean, rstd, logits, row_loss] {
+        scratch::give(b);
     }
     loss
 }
@@ -619,13 +865,14 @@ pub fn head_bwd(
     let rows = d.batch * s;
     let lnf_g = params[0].as_f32();
     let w_out = params[2].as_f32();
-    let (x, stats) = layernorm(h, lnf_g, params[1].as_f32(), hd);
-    let mut logits = matmul(&x, w_out, rows, hd, v);
-    add_bias(&mut logits, params[3].as_f32());
-    // g_logits = softmax(logits) - onehot(target)
-    let mut g_logits = logits;
-    for r in 0..rows {
-        let row = &mut g_logits[r * v..(r + 1) * v];
+    let mut x = scratch::grab(rows * hd);
+    let mut mean = scratch::grab(rows);
+    let mut rstd = scratch::grab(rows);
+    layernorm_into(h, lnf_g, params[1].as_f32(), hd, &mut x, &mut mean, &mut rstd);
+    let mut g_logits = scratch::grab(rows * v);
+    matmul_bias_into(&x, w_out, params[3].as_f32(), rows, hd, v, &mut g_logits);
+    // g_logits = softmax(logits) - onehot(target), row-parallel
+    let per_row = |r: usize, row: &mut [f32]| {
         let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let mut z = 0f32;
         for l in row.iter_mut() {
@@ -636,19 +883,34 @@ pub fn head_bwd(
             *l /= z;
         }
         row[targets[r] as usize] -= 1.0;
-    }
-    let g_x = matmul_nt(&g_logits, w_out, rows, v, hd);
-    add_into(grads[2].as_f32_mut(), &matmul_tn(&x, &g_logits, rows, hd, v));
-    colsum_into(&g_logits, v, grads[3].as_f32_mut());
-    let (gg, gb) = {
-        let (a, b) = grads.split_at_mut(1);
-        (a[0].as_f32_mut(), b[0].as_f32_mut())
     };
-    layernorm_bwd(h, &stats, lnf_g, &g_x, hd, gg, gb)
+    if rows * v >= PAR_THRESHOLD {
+        g_logits.par_chunks_mut(v).enumerate().for_each(|(r, row)| per_row(r, row));
+    } else {
+        for (r, row) in g_logits.chunks_mut(v).enumerate() {
+            per_row(r, row);
+        }
+    }
+    let mut g_x = scratch::grab(rows * hd);
+    matmul_nt_into(&g_logits, w_out, rows, v, hd, &mut g_x);
+    matmul_tn_acc(&x, &g_logits, rows, hd, v, grads[2].as_f32_mut());
+    colsum_into(&g_logits, v, grads[3].as_f32_mut());
+    let stats = LnStats { mean, rstd };
+    let mut g_h = vec![0f32; rows * hd];
+    {
+        let (a, b) = grads.split_at_mut(1);
+        layernorm_bwd_into(h, &stats, lnf_g, &g_x, hd, a[0].as_f32_mut(), b[0].as_f32_mut(), &mut g_h);
+    }
+    for b in [x, g_logits, g_x, stats.mean, stats.rstd] {
+        scratch::give(b);
+    }
+    g_h
 }
 
 /// Fused Adam over one parameter set (model.py `adam_step`): bias-corrected
-/// moments, `p -= lr · (m/c1) / (sqrt(v/c2) + eps)`.
+/// moments, `p -= lr · (m/c1) / (sqrt(v/c2) + eps)`. Element-parallel for
+/// large tensors (each element owned by one worker — bit-identical to the
+/// serial sweep).
 pub fn adam_step(
     params: &mut [HostTensor],
     grads: &[HostTensor],
@@ -660,18 +922,28 @@ pub fn adam_step(
     const BETA1: f32 = 0.9;
     const BETA2: f32 = 0.999;
     const EPS: f32 = 1e-8;
+    const CHUNK: usize = 1 << 13;
     let t = step as f32;
     let c1 = 1.0 - BETA1.powf(t);
     let c2 = 1.0 - BETA2.powf(t);
+    let upd = |pd: &mut [f32], gd: &[f32], md: &mut [f32], vd: &mut [f32]| {
+        for i in 0..pd.len() {
+            md[i] = BETA1 * md[i] + (1.0 - BETA1) * gd[i];
+            vd[i] = BETA2 * vd[i] + (1.0 - BETA2) * gd[i] * gd[i];
+            pd[i] -= lr * (md[i] / c1) / ((vd[i] / c2).sqrt() + EPS);
+        }
+    };
     for (((p, g), mi), vi) in params.iter_mut().zip(grads).zip(m.iter_mut()).zip(v.iter_mut()) {
         let pd = p.as_f32_mut();
         let gd = g.as_f32();
         let md = mi.as_f32_mut();
         let vd = vi.as_f32_mut();
-        for i in 0..pd.len() {
-            md[i] = BETA1 * md[i] + (1.0 - BETA1) * gd[i];
-            vd[i] = BETA2 * vd[i] + (1.0 - BETA2) * gd[i] * gd[i];
-            pd[i] -= lr * (md[i] / c1) / ((vd[i] / c2).sqrt() + EPS);
+        if pd.len() >= PAR_THRESHOLD {
+            pd.par_chunks_mut(CHUNK)
+                .zip(gd.par_chunks(CHUNK).zip(md.par_chunks_mut(CHUNK).zip(vd.par_chunks_mut(CHUNK))))
+                .for_each(|(pc, (gc, (mc, vc)))| upd(pc, gc, mc, vc));
+        } else {
+            upd(pd, gd, md, vd);
         }
     }
 }

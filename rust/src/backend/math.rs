@@ -1,36 +1,106 @@
-//! Dense f32 kernels for the native CPU stage backend.
+//! Dense f32 kernels for the native CPU stage backend — cache-blocked,
+//! packed, and allocation-free on the hot path.
 //!
-//! Everything here is deliberately boring: row-major matmuls, layernorm,
-//! GELU — the exact formulas `python/compile/model.py` lowers through XLA,
-//! transcribed so the native backend and the PJRT backend compute the same
-//! function. Two properties matter more than raw speed:
+//! The kernels compute the exact formulas `python/compile/model.py` lowers
+//! through XLA (the naive transcriptions are kept as the `*_ref` oracles),
+//! but the shipping implementations are tiled:
 //!
-//! * **Determinism.** Results must not depend on the rayon thread count or
-//!   scheduling: row-parallel kernels give each output row to exactly one
-//!   worker (no cross-thread accumulation), and the transposed-product
-//!   reduction ([`matmul_tn`]) splits the contraction into a *fixed* number
-//!   of chunks whose partials are summed in chunk order. Same inputs →
-//!   bit-identical outputs, single-threaded or not.
-//! * **Parallelism.** The big products (QKV, MLP, LM head and their
-//!   gradients) fan out across rayon once the work crosses
-//!   [`PAR_THRESHOLD`] multiply-adds; tiny test-sized problems stay serial
-//!   to skip the fork/join overhead.
+//! * [`matmul_into`] packs B into [`NR`]-wide column panels and runs an
+//!   `MR×NR` register microkernel (4 output rows × 8 lanes of
+//!   accumulators) over row blocks, parallelized across output tiles.
+//!   Single-row products above [`PAR_THRESHOLD`] parallelize over column
+//!   panels instead of silently running serial.
+//! * [`matmul_nt_into`] computes 4×4 tiles of independent dot products
+//!   (16 concurrent reduction chains for ILP; B rows are already
+//!   contiguous, so no packing is needed).
+//! * [`matmul_tn_acc`] keeps the fixed-chunk reduction but blocks the
+//!   rank-1 updates over column panels so each partial stays cache
+//!   resident, and accumulates straight into the (gradient) output.
+//! * The cheap epilogues — bias add, GELU, layernorm stats + normalize,
+//!   column sums — are row-/element-parallel passes, and bias is fused
+//!   into the matmul store ([`matmul_bias_into`]).
+//!
+//! **Determinism.** Results are bit-identical for any rayon pool size:
+//!
+//! 1. Every output element is owned by exactly one worker, and its
+//!    reduction runs in a fixed sequential order (ascending contraction
+//!    index, one accumulator — never split across lanes). Rust does not
+//!    contract `mul`+`add` into FMA, so the blocked `matmul`/`matmul_nt`
+//!    are *bit-identical to the naive refs*, tiled or not. This is why
+//!    the microkernels block over M/N only and keep K monolithic.
+//! 2. Cross-row reductions (`matmul_tn`, `layernorm_bwd` gamma/beta)
+//!    split the contraction into [`REDUCE_CHUNKS`] *fixed* ranges whose
+//!    partials are summed in chunk order, independent of thread count.
+//! 3. Serial vs parallel paths are chosen by problem size only
+//!    ([`PAR_THRESHOLD`] multiply-adds), never by pool size.
+//!
+//! **Allocation.** Kernel scratch (B panels, reduction partials) comes
+//! from a small per-thread buffer pool ([`take_buf`]/[`put_buf`]) that is
+//! only touched by the *calling* thread — rayon workers never allocate —
+//! so steady-state calls perform zero heap allocations. Activations and
+//! gradient temporaries use the analogous arena in
+//! [`super::native::scratch`].
+
+#![allow(clippy::needless_range_loop)] // index loops are the idiom in kernels
 
 use rayon::prelude::*;
+use std::cell::RefCell;
 
 /// Multiply-add count below which kernels run serially.
 pub const PAR_THRESHOLD: usize = 1 << 16;
 
-/// Fixed chunk count for deterministic reductions (independent of the
-/// rayon pool size, so results don't vary with `RAYON_NUM_THREADS`).
+/// Fixed chunk count for deterministic cross-row reductions (independent
+/// of the rayon pool size, so results don't vary with `RAYON_NUM_THREADS`).
 const REDUCE_CHUNKS: usize = 8;
 
-/// `out[m,n] = a[m,k] @ b[k,n]` (row-major).
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Microkernel rows (output rows processed per register block).
+const MR: usize = 4;
+/// Microkernel lanes (packed B panel width).
+const NR: usize = 8;
+/// Column tile for the `matmul_nt` dot-product microkernel.
+const NT_TILE: usize = 4;
+/// Column panel width for `matmul_tn`'s blocked rank-1 updates.
+const TN_JP: usize = 128;
+/// Column block for parallel column sums.
+const COL_BLOCK: usize = 64;
+/// Element chunk for parallel elementwise passes.
+const ELEM_CHUNK: usize = 1 << 13;
+
+// ---------------------------------------------------------------------------
+// Per-thread kernel scratch (packing panels, reduction partials)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static MATH_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Grab a scratch buffer from this thread's pool (push/pop, so nested or
+/// stolen kernel invocations on the same thread compose safely).
+fn take_buf() -> Vec<f32> {
+    MATH_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+}
+
+fn put_buf(v: Vec<f32>) {
+    MATH_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < 8 {
+            p.push(v);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference kernels — the oracles the blocked paths are tested against
+// ---------------------------------------------------------------------------
+
+/// Reference `out[m,n] = a[m,k] @ b[k,n]`: serial row-major ikj loops.
+/// The blocked [`matmul_into`] is bit-identical to this (same per-element
+/// reduction order).
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut out = vec![0f32; m * n];
-    let row = |i: usize, out_row: &mut [f32]| {
+    for (i, out_row) in out.chunks_mut(n).enumerate() {
         let ar = &a[i * k..(i + 1) * k];
         for (l, &av) in ar.iter().enumerate() {
             let br = &b[l * n..(l + 1) * n];
@@ -38,24 +108,17 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
                 *o += av * bv;
             }
         }
-    };
-    if m * k * n >= PAR_THRESHOLD && m > 1 {
-        out.par_chunks_mut(n).enumerate().for_each(|(i, r)| row(i, r));
-    } else {
-        for (i, r) in out.chunks_mut(n).enumerate() {
-            row(i, r);
-        }
     }
     out
 }
 
-/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` — the backward-through-weights product
-/// (`grad @ Wᵀ`). Each output row is an independent set of dot products.
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// Reference `out[m,k] = a[m,n] @ b[k,n]ᵀ`: serial per-element dots.
+/// The blocked [`matmul_nt_into`] is bit-identical to this.
+pub fn matmul_nt_ref(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * n);
     assert_eq!(b.len(), k * n);
     let mut out = vec![0f32; m * k];
-    let row = |i: usize, out_row: &mut [f32]| {
+    for (i, out_row) in out.chunks_mut(k).enumerate() {
         let ar = &a[i * n..(i + 1) * n];
         for (j, o) in out_row.iter_mut().enumerate() {
             let br = &b[j * n..(j + 1) * n];
@@ -65,90 +128,409 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
             }
             *o = acc;
         }
-    };
-    if m * n * k >= PAR_THRESHOLD && m > 1 {
-        out.par_chunks_mut(k).enumerate().for_each(|(i, r)| row(i, r));
-    } else {
-        for (i, r) in out.chunks_mut(k).enumerate() {
-            row(i, r);
+    }
+    out
+}
+
+/// Reference `out[k,n] = a[m,k]ᵀ @ b[m,n]`: serial single-pass rank-1
+/// accumulation. [`matmul_tn`]'s serial path is bit-identical to this;
+/// the parallel path differs only by the fixed-chunk partial association.
+pub fn matmul_tn_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut out = vec![0f32; k * n];
+    for r in 0..m {
+        let ar = &a[r * k..(r + 1) * k];
+        let br = &b[r * n..(r + 1) * n];
+        for (i, &av) in ar.iter().enumerate() {
+            let o = &mut out[i * n..(i + 1) * n];
+            for (ov, &bv) in o.iter_mut().zip(br) {
+                *ov += av * bv;
+            }
         }
     }
     out
 }
 
-/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` — the weight-gradient product
-/// (`xᵀ @ grad`). The contraction runs over `m`, so parallel workers must
-/// accumulate into shared output: we split `m` into [`REDUCE_CHUNKS`]
-/// fixed ranges, let each produce a private partial, and sum the partials
-/// in chunk order — deterministic for any pool size.
-pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+// ---------------------------------------------------------------------------
+// Blocked matmul (A @ B) with packed B panels
+// ---------------------------------------------------------------------------
+
+/// Pack `b[k,n]` into `ceil(n/NR)` column panels of shape `[k, NR]`
+/// (remainder lanes zero-padded): the microkernel streams one contiguous
+/// panel per output tile instead of striding across all of B.
+fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
+    let np = n.div_ceil(NR);
+    packed.clear();
+    packed.resize(np * k * NR, 0.0);
+    for p in 0..np {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let strip = &mut packed[p * k * NR..(p + 1) * k * NR];
+        for l in 0..k {
+            strip[l * NR..l * NR + w].copy_from_slice(&b[l * n + j0..l * n + j0 + w]);
+        }
+    }
+}
+
+/// `MR×NR` register microkernel: `acc[r][c] = Σ_l a[i0+r, l] · panel[l, c]`
+/// with `l` strictly ascending and one accumulator per element — the same
+/// reduction order as [`matmul_ref`], hence bit-identical results.
+#[inline]
+fn mm_micro(a: &[f32], i0: usize, mr: usize, k: usize, strip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for row in acc.iter_mut() {
+        *row = [0.0; NR];
+    }
+    if mr == MR {
+        // hot case with constant bounds so the 4×8 accumulators stay in registers
+        let (a0, a1, a2, a3) = (
+            &a[i0 * k..(i0 + 1) * k],
+            &a[(i0 + 1) * k..(i0 + 2) * k],
+            &a[(i0 + 2) * k..(i0 + 3) * k],
+            &a[(i0 + 3) * k..(i0 + 4) * k],
+        );
+        for l in 0..k {
+            let bp = &strip[l * NR..l * NR + NR];
+            let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+            for c in 0..NR {
+                let bv = bp[c];
+                acc[0][c] += x0 * bv;
+                acc[1][c] += x1 * bv;
+                acc[2][c] += x2 * bv;
+                acc[3][c] += x3 * bv;
+            }
+        }
+    } else {
+        for l in 0..k {
+            let bp = &strip[l * NR..l * NR + NR];
+            for r in 0..mr {
+                let av = a[(i0 + r) * k + l];
+                for c in 0..NR {
+                    acc[r][c] += av * bp[c];
+                }
+            }
+        }
+    }
+}
+
+/// Blocked core shared by [`matmul_into`] / [`matmul_bias_into`].
+fn mm_blocked(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), m * n);
-    let accumulate = |range: std::ops::Range<usize>, out: &mut [f32]| {
-        for r in range {
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    if let Some(bs) = bias {
+        assert_eq!(bs.len(), n);
+    }
+    let np = n.div_ceil(NR);
+    let mut packed = take_buf();
+    pack_b(b, k, n, &mut packed);
+    let pk: &[f32] = &packed;
+
+    let store = |acc: &[f32; NR], j0: usize, w: usize, dst: &mut [f32]| match bias {
+        Some(bs) => {
+            for c in 0..w {
+                dst[c] = acc[c] + bs[j0 + c];
+            }
+        }
+        None => dst.copy_from_slice(&acc[..w]),
+    };
+    // one row block (`mr` rows of `out`) across every packed panel
+    let block = |i0: usize, blk: &mut [f32]| {
+        let mr = blk.len() / n;
+        let mut acc = [[0f32; NR]; MR];
+        for p in 0..np {
+            let strip = &pk[p * k * NR..(p + 1) * k * NR];
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            mm_micro(a, i0, mr, k, strip, &mut acc);
+            for r in 0..mr {
+                store(&acc[r], j0, w, &mut blk[r * n + j0..r * n + j0 + w]);
+            }
+        }
+    };
+    // 1×NR microkernel for the column-parallel (skinny-M) path
+    let panel_row = |i: usize, p: usize, dst: &mut [f32]| {
+        let strip = &pk[p * k * NR..(p + 1) * k * NR];
+        let j0 = p * NR;
+        let w = dst.len();
+        let ar = &a[i * k..(i + 1) * k];
+        let mut acc = [0f32; NR];
+        for l in 0..k {
+            let bp = &strip[l * NR..l * NR + NR];
+            let av = ar[l];
+            for c in 0..NR {
+                acc[c] += av * bp[c];
+            }
+        }
+        store(&acc, j0, w, dst);
+    };
+
+    if m * k * n < PAR_THRESHOLD {
+        for (bi, blk) in out.chunks_mut(MR * n).enumerate() {
+            block(bi * MR, blk);
+        }
+    } else if m >= 2 * MR {
+        out.par_chunks_mut(MR * n).enumerate().for_each(|(bi, blk)| block(bi * MR, blk));
+    } else {
+        // few rows, many columns (decode-/head-shaped): parallelize over
+        // column panels so single-row products still fan out
+        for (i, row) in out.chunks_mut(n).enumerate() {
+            row.par_chunks_mut(NR).enumerate().for_each(|(p, dst)| panel_row(i, p, dst));
+        }
+    }
+    put_buf(packed);
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n]` into a caller-provided buffer.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    mm_blocked(a, b, None, m, k, n, out);
+}
+
+/// `out[m,n] = a[m,k] @ b[k,n] + bias[n]` — bias fused into the tile store.
+pub fn matmul_bias_into(a: &[f32], b: &[f32], bias: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    mm_blocked(a, b, Some(bias), m, k, n, out);
+}
+
+/// Allocating wrapper around [`matmul_into`].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    matmul_into(a, b, m, k, n, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Blocked A @ Bᵀ (independent dot products)
+// ---------------------------------------------------------------------------
+
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` into a caller-provided buffer — the
+/// backward-through-weights product (`grad @ Wᵀ`). 4×4 tiles of dots: 16
+/// independent sequential chains (ILP) with the per-dot order of
+/// [`matmul_nt_ref`], hence bit-identical.
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * k);
+    let tile = |i0: usize, j0: usize, mr: usize, jw: usize, blk: &mut [f32]| {
+        let mut acc = [[0f32; NT_TILE]; NT_TILE];
+        if mr == NT_TILE && jw == NT_TILE {
+            let (a0, a1, a2, a3) = (
+                &a[i0 * n..(i0 + 1) * n],
+                &a[(i0 + 1) * n..(i0 + 2) * n],
+                &a[(i0 + 2) * n..(i0 + 3) * n],
+                &a[(i0 + 3) * n..(i0 + 4) * n],
+            );
+            let (b0, b1, b2, b3) = (
+                &b[j0 * n..(j0 + 1) * n],
+                &b[(j0 + 1) * n..(j0 + 2) * n],
+                &b[(j0 + 2) * n..(j0 + 3) * n],
+                &b[(j0 + 3) * n..(j0 + 4) * n],
+            );
+            for l in 0..n {
+                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+                let (y0, y1, y2, y3) = (b0[l], b1[l], b2[l], b3[l]);
+                acc[0][0] += x0 * y0;
+                acc[0][1] += x0 * y1;
+                acc[0][2] += x0 * y2;
+                acc[0][3] += x0 * y3;
+                acc[1][0] += x1 * y0;
+                acc[1][1] += x1 * y1;
+                acc[1][2] += x1 * y2;
+                acc[1][3] += x1 * y3;
+                acc[2][0] += x2 * y0;
+                acc[2][1] += x2 * y1;
+                acc[2][2] += x2 * y2;
+                acc[2][3] += x2 * y3;
+                acc[3][0] += x3 * y0;
+                acc[3][1] += x3 * y1;
+                acc[3][2] += x3 * y2;
+                acc[3][3] += x3 * y3;
+            }
+        } else {
+            for l in 0..n {
+                for r in 0..mr {
+                    let av = a[(i0 + r) * n + l];
+                    for c in 0..jw {
+                        acc[r][c] += av * b[(j0 + c) * n + l];
+                    }
+                }
+            }
+        }
+        for r in 0..mr {
+            blk[r * k + j0..r * k + j0 + jw].copy_from_slice(&acc[r][..jw]);
+        }
+    };
+    let block = |i0: usize, blk: &mut [f32]| {
+        let mr = blk.len() / k;
+        let mut j0 = 0;
+        while j0 < k {
+            let jw = NT_TILE.min(k - j0);
+            tile(i0, j0, mr, jw, blk);
+            j0 += jw;
+        }
+    };
+    if m * n * k < PAR_THRESHOLD {
+        for (bi, blk) in out.chunks_mut(NT_TILE * k).enumerate() {
+            block(bi * NT_TILE, blk);
+        }
+    } else if m >= 2 * NT_TILE {
+        out.par_chunks_mut(NT_TILE * k).enumerate().for_each(|(bi, blk)| block(bi * NT_TILE, blk));
+    } else {
+        // skinny M: parallelize over column tiles of each row
+        for (i, row) in out.chunks_mut(k).enumerate() {
+            row.par_chunks_mut(NT_TILE).enumerate().for_each(|(tj, dst)| {
+                let j0 = tj * NT_TILE;
+                let jw = dst.len();
+                let ar = &a[i * n..(i + 1) * n];
+                for c in 0..jw {
+                    let br = &b[(j0 + c) * n..(j0 + c + 1) * n];
+                    let mut acc = 0f32;
+                    for (&x, &y) in ar.iter().zip(br) {
+                        acc += x * y;
+                    }
+                    dst[c] = acc;
+                }
+            });
+        }
+    }
+}
+
+/// Allocating wrapper around [`matmul_nt_into`].
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * k];
+    matmul_nt_into(a, b, m, n, k, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Aᵀ @ B with the fixed-chunk deterministic reduction
+// ---------------------------------------------------------------------------
+
+/// Rank-1 accumulation of rows `range` of `aᵀ @ b` into `out[k,n]`,
+/// blocked over [`TN_JP`]-wide column panels so the partial stays cache
+/// resident. Per output element the updates run in ascending-`r` order —
+/// the same association as [`matmul_tn_ref`] restricted to `range`.
+fn tn_accumulate(a: &[f32], b: &[f32], k: usize, n: usize, range: std::ops::Range<usize>, out: &mut [f32]) {
+    let mut jp = 0;
+    while jp < n {
+        let w = TN_JP.min(n - jp);
+        for r in range.clone() {
             let ar = &a[r * k..(r + 1) * k];
-            let br = &b[r * n..(r + 1) * n];
+            let br = &b[r * n + jp..r * n + jp + w];
             for (i, &av) in ar.iter().enumerate() {
-                let o = &mut out[i * n..(i + 1) * n];
+                let o = &mut out[i * n + jp..i * n + jp + w];
                 for (ov, &bv) in o.iter_mut().zip(br) {
                     *ov += av * bv;
                 }
             }
         }
-    };
-    if m * k * n >= PAR_THRESHOLD && m >= 2 * REDUCE_CHUNKS {
-        let chunk = m.div_ceil(REDUCE_CHUNKS);
-        let partials: Vec<Vec<f32>> = (0..REDUCE_CHUNKS)
-            .into_par_iter()
-            .map(|c| {
-                let mut p = vec![0f32; k * n];
-                let lo = c * chunk;
-                let hi = ((c + 1) * chunk).min(m);
-                if lo < hi {
-                    accumulate(lo..hi, &mut p);
-                }
-                p
-            })
-            .collect();
-        let mut out = vec![0f32; k * n];
-        for p in partials {
-            for (o, v) in out.iter_mut().zip(&p) {
-                *o += v;
-            }
-        }
-        out
-    } else {
-        let mut out = vec![0f32; k * n];
-        accumulate(0..m, &mut out);
-        out
+        jp += w;
     }
 }
 
-/// Add `bias[n]` to every row of `x[rows,n]` in place.
+/// `out[k,n] += a[m,k]ᵀ @ b[m,n]` — the weight-gradient product
+/// (`xᵀ @ grad`), accumulating into the gradient buffer. The contraction
+/// runs over `m`, so the parallel path splits it into [`REDUCE_CHUNKS`]
+/// fixed ranges (private partials from the thread-local pool, summed into
+/// `out` in chunk order) — deterministic for any pool size.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    if m * k * n >= PAR_THRESHOLD && m >= 2 * REDUCE_CHUNKS {
+        let chunk = m.div_ceil(REDUCE_CHUNKS);
+        let kn = k * n;
+        let mut partials = take_buf();
+        partials.clear();
+        partials.resize(REDUCE_CHUNKS * kn, 0.0);
+        partials.par_chunks_mut(kn).enumerate().for_each(|(c, p)| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(m);
+            if lo < hi {
+                tn_accumulate(a, b, k, n, lo..hi, p);
+            }
+        });
+        let pr: &[f32] = &partials;
+        // per-row parallel reduce; chunk order is fixed, each output row
+        // owned by one worker
+        out.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+            for c in 0..REDUCE_CHUNKS {
+                let p = &pr[c * kn + i * n..c * kn + i * n + n];
+                for (o, &v) in orow.iter_mut().zip(p) {
+                    *o += v;
+                }
+            }
+        });
+        put_buf(partials);
+    } else {
+        tn_accumulate(a, b, k, n, 0..m, out);
+    }
+}
+
+/// Allocating wrapper: `out[k,n] = a[m,k]ᵀ @ b[m,n]`.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    matmul_tn_acc(a, b, m, k, n, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Row-/element-parallel epilogues
+// ---------------------------------------------------------------------------
+
+/// Add `bias[n]` to every row of `x[rows,n]` in place (row-parallel; each
+/// row owned by one worker, so bit-identical to the serial pass).
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     let n = bias.len();
-    for row in x.chunks_mut(n) {
-        for (o, &b) in row.iter_mut().zip(bias) {
+    let row = |r: &mut [f32]| {
+        for (o, &b) in r.iter_mut().zip(bias) {
             *o += b;
         }
+    };
+    if x.len() >= PAR_THRESHOLD {
+        x.par_chunks_mut(n).for_each(row);
+    } else {
+        x.chunks_mut(n).for_each(row);
     }
 }
 
 /// Column sums of `g[rows,n]` added into `out[n]` — the bias gradient.
+/// Parallel over column blocks: each column is owned by one worker and
+/// summed in ascending row order, bit-identical to the serial loop.
 pub fn colsum_into(g: &[f32], n: usize, out: &mut [f32]) {
     assert_eq!(out.len(), n);
-    for row in g.chunks(n) {
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
+    let rows = g.len() / n;
+    if rows * n >= PAR_THRESHOLD && n >= 2 * COL_BLOCK {
+        out.par_chunks_mut(COL_BLOCK).enumerate().for_each(|(bi, blk)| {
+            let j0 = bi * COL_BLOCK;
+            for r in 0..rows {
+                let src = &g[r * n + j0..r * n + j0 + blk.len()];
+                for (o, &v) in blk.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        });
+    } else {
+        for row in g.chunks(n) {
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
         }
     }
 }
 
-/// Elementwise add into the left operand.
+/// Elementwise add into the left operand (element-parallel).
 pub fn add_into(dst: &mut [f32], src: &[f32]) {
     assert_eq!(dst.len(), src.len());
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d += s;
+    if dst.len() >= PAR_THRESHOLD {
+        dst.par_chunks_mut(ELEM_CHUNK).zip(src.par_chunks(ELEM_CHUNK)).for_each(|(d, s)| {
+            for (o, &v) in d.iter_mut().zip(s) {
+                *o += v;
+            }
+        });
+    } else {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
     }
 }
 
@@ -161,29 +543,166 @@ pub struct LnStats {
 
 pub const LN_EPS: f32 = 1e-5;
 
-/// `y = (x - mean) / sqrt(var + eps) * gamma + beta`, per row of `x[rows,n]`.
+#[inline]
+fn ln_row(xr: &[f32], gamma: &[f32], beta: &[f32], yr: &mut [f32]) -> (f32, f32) {
+    let n = xr.len();
+    let mu = xr.iter().sum::<f32>() / n as f32;
+    let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+    let rs = 1.0 / (var + LN_EPS).sqrt();
+    for ((o, &xv), (&g, &b)) in yr.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+        *o = (xv - mu) * rs * g + b;
+    }
+    (mu, rs)
+}
+
+/// `y = (x - mean) / sqrt(var + eps) * gamma + beta`, per row of
+/// `x[rows,n]`, into caller-provided `y`/`mean`/`rstd` (row-parallel;
+/// rows are independent, so bit-identical to the serial pass).
+pub fn layernorm_into(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    n: usize,
+    y: &mut [f32],
+    mean: &mut [f32],
+    rstd: &mut [f32],
+) {
+    let rows = x.len() / n;
+    assert_eq!(y.len(), x.len());
+    assert_eq!(mean.len(), rows);
+    assert_eq!(rstd.len(), rows);
+    if x.len() >= PAR_THRESHOLD {
+        y.par_chunks_mut(n)
+            .zip(mean.par_iter_mut().zip(rstd.par_iter_mut()))
+            .enumerate()
+            .for_each(|(r, (yr, (mu, rs)))| {
+                let (m, s) = ln_row(&x[r * n..(r + 1) * n], gamma, beta, yr);
+                *mu = m;
+                *rs = s;
+            });
+    } else {
+        let stats = mean.iter_mut().zip(rstd.iter_mut());
+        for ((r, yr), (mu, rs)) in y.chunks_mut(n).enumerate().zip(stats) {
+            let (m, s) = ln_row(&x[r * n..(r + 1) * n], gamma, beta, yr);
+            *mu = m;
+            *rs = s;
+        }
+    }
+}
+
+/// Allocating wrapper around [`layernorm_into`].
 pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], n: usize) -> (Vec<f32>, LnStats) {
     let rows = x.len() / n;
     let mut y = vec![0f32; x.len()];
     let mut mean = vec![0f32; rows];
     let mut rstd = vec![0f32; rows];
-    for r in 0..rows {
-        let xr = &x[r * n..(r + 1) * n];
-        let mu = xr.iter().sum::<f32>() / n as f32;
-        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
-        let rs = 1.0 / (var + LN_EPS).sqrt();
-        mean[r] = mu;
-        rstd[r] = rs;
-        let yr = &mut y[r * n..(r + 1) * n];
-        for ((o, &xv), (&g, &b)) in yr.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
-            *o = (xv - mu) * rs * g + b;
-        }
-    }
+    layernorm_into(x, gamma, beta, n, &mut y, &mut mean, &mut rstd);
     (y, LnStats { mean, rstd })
 }
 
-/// VJP of [`layernorm`]: returns grad w.r.t. `x` and accumulates the
-/// gamma/beta grads into `g_gamma`/`g_beta`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn ln_bwd_row(
+    xr: &[f32],
+    gyr: &[f32],
+    mu: f32,
+    rs: f32,
+    gamma: &[f32],
+    gxr: &mut [f32],
+    gg: &mut [f32],
+    gb: &mut [f32],
+) {
+    let n = xr.len();
+    // dxhat = g_y * gamma; dx = rs*(dxhat - mean(dxhat) - xhat*mean(dxhat*xhat))
+    let mut sum_dxhat = 0f32;
+    let mut sum_dxhat_xhat = 0f32;
+    for i in 0..n {
+        let xhat = (xr[i] - mu) * rs;
+        let dxhat = gyr[i] * gamma[i];
+        sum_dxhat += dxhat;
+        sum_dxhat_xhat += dxhat * xhat;
+        gg[i] += gyr[i] * xhat;
+        gb[i] += gyr[i];
+    }
+    let m1 = sum_dxhat / n as f32;
+    let m2 = sum_dxhat_xhat / n as f32;
+    for i in 0..n {
+        let xhat = (xr[i] - mu) * rs;
+        let dxhat = gyr[i] * gamma[i];
+        gxr[i] = rs * (dxhat - m1 - xhat * m2);
+    }
+}
+
+/// VJP of [`layernorm`] into a caller-provided `g_x`; accumulates the
+/// gamma/beta grads into `g_gamma`/`g_beta`. Rows (and their `g_x`) are
+/// row-parallel; the cross-row gamma/beta reduction uses
+/// [`REDUCE_CHUNKS`] fixed row ranges with pooled partials summed in
+/// chunk order (thread-count independent).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_bwd_into(
+    x: &[f32],
+    stats: &LnStats,
+    gamma: &[f32],
+    g_y: &[f32],
+    n: usize,
+    g_gamma: &mut [f32],
+    g_beta: &mut [f32],
+    g_x: &mut [f32],
+) {
+    let rows = x.len() / n;
+    assert_eq!(g_x.len(), x.len());
+    if x.len() >= PAR_THRESHOLD && rows >= 2 * REDUCE_CHUNKS {
+        let chunk_rows = rows.div_ceil(REDUCE_CHUNKS);
+        let mut partials = take_buf();
+        partials.clear();
+        partials.resize(REDUCE_CHUNKS * 2 * n, 0.0);
+        g_x.par_chunks_mut(chunk_rows * n)
+            .zip(partials.par_chunks_mut(2 * n))
+            .enumerate()
+            .for_each(|(c, (gx_chunk, part))| {
+                let (gg, gb) = part.split_at_mut(n);
+                let lo = c * chunk_rows;
+                for (ri, gxr) in gx_chunk.chunks_mut(n).enumerate() {
+                    let r = lo + ri;
+                    ln_bwd_row(
+                        &x[r * n..(r + 1) * n],
+                        &g_y[r * n..(r + 1) * n],
+                        stats.mean[r],
+                        stats.rstd[r],
+                        gamma,
+                        gxr,
+                        gg,
+                        gb,
+                    );
+                }
+            });
+        for c in 0..REDUCE_CHUNKS {
+            let part = &partials[c * 2 * n..(c + 1) * 2 * n];
+            for (o, &v) in g_gamma.iter_mut().zip(&part[..n]) {
+                *o += v;
+            }
+            for (o, &v) in g_beta.iter_mut().zip(&part[n..]) {
+                *o += v;
+            }
+        }
+        put_buf(partials);
+    } else {
+        for (r, gxr) in g_x.chunks_mut(n).enumerate() {
+            ln_bwd_row(
+                &x[r * n..(r + 1) * n],
+                &g_y[r * n..(r + 1) * n],
+                stats.mean[r],
+                stats.rstd[r],
+                gamma,
+                gxr,
+                g_gamma,
+                g_beta,
+            );
+        }
+    }
+}
+
+/// Allocating wrapper around [`layernorm_bwd_into`].
 pub fn layernorm_bwd(
     x: &[f32],
     stats: &LnStats,
@@ -193,59 +712,72 @@ pub fn layernorm_bwd(
     g_gamma: &mut [f32],
     g_beta: &mut [f32],
 ) -> Vec<f32> {
-    let rows = x.len() / n;
     let mut g_x = vec![0f32; x.len()];
-    for r in 0..rows {
-        let xr = &x[r * n..(r + 1) * n];
-        let gyr = &g_y[r * n..(r + 1) * n];
-        let mu = stats.mean[r];
-        let rs = stats.rstd[r];
-        // dxhat = g_y * gamma; dx = rs*(dxhat - mean(dxhat) - xhat*mean(dxhat*xhat))
-        let mut sum_dxhat = 0f32;
-        let mut sum_dxhat_xhat = 0f32;
-        for i in 0..n {
-            let xhat = (xr[i] - mu) * rs;
-            let dxhat = gyr[i] * gamma[i];
-            sum_dxhat += dxhat;
-            sum_dxhat_xhat += dxhat * xhat;
-            g_gamma[i] += gyr[i] * xhat;
-            g_beta[i] += gyr[i];
-        }
-        let m1 = sum_dxhat / n as f32;
-        let m2 = sum_dxhat_xhat / n as f32;
-        let gxr = &mut g_x[r * n..(r + 1) * n];
-        for i in 0..n {
-            let xhat = (xr[i] - mu) * rs;
-            let dxhat = gyr[i] * gamma[i];
-            gxr[i] = rs * (dxhat - m1 - xhat * m2);
-        }
-    }
+    layernorm_bwd_into(x, stats, gamma, g_y, n, g_gamma, g_beta, &mut g_x);
     g_x
 }
 
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi), matching model.py's constant
 const GELU_A: f32 = 0.044_715;
 
-/// Tanh-approximation GELU, elementwise (model.py's `gelu`).
-pub fn gelu(x: &[f32]) -> Vec<f32> {
-    x.iter()
-        .map(|&v| {
-            let u = GELU_C * (v + GELU_A * v * v * v);
-            0.5 * v * (1.0 + u.tanh())
-        })
-        .collect()
+#[inline]
+fn gelu_one(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    0.5 * v * (1.0 + u.tanh())
 }
 
-/// d gelu(x) / dx, elementwise.
+#[inline]
+fn gelu_grad_one(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    let t = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+    0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du
+}
+
+/// Tanh-approximation GELU into a caller-provided buffer
+/// (element-parallel: each element owned by one worker).
+pub fn gelu_into(x: &[f32], out: &mut [f32]) {
+    assert_eq!(out.len(), x.len());
+    if x.len() >= PAR_THRESHOLD {
+        out.par_chunks_mut(ELEM_CHUNK).zip(x.par_chunks(ELEM_CHUNK)).for_each(|(o, xs)| {
+            for (ov, &v) in o.iter_mut().zip(xs) {
+                *ov = gelu_one(v);
+            }
+        });
+    } else {
+        for (ov, &v) in out.iter_mut().zip(x) {
+            *ov = gelu_one(v);
+        }
+    }
+}
+
+/// Allocating wrapper around [`gelu_into`] (model.py's `gelu`).
+pub fn gelu(x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    gelu_into(x, &mut out);
+    out
+}
+
+/// Fused GELU VJP: `g[i] *= gelu'(x[i])` in place — the
+/// `gelu_grad(mpre) ⊙ g` product without the temporary.
+pub fn gelu_grad_mul(x: &[f32], g: &mut [f32]) {
+    assert_eq!(g.len(), x.len());
+    if x.len() >= PAR_THRESHOLD {
+        g.par_chunks_mut(ELEM_CHUNK).zip(x.par_chunks(ELEM_CHUNK)).for_each(|(gs, xs)| {
+            for (gv, &v) in gs.iter_mut().zip(xs) {
+                *gv *= gelu_grad_one(v);
+            }
+        });
+    } else {
+        for (gv, &v) in g.iter_mut().zip(x) {
+            *gv *= gelu_grad_one(v);
+        }
+    }
+}
+
+/// d gelu(x) / dx, elementwise (test/reference helper).
 pub fn gelu_grad(x: &[f32]) -> Vec<f32> {
-    x.iter()
-        .map(|&v| {
-            let u = GELU_C * (v + GELU_A * v * v * v);
-            let t = u.tanh();
-            let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-            0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du
-        })
-        .collect()
+    x.iter().map(|&v| gelu_grad_one(v)).collect()
 }
 
 #[cfg(test)]
@@ -294,6 +826,39 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_bit_identical_to_ref() {
+        // spans the parallel row-block path and remainder tiles
+        for (m, k, n) in [(65, 33, 50), (4, 8, 8), (1, 64, 1100), (7, 19, 23), (128, 32, 48)] {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i * 37) % 101) as f32 * 0.013 - 0.5).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i * 53) % 97) as f32 * 0.021 - 1.0).collect();
+            let blocked = matmul(&a, &b, m, k, n);
+            let reference = matmul_ref(&a, &b, m, k, n);
+            for (x, y) in blocked.iter().zip(&reference) {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_bias_fusion_matches_separate_passes() {
+        let (m, k, n) = (9, 11, 13);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.11).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).cos()).collect();
+        let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let mut fused = vec![0f32; m * n];
+        matmul_bias_into(&a, &b, &bias, m, k, n, &mut fused);
+        let mut sep = matmul_ref(&a, &b, m, k, n);
+        for row in sep.chunks_mut(n) {
+            for (o, &bv) in row.iter_mut().zip(&bias) {
+                *o += bv;
+            }
+        }
+        for (x, y) in fused.iter().zip(&sep) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
     fn matmul_tn_parallel_matches_serial() {
         // Force the parallel path and compare against the serial chunking.
         let m = 64;
@@ -320,6 +885,20 @@ mod tests {
         }
         for (x, y) in par.iter().zip(&serial) {
             assert_eq!(x.to_bits(), y.to_bits(), "nondeterministic reduction");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_acc_accumulates_into_existing_grads() {
+        let (m, k, n) = (10, 5, 7);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.3).sin()).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.2).cos()).collect();
+        let mut acc: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.1).collect();
+        let before = acc.clone();
+        matmul_tn_acc(&a, &b, m, k, n, &mut acc);
+        let fresh = matmul_tn_ref(&a, &b, m, k, n);
+        for i in 0..k * n {
+            assert!((acc[i] - (before[i] + fresh[i])).abs() < 1e-5);
         }
     }
 
@@ -382,6 +961,18 @@ mod tests {
             let fd = (fp - fm) / (2.0 * eps);
             let an = gelu_grad(&[v])[0];
             assert!((fd - an).abs() < 1e-3, "gelu'({v}): fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn gelu_grad_mul_fuses_product() {
+        let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.17).sin() * 2.0).collect();
+        let mut g: Vec<f32> = (0..40).map(|i| (i as f32 * 0.29).cos()).collect();
+        let expect: Vec<f32> =
+            g.iter().zip(gelu_grad(&x)).map(|(&gv, d)| gv * d).collect();
+        gelu_grad_mul(&x, &mut g);
+        for (a, b) in g.iter().zip(&expect) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -209,6 +209,75 @@ pub fn measure_fit<S: BackendSpec>(spec: &S, repeats: u32) -> Result<LinearCtxMo
     measure::fit(&meas, m.seq_len as u32).map_err(|e| anyhow::anyhow!(e))
 }
 
+/// [`slice_timer`] with the stage's *role* folded in, matching what the
+/// coordinator's timing samples actually cover: the first stage's slice
+/// latency includes `embed_fwd`/`embed_bwd`, the last stage's includes
+/// `head_loss`/`head_bwd`. Middle stages reduce to the plain cell.
+pub fn role_slice_timer<B: StageBackend>(
+    mut backend: B,
+    role: measure::StageRole,
+    buckets: Vec<usize>,
+) -> (impl FnMut(u32, u32) -> f64, Vec<u32>) {
+    use measure::StageRole;
+    let d = backend.dims().clone();
+    let timer = move |i: u32, j: u32| -> f64 {
+        let len = i as usize;
+        let off = j as usize;
+        let tokens = vec![0i32; d.batch * len];
+        let h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let k_ctx = HostTensor::zeros_f32(&d.kv_shape());
+        let v_ctx = HostTensor::zeros_f32(&d.kv_shape());
+        let g_h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let g_know = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let g_vnow = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let (_, ms) = crate::util::time_ms(|| {
+            let h_in = if role == StageRole::First {
+                backend.embed_fwd(&tokens, len, off).expect("measure embed_fwd")
+            } else {
+                h.clone()
+            };
+            let (h_out, _, _) = backend
+                .stage_fwd(&h_in, &k_ctx, &v_ctx, off)
+                .expect("measure stage_fwd");
+            let g_up = if role == StageRole::Last {
+                let _ = backend.head_loss(&h_out, &tokens, len).expect("measure head_loss");
+                backend.head_bwd(&h_out, &tokens, len).expect("measure head_bwd")
+            } else {
+                g_h.clone()
+            };
+            let (g_h_in, _, _) = backend
+                .stage_bwd(&h_in, &k_ctx, &v_ctx, off, &g_up, &g_know, &g_vnow)
+                .expect("measure stage_bwd");
+            if role == StageRole::First {
+                backend.embed_bwd(&tokens, len, off, &g_h_in).expect("measure embed_bwd");
+            }
+        });
+        ms
+    };
+    (timer, buckets.into_iter().map(|b| b as u32).collect())
+}
+
+/// [`measure_fit`] per stage role: separate Eq. 9 fits for the first
+/// stage (embed + cell), a middle cell, and the last stage (cell + head).
+/// With fewer than three stages there is no middle cell to measure; the
+/// slot is filled with the first stage's fit (it is never queried —
+/// [`measure::StageModels::for_stage`] only maps interior stages to it).
+pub fn measure_fit_per_stage<S: BackendSpec>(spec: &S, repeats: u32) -> Result<measure::StageModels> {
+    use measure::StageRole;
+    let m = spec.model();
+    let k = m.num_stages;
+    let mut fit_role = |stage: usize, role: StageRole| -> Result<LinearCtxModel> {
+        let backend = spec.build(stage, k, None)?;
+        let mut timer = role_slice_timer(backend, role, spec.buckets());
+        let meas = measure::measure(&mut timer, m.seq_len as u32, 4, repeats);
+        measure::fit(&meas, m.seq_len as u32).map_err(|e| anyhow::anyhow!(e))
+    };
+    let first = fit_role(0, StageRole::of(0, k))?;
+    let last = fit_role(k - 1, StageRole::of(k - 1, k))?;
+    let middle = if k >= 3 { fit_role(1, StageRole::Middle)? } else { first.clone() };
+    Ok(measure::StageModels { first, middle, last })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +286,38 @@ mod tests {
     fn moment_path_prefixes_stem() {
         let p = moment_path(Path::new("ckpt/init/stage0.w.bin"), "m");
         assert_eq!(p, Path::new("ckpt/init/m.stage0.w.bin"));
+    }
+
+    #[test]
+    fn per_stage_fits_are_queryable_and_role_mapped() {
+        use crate::perfmodel::measure::StageRole;
+        use crate::perfmodel::CostModel;
+        let dims = ModelDims {
+            vocab: 17,
+            hidden: 8,
+            num_heads: 2,
+            layers_per_stage: 1,
+            num_stages: 2,
+            seq_len: 8,
+            batch: 1,
+            block_ctx: 4,
+            seed: 5,
+        };
+        let spec = NativeSpec::new(dims, 2);
+        let models = measure_fit_per_stage(&spec, 1).unwrap();
+        for m in [&models.first, &models.middle, &models.last] {
+            let t = m.t(4, 2);
+            assert!(t.is_finite() && t >= 0.0, "t(4,2) = {t}");
+        }
+        assert_eq!(StageRole::of(0, 2), StageRole::First);
+        assert_eq!(StageRole::of(1, 2), StageRole::Last);
+        assert_eq!(StageRole::of(1, 3), StageRole::Middle);
+        assert_eq!(StageRole::of(0, 1), StageRole::Last);
+        // for_stage maps the ends of a 2-stage pipeline to first/last
+        let f = models.for_stage(0, 2) as *const _;
+        let l = models.for_stage(1, 2) as *const _;
+        assert_eq!(f, &models.first as *const _);
+        assert_eq!(l, &models.last as *const _);
     }
 
     #[test]

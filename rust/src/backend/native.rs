@@ -28,6 +28,137 @@ use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
 use crate::util::Rng;
 
+/// Per-thread scratch arena for the cell hot path.
+///
+/// `cell.rs` grabs every temporary (activations, KV scatter buffers,
+/// rematerialization caches, gradient intermediates) from here and gives
+/// it back before returning, so a warmed-up `stage_fwd_into` +
+/// `stage_bwd_into` performs **zero heap allocations** — the property
+/// `benches/exec.rs` pins with a counting allocator.
+///
+/// Ownership rules (see `backend/README.md` §scratch):
+///
+/// 1. Only the *calling* thread touches the arena. Kernels hand rayon
+///    workers pre-partitioned slabs (`par_chunks_mut` over one grabbed
+///    buffer); workers never call [`grab`]/[`give`] themselves.
+/// 2. Borrows of the thread-local pool are instantaneous (a `grab` or
+///    `give` is one push/pop) and never held across a parallel region,
+///    so re-entrant kernel calls on a work-stealing thread compose.
+/// 3. [`grab`] returns a **zeroed** buffer of exactly `n` elements;
+///    accumulating kernels (attention, scatter-add) rely on this.
+/// 4. Buffers are matched best-fit by capacity, so steady-state reuse
+///    never reallocates even when slice lengths vary across a schedule.
+pub mod scratch {
+    use std::cell::RefCell;
+
+    struct Pool {
+        free: Vec<Vec<f32>>,
+        grabs: u64,
+        misses: u64,
+    }
+
+    thread_local! {
+        static POOL: RefCell<Pool> = const {
+            RefCell::new(Pool { free: Vec::new(), grabs: 0, misses: 0 })
+        };
+    }
+
+    /// Free-list depth bound: beyond this, returned buffers are dropped.
+    const MAX_FREE: usize = 64;
+
+    fn take(n: usize) -> Vec<f32> {
+        POOL.with(|p| {
+            let mut p = p.borrow_mut();
+            p.grabs += 1;
+            // best fit: the smallest free buffer whose capacity covers n
+            let mut best: Option<(usize, usize)> = None;
+            for (i, b) in p.free.iter().enumerate() {
+                let c = b.capacity();
+                if c >= n && best.map_or(true, |(_, bc)| c < bc) {
+                    best = Some((i, c));
+                }
+            }
+            if let Some((i, _)) = best {
+                return p.free.swap_remove(i);
+            }
+            p.misses += 1;
+            // no buffer is big enough: grow the largest one (one realloc
+            // now, a hit on every later grab of this size)
+            if let Some(i) = (0..p.free.len()).max_by_key(|&i| p.free[i].capacity()) {
+                p.free.swap_remove(i)
+            } else {
+                Vec::new()
+            }
+        })
+    }
+
+    /// A zeroed scratch buffer of exactly `n` elements.
+    pub fn grab(n: usize) -> Vec<f32> {
+        let mut v = take(n);
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// A scratch buffer holding a copy of `src`.
+    pub fn grab_copy(src: &[f32]) -> Vec<f32> {
+        let mut v = take(src.len());
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Return a buffer to this thread's free list.
+    pub fn give(v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        POOL.with(|p| {
+            let mut p = p.borrow_mut();
+            if p.free.len() < MAX_FREE {
+                p.free.push(v);
+            }
+        });
+    }
+
+    /// `(grabs, misses)` on this thread — misses ≙ grabs that had to
+    /// touch the allocator. Steady state is misses staying flat.
+    pub fn stats() -> (u64, u64) {
+        POOL.with(|p| {
+            let p = p.borrow();
+            (p.grabs, p.misses)
+        })
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn grab_is_zeroed_and_reuse_hits_free_list() {
+            let mut v = grab(64);
+            assert!(v.iter().all(|&x| x == 0.0));
+            v.iter_mut().for_each(|x| *x = 7.0);
+            give(v);
+            let (_, misses_before) = stats();
+            let w = grab(48); // smaller request must reuse the 64-cap buffer
+            assert_eq!(w.len(), 48);
+            assert!(w.iter().all(|&x| x == 0.0), "reused buffer must be re-zeroed");
+            let (_, misses_after) = stats();
+            assert_eq!(misses_before, misses_after, "48-elem grab after 64-elem give must not miss");
+            give(w);
+        }
+
+        #[test]
+        fn grab_copy_preserves_contents() {
+            let src = [1.0f32, 2.0, 3.0];
+            let v = grab_copy(&src);
+            assert_eq!(v, src);
+            give(v);
+        }
+    }
+}
+
 /// A named parameter group with its gradient accumulators and Adam state.
 pub struct ParamSet {
     /// File-stem names, aligned with `params` (e.g. `stage0.layer0.w_qkv`).
@@ -315,13 +446,22 @@ impl StageBackend for NativeBackend {
     ) -> Result<(HostTensor, HostTensor, HostTensor)> {
         let d = &self.dims;
         let len = h.shape[1];
-        let (h_out, k_new, v_new) =
-            cell::stage_fwd(d, len, off, &self.stage_p.params, h.as_f32(), k_ctx.as_f32(), v_ctx.as_f32());
-        Ok((
-            HostTensor::f32(&[d.batch, len, d.hidden], h_out),
-            HostTensor::f32(&d.kv_new_shape(len), k_new),
-            HostTensor::f32(&d.kv_new_shape(len), v_new),
-        ))
+        let mut h_out = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let mut k_new = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let mut v_new = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        cell::stage_fwd_into(
+            d,
+            len,
+            off,
+            &self.stage_p.params,
+            h.as_f32(),
+            k_ctx.as_f32(),
+            v_ctx.as_f32(),
+            h_out.as_f32_mut(),
+            k_new.as_f32_mut(),
+            v_new.as_f32_mut(),
+        );
+        Ok((h_out, k_new, v_new))
     }
 
     fn head_loss(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<f32> {
@@ -350,7 +490,10 @@ impl StageBackend for NativeBackend {
     ) -> Result<(HostTensor, HostTensor, HostTensor)> {
         let d = self.dims.clone();
         let len = h_in.shape[1];
-        let (g_h_in, g_kctx, g_vctx) = cell::stage_bwd(
+        let mut g_h_in = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
+        let mut g_kctx = HostTensor::zeros_f32(&d.kv_shape());
+        let mut g_vctx = HostTensor::zeros_f32(&d.kv_shape());
+        cell::stage_bwd_into(
             &d,
             len,
             off,
@@ -362,12 +505,11 @@ impl StageBackend for NativeBackend {
             g_know.as_f32(),
             g_vnow.as_f32(),
             &mut self.stage_p.grads,
+            g_h_in.as_f32_mut(),
+            g_kctx.as_f32_mut(),
+            g_vctx.as_f32_mut(),
         );
-        Ok((
-            HostTensor::f32(&[d.batch, len, d.hidden], g_h_in),
-            HostTensor::f32(&d.kv_shape(), g_kctx),
-            HostTensor::f32(&d.kv_shape(), g_vctx),
-        ))
+        Ok((g_h_in, g_kctx, g_vctx))
     }
 
     fn embed_bwd(&mut self, tokens: &[i32], len: usize, off: usize, g_h: &HostTensor) -> Result<()> {

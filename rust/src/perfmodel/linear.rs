@@ -28,6 +28,7 @@ impl CtxCoeffs {
 
 /// Eq. 9 instantiated: base curve on a granularity grid + fitted context
 /// overhead.
+#[derive(Debug, Clone)]
 pub struct LinearCtxModel {
     granularity: u32,
     /// `base[a]` = measured t(a·g, 0); base[0] unused.

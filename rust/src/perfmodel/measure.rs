@@ -9,6 +9,53 @@
 
 use super::linear::{CtxCoeffs, LinearCtxModel};
 
+/// What a pipeline stage actually computes per slice — the first stage
+/// adds the embedding, the last adds the LM head, so their latency laws
+/// differ from a middle cell's and deserve separate fits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageRole {
+    /// Stage 0 of a ≥2-stage pipeline: embed + transformer layers.
+    First,
+    /// Interior stage: transformer layers only.
+    Middle,
+    /// Last stage: transformer layers + head loss/VJP. A single-stage
+    /// pipeline maps here (it carries the head; the embed rides along).
+    Last,
+}
+
+impl StageRole {
+    pub fn of(stage: usize, num_stages: usize) -> StageRole {
+        assert!(stage < num_stages);
+        if stage == 0 && num_stages > 1 {
+            StageRole::First
+        } else if stage == num_stages - 1 {
+            StageRole::Last
+        } else {
+            StageRole::Middle
+        }
+    }
+}
+
+/// One Eq. 9 fit per stage role — the per-stage cost tables the planner
+/// and the exec↔sim differential consume instead of a single
+/// representative-cell model.
+#[derive(Debug, Clone)]
+pub struct StageModels {
+    pub first: LinearCtxModel,
+    pub middle: LinearCtxModel,
+    pub last: LinearCtxModel,
+}
+
+impl StageModels {
+    pub fn for_stage(&self, stage: usize, num_stages: usize) -> &LinearCtxModel {
+        match StageRole::of(stage, num_stages) {
+            StageRole::First => &self.first,
+            StageRole::Middle => &self.middle,
+            StageRole::Last => &self.last,
+        }
+    }
+}
+
 /// Anything whose slice latency can be measured: returns wall-clock ms for
 /// one (slice_len, ctx_len) execution.
 pub trait SliceTimer {

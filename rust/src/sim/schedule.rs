@@ -83,6 +83,42 @@ pub fn stream_plan(durs: &[f64], stages: usize) -> Plan {
     Plan { stages, items, mem_cap_parts: None, flush_barrier: false }
 }
 
+/// [`stream_plan`] with per-stage durations: `durs[s][i]` is slice `i`'s
+/// time on stage `s` — the shape per-stage cost models
+/// ([`crate::perfmodel::measure::StageModels`]) produce, where the first
+/// stage carries the embedding and the last the LM head. Same dependency
+/// structure as [`stream_plan`]; the wavefront recurrence is exact on
+/// per-item durations, so the plan stays regular.
+pub fn stream_plan_per_stage(durs: &[Vec<f64>]) -> Plan {
+    let stages = durs.len();
+    assert!(stages >= 1);
+    let m = durs[0].len();
+    assert!(m >= 1 && durs.iter().all(|d| d.len() == m), "ragged per-stage durations");
+    let mut items = Vec::with_capacity(m * stages);
+    for (s, stage_durs) in durs.iter().enumerate() {
+        for (i, &d) in stage_durs.iter().enumerate() {
+            let mut deps = Vec::new();
+            if s > 0 {
+                deps.push(((s - 1) * m + i, 0.0));
+            }
+            if i > 0 {
+                deps.push((s * m + i - 1, 0.0));
+            }
+            items.push(Item {
+                id: s * m + i,
+                stage: s,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: i,
+                dur_ms: d,
+                deps,
+                priority: (s * m + i) as u64,
+            });
+        }
+    }
+    Plan { stages, items, mem_cap_parts: None, flush_barrier: false }
+}
+
 /// Build the simulator plan for a joint (batch, token) scheme on a
 /// `stages`-deep pipeline.
 pub fn build_plan<C: PhaseCost>(
@@ -239,6 +275,21 @@ mod tests {
         let r = simulate(&p).unwrap();
         // Σt + (K-1)·max t = 6 + 3·3
         assert!((r.makespan_ms - 15.0).abs() < 1e-9, "{}", r.makespan_ms);
+    }
+
+    #[test]
+    fn per_stage_stream_plan_is_regular_and_uses_stage_durs() {
+        let p = stream_plan_per_stage(&[vec![1.0, 1.0], vec![3.0, 3.0]]);
+        assert!(crate::sim::wavefront::is_regular(&p));
+        // F(0,0)@0-1, F(0,1)@1-2; F(1,0)@1-4, F(1,1)@4-7
+        let r = simulate(&p).unwrap();
+        assert!((r.makespan_ms - 7.0).abs() < 1e-9, "{}", r.makespan_ms);
+        // uniform per-stage durations must agree with stream_plan exactly
+        let durs = [1.0, 3.0, 2.0];
+        let a = simulate(&stream_plan_per_stage(&[durs.to_vec(), durs.to_vec(), durs.to_vec()]))
+            .unwrap();
+        let b = simulate(&stream_plan(&durs, 3)).unwrap();
+        assert_eq!(a.makespan_ms, b.makespan_ms);
     }
 
     #[test]

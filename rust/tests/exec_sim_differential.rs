@@ -4,14 +4,17 @@
 //! assert that `sim::wavefront` on the **fitted** model predicts the
 //! **executed** forward-sweep makespan.
 //!
-//! Stated tolerance: 60 % relative. The fitted model is a single cell's
-//! bilinear law, while the executed pipeline mixes stage roles (embedding
-//! on stage 0, LM head on the last), OS scheduler noise on shared CI
-//! boxes, and channel dispatch overhead — the contract being pinned is
-//! that measure → fit → wavefront lands in the same regime as the real
-//! execution (the property the planner's decisions ride on), not perf
-//! reproducibility at simulator precision. `TERAPIPE_EXEC_STRICT=1`
-//! tightens to 30 % for quiet local machines.
+//! Fits are **per stage**: stage 0's samples include the embedding,
+//! the last stage's include the head loss, so each stage gets its own
+//! Eq. 9 model and the wavefront replays per-stage durations
+//! (`stream_plan_per_stage`). That — plus the blocked kernels making the
+//! cell latency far less noise-dominated — is what lets the tolerance sit
+//! at 35 % (down from the pre-per-stage 60 %): the residual slack covers
+//! OS scheduler noise on shared CI boxes and channel dispatch overhead,
+//! while the property pinned is that measure → fit → wavefront lands in
+//! the same regime as the real execution (what the planner's decisions
+//! ride on), not perf reproducibility at simulator precision.
+//! `TERAPIPE_EXEC_STRICT=1` tightens to 20 % for quiet local machines.
 
 use std::collections::HashMap;
 
@@ -21,10 +24,11 @@ use terapipe::data::{synthetic_corpus, Batcher};
 use terapipe::perfmodel::measure::Measurements;
 use terapipe::perfmodel::{measure, CostModel};
 use terapipe::runtime::manifest::ModelDims;
-use terapipe::sim::schedule::stream_plan;
+use terapipe::sim::schedule::stream_plan_per_stage;
 use terapipe::sim::wavefront;
 
 const GRAN: usize = 4;
+const STAGES: usize = 2;
 
 fn spec() -> NativeSpec {
     NativeSpec::new(
@@ -33,7 +37,7 @@ fn spec() -> NativeSpec {
             hidden: 32,
             num_heads: 4,
             layers_per_stage: 1,
-            num_stages: 2,
+            num_stages: STAGES,
             seq_len: 32,
             batch: 2,
             block_ctx: 8,
@@ -43,9 +47,9 @@ fn spec() -> NativeSpec {
     )
 }
 
-/// One traced run: returns the per-(i, j) forward samples (all stages)
-/// and the executed forward-sweep makespans of the non-warmup steps.
-fn traced_run(slicing: &[usize], steps: usize) -> (Vec<(u32, u32, f64)>, Vec<f64>) {
+/// One traced run: returns the per-(stage, i, j) forward samples and the
+/// executed forward-sweep makespans of the non-warmup steps.
+fn traced_run(slicing: &[usize], steps: usize) -> (Vec<(usize, u32, u32, f64)>, Vec<f64>) {
     let cfg = TrainConfig {
         slicing: slicing.to_vec(),
         steps,
@@ -68,7 +72,7 @@ fn traced_run(slicing: &[usize], steps: usize) -> (Vec<(u32, u32, f64)>, Vec<f64
         fwd_makespans.push(fwd_ms);
         for s in t.last_timings() {
             if s.phase == TimedPhase::Fwd {
-                samples.push((s.len as u32, s.off as u32, s.ms));
+                samples.push((s.stage, s.len as u32, s.off as u32, s.ms));
             }
         }
     }
@@ -84,53 +88,60 @@ fn median(mut v: Vec<f64>) -> f64 {
 #[test]
 fn wavefront_on_fitted_model_predicts_executed_makespan() {
     let strict = std::env::var("TERAPIPE_EXEC_STRICT").is_ok();
-    let tol = if strict { 0.30 } else { 0.60 };
+    let tol = if strict { 0.20 } else { 0.35 };
     let slicings: [&[usize]; 3] = [&[8, 8, 8, 8], &[16, 16], &[4, 4, 8, 16]];
     let steps = 5;
 
-    // ---- execute with trace, pooling samples across slicings so the
-    // fit sees enough (i, j) variety to be well-posed ----
-    let mut all: HashMap<(u32, u32), Vec<f64>> = HashMap::new();
+    // ---- execute with trace, pooling samples across slicings so each
+    // stage's fit sees enough (i, j) variety to be well-posed ----
+    let mut all: Vec<HashMap<(u32, u32), Vec<f64>>> = vec![HashMap::new(); STAGES];
     let mut executed: Vec<f64> = Vec::new();
     for sl in slicings {
         let (samples, makespans) = traced_run(sl, steps);
-        for (i, j, ms) in samples {
-            all.entry((i, j)).or_default().push(ms);
+        for (stage, i, j, ms) in samples {
+            all[stage].entry((i, j)).or_default().push(ms);
         }
         executed.push(median(makespans));
     }
 
-    // ---- feed the measured per-slice timings into perfmodel ----
-    let mut base = Vec::new();
-    let mut ctx_samples = Vec::new();
-    for (&(i, j), v) in &all {
-        let ms = median(v.clone());
-        if j == 0 {
-            base.push((i, ms));
-        } else {
-            ctx_samples.push((i, j, ms));
+    // ---- per-stage measure → fit (stage 0 carries the embedding, the
+    // last stage the head, so their latency laws differ) ----
+    let mut fits = Vec::with_capacity(STAGES);
+    for stage_samples in &all {
+        let mut base = Vec::new();
+        let mut ctx_samples = Vec::new();
+        for (&(i, j), v) in stage_samples {
+            let ms = median(v.clone());
+            if j == 0 {
+                base.push((i, ms));
+            } else {
+                ctx_samples.push((i, j, ms));
+            }
         }
+        assert!(base.len() >= 3, "base curve too thin: {base:?}");
+        assert!(ctx_samples.len() >= 4, "ctx samples too thin: {ctx_samples:?}");
+        let meas = Measurements {
+            granularity: GRAN as u32,
+            base,
+            ctx_samples,
+            repeats: (steps - 1) as u32,
+        };
+        fits.push(measure::fit(&meas, spec().model.seq_len as u32).unwrap());
     }
-    assert!(base.len() >= 3, "base curve too thin: {base:?}");
-    assert!(ctx_samples.len() >= 4, "ctx samples too thin: {ctx_samples:?}");
-    let meas = Measurements {
-        granularity: GRAN as u32,
-        base,
-        ctx_samples,
-        repeats: (steps - 1) as u32,
-    };
-    let fitted = measure::fit(&meas, spec().model.seq_len as u32).unwrap();
 
-    // ---- wavefront-predict each executed schedule from the fit ----
-    let stages = spec().model.num_stages;
+    // ---- wavefront-predict each executed schedule from the fits ----
     for (sl, exec_ms) in slicings.iter().zip(&executed) {
-        let mut durs = Vec::with_capacity(sl.len());
-        let mut off = 0u32;
-        for &len in sl.iter() {
-            durs.push(fitted.t(len as u32, off));
-            off += len as u32;
+        let mut durs: Vec<Vec<f64>> = Vec::with_capacity(STAGES);
+        for fitted in &fits {
+            let mut stage_durs = Vec::with_capacity(sl.len());
+            let mut off = 0u32;
+            for &len in sl.iter() {
+                stage_durs.push(fitted.t(len as u32, off));
+                off += len as u32;
+            }
+            durs.push(stage_durs);
         }
-        let plan = stream_plan(&durs, stages);
+        let plan = stream_plan_per_stage(&durs);
         assert!(wavefront::is_regular(&plan), "replay stream must be regular");
         let predicted = wavefront::evaluate(&plan, false).unwrap().makespan_ms;
         assert!(predicted > 0.0);

@@ -1,0 +1,202 @@
+//! Property suite for the blocked kernel layer (`backend::math`).
+//!
+//! Two contracts are pinned here, both load-bearing for the measure →
+//! plan → execute loop:
+//!
+//! 1. **Blocked ≡ naive.** The cache-blocked/packed matmul family must
+//!    agree with the simple reference loops (`*_ref`) — *bit for bit* for
+//!    `matmul`/`matmul_nt` (each output element is accumulated in the
+//!    same strictly ascending contraction order with one accumulator, and
+//!    Rust does not contract mul+add into FMA), within tolerance for
+//!    `matmul_tn`'s chunk-reduced parallel path — on randomized shapes
+//!    including remainder tiles (M, K, N not multiples of the block
+//!    sizes).
+//! 2. **Thread-count independence.** Every kernel with a parallel path
+//!    returns bit-identical results under rayon pools of 1, 2 and 8
+//!    threads — the determinism contract `backend/README.md` documents.
+
+use terapipe::backend::math::{
+    add_bias, add_into, colsum_into, gelu, gelu_grad_mul, layernorm, layernorm_bwd, matmul,
+    matmul_nt, matmul_nt_ref, matmul_ref, matmul_tn, matmul_tn_ref,
+};
+
+/// SplitMix64 → f32 in [-1, 1): deterministic test data.
+fn rnd(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^= z >> 31;
+            (z >> 40) as f32 / (1u64 << 23) as f32 - 1.0
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random dims in [1, 96] — small enough to stay fast, large enough to
+/// cross MR/NR tile boundaries with remainders in every position.
+fn random_shapes(count: usize, seed: u64) -> Vec<(usize, usize, usize)> {
+    let dims = rnd(3 * count, seed);
+    (0..count)
+        .map(|i| {
+            let d = |x: f32| ((x + 1.0) * 47.5) as usize + 1;
+            (d(dims[3 * i]), d(dims[3 * i + 1]), d(dims[3 * i + 2]))
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_matmul_matches_ref_bit_for_bit() {
+    // hand-picked remainder/edge shapes + serial and both parallel paths
+    let mut shapes = vec![
+        (1, 1, 1),
+        (3, 5, 2),
+        (13, 7, 9),
+        (65, 33, 50),
+        (4, 8, 8),
+        (130, 70, 90),  // row-block parallel (work ≥ PAR_THRESHOLD, m ≥ 2·MR)
+        (1, 520, 260),  // skinny-M parallel: column tiles
+        (3, 260, 120),  // skinny-M parallel with remainder rows
+    ];
+    shapes.extend(random_shapes(16, 42));
+    for (m, k, n) in shapes {
+        let a = rnd(m * k, 1);
+        let b = rnd(k * n, 2);
+        assert_eq!(
+            bits(&matmul(&a, &b, m, k, n)),
+            bits(&matmul_ref(&a, &b, m, k, n)),
+            "matmul ({m},{k},{n})"
+        );
+    }
+}
+
+#[test]
+fn blocked_matmul_nt_matches_ref_bit_for_bit() {
+    let mut shapes = vec![
+        (1, 1, 1),
+        (5, 3, 2),
+        (13, 9, 7),
+        (65, 50, 33),
+        (130, 90, 70),
+        (1, 520, 260),
+    ];
+    shapes.extend(random_shapes(16, 43));
+    for (m, n, k) in shapes {
+        let a = rnd(m * n, 3);
+        let b = rnd(k * n, 4);
+        assert_eq!(
+            bits(&matmul_nt(&a, &b, m, n, k)),
+            bits(&matmul_nt_ref(&a, &b, m, n, k)),
+            "matmul_nt ({m},{n},{k})"
+        );
+    }
+}
+
+#[test]
+fn matmul_tn_serial_bitwise_parallel_within_tolerance() {
+    // below the parallel threshold the panel-blocked accumulation keeps
+    // the reference's per-element ascending-r association: bit-identical
+    for (m, k, n) in [(9usize, 7usize, 13usize), (33, 17, 29), (4, 8, 8)] {
+        let a = rnd(m * k, 5);
+        let b = rnd(m * n, 6);
+        assert_eq!(
+            bits(&matmul_tn(&a, &b, m, k, n)),
+            bits(&matmul_tn_ref(&a, &b, m, k, n)),
+            "matmul_tn serial ({m},{k},{n})"
+        );
+    }
+    // the parallel path reduces over fixed row chunks — a different (but
+    // deterministic) association, so compare to the ref with tolerance
+    let (m, k, n) = (160, 40, 48);
+    let a = rnd(m * k, 7);
+    let b = rnd(m * n, 8);
+    let got = matmul_tn(&a, &b, m, k, n);
+    let want = matmul_tn_ref(&a, &b, m, k, n);
+    for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+        assert!((x - y).abs() < 1e-3, "matmul_tn parallel [{i}]: {x} vs {y}");
+    }
+}
+
+/// Run every kernel with a parallel path on above-threshold shapes and
+/// return the output bit patterns.
+fn run_all_parallel_kernels() -> Vec<Vec<u32>> {
+    let mut outs = Vec::new();
+    // matmul: row-block parallel + skinny-M column-tile parallel
+    let a = rnd(130 * 70, 10);
+    let b = rnd(70 * 90, 11);
+    outs.push(bits(&matmul(&a, &b, 130, 70, 90)));
+    let a1 = rnd(520, 12);
+    let b1 = rnd(520 * 260, 13);
+    outs.push(bits(&matmul(&a1, &b1, 1, 520, 260)));
+    // matmul_nt, both paths
+    let a2 = rnd(130 * 90, 14);
+    let b2 = rnd(70 * 90, 15);
+    outs.push(bits(&matmul_nt(&a2, &b2, 130, 90, 70)));
+    let a3 = rnd(260, 30);
+    let b3 = rnd(520 * 260, 31);
+    outs.push(bits(&matmul_nt(&a3, &b3, 1, 260, 520)));
+    // matmul_tn (chunked cross-row reduction)
+    let a4 = rnd(160 * 40, 16);
+    let b4 = rnd(160 * 48, 17);
+    outs.push(bits(&matmul_tn(&a4, &b4, 160, 40, 48)));
+    // add_bias
+    let mut x = rnd(1024 * 128, 18);
+    let bias = rnd(128, 19);
+    add_bias(&mut x, &bias);
+    outs.push(bits(&x));
+    // colsum (column-block parallel)
+    let g = rnd(512 * 256, 20);
+    let mut cs = vec![0f32; 256];
+    colsum_into(&g, 256, &mut cs);
+    outs.push(bits(&cs));
+    // add_into (element-chunk parallel)
+    let mut d = rnd(1 << 17, 21);
+    let s = rnd(1 << 17, 22);
+    add_into(&mut d, &s);
+    outs.push(bits(&d));
+    // layernorm fwd + bwd (row-parallel; bwd has the chunked reduction)
+    let xl = rnd(1024 * 128, 23);
+    let gm = rnd(128, 24);
+    let bt = rnd(128, 25);
+    let (y, stats) = layernorm(&xl, &gm, &bt, 128);
+    outs.push(bits(&y));
+    let gy = rnd(1024 * 128, 26);
+    let mut gg = vec![0f32; 128];
+    let mut gb = vec![0f32; 128];
+    let gx = layernorm_bwd(&xl, &stats, &gm, &gy, 128, &mut gg, &mut gb);
+    outs.push(bits(&gx));
+    outs.push(bits(&gg));
+    outs.push(bits(&gb));
+    // gelu fwd + fused grad-multiply
+    let xg = rnd(1 << 17, 27);
+    outs.push(bits(&gelu(&xg)));
+    let mut gmu = rnd(1 << 17, 28);
+    gelu_grad_mul(&xg, &mut gmu);
+    outs.push(bits(&gmu));
+    outs
+}
+
+#[test]
+fn every_parallel_kernel_is_bit_identical_across_thread_counts() {
+    let run = |threads: usize| -> Vec<Vec<u32>> {
+        rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .unwrap()
+            .install(run_all_parallel_kernels)
+    };
+    let baseline = run(1);
+    for threads in [2usize, 8] {
+        let got = run(threads);
+        assert_eq!(baseline.len(), got.len());
+        for (i, (a, b)) in baseline.iter().zip(&got).enumerate() {
+            assert_eq!(a, b, "kernel output #{i} differs between 1 and {threads} threads");
+        }
+    }
+}
