@@ -278,7 +278,7 @@ fn main() {
     for step in 0..steps {
         let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
         let allocs_before = ALLOCS.load(Ordering::SeqCst);
-        let (res, wall_ms) = time_ms(|| t.step(step, &batches));
+        let (res, wall_ms) = time_ms(|| t.step(&batches));
         res.expect("bench step");
         if step == 0 {
             continue; // warmup: cold caches, lazy thread spin-up

@@ -47,6 +47,37 @@ pub enum Msg {
     Shutdown,
 }
 
+impl Msg {
+    /// Approximate wire size in bytes — what a serialized send would
+    /// cost. Drives the bandwidth term of the virtual transport
+    /// ([`crate::coordinator::transport::virt`]); control messages count
+    /// a small fixed header.
+    pub fn approx_bytes(&self) -> usize {
+        const HEADER: usize = 64;
+        match self {
+            Msg::Fwd { payload, targets, .. } => {
+                let p = match payload {
+                    FwdPayload::Tokens(t) => 4 * t.len(),
+                    FwdPayload::Act(h) => 4 * h.len(),
+                };
+                HEADER + p + 4 * targets.len()
+            }
+            Msg::Bwd { g_h, .. } => HEADER + 4 * g_h.len(),
+            Msg::Update { .. } | Msg::Checkpoint { .. } | Msg::Shutdown => HEADER,
+        }
+    }
+
+    /// Token-slice length for payload messages (the cost model's `i`),
+    /// `None` for control messages. Lets per-link delivery metrics be
+    /// grouped by slice length when fitting `t_comm`.
+    pub fn slice_len(&self) -> Option<usize> {
+        match self {
+            Msg::Fwd { len, .. } | Msg::Bwd { len, .. } => Some(*len),
+            _ => None,
+        }
+    }
+}
+
 /// Which half of a slice's work a timing sample covers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TimedPhase {
@@ -87,4 +118,14 @@ pub enum DriverMsg {
     CheckpointDone { stage: usize },
     /// A worker hit an unrecoverable error.
     Fatal { stage: usize, error: String },
+}
+
+impl DriverMsg {
+    /// Approximate wire size — driver-bound messages are all small.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            DriverMsg::Fatal { error, .. } => 64 + error.len(),
+            _ => 64,
+        }
+    }
 }

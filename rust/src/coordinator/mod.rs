@@ -5,7 +5,9 @@
 //! [`crate::backend::StageBackend`] — parameters, Adam state and the
 //! slice compute (the native CPU cell by default; AOT PJRT executables
 //! behind the `pjrt` feature). Token slices flow downstream as
-//! [`crate::runtime::tensor::HostTensor`] activations over mpsc channels;
+//! [`crate::runtime::tensor::HostTensor`] activations over a pluggable
+//! [`transport::Transport`] fabric (in-process channels by default, the
+//! deterministic fault-injecting virtual network in tests);
 //! gradients flow back upstream in reverse slice order, carrying the
 //! context-gradient accumulation that makes the pipelined backward
 //! *exactly* equal the unsliced one (validated by
@@ -32,14 +34,22 @@
 
 pub mod messages;
 pub mod trainer;
+pub mod transport;
 pub mod worker;
 
 pub use messages::{SliceTime, TimedPhase};
 #[cfg(feature = "pjrt")]
 pub use trainer::train;
 pub use trainer::{train_native, DriftReplanReport, StepReport, Trainer};
+pub use transport::{InProcTransport, Transport, VirtualTransport};
 
 use anyhow::{bail, Result};
+
+/// Default driver recv deadline (ms): generous enough that no healthy
+/// pipeline — however slow the hardware — ever trips it between two
+/// consecutive driver messages, small enough that a wedged run fails in
+/// minutes instead of hanging a CI job to its global timeout.
+pub const DEFAULT_RECV_TIMEOUT_MS: u64 = 120_000;
 
 /// Training-run configuration.
 #[derive(Debug, Clone)]
@@ -63,6 +73,13 @@ pub struct TrainConfig {
     /// Collect per-slice fwd/bwd wall-clock samples every step
     /// ([`Trainer::last_timings`]). Implied by `replan_every`.
     pub trace: bool,
+    /// Driver-side *inactivity* deadline per collect loop (step, update,
+    /// checkpoint): if no driver message arrives for this long, the step
+    /// fails with a progress diagnostic instead of blocking forever on a
+    /// dead stage or a dropped message. Any arrival resets it, so it
+    /// bounds silence, not step duration. `None` waits forever (the
+    /// pre-deadline behavior).
+    pub recv_timeout_ms: Option<u64>,
 }
 
 impl Default for TrainConfig {
@@ -75,6 +92,7 @@ impl Default for TrainConfig {
             seed: 0,
             replan_every: None,
             trace: false,
+            recv_timeout_ms: Some(DEFAULT_RECV_TIMEOUT_MS),
         }
     }
 }
@@ -99,6 +117,9 @@ impl TrainConfig {
         }
         if self.replan_every == Some(0) {
             bail!("replan_every must be ≥ 1 when set");
+        }
+        if self.recv_timeout_ms == Some(0) {
+            bail!("recv_timeout_ms must be ≥ 1 when set (use None to wait forever)");
         }
         Ok(())
     }
@@ -140,6 +161,16 @@ mod tests {
         assert!(c.validate(128, &[16, 32, 64]).is_err()); // not buckets
         c.slicing = vec![];
         assert!(c.validate(128, &[16]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_recv_timeout() {
+        let c = TrainConfig {
+            slicing: vec![64, 64],
+            recv_timeout_ms: Some(0),
+            ..Default::default()
+        };
+        assert!(c.validate(128, &[64]).is_err());
     }
 
     #[test]

@@ -1,17 +1,25 @@
 //! The driver: spawns stage workers, streams token slices into the
 //! pipeline, collects losses and timing samples, and coordinates
 //! optimizer updates. Generic over the stage backend via
-//! [`BackendSpec`] — the native CPU backend in the default build, PJRT
-//! behind the feature.
+//! [`BackendSpec`], and over the message fabric via
+//! [`transport::Transport`] — in-process channels by default, the
+//! deterministic virtual network for fault injection.
+//!
+//! Every driver collect loop (step, update, checkpoint) is bounded by
+//! `TrainConfig::recv_timeout_ms`, an *inactivity* deadline: any
+//! arrival resets it, so slow-but-alive pipelines are never killed,
+//! while a dead stage or a dropped message fails the step with a
+//! progress diagnostic instead of hanging `recv()` forever.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::messages::{DriverMsg, FwdPayload, Msg, SliceTime, TimedPhase};
+use super::transport::{DriverRecv, DriverRx, Fabric, InProcTransport, MsgTx, Transport};
 use super::worker::{run_worker, WorkerCfg};
 use super::TrainConfig;
 use crate::backend::BackendSpec;
@@ -49,7 +57,7 @@ pub struct DriftReplanReport {
     pub samples_seen: usize,
 }
 
-/// A running pipeline: workers + channel endpoints.
+/// A running pipeline: workers + transport endpoints.
 pub struct Trainer<S: BackendSpec> {
     pub model: ModelDims,
     /// Slice lengths the backend supports (the planner's bucket set).
@@ -57,9 +65,9 @@ pub struct Trainer<S: BackendSpec> {
     cfg: TrainConfig,
     /// Global step counter (continues across checkpoint resume).
     steps_done: usize,
-    to_first: Sender<Msg>,
-    to_all: Vec<Sender<Msg>>,
-    from_workers: Receiver<DriverMsg>,
+    /// Driver→stage senders, one per stage (stage 0 takes the slices).
+    to_all: Vec<Box<dyn MsgTx>>,
+    from_workers: Box<dyn DriverRx>,
     handles: Vec<JoinHandle<()>>,
     /// Per-slice timing samples collected during the most recent step.
     timings: Vec<SliceTime>,
@@ -67,7 +75,7 @@ pub struct Trainer<S: BackendSpec> {
 
 impl<S: BackendSpec> Trainer<S> {
     /// Spawn one worker thread per stage, each building its own backend
-    /// from `spec` on its own thread.
+    /// from `spec` on its own thread. In-process transport.
     pub fn with_spec(spec: S, cfg: TrainConfig) -> Result<Trainer<S>> {
         Self::with_spec_resume(spec, cfg, None)
     }
@@ -79,33 +87,46 @@ impl<S: BackendSpec> Trainer<S> {
         cfg: TrainConfig,
         resume_from: Option<PathBuf>,
     ) -> Result<Trainer<S>> {
+        Self::with_spec_transport_resume(spec, cfg, &InProcTransport, resume_from)
+    }
+
+    /// Like [`Trainer::with_spec`], over an explicit transport — e.g. a
+    /// [`super::transport::VirtualTransport`] for deterministic fault
+    /// injection.
+    pub fn with_spec_transport<T: Transport>(
+        spec: S,
+        cfg: TrainConfig,
+        transport: &T,
+    ) -> Result<Trainer<S>> {
+        Self::with_spec_transport_resume(spec, cfg, transport, None)
+    }
+
+    /// The fully general constructor: backend spec × transport × resume.
+    pub fn with_spec_transport_resume<T: Transport>(
+        spec: S,
+        cfg: TrainConfig,
+        transport: &T,
+        resume_from: Option<PathBuf>,
+    ) -> Result<Trainer<S>> {
         let model = spec.model();
         let buckets = spec.buckets();
         cfg.validate(model.seq_len, &buckets)?;
         let k = model.num_stages;
         let timings = cfg.trace || cfg.replan_every.is_some();
 
-        let (driver_tx, from_workers) = channel::<DriverMsg>();
-        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(k);
-        let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(k);
-        for _ in 0..k {
-            let (tx, rx) = channel::<Msg>();
-            senders.push(tx);
-            receivers.push(Some(rx));
+        let Fabric { to_stages, from_workers, stages } = transport.connect(k);
+        if to_stages.len() != k || stages.len() != k {
+            bail!("transport wired {} stages, model has {k}", stages.len());
         }
-
         let mut handles = Vec::with_capacity(k);
-        for stage in 0..k {
+        for (stage, endpoint) in stages.into_iter().enumerate() {
             let cfg_w = WorkerCfg {
                 stage,
                 num_stages: k,
                 spec: spec.clone(),
                 resume_from: resume_from.clone(),
                 timings,
-                inbox: receivers[stage].take().unwrap(),
-                next: (stage + 1 < k).then(|| senders[stage + 1].clone()),
-                prev: (stage > 0).then(|| senders[stage - 1].clone()),
-                driver: driver_tx.clone(),
+                endpoint,
             };
             handles.push(
                 std::thread::Builder::new()
@@ -126,38 +147,58 @@ impl<S: BackendSpec> Trainer<S> {
             buckets,
             cfg,
             steps_done,
-            to_first: senders[0].clone(),
-            to_all: senders,
+            to_all: to_stages,
             from_workers,
             handles,
             timings: Vec::new(),
         })
     }
 
+    /// One deadline-bounded driver receive. `progress` renders the
+    /// collect loop's state into the diagnostic (only on failure).
+    fn recv_driver(&mut self, phase: &str, progress: impl FnOnce() -> String) -> Result<DriverMsg> {
+        match self.cfg.recv_timeout_ms {
+            None => match self.from_workers.recv() {
+                Ok(m) => Ok(m),
+                Err(_) => bail!("all workers hung up during {phase} ({})", progress()),
+            },
+            Some(ms) => match self.from_workers.recv_timeout(Duration::from_millis(ms)) {
+                DriverRecv::Msg(m) => Ok(m),
+                DriverRecv::Disconnected => {
+                    bail!("all workers hung up during {phase} ({})", progress())
+                }
+                DriverRecv::TimedOut => bail!(
+                    "no driver message for {ms} ms during {phase}: a stage is dead, wedged, \
+                     or a message was dropped ({})",
+                    progress()
+                ),
+            },
+        }
+    }
+
     /// One synchronous training step over `microbatches` batches.
     /// Returns (mean per-token loss, tokens processed, fwd makespan ms).
-    pub fn step(&mut self, step_idx: usize, batches: &[Batch]) -> Result<(f64, usize, f64)> {
-        let m = &self.model;
-        let cfg = &self.cfg;
-        assert_eq!(batches.len(), cfg.microbatches);
-        let offs = cfg.offsets();
-        let num_slices = cfg.slicing.len();
+    pub fn step(&mut self, batches: &[Batch]) -> Result<(f64, usize, f64)> {
+        assert_eq!(batches.len(), self.cfg.microbatches);
+        let offs = self.cfg.offsets();
+        let num_slices = self.cfg.slicing.len();
+        let lr = self.cfg.lr;
         self.timings.clear();
         let t0 = Instant::now();
 
         // ---- stream forward slices into the pipe ----
         for (mb, batch) in batches.iter().enumerate() {
-            assert_eq!(batch.batch, m.batch);
-            assert_eq!(batch.seq_len, m.seq_len);
-            for (i, (&len, &off)) in cfg.slicing.iter().zip(&offs).enumerate() {
-                let mut tokens = Vec::with_capacity(m.batch * len);
-                let mut targets = Vec::with_capacity(m.batch * len);
-                for b in 0..m.batch {
-                    let row = b * m.seq_len + off;
+            assert_eq!(batch.batch, self.model.batch);
+            assert_eq!(batch.seq_len, self.model.seq_len);
+            for (i, (&len, &off)) in self.cfg.slicing.iter().zip(&offs).enumerate() {
+                let mut tokens = Vec::with_capacity(self.model.batch * len);
+                let mut targets = Vec::with_capacity(self.model.batch * len);
+                for b in 0..self.model.batch {
+                    let row = b * self.model.seq_len + off;
                     tokens.extend_from_slice(&batch.tokens[row..row + len]);
                     targets.extend_from_slice(&batch.targets[row..row + len]);
                 }
-                self.to_first
+                self.to_all[0]
                     .send(Msg::Fwd {
                         mb,
                         slice: i,
@@ -172,48 +213,49 @@ impl<S: BackendSpec> Trainer<S> {
         }
 
         // ---- collect losses and backward completions ----
-        let expected = cfg.microbatches * num_slices;
+        let expected = self.cfg.microbatches * num_slices;
         let mut losses = 0f64;
         let mut loss_cnt = 0usize;
         let mut bwd_done = 0usize;
         let mut fwd_ms = 0f64;
         while loss_cnt < expected || bwd_done < expected {
-            match self.from_workers.recv() {
-                Ok(DriverMsg::Loss { loss_sum, .. }) => {
+            let msg = self.recv_driver("step", || {
+                format!("{loss_cnt}/{expected} losses, {bwd_done}/{expected} backward acks")
+            })?;
+            match msg {
+                DriverMsg::Loss { loss_sum, .. } => {
                     losses += loss_sum as f64;
                     loss_cnt += 1;
                     if loss_cnt == expected {
                         fwd_ms = t0.elapsed().as_secs_f64() * 1e3;
                     }
                 }
-                Ok(DriverMsg::BwdDone { .. }) => bwd_done += 1,
-                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
-                Ok(DriverMsg::Fatal { stage, error }) => {
-                    bail!("stage {stage} failed: {error}")
-                }
-                Ok(other) => bail!("unexpected {other:?} mid-step"),
-                Err(_) => bail!("all workers hung up"),
+                DriverMsg::BwdDone { .. } => bwd_done += 1,
+                DriverMsg::SliceTime(t) => self.timings.push(t),
+                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                other => bail!("unexpected {other:?} mid-step"),
             }
         }
 
         // ---- optimizer update on every stage ----
         let global_step = self.steps_done + 1; // 1-based Adam bias correction
-        let _ = step_idx;
         for tx in &self.to_all {
             tx.send(Msg::Update {
                 step: global_step as i32,
-                lr: cfg.lr,
+                lr,
             })
             .map_err(|_| anyhow!("worker hung up before update"))?;
         }
+        let expected_updates = self.to_all.len();
         let mut updates = 0;
-        while updates < self.to_all.len() {
-            match self.from_workers.recv() {
-                Ok(DriverMsg::UpdateDone { .. }) => updates += 1,
-                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
-                Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
-                Ok(_) => bail!("unexpected message during update"),
-                Err(_) => bail!("all workers hung up"),
+        while updates < expected_updates {
+            let msg = self
+                .recv_driver("update", || format!("{updates}/{expected_updates} update acks"))?;
+            match msg {
+                DriverMsg::UpdateDone { .. } => updates += 1,
+                DriverMsg::SliceTime(t) => self.timings.push(t),
+                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                _ => bail!("unexpected message during update"),
             }
         }
 
@@ -244,7 +286,7 @@ impl<S: BackendSpec> Trainer<S> {
     ) -> Result<StepReport> {
         let batches: Vec<Batch> = (0..self.cfg.microbatches).map(|_| next_batch()).collect();
         let t0 = Instant::now();
-        let (loss, tokens, fwd_ms) = self.step(step, &batches)?;
+        let (loss, tokens, fwd_ms) = self.step(&batches)?;
         Ok(StepReport {
             step,
             loss,
@@ -359,28 +401,24 @@ impl<S: BackendSpec> Trainer<S> {
             }
             let rep = self.run_one_step(step, &mut next_batch)?;
             // fold this step's stage-0 samples into the window: one
-            // combined fwd+bwd latency per (mb, slice)
-            let mut fwd: Vec<(usize, usize, usize, usize, f64)> = Vec::new();
+            // combined fwd+bwd latency per (mb, slice), paired through a
+            // single-pass map instead of a per-sample linear scan
+            let mut bwd_ms: HashMap<(usize, usize), f64> = HashMap::new();
             for t in &self.timings {
-                if t.stage == 0 && t.phase == TimedPhase::Fwd {
-                    fwd.push((t.mb, t.slice, t.len, t.off, t.ms));
+                if t.stage == 0 && t.phase == TimedPhase::Bwd {
+                    bwd_ms.insert((t.mb, t.slice), t.ms);
                 }
             }
-            for (mb, slice, len, off, fwd_ms) in fwd {
-                let bwd_ms = self
-                    .timings
-                    .iter()
-                    .find(|t| {
-                        t.stage == 0 && t.phase == TimedPhase::Bwd && t.mb == mb && t.slice == slice
-                    })
-                    .map(|t| t.ms)
-                    .unwrap_or(0.0);
-                detector.push(LatencySample {
-                    i: len as u32,
-                    j: off as u32,
-                    ms: fwd_ms + bwd_ms,
-                });
-                report.samples_seen += 1;
+            for t in &self.timings {
+                if t.stage == 0 && t.phase == TimedPhase::Fwd {
+                    let bwd = bwd_ms.get(&(t.mb, t.slice)).copied().unwrap_or(0.0);
+                    detector.push(LatencySample {
+                        i: t.len as u32,
+                        j: t.off as u32,
+                        ms: t.ms + bwd,
+                    });
+                    report.samples_seen += 1;
+                }
             }
             on_step(&rep);
             reports.push(rep);
@@ -404,14 +442,16 @@ impl<S: BackendSpec> Trainer<S> {
             tx.send(Msg::Checkpoint { dir: dir.to_path_buf() })
                 .map_err(|_| anyhow!("worker hung up before checkpoint"))?;
         }
+        let expected = self.to_all.len();
         let mut done = 0;
-        while done < self.to_all.len() {
-            match self.from_workers.recv() {
-                Ok(DriverMsg::CheckpointDone { .. }) => done += 1,
-                Ok(DriverMsg::SliceTime(t)) => self.timings.push(t),
-                Ok(DriverMsg::Fatal { stage, error }) => bail!("stage {stage} failed: {error}"),
-                Ok(_) => bail!("unexpected message during checkpoint"),
-                Err(_) => bail!("all workers hung up"),
+        while done < expected {
+            let msg =
+                self.recv_driver("checkpoint", || format!("{done}/{expected} checkpoint acks"))?;
+            match msg {
+                DriverMsg::CheckpointDone { .. } => done += 1,
+                DriverMsg::SliceTime(t) => self.timings.push(t),
+                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                _ => bail!("unexpected message during checkpoint"),
             }
         }
         Ok(())

@@ -1,0 +1,122 @@
+//! The default fabric: plain in-process mpsc channels — exactly the
+//! wiring the coordinator used before the [`Transport`] trait existed.
+//! Zero injected delay, zero loss; `Disconnected` only when a peer
+//! thread has really exited. The trait layer adds one virtual dispatch
+//! per send/recv, which is noise next to a slice's compute.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::super::messages::{DriverMsg, Msg};
+use super::{
+    Disconnected, DriverRecv, DriverRx, DriverTx, Fabric, MsgRx, MsgTx, StageEndpoint, Transport,
+};
+
+/// In-process mpsc transport (the default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InProcTransport;
+
+struct ChanMsgTx(Sender<Msg>);
+
+impl MsgTx for ChanMsgTx {
+    fn send(&self, msg: Msg) -> Result<(), Disconnected> {
+        self.0.send(msg).map_err(|_| Disconnected)
+    }
+}
+
+struct ChanMsgRx(Receiver<Msg>);
+
+impl MsgRx for ChanMsgRx {
+    fn recv(&mut self) -> Result<Msg, Disconnected> {
+        self.0.recv().map_err(|_| Disconnected)
+    }
+}
+
+struct ChanDriverTx(Sender<DriverMsg>);
+
+impl DriverTx for ChanDriverTx {
+    fn send(&self, msg: DriverMsg) -> Result<(), Disconnected> {
+        self.0.send(msg).map_err(|_| Disconnected)
+    }
+
+    fn clone_box(&self) -> Box<dyn DriverTx> {
+        Box::new(ChanDriverTx(self.0.clone()))
+    }
+}
+
+struct ChanDriverRx(Receiver<DriverMsg>);
+
+impl DriverRx for ChanDriverRx {
+    fn recv(&mut self) -> Result<DriverMsg, Disconnected> {
+        self.0.recv().map_err(|_| Disconnected)
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> DriverRecv {
+        match self.0.recv_timeout(timeout) {
+            Ok(m) => DriverRecv::Msg(m),
+            Err(RecvTimeoutError::Timeout) => DriverRecv::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => DriverRecv::Disconnected,
+        }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn connect(&self, num_stages: usize) -> Fabric {
+        assert!(num_stages >= 1);
+        let (driver_tx, driver_rx) = channel::<DriverMsg>();
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(num_stages);
+        let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(num_stages);
+        for _ in 0..num_stages {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        let stages = (0..num_stages)
+            .map(|s| StageEndpoint {
+                inbox: Box::new(ChanMsgRx(receivers[s].take().unwrap())) as Box<dyn MsgRx>,
+                next: (s + 1 < num_stages)
+                    .then(|| Box::new(ChanMsgTx(senders[s + 1].clone())) as Box<dyn MsgTx>),
+                prev: (s > 0)
+                    .then(|| Box::new(ChanMsgTx(senders[s - 1].clone())) as Box<dyn MsgTx>),
+                driver: Box::new(ChanDriverTx(driver_tx.clone())),
+            })
+            .collect();
+        Fabric {
+            to_stages: senders
+                .into_iter()
+                .map(|tx| Box::new(ChanMsgTx(tx)) as Box<dyn MsgTx>)
+                .collect(),
+            from_workers: Box::new(ChanDriverRx(driver_rx)),
+            stages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_timeout() {
+        let mut fabric = InProcTransport.connect(2);
+        fabric.to_stages[0].send(Msg::Shutdown).unwrap();
+        let ep = &mut fabric.stages[0];
+        assert!(matches!(ep.inbox.recv(), Ok(Msg::Shutdown)));
+        ep.driver.send(DriverMsg::UpdateDone { stage: 0 }).unwrap();
+        match fabric.from_workers.recv_timeout(Duration::from_millis(200)) {
+            DriverRecv::Msg(DriverMsg::UpdateDone { stage: 0 }) => {}
+            other => panic!("expected UpdateDone, got {other:?}"),
+        }
+        assert!(matches!(
+            fabric.from_workers.recv_timeout(Duration::from_millis(10)),
+            DriverRecv::TimedOut
+        ));
+    }
+
+    #[test]
+    fn dropped_receiver_disconnects_sender() {
+        let fabric = InProcTransport.connect(1);
+        drop(fabric.stages);
+        assert_eq!(fabric.to_stages[0].send(Msg::Shutdown), Err(Disconnected));
+    }
+}

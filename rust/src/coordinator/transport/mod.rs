@@ -1,0 +1,177 @@
+//! The coordinator's wire: every [`Msg`]/[`DriverMsg`] between the
+//! driver and the stage workers flows through a [`Transport`].
+//!
+//! The trait exists so the *same* coordinator code runs over different
+//! fabrics: today's in-process mpsc channels ([`InProcTransport`], the
+//! default — behavior-identical to the pre-trait wiring) and a
+//! deterministic, seeded mock network ([`VirtualTransport`]) that
+//! injects per-link latency, jitter, bandwidth caps, message drops and
+//! per-stage kill-switches, recording per-link delivery metrics. The
+//! virtual fabric is what lets CI exercise the failure paths (dead
+//! stage, dropped message, slow link) deterministically, and what
+//! validates the cost model's comm term against *injected* — therefore
+//! known-true — latencies (`tests/transport_faults.rs`).
+//!
+//! # Contract
+//!
+//! * [`Transport::connect`] wires a `k`-stage pipeline: the driver gets
+//!   one [`MsgTx`] per stage plus the merged [`DriverRx`]; stage `s`
+//!   gets a [`StageEndpoint`] with its inbox, optional next/prev hops
+//!   and a driver handle.
+//! * Per-link ordering is FIFO; there is no ordering guarantee *across*
+//!   links (exactly the mpsc semantics the workers were built on).
+//! * Sends never block and never fail spuriously: `Err(Disconnected)`
+//!   means the peer is permanently gone. A transport may also drop a
+//!   message silently (lossy network) — endpoints cannot tell, which is
+//!   why the driver's collect loops carry a recv deadline
+//!   (`TrainConfig::recv_timeout_ms`).
+//! * [`DriverRx::recv_timeout`] must return [`DriverRecv::TimedOut`]
+//!   after ~`timeout` of *inactivity* — the hook the deadline sits on.
+
+pub mod inproc;
+pub mod scenario;
+pub mod virt;
+
+pub use inproc::InProcTransport;
+pub use virt::{LinkCfg, NetConfig, VirtualTransport};
+
+use std::time::Duration;
+
+use super::messages::{DriverMsg, Msg};
+
+/// The peer endpoint is permanently gone (thread exited, stage killed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "peer disconnected")
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
+/// Outcome of a deadline-bounded driver receive.
+#[derive(Debug)]
+pub enum DriverRecv {
+    Msg(DriverMsg),
+    /// No message arrived within the deadline — a stage is dead, wedged,
+    /// or a message was dropped.
+    TimedOut,
+    /// Every worker-side sender is gone.
+    Disconnected,
+}
+
+/// Sender half of a worker-bound link (driver→stage or stage→stage).
+pub trait MsgTx: Send {
+    fn send(&self, msg: Msg) -> Result<(), Disconnected>;
+}
+
+/// Receiver half of a stage inbox. `&mut` because virtual receivers keep
+/// delivery state (deadlines, kill counters).
+pub trait MsgRx: Send {
+    /// Block until the next message. `Err` means no message will ever
+    /// arrive again (all senders gone, or this stage was killed).
+    fn recv(&mut self) -> Result<Msg, Disconnected>;
+}
+
+/// Sender half of the stage→driver link. Cloneable so the worker's
+/// panic handler can hold a handle independent of the endpoint.
+pub trait DriverTx: Send {
+    fn send(&self, msg: DriverMsg) -> Result<(), Disconnected>;
+    fn clone_box(&self) -> Box<dyn DriverTx>;
+}
+
+/// Receiver half of the driver's merged inbox.
+pub trait DriverRx: Send {
+    fn recv(&mut self) -> Result<DriverMsg, Disconnected>;
+    /// Like [`DriverRx::recv`], bounded: give up after `timeout` with no
+    /// arrival. An in-flight message whose injected delay crosses the
+    /// deadline still counts as activity and is delivered.
+    fn recv_timeout(&mut self, timeout: Duration) -> DriverRecv;
+}
+
+/// One stage's view of the fabric.
+pub struct StageEndpoint {
+    /// This stage's inbox (driver + neighbor traffic, merged FIFO-per-link).
+    pub inbox: Box<dyn MsgRx>,
+    /// Forward hop to stage `s+1`, `None` on the last stage.
+    pub next: Option<Box<dyn MsgTx>>,
+    /// Backward hop to stage `s-1`, `None` on the first stage.
+    pub prev: Option<Box<dyn MsgTx>>,
+    /// Upward link to the driver (losses, timings, completions, Fatal).
+    pub driver: Box<dyn DriverTx>,
+}
+
+/// A fully wired `k`-stage pipeline, as handed to the trainer.
+pub struct Fabric {
+    /// Driver→stage senders, one per stage (index = stage).
+    pub to_stages: Vec<Box<dyn MsgTx>>,
+    /// The driver's merged inbox.
+    pub from_workers: Box<dyn DriverRx>,
+    /// Per-stage endpoints, moved into the worker threads.
+    pub stages: Vec<StageEndpoint>,
+}
+
+/// A fabric factory: wires all links of a `num_stages` pipeline.
+pub trait Transport {
+    fn connect(&self, num_stages: usize) -> Fabric;
+}
+
+/// Identity of one directed link in a `k`-stage pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkId {
+    /// Driver → stage `s` (token slices into stage 0; update, checkpoint
+    /// and shutdown control to every stage).
+    DriverTo(usize),
+    /// Stage `s` → stage `s+1` (forward activations).
+    Fwd(usize),
+    /// Stage `s` → stage `s-1` (backward gradients), `s ≥ 1`.
+    Bwd(usize),
+    /// Stage `s` → driver (losses, timings, completions, Fatal).
+    ToDriver(usize),
+}
+
+impl LinkId {
+    /// Dense index of this link among the `4k-2` links of a `k`-stage
+    /// pipeline (used for per-link RNG streams and metrics storage).
+    pub fn index(&self, k: usize) -> usize {
+        match *self {
+            LinkId::DriverTo(s) => s,
+            LinkId::Fwd(s) => k + s,
+            LinkId::Bwd(s) => k + (k - 1) + (s - 1),
+            LinkId::ToDriver(s) => k + 2 * (k - 1) + s,
+        }
+    }
+
+    /// Total link count of a `k`-stage pipeline.
+    pub fn count(k: usize) -> usize {
+        4 * k - 2
+    }
+
+    /// Enumerate every link of a `k`-stage pipeline in index order.
+    pub fn all(k: usize) -> Vec<LinkId> {
+        let mut v = Vec::with_capacity(Self::count(k));
+        v.extend((0..k).map(LinkId::DriverTo));
+        v.extend((0..k - 1).map(LinkId::Fwd));
+        v.extend((1..k).map(LinkId::Bwd));
+        v.extend((0..k).map(LinkId::ToDriver));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_indices_are_dense_and_bijective() {
+        for k in [1usize, 2, 3, 5] {
+            let all = LinkId::all(k);
+            assert_eq!(all.len(), LinkId::count(k));
+            for (i, l) in all.iter().enumerate() {
+                assert_eq!(l.index(k), i, "{l:?} in k={k}");
+            }
+        }
+    }
+}

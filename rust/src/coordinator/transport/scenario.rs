@@ -1,0 +1,195 @@
+//! Fault-scenario generator: named cluster conditions — a straggler
+//! stage, a degraded interconnect, a heterogeneous mix of link speeds —
+//! rendered as [`NetConfig`]s for the virtual fabric, plus the
+//! synthetic live-sample stream each scenario implies, so the drift
+//! detector ([`crate::planner::drift`]) trains on *realistic* inputs
+//! instead of scripted traces.
+//!
+//! The sample synthesis draws per-message delays from the **same**
+//! [`LinkSim`] stream the live [`super::VirtualTransport`] would use for
+//! that link and seed, so a scenario's synthetic window and an actual
+//! pipelined run under the same `NetConfig` see identical injected
+//! delays — the property `scenario_samples_match_live_link_draws`
+//! pins below.
+
+use super::virt::{LinkCfg, LinkSim, NetConfig};
+use super::LinkId;
+use crate::perfmodel::CostModel;
+use crate::planner::drift::LatencySample;
+use crate::util::Rng;
+
+/// Every stage↔stage hop degraded uniformly: the "slow interconnect"
+/// scenario (e.g. the paper's p3.16xlarge cluster on a congested fabric).
+pub fn degraded_links(k: usize, latency_ms: f64, jitter_ms: f64, seed: u64) -> NetConfig {
+    let mut net = NetConfig::seeded(seed);
+    let cfg = LinkCfg { latency_ms, jitter_ms, ..Default::default() };
+    for s in 0..k.saturating_sub(1) {
+        net = net.with_link(LinkId::Fwd(s), cfg).with_link(LinkId::Bwd(s + 1), cfg);
+    }
+    net
+}
+
+/// One stage's outbound hops carry `extra_ms`: the "straggler stage"
+/// scenario (one slow host drags every slice that crosses it).
+pub fn straggler_stage(k: usize, stage: usize, extra_ms: f64, seed: u64) -> NetConfig {
+    let mut net = NetConfig::seeded(seed);
+    let cfg = LinkCfg::with_latency(extra_ms);
+    if stage + 1 < k {
+        net = net.with_link(LinkId::Fwd(stage), cfg);
+    }
+    if stage > 0 {
+        net = net.with_link(LinkId::Bwd(stage), cfg);
+    }
+    net
+}
+
+/// Every hop draws its own latency uniformly from `[lo_ms, hi_ms)`: the
+/// "heterogeneous cluster" scenario. Deterministic in `seed`.
+pub fn heterogeneous(k: usize, lo_ms: f64, hi_ms: f64, seed: u64) -> NetConfig {
+    assert!(hi_ms >= lo_ms);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut net = NetConfig::seeded(seed);
+    for s in 0..k.saturating_sub(1) {
+        let fwd = lo_ms + (hi_ms - lo_ms) * rng.f64();
+        let bwd = lo_ms + (hi_ms - lo_ms) * rng.f64();
+        net = net
+            .with_link(LinkId::Fwd(s), LinkCfg::with_latency(fwd))
+            .with_link(LinkId::Bwd(s + 1), LinkCfg::with_latency(bwd));
+    }
+    net
+}
+
+/// The live `LatencySample` stream a stage behind `hop` would report
+/// under `net`, for `steps` passes over `slicing`: per slice, the cost
+/// model's compute + comm prediction plus the hop delay the virtual
+/// fabric would inject for an activation of that slice length
+/// (`bytes_per_token · len` wire bytes). Feed the result to a
+/// [`crate::planner::drift::DriftDetector`] judged against the *clean*
+/// model to exercise drift verdicts on scenario-shaped data.
+pub fn live_samples<M: CostModel>(
+    model: &M,
+    net: &NetConfig,
+    k: usize,
+    hop: LinkId,
+    slicing: &[usize],
+    steps: usize,
+    bytes_per_token: usize,
+) -> Vec<LatencySample> {
+    let mut sim = LinkSim::new(net, hop, k);
+    let mut now_ms = 0.0;
+    let mut out = Vec::with_capacity(steps * slicing.len());
+    for _ in 0..steps {
+        let mut off = 0u32;
+        for &len in slicing {
+            let i = len as u32;
+            let base = model.t(i, off) + model.t_comm(i);
+            // a dropped activation would stall the pipe, not produce a
+            // sample — skip it, like the live trace would
+            if let Some(delay) = sim.admit(now_ms, bytes_per_token * len) {
+                out.push(LatencySample { i, j: off, ms: base + delay });
+            }
+            now_ms += base;
+            off += i;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::drift::{DriftConfig, DriftDetector, DriftVerdict};
+
+    struct Toy;
+    impl CostModel for Toy {
+        fn t(&self, i: u32, j: u32) -> f64 {
+            1.0 + 0.05 * i as f64 + 1e-4 * i as f64 * j as f64
+        }
+        fn t_comm(&self, i: u32) -> f64 {
+            0.1 + 0.01 * i as f64
+        }
+    }
+
+    fn feed(det: &mut DriftDetector, samples: &[LatencySample]) {
+        for &s in samples {
+            det.push(s);
+        }
+    }
+
+    #[test]
+    fn clean_fabric_samples_judge_stable() {
+        let net = NetConfig::seeded(5);
+        let samples = live_samples(&Toy, &net, 2, LinkId::Fwd(0), &[8, 8, 8, 8], 4, 4);
+        let mut det = DriftDetector::new(DriftConfig { window: 16, rel_threshold: 0.2 });
+        feed(&mut det, &samples);
+        assert!(matches!(det.verdict(&Toy), DriftVerdict::Stable { .. }));
+    }
+
+    #[test]
+    fn straggler_scenario_drives_a_drift_verdict() {
+        // the straggler's extra hop latency dwarfs the clean stage time
+        let net = straggler_stage(2, 0, 25.0, 5);
+        let samples = live_samples(&Toy, &net, 2, LinkId::Fwd(0), &[8, 8, 8, 8], 4, 4);
+        let mut det = DriftDetector::new(DriftConfig { window: 16, rel_threshold: 0.2 });
+        feed(&mut det, &samples);
+        match det.verdict(&Toy) {
+            DriftVerdict::Drifted { factor, .. } => assert!(factor > 2.0, "factor {factor}"),
+            v => panic!("expected Drifted, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn heterogeneous_is_deterministic_and_in_range() {
+        let a = heterogeneous(4, 2.0, 6.0, 11);
+        let b = heterogeneous(4, 2.0, 6.0, 11);
+        let mut distinct = std::collections::HashSet::new();
+        for s in 0..3 {
+            for id in [LinkId::Fwd(s), LinkId::Bwd(s + 1)] {
+                let l = a.link(id).latency_ms;
+                assert_eq!(l, b.link(id).latency_ms);
+                assert!((2.0..6.0).contains(&l), "{id:?}: {l}");
+                distinct.insert(l.to_bits());
+            }
+        }
+        assert!(distinct.len() > 1, "degenerate draw");
+        assert_ne!(
+            heterogeneous(4, 2.0, 6.0, 12).link(LinkId::Fwd(0)).latency_ms,
+            a.link(LinkId::Fwd(0)).latency_ms
+        );
+    }
+
+    #[test]
+    fn degraded_links_cover_both_directions() {
+        let net = degraded_links(3, 4.0, 1.0, 0);
+        for s in 0..2 {
+            assert_eq!(net.link(LinkId::Fwd(s)).latency_ms, 4.0);
+            assert_eq!(net.link(LinkId::Bwd(s + 1)).jitter_ms, 1.0);
+        }
+        assert_eq!(net.link(LinkId::DriverTo(0)).latency_ms, 0.0);
+    }
+
+    #[test]
+    fn scenario_samples_match_live_link_draws() {
+        // the synthetic stream and a fresh LinkSim on the same (net, hop)
+        // consume identical RNG streams: same delays, message for message
+        let net = degraded_links(2, 3.0, 2.0, 21);
+        let slicing = [8usize, 8, 8, 8];
+        let samples = live_samples(&Toy, &net, 2, LinkId::Fwd(0), &slicing, 2, 4);
+        let mut sim = LinkSim::new(&net, LinkId::Fwd(0), 2);
+        let mut now_ms = 0.0;
+        let mut idx = 0;
+        for _ in 0..2 {
+            let mut off = 0u32;
+            for &len in &slicing {
+                let base = Toy.t(len as u32, off) + Toy.t_comm(len as u32);
+                if let Some(d) = sim.admit(now_ms, 4 * len) {
+                    assert!((samples[idx].ms - (base + d)).abs() < 1e-12);
+                    idx += 1;
+                }
+                now_ms += base;
+                off += len as u32;
+            }
+        }
+        assert_eq!(idx, samples.len());
+    }
+}

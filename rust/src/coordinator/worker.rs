@@ -7,19 +7,32 @@
 //! [`StageBackend`] the worker builds from its [`BackendSpec`] on this
 //! thread (so non-`Send` backend internals never cross threads).
 //!
+//! Messages travel over whatever [`transport::Transport`] wired the
+//! pipeline ([`transport::StageEndpoint`]); the worker never sees the
+//! fabric, only its endpoints.
+//!
+//! Failure semantics (see `coordinator/README.md`): anything that goes
+//! wrong on this thread — an `Err` from the backend, a malformed message
+//! sequence, or a **panic** anywhere in the body — is reported to the
+//! driver as [`DriverMsg::Fatal`] before the thread exits. Message-
+//! sequence violations (a `Bwd` for an unknown slice, tokens at a
+//! non-first stage) are `Err`s, not unwraps, so a confused or faulty
+//! peer degrades into a diagnosable failed step instead of a crash.
+//!
 //! When timing collection is on, every slice's forward and backward
 //! compute is wall-clocked and reported to the driver as
 //! [`DriverMsg::SliceTime`] — the live samples the measurement harness
 //! and the drift detector consume.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::messages::{DriverMsg, FwdPayload, Msg, SliceTime, TimedPhase};
+use super::transport::{DriverTx, MsgTx, StageEndpoint};
 use crate::backend::{BackendSpec, StageBackend};
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
@@ -74,24 +87,31 @@ pub struct WorkerCfg<S: BackendSpec> {
     pub resume_from: Option<PathBuf>,
     /// Report per-slice fwd/bwd wall times to the driver.
     pub timings: bool,
-    pub inbox: Receiver<Msg>,
-    /// Next stage's inbox (forward direction), if any.
-    pub next: Option<Sender<Msg>>,
-    /// Previous stage's inbox (backward direction), if any.
-    pub prev: Option<Sender<Msg>>,
-    pub driver: Sender<DriverMsg>,
+    /// This stage's view of the transport fabric.
+    pub endpoint: StageEndpoint,
 }
 
-/// Thread body. Errors are reported to the driver as `Fatal`.
+/// Thread body. Errors **and panics** are reported to the driver as
+/// [`DriverMsg::Fatal`] — a worker thread never dies silently, so the
+/// driver's collect loops always get either progress or a diagnosis
+/// (backstopped by their recv deadline for the crash-stop case where
+/// even the Fatal can't be sent).
 pub fn run_worker<S: BackendSpec>(cfg: WorkerCfg<S>) {
     let stage = cfg.stage;
-    let driver = cfg.driver.clone();
-    if let Err(e) = Worker::<S::Backend>::init_and_run(cfg) {
-        let _ = driver.send(DriverMsg::Fatal {
-            stage,
-            error: format!("{e:#}"),
-        });
-    }
+    let driver = cfg.endpoint.driver.clone_box();
+    let error = match catch_unwind(AssertUnwindSafe(|| Worker::<S::Backend>::init_and_run(cfg))) {
+        Ok(Ok(())) => return,
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            format!("worker panicked: {what}")
+        }
+    };
+    let _ = driver.send(DriverMsg::Fatal { stage, error });
 }
 
 struct Worker<B: StageBackend> {
@@ -102,24 +122,15 @@ struct Worker<B: StageBackend> {
     dims: ModelDims,
     timings: bool,
     mbs: HashMap<usize, MbState>,
-    next: Option<Sender<Msg>>,
-    prev: Option<Sender<Msg>>,
-    driver: Sender<DriverMsg>,
+    next: Option<Box<dyn MsgTx>>,
+    prev: Option<Box<dyn MsgTx>>,
+    driver: Box<dyn DriverTx>,
 }
 
 impl<B: StageBackend> Worker<B> {
     fn init_and_run<S: BackendSpec<Backend = B>>(cfg: WorkerCfg<S>) -> Result<()> {
-        let WorkerCfg {
-            stage,
-            num_stages,
-            spec,
-            resume_from,
-            timings,
-            inbox,
-            next,
-            prev,
-            driver,
-        } = cfg;
+        let WorkerCfg { stage, num_stages, spec, resume_from, timings, endpoint } = cfg;
+        let StageEndpoint { mut inbox, next, prev, driver } = endpoint;
         let backend = spec.build(stage, num_stages, resume_from.as_deref())?;
         let dims = backend.dims().clone();
         let mut w = Worker {
@@ -161,7 +172,15 @@ impl<B: StageBackend> Worker<B> {
         Ok(())
     }
 
-    fn send_time(&self, mb: usize, slice: usize, off: usize, len: usize, phase: TimedPhase, ms: f64) {
+    fn send_time(
+        &self,
+        mb: usize,
+        slice: usize,
+        off: usize,
+        len: usize,
+        phase: TimedPhase,
+        ms: f64,
+    ) {
         if self.timings {
             self.driver
                 .send(DriverMsg::SliceTime(SliceTime {
@@ -247,7 +266,11 @@ impl<B: StageBackend> Worker<B> {
                     loss_sum,
                 })
                 .ok();
-            self.mbs.get_mut(&mb).unwrap().h_out.insert(slice, h_out);
+            self.mbs
+                .get_mut(&mb)
+                .ok_or_else(|| anyhow!("stage {}: mb {mb} vanished mid-forward", self.stage))?
+                .h_out
+                .insert(slice, h_out);
 
             // 4b. Final slice arrived → run the backward sweep for this
             // microbatch in reverse slice order.
@@ -260,7 +283,7 @@ impl<B: StageBackend> Worker<B> {
             self.send_time(mb, slice, off, len, TimedPhase::Fwd, t0.elapsed().as_secs_f64() * 1e3);
             self.next
                 .as_ref()
-                .unwrap()
+                .ok_or_else(|| anyhow!("stage {}: no next hop for forward slice", self.stage))?
                 .send(Msg::Fwd {
                     mb,
                     slice,
@@ -355,7 +378,7 @@ impl<B: StageBackend> Worker<B> {
             self.send_time(mb, slice, off, len, TimedPhase::Bwd, t0.elapsed().as_secs_f64() * 1e3);
             self.prev
                 .as_ref()
-                .unwrap()
+                .ok_or_else(|| anyhow!("stage {}: no prev hop for backward slice", self.stage))?
                 .send(Msg::Bwd {
                     mb,
                     slice,
@@ -381,8 +404,15 @@ impl<B: StageBackend> Worker<B> {
         for slice in order {
             let t0 = Instant::now();
             let (meta, h_out) = {
-                let st = self.mbs.get_mut(&mb).unwrap();
-                let meta = st.meta.get(&slice).cloned().unwrap();
+                let st = self
+                    .mbs
+                    .get_mut(&mb)
+                    .ok_or_else(|| anyhow!("stage {}: mb {mb} vanished mid-sweep", self.stage))?;
+                let meta = st
+                    .meta
+                    .get(&slice)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("missing meta for slice {slice} in backward sweep"))?;
                 let h_out = st
                     .h_out
                     .remove(&slice)

@@ -80,6 +80,7 @@ USAGE: terapipe <command> [--options]
   train    [--slicing 32,32,32,32] [--steps 50] [--microbatches 1]
            [--lr 0.001] [--corpus FILE] [--auto] [--replan-every N]
            [--drift-threshold 0.35] [--drift-window 16]
+           [--recv-timeout-ms 120000] (0 = wait forever)
            [--save-checkpoint DIR] [--resume DIR]
            native model: [--hidden 64] [--heads 4] [--layers 2] [--stages 2]
            [--seq-len 128] [--batch 4] [--vocab 256] [--granularity 16]
@@ -487,6 +488,16 @@ fn step_printer(r: &terapipe::coordinator::StepReport) {
     }
 }
 
+/// `--recv-timeout-ms N`: the driver's inactivity deadline (0 = wait
+/// forever, the pre-deadline behavior).
+fn recv_timeout(args: &Args) -> Option<u64> {
+    let default = terapipe::coordinator::DEFAULT_RECV_TIMEOUT_MS as usize;
+    match args.usize("recv-timeout-ms", default) {
+        0 => None,
+        ms => Some(ms as u64),
+    }
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if args.get("artifacts").is_some() {
         return cmd_train_pjrt(args);
@@ -519,6 +530,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         seed: args.u32("seed", 42) as u64,
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
         trace: false,
+        recv_timeout_ms: recv_timeout(args),
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,
@@ -622,6 +634,7 @@ fn cmd_train_pjrt(args: &Args) -> anyhow::Result<()> {
         seed: args.u32("seed", 42) as u64,
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
         trace: false,
+        recv_timeout_ms: recv_timeout(args),
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,

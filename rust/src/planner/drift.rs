@@ -110,6 +110,13 @@ impl DriftDetector {
 
     /// Judge the window against `model` — the model the active plan was
     /// solved against.
+    ///
+    /// Samples whose prediction is non-positive or non-finite (a cost
+    /// model evaluated outside its fitted range can return 0), and
+    /// observations that are non-finite, carry no usable ratio: they are
+    /// excluded from the window's statistics rather than poisoning them
+    /// (one NaN ratio used to panic the sort on a live run). A window
+    /// with **no** usable sample judges as [`DriftVerdict::Warmup`].
     pub fn verdict<M: CostModel>(&self, model: &M) -> DriftVerdict {
         if self.samples.len() < self.cfg.window.max(1) {
             return DriftVerdict::Warmup;
@@ -118,14 +125,20 @@ impl DriftDetector {
         let mut sum_rel = 0.0;
         for s in &self.samples {
             let pred = model.t(s.i, s.j) + model.t_comm(s.i);
+            if !pred.is_finite() || pred <= 0.0 || !s.ms.is_finite() {
+                continue;
+            }
             ratios.push(s.ms / pred);
             sum_rel += ((s.ms - pred) / pred).abs();
         }
-        let mean_rel_err = sum_rel / self.samples.len() as f64;
+        if ratios.is_empty() {
+            return DriftVerdict::Warmup;
+        }
+        let mean_rel_err = sum_rel / ratios.len() as f64;
         if mean_rel_err <= self.cfg.rel_threshold {
             return DriftVerdict::Stable { mean_rel_err };
         }
-        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ratios.sort_by(f64::total_cmp);
         let factor = ratios[ratios.len() / 2];
         DriftVerdict::Drifted { mean_rel_err, factor }
     }
@@ -231,6 +244,60 @@ mod tests {
         d.push(LatencySample { i: 32, j: 0, ms: 100.0 * stage_time(&Toy, 32, 0) });
         match d.verdict(&Toy) {
             DriftVerdict::Drifted { factor, .. } => {
+                assert!((factor - 1.5).abs() < 1e-9, "factor {factor}");
+            }
+            v => panic!("expected Drifted, got {v:?}"),
+        }
+    }
+
+    /// Predicts 0 at j = 0 (e.g. an affine fit extrapolated to a corner
+    /// of the (i, j) plane it never saw) — the ratio there is inf/NaN.
+    struct ZeroAtBase;
+    impl CostModel for ZeroAtBase {
+        fn t(&self, _i: u32, j: u32) -> f64 {
+            j as f64 * 0.01
+        }
+        fn t_comm(&self, _i: u32) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn zero_prediction_samples_cannot_panic_the_verdict() {
+        let mut d = DriftDetector::new(DriftConfig { window: 8, rel_threshold: 0.05 });
+        // half the window sits at j=0 where the model predicts exactly 0
+        for k in 0..8u32 {
+            let j = if k % 2 == 0 { 0 } else { 100 };
+            d.push(LatencySample { i: 32, j, ms: 1.3 * (j as f64 * 0.01).max(0.0) });
+        }
+        match d.verdict(&ZeroAtBase) {
+            DriftVerdict::Drifted { factor, .. } => {
+                assert!(factor.is_finite());
+                assert!((factor - 1.3).abs() < 1e-9, "factor {factor}");
+            }
+            v => panic!("expected Drifted from the valid half, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn all_invalid_window_judges_warmup_not_panic() {
+        let mut d = DriftDetector::new(DriftConfig { window: 4, rel_threshold: 0.05 });
+        for _ in 0..4 {
+            d.push(LatencySample { i: 32, j: 0, ms: 1.0 });
+        }
+        assert_eq!(d.verdict(&ZeroAtBase), DriftVerdict::Warmup);
+    }
+
+    #[test]
+    fn non_finite_observations_are_excluded() {
+        let mut d = DriftDetector::new(DriftConfig { window: 8, rel_threshold: 0.05 });
+        fill(&mut d, 1.5);
+        // a NaN and an inf observation replace the two oldest samples
+        d.push(LatencySample { i: 32, j: 0, ms: f64::NAN });
+        d.push(LatencySample { i: 32, j: 0, ms: f64::INFINITY });
+        match d.verdict(&Toy) {
+            DriftVerdict::Drifted { mean_rel_err, factor } => {
+                assert!(mean_rel_err.is_finite());
                 assert!((factor - 1.5).abs() < 1e-9, "factor {factor}");
             }
             v => panic!("expected Drifted, got {v:?}"),

@@ -93,21 +93,40 @@ pub struct Manifest {
     pub init_stages: Vec<Vec<InitEntry>>,
 }
 
+/// `entry.req(key)` as a string, with the offending key in the error.
+fn req_str(e: &Json, key: &str) -> Result<String> {
+    Ok(e.req(key)
+        .map_err(|m| anyhow!(m))?
+        .as_str()
+        .ok_or_else(|| anyhow!("'{key}' must be a string"))?
+        .to_string())
+}
+
+/// `entry.req(key)` as an array of sizes, with the offending key (and
+/// element index) in the error — malformed manifests must come back as
+/// `Err`, never a panic (manifest.json is external input).
+fn req_shape(e: &Json, key: &str) -> Result<Vec<usize>> {
+    e.req(key)
+        .map_err(|m| anyhow!(m))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' must be an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, d)| {
+            d.as_usize()
+                .ok_or_else(|| anyhow!("'{key}[{i}]' must be a non-negative integer"))
+        })
+        .collect()
+}
+
 fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
     v.as_arr()
         .ok_or_else(|| anyhow!("expected array of tensor specs"))?
         .iter()
         .map(|e| {
             Ok(TensorSpec {
-                name: e.req("name").map_err(|m| anyhow!(m))?.as_str().unwrap_or_default().to_string(),
-                shape: e
-                    .req("shape")
-                    .map_err(|m| anyhow!(m))?
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("shape must be array"))?
-                    .iter()
-                    .map(|d| d.as_usize().unwrap())
-                    .collect(),
+                name: req_str(e, "name")?,
+                shape: req_shape(e, "shape")?,
                 dtype: e
                     .get("dtype")
                     .and_then(|d| d.as_str())
@@ -124,16 +143,9 @@ fn init_entries(v: &Json) -> Result<Vec<InitEntry>> {
         .iter()
         .map(|e| {
             Ok(InitEntry {
-                name: e.req("name").map_err(|m| anyhow!(m))?.as_str().unwrap().to_string(),
-                shape: e
-                    .req("shape")
-                    .map_err(|m| anyhow!(m))?
-                    .as_arr()
-                    .unwrap()
-                    .iter()
-                    .map(|d| d.as_usize().unwrap())
-                    .collect(),
-                file: e.req("file").map_err(|m| anyhow!(m))?.as_str().unwrap().to_string(),
+                name: req_str(e, "name")?,
+                shape: req_shape(e, "shape")?,
+                file: req_str(e, "file")?,
             })
         })
         .collect()
@@ -171,8 +183,12 @@ impl Manifest {
             .as_arr()
             .ok_or_else(|| anyhow!("buckets must be an array"))?
             .iter()
-            .map(|b| b.as_usize().unwrap())
-            .collect();
+            .enumerate()
+            .map(|(i, b)| {
+                b.as_usize()
+                    .ok_or_else(|| anyhow!("'buckets[{i}]' must be a non-negative integer"))
+            })
+            .collect::<Result<_>>()?;
 
         let groups = v.req("param_groups").map_err(|e| anyhow!(e))?;
         let embed_params = tensor_specs(groups.req("embed").map_err(|e| anyhow!(e))?)?;
@@ -314,5 +330,66 @@ mod tests {
     fn missing_manifest_errors_helpfully() {
         let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    /// Write `text` as manifest.json in a scratch dir and try to load it.
+    fn load_text(tag: &str, text: &str) -> Result<Manifest> {
+        let dir =
+            std::env::temp_dir().join(format!("terapipe-manifest-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let out = Manifest::load(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        out
+    }
+
+    const MODEL: &str = r#""model": {"vocab": 8, "hidden": 4, "num_heads": 2,
+        "layers_per_stage": 1, "num_stages": 1, "seq_len": 8, "batch": 1,
+        "block_ctx": 4, "seed": 0}"#;
+
+    #[test]
+    fn malformed_bucket_is_an_error_not_a_panic() {
+        let text = format!(r#"{{{MODEL}, "buckets": [4, "x"]}}"#);
+        let err = load_text("bucket", &text).unwrap_err();
+        assert!(format!("{err:#}").contains("buckets[1]"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_shape_dim_names_the_offending_key() {
+        let text = format!(
+            r#"{{{MODEL}, "buckets": [4, 8],
+                "param_groups": {{"embed": [{{"name": "w", "shape": [4, "oops"]}}],
+                                  "stage": [], "head": []}},
+                "executables": {{}},
+                "init": {{"embed": [], "head": [], "stages": [[]]}}}}"#
+        );
+        let err = load_text("shape", &text).unwrap_err();
+        assert!(format!("{err:#}").contains("shape[1]"), "{err:#}");
+    }
+
+    #[test]
+    fn init_entry_missing_file_is_an_error_not_a_panic() {
+        let text = format!(
+            r#"{{{MODEL}, "buckets": [4, 8],
+                "param_groups": {{"embed": [], "stage": [], "head": []}},
+                "executables": {{}},
+                "init": {{"embed": [{{"name": "w", "shape": [4]}}],
+                          "head": [], "stages": [[]]}}}}"#
+        );
+        let err = load_text("initfile", &text).unwrap_err();
+        assert!(format!("{err:#}").contains("file"), "{err:#}");
+    }
+
+    #[test]
+    fn non_string_tensor_name_is_an_error_not_a_panic() {
+        let text = format!(
+            r#"{{{MODEL}, "buckets": [4, 8],
+                "param_groups": {{"embed": [{{"name": 3, "shape": [4]}}],
+                                  "stage": [], "head": []}},
+                "executables": {{}},
+                "init": {{"embed": [], "head": [], "stages": [[]]}}}}"#
+        );
+        let err = load_text("name", &text).unwrap_err();
+        assert!(format!("{err:#}").contains("name"), "{err:#}");
     }
 }

@@ -119,6 +119,49 @@ pub fn stream_plan_per_stage(durs: &[Vec<f64>]) -> Plan {
     Plan { stages, items, mem_cap_parts: None, flush_barrier: false }
 }
 
+/// [`stream_plan_per_stage`] with explicit cross-stage transmission
+/// delays: `hop_ms[s][i]` rides on the edge from slice `i` on stage `s`
+/// to slice `i` on stage `s+1` (so `hop_ms.len() == durs.len() - 1`).
+/// Use this when comm time is modeled per link rather than folded into
+/// the stage durations — e.g. fitting against a
+/// [`crate::coordinator::VirtualTransport`] run where the injected link
+/// latency is observable separately from compute. Edge delays keep the
+/// plan regular (`wavefront::is_regular` accepts nonzero cross-stage
+/// delays), so the closed-form recurrence still applies.
+pub fn stream_plan_per_stage_comm(durs: &[Vec<f64>], hop_ms: &[Vec<f64>]) -> Plan {
+    let stages = durs.len();
+    assert!(stages >= 1);
+    let m = durs[0].len();
+    assert!(m >= 1 && durs.iter().all(|d| d.len() == m), "ragged per-stage durations");
+    assert!(
+        hop_ms.len() == stages - 1 && hop_ms.iter().all(|h| h.len() == m),
+        "need one delay row per hop, one entry per slice"
+    );
+    let mut items = Vec::with_capacity(m * stages);
+    for (s, stage_durs) in durs.iter().enumerate() {
+        for (i, &d) in stage_durs.iter().enumerate() {
+            let mut deps = Vec::new();
+            if s > 0 {
+                deps.push(((s - 1) * m + i, hop_ms[s - 1][i]));
+            }
+            if i > 0 {
+                deps.push((s * m + i - 1, 0.0));
+            }
+            items.push(Item {
+                id: s * m + i,
+                stage: s,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: i,
+                dur_ms: d,
+                deps,
+                priority: (s * m + i) as u64,
+            });
+        }
+    }
+    Plan { stages, items, mem_cap_parts: None, flush_barrier: false }
+}
+
 /// Build the simulator plan for a joint (batch, token) scheme on a
 /// `stages`-deep pipeline.
 pub fn build_plan<C: PhaseCost>(
@@ -290,6 +333,24 @@ mod tests {
             .unwrap();
         let b = simulate(&stream_plan(&durs, 3)).unwrap();
         assert_eq!(a.makespan_ms, b.makespan_ms);
+    }
+
+    #[test]
+    fn comm_stream_plan_shifts_the_wavefront_by_the_hop_delay() {
+        let durs = vec![vec![1.0, 1.0], vec![3.0, 3.0]];
+        // Zero hop delays must reproduce stream_plan_per_stage exactly.
+        let base = simulate(&stream_plan_per_stage(&durs)).unwrap();
+        let zero = simulate(&stream_plan_per_stage_comm(&durs, &[vec![0.0, 0.0]])).unwrap();
+        assert_eq!(base.makespan_ms, zero.makespan_ms);
+        // A 5 ms hop on every slice: stage 1 is the bottleneck and its
+        // first start shifts from t=1 to t=6, so makespan 7 → 12. Still
+        // regular, so the closed form sees the same number.
+        let p = stream_plan_per_stage_comm(&durs, &[vec![5.0, 5.0]]);
+        assert!(crate::sim::wavefront::is_regular(&p));
+        let r = simulate(&p).unwrap();
+        assert!((r.makespan_ms - 12.0).abs() < 1e-9, "{}", r.makespan_ms);
+        let wf = crate::sim::wavefront::evaluate(&p, false).unwrap();
+        assert!((wf.makespan_ms - 12.0).abs() < 1e-9, "{}", wf.makespan_ms);
     }
 
     #[test]

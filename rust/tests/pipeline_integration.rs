@@ -198,9 +198,9 @@ impl MedianModel {
         let corpus = synthetic_corpus(1 << 13, 7);
         let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 42);
         let mut samples: HashMap<(u32, u32), Vec<f64>> = HashMap::new();
-        for step in 0..steps {
+        for _ in 0..steps {
             let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
-            t.step(step, &batches).unwrap();
+            t.step(&batches).unwrap();
             let timings = t.last_timings().to_vec();
             for f in timings.iter().filter(|s| {
                 s.stage == 0 && s.phase == terapipe::coordinator::TimedPhase::Fwd

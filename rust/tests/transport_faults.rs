@@ -1,0 +1,436 @@
+//! The transport fault-injection suite — the coordinator's failure
+//! semantics, pinned end to end (see `rust/src/coordinator/README.md`):
+//!
+//! 1. **Fidelity**: the zero-fault virtual fabric is *bit-identical* to
+//!    the in-process channels — per-link FIFO order forces every
+//!    float-op ordering, so losses match exactly, not approximately.
+//! 2. **No hangs**: a crash-stopped stage (kill-switch), a panicking
+//!    backend, or a 100 %-lossy link turns every driver collect loop
+//!    (step, update, checkpoint) into a prompt `Err` with a progress
+//!    diagnostic — never a parked `recv()`.
+//! 3. **Observability**: the injected per-link latency is recoverable
+//!    from the delivery metrics, and the wavefront model with comm
+//!    edges (`stream_plan_per_stage_comm`) predicts the executed
+//!    forward-sweep makespan under that injected latency.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use terapipe::backend::{BackendSpec, NativeBackend, NativeSpec, StageBackend};
+use terapipe::coordinator::transport::{LinkCfg, LinkId, NetConfig};
+use terapipe::coordinator::{
+    InProcTransport, TimedPhase, TrainConfig, Trainer, Transport, VirtualTransport,
+};
+use terapipe::data::{synthetic_corpus, Batch, Batcher};
+use terapipe::perfmodel::measure::Measurements;
+use terapipe::perfmodel::{measure, CostModel};
+use terapipe::runtime::manifest::ModelDims;
+use terapipe::runtime::tensor::HostTensor;
+use terapipe::sim::schedule::stream_plan_per_stage_comm;
+use terapipe::sim::wavefront;
+
+const GRAN: usize = 4;
+const STAGES: usize = 2;
+
+fn spec() -> NativeSpec {
+    NativeSpec::new(
+        ModelDims {
+            vocab: 64,
+            hidden: 32,
+            num_heads: 4,
+            layers_per_stage: 1,
+            num_stages: STAGES,
+            seq_len: 32,
+            batch: 2,
+            block_ctx: 8,
+            seed: 9,
+        },
+        GRAN,
+    )
+}
+
+fn batches_for(m: &ModelDims, n: usize) -> Vec<Vec<Batch>> {
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut b = Batcher::new(&corpus, m.batch, m.seq_len, 17);
+    (0..n).map(|_| vec![b.next_batch()]).collect()
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    assert!(!v.is_empty());
+    v.sort_by(f64::total_cmp);
+    v[v.len() / 2]
+}
+
+// ---------------------------------------------------------------------
+// 1. Fidelity: InProc == zero-fault Virtual, bit for bit
+// ---------------------------------------------------------------------
+
+fn run_losses<T: Transport>(transport: &T) -> Vec<f64> {
+    let cfg = TrainConfig {
+        slicing: vec![8, 8, 8, 8],
+        steps: 3,
+        seed: 17,
+        ..Default::default()
+    };
+    let mut t = Trainer::with_spec_transport(spec(), cfg, transport).unwrap();
+    let m = t.model.clone();
+    batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().0).collect()
+}
+
+#[test]
+fn inproc_and_zero_fault_virtual_losses_are_bit_identical() {
+    let direct = {
+        // the default constructor — the direct-mpsc path every caller uses
+        let cfg = TrainConfig {
+            slicing: vec![8, 8, 8, 8],
+            steps: 3,
+            seed: 17,
+            ..Default::default()
+        };
+        let mut t = Trainer::with_spec(spec(), cfg).unwrap();
+        let m = t.model.clone();
+        batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().0).collect::<Vec<f64>>()
+    };
+    let inproc = run_losses(&InProcTransport);
+    let virt = run_losses(&VirtualTransport::new(NetConfig::default()));
+    assert_eq!(direct, inproc, "explicit InProcTransport differs from the default path");
+    assert_eq!(inproc, virt, "zero-fault virtual fabric is not bit-identical to mpsc");
+}
+
+// ---------------------------------------------------------------------
+// 2. No hangs: crash-stop, panic and loss all fail promptly
+// ---------------------------------------------------------------------
+
+/// Crash-stop the last stage after it delivered `budget` messages, run
+/// `steps` and then a checkpoint, and return the first error. With
+/// slicing `[16, 16]` × 1 microbatch the last stage's delivery sequence
+/// is Fwd, Fwd, Update, Checkpoint — so the budget picks which collect
+/// loop observes the death.
+fn first_error_with_budget(budget: u64) -> (String, Duration) {
+    let net = NetConfig::seeded(0).with_kill_after(STAGES - 1, budget);
+    let vt = VirtualTransport::new(net);
+    let cfg = TrainConfig {
+        slicing: vec![16, 16],
+        steps: 1,
+        seed: 17,
+        recv_timeout_ms: Some(500),
+        ..Default::default()
+    };
+    let mut t = Trainer::with_spec_transport(spec(), cfg, &vt).unwrap();
+    let m = t.model.clone();
+    let batches = batches_for(&m, 1);
+    let t0 = Instant::now();
+    let err = t.step(&batches[0]).err().or_else(|| {
+        let dir =
+            std::env::temp_dir().join(format!("terapipe-kill-{budget}-{}", std::process::id()));
+        let e = t.save_checkpoint(&dir).err();
+        let _ = std::fs::remove_dir_all(&dir);
+        e
+    });
+    let elapsed = t0.elapsed();
+    (format!("{:#}", err.expect("a killed stage must surface an error")), elapsed)
+}
+
+#[test]
+fn killed_stage_fails_the_step_collect_loop_promptly() {
+    // budget 1: dies between the two forward slices → the step loop can
+    // never complete. Depending on the exact interleaving the driver sees
+    // either its inactivity deadline or stage 0's Fatal (next hop gone).
+    let (msg, elapsed) = first_error_with_budget(1);
+    assert!(
+        msg.contains("during step") || msg.contains("hung up") || msg.contains("failed"),
+        "unexpected diagnostic: {msg}"
+    );
+    assert!(elapsed < Duration::from_secs(20), "not prompt: {elapsed:?} ({msg})");
+}
+
+#[test]
+fn killed_stage_fails_the_update_collect_loop_promptly() {
+    // budget 2: both forwards delivered (the step's losses and backward
+    // acks complete), death lands on the update ack.
+    let (msg, elapsed) = first_error_with_budget(2);
+    assert!(msg.contains("update"), "unexpected diagnostic: {msg}");
+    assert!(elapsed < Duration::from_secs(20), "not prompt: {elapsed:?} ({msg})");
+}
+
+#[test]
+fn killed_stage_fails_the_checkpoint_collect_loop_promptly() {
+    // budget 3: the whole step (incl. update) completes, death lands on
+    // the checkpoint ack.
+    let (msg, elapsed) = first_error_with_budget(3);
+    assert!(msg.contains("checkpoint"), "unexpected diagnostic: {msg}");
+    assert!(elapsed < Duration::from_secs(20), "not prompt: {elapsed:?} ({msg})");
+}
+
+#[test]
+fn fully_lossy_forward_link_times_out_with_progress_diagnostic() {
+    // Silent drops disconnect nothing, so this is the pure-deadline path:
+    // the only way the driver can fail is its inactivity timeout.
+    let net = NetConfig::seeded(3)
+        .with_link(LinkId::Fwd(0), LinkCfg { drop_prob: 1.0, ..Default::default() });
+    let vt = VirtualTransport::new(net);
+    let cfg = TrainConfig {
+        slicing: vec![16, 16],
+        steps: 1,
+        seed: 17,
+        recv_timeout_ms: Some(400),
+        ..Default::default()
+    };
+    let mut t = Trainer::with_spec_transport(spec(), cfg, &vt).unwrap();
+    let m = t.model.clone();
+    let batches = batches_for(&m, 1);
+    let t0 = Instant::now();
+    let msg = format!("{:#}", t.step(&batches[0]).unwrap_err());
+    assert!(msg.contains("during step"), "unexpected diagnostic: {msg}");
+    assert!(msg.contains("losses"), "diagnostic should carry progress: {msg}");
+    assert!(t0.elapsed() < Duration::from_secs(20), "not prompt: {:?}", t0.elapsed());
+    drop(t);
+    let metrics = vt.link_metrics(LinkId::Fwd(0));
+    assert_eq!(metrics.sent, 0, "nothing should survive a drop_prob=1 link");
+    assert!(metrics.dropped >= 2, "both activations should be metered as dropped");
+}
+
+// A backend wrapper that panics in `stage_fwd` on one chosen stage —
+// the in-worker failure mode that used to hang the driver forever.
+#[derive(Clone)]
+struct PanicSpec {
+    inner: NativeSpec,
+    panic_stage: usize,
+}
+
+struct PanicBackend {
+    inner: NativeBackend,
+    armed: bool,
+}
+
+impl BackendSpec for PanicSpec {
+    type Backend = PanicBackend;
+
+    fn model(&self) -> ModelDims {
+        self.inner.model()
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        self.inner.buckets()
+    }
+
+    fn build(
+        &self,
+        stage: usize,
+        num_stages: usize,
+        resume: Option<&Path>,
+    ) -> Result<PanicBackend> {
+        Ok(PanicBackend {
+            inner: self.inner.build(stage, num_stages, resume)?,
+            armed: stage == self.panic_stage,
+        })
+    }
+}
+
+impl StageBackend for PanicBackend {
+    fn dims(&self) -> &ModelDims {
+        self.inner.dims()
+    }
+
+    fn embed_fwd(&mut self, tokens: &[i32], len: usize, off: usize) -> Result<HostTensor> {
+        self.inner.embed_fwd(tokens, len, off)
+    }
+
+    fn stage_fwd(
+        &mut self,
+        h: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        if self.armed {
+            panic!("injected fault: stage compute blew up");
+        }
+        self.inner.stage_fwd(h, k_ctx, v_ctx, off)
+    }
+
+    fn head_loss(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<f32> {
+        self.inner.head_loss(h_out, targets, len)
+    }
+
+    fn head_bwd(&mut self, h_out: &HostTensor, targets: &[i32], len: usize) -> Result<HostTensor> {
+        self.inner.head_bwd(h_out, targets, len)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn stage_bwd(
+        &mut self,
+        h_in: &HostTensor,
+        k_ctx: &HostTensor,
+        v_ctx: &HostTensor,
+        off: usize,
+        g_h: &HostTensor,
+        g_know: &HostTensor,
+        g_vnow: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        self.inner.stage_bwd(h_in, k_ctx, v_ctx, off, g_h, g_know, g_vnow)
+    }
+
+    fn embed_bwd(
+        &mut self,
+        tokens: &[i32],
+        len: usize,
+        off: usize,
+        g_h: &HostTensor,
+    ) -> Result<()> {
+        self.inner.embed_bwd(tokens, len, off, g_h)
+    }
+
+    fn update(&mut self, step: i32, lr: f32) -> Result<()> {
+        self.inner.update(step, lr)
+    }
+
+    fn checkpoint(&self, dir: &Path) -> Result<()> {
+        self.inner.checkpoint(dir)
+    }
+}
+
+#[test]
+fn worker_panic_mid_step_surfaces_as_prompt_error_not_hang() {
+    let cfg = TrainConfig {
+        slicing: vec![16, 16],
+        steps: 1,
+        seed: 17,
+        recv_timeout_ms: Some(60_000), // must NOT be what saves us
+        ..Default::default()
+    };
+    let pspec = PanicSpec { inner: spec(), panic_stage: 1 };
+    let mut t = Trainer::with_spec(pspec, cfg).unwrap();
+    let m = t.model.clone();
+    let batches = batches_for(&m, 1);
+    let t0 = Instant::now();
+    let msg = format!("{:#}", t.step(&batches[0]).unwrap_err());
+    assert!(msg.contains("panicked"), "panic should surface in the error: {msg}");
+    assert!(msg.contains("injected fault"), "panic payload should survive: {msg}");
+    // Fatal travels as a message, so this fails in milliseconds — far
+    // inside the 60 s deadline, proving catch_unwind (not the timeout)
+    // reported it.
+    assert!(t0.elapsed() < Duration::from_secs(10), "not prompt: {:?}", t0.elapsed());
+}
+
+// ---------------------------------------------------------------------
+// 3. Observability: injected latency is recoverable and predictive
+// ---------------------------------------------------------------------
+
+const INJECT_MS: f64 = 12.0;
+
+#[test]
+fn fitted_comm_recovers_injected_latency_and_predicts_makespan() {
+    let strict = std::env::var("TERAPIPE_EXEC_STRICT").is_ok();
+    let tol = if strict { 0.20 } else { 0.35 };
+    let slicings: [&[usize]; 3] = [&[8, 8, 8, 8], &[16, 16], &[4, 4, 8, 16]];
+    let steps = 5;
+
+    // ---- execute under injected Fwd(0) latency, pooling compute
+    // samples and comm deliveries across slicings ----
+    let mut all: Vec<HashMap<(u32, u32), Vec<f64>>> = vec![HashMap::new(); STAGES];
+    let mut executed: Vec<f64> = Vec::new();
+    let mut delay_by_len: HashMap<usize, Vec<f64>> = HashMap::new();
+    for sl in slicings {
+        let net =
+            NetConfig::seeded(29).with_link(LinkId::Fwd(0), LinkCfg::with_latency(INJECT_MS));
+        let vt = VirtualTransport::new(net);
+        let cfg = TrainConfig {
+            slicing: sl.to_vec(),
+            steps,
+            trace: true,
+            seed: 17,
+            ..Default::default()
+        };
+        let mut t = Trainer::with_spec_transport(spec(), cfg, &vt).unwrap();
+        let m = t.model.clone();
+        let corpus = synthetic_corpus(1 << 13, 7);
+        let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 17);
+        let mut makespans = Vec::new();
+        for step in 0..steps {
+            let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
+            let (_, _, fwd_ms) = t.step(&batches).unwrap();
+            if step == 0 {
+                continue; // warmup: cold caches, lazy thread spin-up
+            }
+            makespans.push(fwd_ms);
+            for s in t.last_timings() {
+                if s.phase == TimedPhase::Fwd {
+                    all[s.stage].entry((s.len as u32, s.off as u32)).or_default().push(s.ms);
+                }
+            }
+        }
+        executed.push(median(makespans));
+        drop(t);
+        for d in &vt.link_metrics(LinkId::Fwd(0)).deliveries {
+            if let Some(len) = d.len {
+                delay_by_len.entry(len).or_default().push(d.delay_ms);
+            }
+        }
+    }
+
+    // ---- the metered deliveries recover the injected latency ----
+    assert!(!delay_by_len.is_empty(), "no activations crossed the instrumented link");
+    let mut hop_est: HashMap<usize, f64> = HashMap::new();
+    for (&len, v) in &delay_by_len {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let rel = (mean - INJECT_MS).abs() / INJECT_MS;
+        assert!(
+            rel < 0.15,
+            "len {len}: fitted comm {mean:.3} ms vs injected {INJECT_MS} ms (rel {rel:.3})"
+        );
+        hop_est.insert(len, mean);
+    }
+
+    // ---- per-stage measure → fit on the compute samples (comm rides
+    // the plan's cross-stage edges, not the durations) ----
+    let mut fits = Vec::with_capacity(STAGES);
+    for stage_samples in &all {
+        let mut base = Vec::new();
+        let mut ctx_samples = Vec::new();
+        for (&(i, j), v) in stage_samples {
+            let ms = median(v.clone());
+            if j == 0 {
+                base.push((i, ms));
+            } else {
+                ctx_samples.push((i, j, ms));
+            }
+        }
+        assert!(base.len() >= 3, "base curve too thin: {base:?}");
+        assert!(ctx_samples.len() >= 4, "ctx samples too thin: {ctx_samples:?}");
+        let meas = Measurements {
+            granularity: GRAN as u32,
+            base,
+            ctx_samples,
+            repeats: (steps - 1) as u32,
+        };
+        fits.push(measure::fit(&meas, spec().model.seq_len as u32).unwrap());
+    }
+
+    // ---- wavefront with comm edges predicts the executed makespan ----
+    for (sl, exec_ms) in slicings.iter().zip(&executed) {
+        let mut durs: Vec<Vec<f64>> = Vec::with_capacity(STAGES);
+        for fitted in &fits {
+            let mut stage_durs = Vec::with_capacity(sl.len());
+            let mut off = 0u32;
+            for &len in sl.iter() {
+                stage_durs.push(fitted.t(len as u32, off));
+                off += len as u32;
+            }
+            durs.push(stage_durs);
+        }
+        let hop: Vec<f64> = sl.iter().map(|len| hop_est[len]).collect();
+        let plan = stream_plan_per_stage_comm(&durs, &[hop]);
+        assert!(wavefront::is_regular(&plan), "comm stream plan must be regular");
+        let predicted = wavefront::evaluate(&plan, false).unwrap().makespan_ms;
+        assert!(predicted > INJECT_MS, "prediction must include the injected hop");
+        let rel = (predicted - exec_ms).abs() / exec_ms;
+        assert!(
+            rel < tol,
+            "slicing {sl:?}: wavefront predicts {predicted:.3} ms, executed {exec_ms:.3} ms \
+             (rel {rel:.2} ≥ {tol})"
+        );
+    }
+}
