@@ -21,7 +21,10 @@
 //!   schedule's overlap survives on this machine — plus the step's
 //!   allocation count as telemetry (the trait boundary allocates output
 //!   tensors by design; only the cell hot path is required to be
-//!   allocation-free).
+//!   allocation-free);
+//! * `obs` section (separate `BENCH_obs.json`): the same pipelined step
+//!   traced vs untraced — the span recorder's wall overhead (gated ≤ 3%
+//!   in non-quick runs) and its steady-state allocation delta (gated 0).
 //!
 //! `--quick` runs a reduced model with few reps and no perf gate — the
 //! CI bench-smoke job uses it to catch compile errors and
@@ -353,6 +356,87 @@ fn main() {
         assert!(
             speedup > 0.5,
             "pipelined step is >2x slower than serial slice execution ({speedup:.2}x)"
+        );
+    }
+
+    // ---- obs: recorder overhead on the pipelined step ----
+    // Traced vs untraced execution of the same schedule (cfg.trace on in
+    // both, so SliceTime collection is identical and the delta isolates
+    // the span recorder). The recorder's contract is "a few ns per span,
+    // zero steady-state allocations": the non-quick gates pin the wall
+    // overhead ≤ 3% and the per-step allocation delta attributable to
+    // the recorder at 0 (min over reps, so one-off per-thread slot
+    // claims on first use don't count).
+    let obs_steps = 1 + reps;
+    let obs_run = |traced: bool| -> (f64, u64, u64) {
+        terapipe::obs::set_enabled(traced);
+        let cfg = TrainConfig {
+            slicing: slicing.clone(),
+            steps: obs_steps,
+            trace: true,
+            seed: 4,
+            ..Default::default()
+        };
+        let mut t = Trainer::with_spec(spec.clone(), cfg).expect("trainer");
+        let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 4);
+        let mut wall = f64::INFINITY;
+        let mut allocs = u64::MAX;
+        let mut spans = 0u64;
+        for step in 0..obs_steps {
+            let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
+            let before = ALLOCS.load(Ordering::SeqCst);
+            let (res, ms) = time_ms(|| t.step(&batches));
+            let delta = ALLOCS.load(Ordering::SeqCst) - before;
+            res.expect("obs bench step");
+            // drain outside the timed/counted region; also keeps the
+            // fixed-capacity buffers from overflowing across reps
+            spans += terapipe::obs::flush().spans.len() as u64;
+            if step == 0 {
+                continue; // warmup: thread spin-up + recorder slot claims
+            }
+            wall = wall.min(ms);
+            allocs = allocs.min(delta);
+        }
+        drop(t);
+        terapipe::obs::set_enabled(false);
+        (wall, allocs, spans / obs_steps as u64)
+    };
+    let (untraced_ms, untraced_allocs, _) = obs_run(false);
+    let (traced_ms, traced_allocs, spans_per_step) = obs_run(true);
+    let overhead = (traced_ms - untraced_ms) / untraced_ms.max(1e-9);
+    let extra_allocs = traced_allocs.saturating_sub(untraced_allocs);
+    println!("\n## obs: span recorder overhead (pipelined step, min of {reps})");
+    println!(
+        "untraced {untraced_ms:.2} ms, traced {traced_ms:.2} ms ({:+.2}%), ~{spans_per_step} spans/step",
+        100.0 * overhead
+    );
+    println!("recorder-attributable steady-state allocations: {extra_allocs}");
+    let obs_report = Json::obj(vec![
+        ("bench", Json::Str("obs".into())),
+        ("quick", Json::Num(if quick { 1.0 } else { 0.0 })),
+        ("untraced_ms_min", Json::Num(untraced_ms)),
+        ("traced_ms_min", Json::Num(traced_ms)),
+        ("overhead_frac", Json::Num(overhead)),
+        ("spans_per_step", Json::Num(spans_per_step as f64)),
+        ("untraced_step_allocs_min", Json::Num(untraced_allocs as f64)),
+        ("traced_step_allocs_min", Json::Num(traced_allocs as f64)),
+        ("recorder_extra_allocs_min", Json::Num(extra_allocs as f64)),
+    ]);
+    let obs_path = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/../BENCH_obs.json"))
+        .unwrap_or_else(|_| "BENCH_obs.json".into());
+    std::fs::write(&obs_path, obs_report.to_string() + "\n").expect("write BENCH_obs.json");
+    println!("wrote {obs_path}");
+    if !quick {
+        assert!(
+            overhead <= 0.03,
+            "recorder overhead {:.2}% exceeds the 3% budget ({traced_ms:.2} vs {untraced_ms:.2} ms)",
+            100.0 * overhead
+        );
+        assert_eq!(
+            extra_allocs, 0,
+            "recorder must be allocation-free at steady state \
+             (traced {traced_allocs} vs untraced {untraced_allocs} allocs/step)"
         );
     }
 }

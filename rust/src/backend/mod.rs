@@ -182,6 +182,7 @@ pub fn slice_timer<B: StageBackend>(
         let g_h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
         let g_know = HostTensor::zeros_f32(&d.kv_new_shape(len));
         let g_vnow = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let t_us = crate::obs::maybe_start();
         let (_, ms) = crate::util::time_ms(|| {
             let _ = backend
                 .stage_fwd(&h, &k_ctx, &v_ctx, off)
@@ -190,6 +191,17 @@ pub fn slice_timer<B: StageBackend>(
                 .stage_bwd(&h, &k_ctx, &v_ctx, off, &g_h, &g_know, &g_vnow)
                 .expect("measure stage_bwd");
         });
+        // probe span: measurement traffic, not training work — tagged
+        // with MB_PROBE so the exec↔sim differential ignores it.
+        crate::obs::emit(
+            crate::obs::SpanKind::SliceFwd,
+            crate::obs::DRIVER,
+            crate::obs::MB_PROBE,
+            0,
+            i as u64,
+            j as u64,
+            t_us,
+        );
         ms
     };
     (timer, buckets.into_iter().map(|b| b as u32).collect())
@@ -230,6 +242,7 @@ pub fn role_slice_timer<B: StageBackend>(
         let g_h = HostTensor::zeros_f32(&[d.batch, len, d.hidden]);
         let g_know = HostTensor::zeros_f32(&d.kv_new_shape(len));
         let g_vnow = HostTensor::zeros_f32(&d.kv_new_shape(len));
+        let t_us = crate::obs::maybe_start();
         let (_, ms) = crate::util::time_ms(|| {
             let h_in = if role == StageRole::First {
                 backend.embed_fwd(&tokens, len, off).expect("measure embed_fwd")
@@ -252,6 +265,15 @@ pub fn role_slice_timer<B: StageBackend>(
                 backend.embed_bwd(&tokens, len, off, &g_h_in).expect("measure embed_bwd");
             }
         });
+        crate::obs::emit(
+            crate::obs::SpanKind::SliceFwd,
+            crate::obs::DRIVER,
+            crate::obs::MB_PROBE,
+            0,
+            i as u64,
+            j as u64,
+            t_us,
+        );
         ms
     };
     (timer, buckets.into_iter().map(|b| b as u32).collect())

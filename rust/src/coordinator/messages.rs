@@ -128,4 +128,19 @@ impl DriverMsg {
             _ => 64,
         }
     }
+
+    /// Which stage sent this message in a `k`-stage pipeline (identifies
+    /// the `ToDriver` link it traveled for recv-side span attribution).
+    pub fn source_stage(&self, k: usize) -> usize {
+        match self {
+            // BwdDone is emitted by the first stage after embed_bwd.
+            DriverMsg::BwdDone { .. } => 0,
+            // Losses come from the last stage's head.
+            DriverMsg::Loss { .. } => k.saturating_sub(1),
+            DriverMsg::SliceTime(t) => t.stage,
+            DriverMsg::UpdateDone { stage }
+            | DriverMsg::CheckpointDone { stage }
+            | DriverMsg::Fatal { stage, .. } => *stage,
+        }
+    }
 }

@@ -38,8 +38,45 @@ pub struct StepReport {
     /// Wall time from step start until the last slice's loss arrived —
     /// the executed forward-sweep makespan the wavefront model predicts.
     pub fwd_ms: f64,
+    /// Wall time from step start until the last backward ack — the full
+    /// fwd+bwd pipeline makespan.
+    pub pipe_ms: f64,
     /// Tokens processed this step (microbatches · batch · L).
     pub tokens: usize,
+    /// Per-stage compute busy time this step (ms; empty unless timing
+    /// collection is on — `cfg.trace` or a replan cadence).
+    pub stage_busy_ms: Vec<f64>,
+    /// Measured bubble fraction `1 - Σ busy / (stages · pipe_ms)`;
+    /// `None` without timing collection.
+    pub bubble_fraction: Option<f64>,
+}
+
+/// What one [`Trainer::step`] returns: the scalars a driver loop needs,
+/// before they're folded into a [`StepReport`].
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    /// Mean per-token cross-entropy (nats).
+    pub loss: f64,
+    /// Tokens processed (microbatches · batch · L).
+    pub tokens: usize,
+    /// Forward-sweep makespan (ms).
+    pub fwd_ms: f64,
+    /// Full fwd+bwd pipeline makespan (ms).
+    pub pipe_ms: f64,
+    /// Per-stage busy time (ms; empty without timing collection).
+    pub stage_busy_ms: Vec<f64>,
+}
+
+impl StepStats {
+    /// Measured bubble fraction over the pipeline window, when per-stage
+    /// busy time was collected.
+    pub fn bubble_fraction(&self) -> Option<f64> {
+        if self.stage_busy_ms.is_empty() || self.pipe_ms <= 0.0 {
+            return None;
+        }
+        let busy: f64 = self.stage_busy_ms.iter().sum();
+        Some((1.0 - busy / (self.stage_busy_ms.len() as f64 * self.pipe_ms)).clamp(0.0, 1.0))
+    }
 }
 
 /// Outcome of the drift-gated replan loop ([`Trainer::train_with_drift_replan`]).
@@ -177,8 +214,7 @@ impl<S: BackendSpec> Trainer<S> {
     }
 
     /// One synchronous training step over `microbatches` batches.
-    /// Returns (mean per-token loss, tokens processed, fwd makespan ms).
-    pub fn step(&mut self, batches: &[Batch]) -> Result<(f64, usize, f64)> {
+    pub fn step(&mut self, batches: &[Batch]) -> Result<StepStats> {
         assert_eq!(batches.len(), self.cfg.microbatches);
         let offs = self.cfg.offsets();
         let num_slices = self.cfg.slicing.len();
@@ -236,6 +272,7 @@ impl<S: BackendSpec> Trainer<S> {
                 other => bail!("unexpected {other:?} mid-step"),
             }
         }
+        let pipe_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         // ---- optimizer update on every stage ----
         let global_step = self.steps_done + 1; // 1-based Adam bias correction
@@ -261,7 +298,21 @@ impl<S: BackendSpec> Trainer<S> {
 
         self.steps_done += 1;
         let tokens = self.cfg.microbatches * self.model.batch * self.model.seq_len;
-        Ok((losses / tokens as f64, tokens, fwd_ms))
+        // Per-stage busy time from this step's slice samples. The update
+        // collect loop above may have appended post-step samples too;
+        // all of them belong to this step (timings cleared at entry).
+        let stage_busy_ms = if self.timings.is_empty() {
+            Vec::new()
+        } else {
+            let mut busy = vec![0.0f64; self.model.num_stages];
+            for t in &self.timings {
+                if t.stage < busy.len() {
+                    busy[t.stage] += t.ms;
+                }
+            }
+            busy
+        };
+        Ok(StepStats { loss: losses / tokens as f64, tokens, fwd_ms, pipe_ms, stage_busy_ms })
     }
 
     /// Per-slice wall-clock samples from the most recent step (empty
@@ -286,13 +337,16 @@ impl<S: BackendSpec> Trainer<S> {
     ) -> Result<StepReport> {
         let batches: Vec<Batch> = (0..self.cfg.microbatches).map(|_| next_batch()).collect();
         let t0 = Instant::now();
-        let (loss, tokens, fwd_ms) = self.step(&batches)?;
+        let stats = self.step(&batches)?;
         Ok(StepReport {
             step,
-            loss,
+            loss: stats.loss,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-            fwd_ms,
-            tokens,
+            fwd_ms: stats.fwd_ms,
+            pipe_ms: stats.pipe_ms,
+            tokens: stats.tokens,
+            bubble_fraction: stats.bubble_fraction(),
+            stage_busy_ms: stats.stage_busy_ms,
         })
     }
 
@@ -309,6 +363,7 @@ impl<S: BackendSpec> Trainer<S> {
                         "replan at step {step}: slicing {:?} -> {:?}",
                         self.cfg.slicing, cand.slicing
                     );
+                    crate::obs::instant(crate::obs::SpanKind::PlanSwitch, crate::obs::DRIVER, step as u64, 0);
                 }
                 self.cfg = cand;
             }
@@ -386,10 +441,27 @@ impl<S: BackendSpec> Trainer<S> {
                         comm: scale,
                     };
                     match detector.verdict(&current) {
-                        DriftVerdict::Warmup => report.warmups += 1,
-                        DriftVerdict::Stable { .. } => report.stable_checks += 1,
-                        DriftVerdict::Drifted { factor, .. } => {
+                        DriftVerdict::Warmup => {
+                            report.warmups += 1;
+                            crate::obs::instant(crate::obs::SpanKind::DriftVerdict, crate::obs::DRIVER, 0, 0);
+                        }
+                        DriftVerdict::Stable { mean_rel_err } => {
+                            report.stable_checks += 1;
+                            crate::obs::instant(
+                                crate::obs::SpanKind::DriftVerdict,
+                                crate::obs::DRIVER,
+                                1,
+                                mean_rel_err.to_bits(),
+                            );
+                        }
+                        DriftVerdict::Drifted { factor, mean_rel_err } => {
                             report.resolves += 1;
+                            crate::obs::instant(
+                                crate::obs::SpanKind::DriftVerdict,
+                                crate::obs::DRIVER,
+                                2,
+                                mean_rel_err.to_bits(),
+                            );
                             scale *= factor;
                             if let Some(slicing) = resolve(step, factor) {
                                 self.try_adopt_slicing(step, slicing);

@@ -3,57 +3,110 @@
 //! Zero injected delay, zero loss; `Disconnected` only when a peer
 //! thread has really exited. The trait layer adds one virtual dispatch
 //! per send/recv, which is noise next to a slice's compute.
+//!
+//! Every endpoint knows its directed [`LinkId`] so sends and deliveries
+//! emit `obs` instants (approx wire bytes + dense link index) when the
+//! global recorder is on — one relaxed atomic load when it is off.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
 use super::super::messages::{DriverMsg, Msg};
 use super::{
-    Disconnected, DriverRecv, DriverRx, DriverTx, Fabric, MsgRx, MsgTx, StageEndpoint, Transport,
+    Disconnected, DriverRecv, DriverRx, DriverTx, Fabric, LinkId, MsgRx, MsgTx, StageEndpoint,
+    Transport,
 };
+use crate::obs::{self, SpanKind};
 
 /// In-process mpsc transport (the default).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct InProcTransport;
 
-struct ChanMsgTx(Sender<Msg>);
+struct ChanMsgTx {
+    inner: Sender<Msg>,
+    /// Sending endpoint (stage index, or [`obs::DRIVER`]).
+    from_stage: i32,
+    /// Dense index of the link this sender feeds ([`LinkId::index`]).
+    link_idx: u64,
+}
 
 impl MsgTx for ChanMsgTx {
     fn send(&self, msg: Msg) -> Result<(), Disconnected> {
-        self.0.send(msg).map_err(|_| Disconnected)
+        obs::instant(SpanKind::Send, self.from_stage, msg.approx_bytes() as u64, self.link_idx);
+        self.inner.send(msg).map_err(|_| Disconnected)
     }
 }
 
-struct ChanMsgRx(Receiver<Msg>);
+struct ChanMsgRx {
+    inner: Receiver<Msg>,
+    /// Receiving stage (link inference via [`LinkId::incoming`]).
+    stage: usize,
+    k: usize,
+}
 
 impl MsgRx for ChanMsgRx {
     fn recv(&mut self) -> Result<Msg, Disconnected> {
-        self.0.recv().map_err(|_| Disconnected)
+        let msg = self.inner.recv().map_err(|_| Disconnected)?;
+        obs::instant(
+            SpanKind::Recv,
+            self.stage as i32,
+            msg.approx_bytes() as u64,
+            LinkId::incoming(self.stage, &msg).index(self.k) as u64,
+        );
+        Ok(msg)
     }
 }
 
-struct ChanDriverTx(Sender<DriverMsg>);
+struct ChanDriverTx {
+    inner: Sender<DriverMsg>,
+    from_stage: i32,
+    link_idx: u64,
+}
 
 impl DriverTx for ChanDriverTx {
     fn send(&self, msg: DriverMsg) -> Result<(), Disconnected> {
-        self.0.send(msg).map_err(|_| Disconnected)
+        obs::instant(SpanKind::Send, self.from_stage, msg.approx_bytes() as u64, self.link_idx);
+        self.inner.send(msg).map_err(|_| Disconnected)
     }
 
     fn clone_box(&self) -> Box<dyn DriverTx> {
-        Box::new(ChanDriverTx(self.0.clone()))
+        Box::new(ChanDriverTx {
+            inner: self.inner.clone(),
+            from_stage: self.from_stage,
+            link_idx: self.link_idx,
+        })
     }
 }
 
-struct ChanDriverRx(Receiver<DriverMsg>);
+struct ChanDriverRx {
+    inner: Receiver<DriverMsg>,
+    k: usize,
+}
+
+impl ChanDriverRx {
+    fn note(&self, msg: &DriverMsg) {
+        obs::instant(
+            SpanKind::Recv,
+            obs::DRIVER,
+            msg.approx_bytes() as u64,
+            LinkId::ToDriver(msg.source_stage(self.k)).index(self.k) as u64,
+        );
+    }
+}
 
 impl DriverRx for ChanDriverRx {
     fn recv(&mut self) -> Result<DriverMsg, Disconnected> {
-        self.0.recv().map_err(|_| Disconnected)
+        let msg = self.inner.recv().map_err(|_| Disconnected)?;
+        self.note(&msg);
+        Ok(msg)
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> DriverRecv {
-        match self.0.recv_timeout(timeout) {
-            Ok(m) => DriverRecv::Msg(m),
+        match self.inner.recv_timeout(timeout) {
+            Ok(m) => {
+                self.note(&m);
+                DriverRecv::Msg(m)
+            }
             Err(RecvTimeoutError::Timeout) => DriverRecv::TimedOut,
             Err(RecvTimeoutError::Disconnected) => DriverRecv::Disconnected,
         }
@@ -63,30 +116,40 @@ impl DriverRx for ChanDriverRx {
 impl Transport for InProcTransport {
     fn connect(&self, num_stages: usize) -> Fabric {
         assert!(num_stages >= 1);
+        let k = num_stages;
         let (driver_tx, driver_rx) = channel::<DriverMsg>();
-        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(num_stages);
-        let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(num_stages);
-        for _ in 0..num_stages {
+        let mut senders: Vec<Sender<Msg>> = Vec::with_capacity(k);
+        let mut receivers: Vec<Option<Receiver<Msg>>> = Vec::with_capacity(k);
+        for _ in 0..k {
             let (tx, rx) = channel::<Msg>();
             senders.push(tx);
             receivers.push(Some(rx));
         }
-        let stages = (0..num_stages)
+        let msg_tx = |s: usize, from_stage: i32, link: LinkId| -> Box<dyn MsgTx> {
+            Box::new(ChanMsgTx {
+                inner: senders[s].clone(),
+                from_stage,
+                link_idx: link.index(k) as u64,
+            })
+        };
+        let stages = (0..k)
             .map(|s| StageEndpoint {
-                inbox: Box::new(ChanMsgRx(receivers[s].take().unwrap())) as Box<dyn MsgRx>,
-                next: (s + 1 < num_stages)
-                    .then(|| Box::new(ChanMsgTx(senders[s + 1].clone())) as Box<dyn MsgTx>),
-                prev: (s > 0)
-                    .then(|| Box::new(ChanMsgTx(senders[s - 1].clone())) as Box<dyn MsgTx>),
-                driver: Box::new(ChanDriverTx(driver_tx.clone())),
+                inbox: Box::new(ChanMsgRx { inner: receivers[s].take().unwrap(), stage: s, k })
+                    as Box<dyn MsgRx>,
+                next: (s + 1 < k).then(|| msg_tx(s + 1, s as i32, LinkId::Fwd(s))),
+                prev: (s > 0).then(|| msg_tx(s - 1, s as i32, LinkId::Bwd(s))),
+                driver: Box::new(ChanDriverTx {
+                    inner: driver_tx.clone(),
+                    from_stage: s as i32,
+                    link_idx: LinkId::ToDriver(s).index(k) as u64,
+                }),
             })
             .collect();
         Fabric {
-            to_stages: senders
-                .into_iter()
-                .map(|tx| Box::new(ChanMsgTx(tx)) as Box<dyn MsgTx>)
+            to_stages: (0..k)
+                .map(|s| msg_tx(s, obs::DRIVER, LinkId::DriverTo(s)))
                 .collect(),
-            from_workers: Box::new(ChanDriverRx(driver_rx)),
+            from_workers: Box::new(ChanDriverRx { inner: driver_rx, k }),
             stages,
         }
     }

@@ -149,6 +149,25 @@ impl LinkId {
         4 * k - 2
     }
 
+    /// The link a message arriving at `stage`'s inbox traveled, inferred
+    /// from the message variant (each stage has exactly one upstream
+    /// source per variant: forwards come from `stage-1` — or the driver
+    /// at stage 0 — backwards from `stage+1`, control from the driver).
+    /// Used for recv-side span attribution without widening the wire.
+    pub fn incoming(stage: usize, msg: &Msg) -> LinkId {
+        match msg {
+            Msg::Fwd { .. } => {
+                if stage == 0 {
+                    LinkId::DriverTo(0)
+                } else {
+                    LinkId::Fwd(stage - 1)
+                }
+            }
+            Msg::Bwd { .. } => LinkId::Bwd(stage + 1),
+            Msg::Update { .. } | Msg::Checkpoint { .. } | Msg::Shutdown => LinkId::DriverTo(stage),
+        }
+    }
+
     /// Enumerate every link of a `k`-stage pipeline in index order.
     pub fn all(k: usize) -> Vec<LinkId> {
         let mut v = Vec::with_capacity(Self::count(k));

@@ -39,6 +39,7 @@ use super::{
     Disconnected, DriverRecv, DriverRx, DriverTx, Fabric, LinkId, MsgRx, MsgTx, StageEndpoint,
     Transport,
 };
+use crate::obs::{self, SpanKind};
 use crate::util::Rng;
 
 /// Delivery samples kept per link (the fit needs dozens, not millions).
@@ -243,10 +244,15 @@ fn sleep_until(due: Instant) {
 struct VirtualMsgTx {
     inner: Sender<Env<Msg>>,
     link: Arc<Mutex<LinkState>>,
+    /// Sending endpoint (stage index, or [`obs::DRIVER`]).
+    from_stage: i32,
+    /// Dense index of the link this sender feeds ([`LinkId::index`]).
+    link_idx: u64,
 }
 
 impl MsgTx for VirtualMsgTx {
     fn send(&self, msg: Msg) -> Result<(), Disconnected> {
+        obs::instant(SpanKind::Send, self.from_stage, msg.approx_bytes() as u64, self.link_idx);
         let due = {
             let mut l = self.link.lock().unwrap();
             l.admit(msg.approx_bytes(), msg.slice_len())
@@ -263,6 +269,9 @@ struct VirtualMsgRx {
     /// Deliveries allowed before crash-stop (`u64::MAX` = never dies).
     kill_after: Arc<AtomicU64>,
     delivered: u64,
+    /// Receiving stage + pipeline size (recv-span link inference).
+    stage: usize,
+    k: usize,
 }
 
 impl MsgRx for VirtualMsgRx {
@@ -280,6 +289,12 @@ impl MsgRx for VirtualMsgRx {
                     }
                     sleep_until(due);
                     self.delivered += 1;
+                    obs::instant(
+                        SpanKind::Recv,
+                        self.stage as i32,
+                        msg.approx_bytes() as u64,
+                        LinkId::incoming(self.stage, &msg).index(self.k) as u64,
+                    );
                     return Ok(msg);
                 }
             }
@@ -290,10 +305,13 @@ impl MsgRx for VirtualMsgRx {
 struct VirtualDriverTx {
     inner: Sender<Env<DriverMsg>>,
     link: Arc<Mutex<LinkState>>,
+    from_stage: i32,
+    link_idx: u64,
 }
 
 impl DriverTx for VirtualDriverTx {
     fn send(&self, msg: DriverMsg) -> Result<(), Disconnected> {
+        obs::instant(SpanKind::Send, self.from_stage, msg.approx_bytes() as u64, self.link_idx);
         let due = {
             let mut l = self.link.lock().unwrap();
             l.admit(msg.approx_bytes(), None)
@@ -305,12 +323,29 @@ impl DriverTx for VirtualDriverTx {
     }
 
     fn clone_box(&self) -> Box<dyn DriverTx> {
-        Box::new(VirtualDriverTx { inner: self.inner.clone(), link: self.link.clone() })
+        Box::new(VirtualDriverTx {
+            inner: self.inner.clone(),
+            link: self.link.clone(),
+            from_stage: self.from_stage,
+            link_idx: self.link_idx,
+        })
     }
 }
 
 struct VirtualDriverRx {
     inner: Receiver<Env<DriverMsg>>,
+    k: usize,
+}
+
+impl VirtualDriverRx {
+    fn note(&self, msg: &DriverMsg) {
+        obs::instant(
+            SpanKind::Recv,
+            obs::DRIVER,
+            msg.approx_bytes() as u64,
+            LinkId::ToDriver(msg.source_stage(self.k)).index(self.k) as u64,
+        );
+    }
 }
 
 impl DriverRx for VirtualDriverRx {
@@ -320,6 +355,7 @@ impl DriverRx for VirtualDriverRx {
                 Env::Wake => continue,
                 Env::Deliver { due, msg } => {
                     sleep_until(due);
+                    self.note(&msg);
                     return Ok(msg);
                 }
             }
@@ -338,6 +374,7 @@ impl DriverRx for VirtualDriverRx {
                     // an in-flight message is activity: honor its injected
                     // delay even when the due time crosses the deadline
                     sleep_until(due);
+                    self.note(&msg);
                     return DriverRecv::Msg(msg);
                 }
             }
@@ -433,8 +470,13 @@ impl Transport for VirtualTransport {
         }
 
         let link = |id: LinkId| links[id.index(k)].clone();
-        let msg_tx = |to: usize, id: LinkId| -> Box<dyn MsgTx> {
-            Box::new(VirtualMsgTx { inner: stage_txs[to].clone(), link: link(id) })
+        let msg_tx = |to: usize, from_stage: i32, id: LinkId| -> Box<dyn MsgTx> {
+            Box::new(VirtualMsgTx {
+                inner: stage_txs[to].clone(),
+                link: link(id),
+                from_stage,
+                link_idx: id.index(k) as u64,
+            })
         };
         let stages = (0..k)
             .map(|s| StageEndpoint {
@@ -442,19 +484,23 @@ impl Transport for VirtualTransport {
                     inner: stage_rxs[s].take().unwrap(),
                     kill_after: kills[s].clone(),
                     delivered: 0,
+                    stage: s,
+                    k,
                 }) as Box<dyn MsgRx>,
-                next: (s + 1 < k).then(|| msg_tx(s + 1, LinkId::Fwd(s))),
-                prev: (s > 0).then(|| msg_tx(s - 1, LinkId::Bwd(s))),
+                next: (s + 1 < k).then(|| msg_tx(s + 1, s as i32, LinkId::Fwd(s))),
+                prev: (s > 0).then(|| msg_tx(s - 1, s as i32, LinkId::Bwd(s))),
                 driver: Box::new(VirtualDriverTx {
                     inner: driver_tx.clone(),
                     link: link(LinkId::ToDriver(s)),
+                    from_stage: s as i32,
+                    link_idx: LinkId::ToDriver(s).index(k) as u64,
                 }),
             })
             .collect();
-        let to_stages = (0..k).map(|s| msg_tx(s, LinkId::DriverTo(s))).collect();
+        let to_stages = (0..k).map(|s| msg_tx(s, obs::DRIVER, LinkId::DriverTo(s))).collect();
 
         *self.shared.lock().unwrap() = Shared { num_stages: k, links, kills, wakers: stage_txs };
-        Fabric { to_stages, from_workers: Box::new(VirtualDriverRx { inner: driver_rx }), stages }
+        Fabric { to_stages, from_workers: Box::new(VirtualDriverRx { inner: driver_rx, k }), stages }
     }
 }
 

@@ -34,6 +34,7 @@ use anyhow::{anyhow, Result};
 use super::messages::{DriverMsg, FwdPayload, Msg, SliceTime, TimedPhase};
 use super::transport::{DriverTx, MsgTx, StageEndpoint};
 use crate::backend::{BackendSpec, StageBackend};
+use crate::obs::{self, SpanKind};
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
 
@@ -205,7 +206,9 @@ impl<B: StageBackend> Worker<B> {
     }
 
     fn handle_update(&mut self, step: i32, lr: f32) -> Result<()> {
+        let t_us = obs::maybe_start();
         self.backend.update(step, lr)?;
+        obs::emit(SpanKind::AdamUpdate, self.stage as i32, 0, 0, step as u64, 0, t_us);
         self.mbs.clear();
         self.driver
             .send(DriverMsg::UpdateDone { stage: self.stage })
@@ -225,6 +228,7 @@ impl<B: StageBackend> Worker<B> {
         targets: Vec<i32>,
     ) -> Result<()> {
         let t0 = Instant::now();
+        let t_us = obs::maybe_start();
         // 1. Materialize this stage's input activation.
         let (h_in, tokens) = match payload {
             FwdPayload::Tokens(tokens) => {
@@ -242,8 +246,10 @@ impl<B: StageBackend> Worker<B> {
 
         // 3. Grow the context buffers (axis 2 = token position) and stash
         // what backward will need.
+        let kv_us = obs::maybe_start();
         st.k_ctx.write_at_axis(2, off, &k_new);
         st.v_ctx.write_at_axis(2, off, &v_new);
+        obs::emit(SpanKind::KvRoute, self.stage as i32, mb as u32, slice as u32, off as u64, len as u64, kv_us);
         st.h_in.insert(slice, h_in);
         st.meta.insert(
             slice,
@@ -258,6 +264,7 @@ impl<B: StageBackend> Worker<B> {
         if self.is_last {
             // 4a. Head loss for this slice (reported to the driver).
             let loss_sum = self.backend.head_loss(&h_out, &targets, len)?;
+            obs::emit(SpanKind::SliceFwd, self.stage as i32, mb as u32, slice as u32, off as u64, len as u64, t_us);
             self.send_time(mb, slice, off, len, TimedPhase::Fwd, t0.elapsed().as_secs_f64() * 1e3);
             self.driver
                 .send(DriverMsg::Loss {
@@ -280,6 +287,7 @@ impl<B: StageBackend> Worker<B> {
             }
         } else {
             // 4. Hand the activation to the next stage.
+            obs::emit(SpanKind::SliceFwd, self.stage as i32, mb as u32, slice as u32, off as u64, len as u64, t_us);
             self.send_time(mb, slice, off, len, TimedPhase::Fwd, t0.elapsed().as_secs_f64() * 1e3);
             self.next
                 .as_ref()
@@ -307,8 +315,9 @@ impl<B: StageBackend> Worker<B> {
         g_h: HostTensor,
     ) -> Result<()> {
         let t0 = Instant::now();
+        let t_us = obs::maybe_start();
         let g_h_in = self.backward_one_slice(mb, slice, off, len, g_h)?;
-        self.finish_bwd_slice(mb, slice, off, len, g_h_in, t0)?;
+        self.finish_bwd_slice(mb, slice, off, len, g_h_in, t0, t_us)?;
         if self.mbs.get(&mb).map(|s| s.h_in.is_empty()).unwrap_or(false) {
             self.mbs.remove(&mb);
         }
@@ -351,7 +360,9 @@ impl<B: StageBackend> Worker<B> {
     /// Route the input-gradient of a finished backward slice: upstream, or
     /// into the embedding backward on the first stage (+ notify the
     /// driver). `t0` is when this slice's backward compute began (for the
-    /// timing sample, which must cover embed_bwd too).
+    /// timing sample, which must cover embed_bwd too). `t_us` is the
+    /// matching span start from [`obs::maybe_start`].
+    #[allow(clippy::too_many_arguments)]
     fn finish_bwd_slice(
         &mut self,
         mb: usize,
@@ -360,6 +371,7 @@ impl<B: StageBackend> Worker<B> {
         len: usize,
         g_h_in: HostTensor,
         t0: Instant,
+        t_us: u64,
     ) -> Result<()> {
         if self.is_first {
             let meta = self
@@ -372,9 +384,11 @@ impl<B: StageBackend> Worker<B> {
                 .tokens
                 .ok_or_else(|| anyhow!("first stage lost slice tokens"))?;
             self.backend.embed_bwd(&tokens, len, off, &g_h_in)?;
+            obs::emit(SpanKind::SliceBwd, self.stage as i32, mb as u32, slice as u32, off as u64, len as u64, t_us);
             self.send_time(mb, slice, off, len, TimedPhase::Bwd, t0.elapsed().as_secs_f64() * 1e3);
             self.driver.send(DriverMsg::BwdDone { mb, slice }).ok();
         } else {
+            obs::emit(SpanKind::SliceBwd, self.stage as i32, mb as u32, slice as u32, off as u64, len as u64, t_us);
             self.send_time(mb, slice, off, len, TimedPhase::Bwd, t0.elapsed().as_secs_f64() * 1e3);
             self.prev
                 .as_ref()
@@ -403,6 +417,7 @@ impl<B: StageBackend> Worker<B> {
 
         for slice in order {
             let t0 = Instant::now();
+            let t_us = obs::maybe_start();
             let (meta, h_out) = {
                 let st = self
                     .mbs
@@ -421,7 +436,7 @@ impl<B: StageBackend> Worker<B> {
             };
             let g_h = self.backend.head_bwd(&h_out, &meta.targets, meta.len)?;
             let g_h_in = self.backward_one_slice(mb, slice, meta.off, meta.len, g_h)?;
-            self.finish_bwd_slice(mb, slice, meta.off, meta.len, g_h_in, t0)?;
+            self.finish_bwd_slice(mb, slice, meta.off, meta.len, g_h_in, t0, t_us)?;
         }
         Ok(())
     }

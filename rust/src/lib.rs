@@ -28,6 +28,11 @@
 //! * [`planner`] — the online planner service: long-lived plan ownership
 //!   with a cost-table cache, warm-started re-solves on cluster deltas,
 //!   and a drift-aware replan loop with hysteresis (`terapipe autotune`).
+//! * [`obs`] — unified tracing & metrics: a lock-free span recorder
+//!   threaded through the measure→plan→execute loop, Chrome/Perfetto
+//!   trace export, a Prometheus-style metrics snapshot, and the
+//!   exec↔sim span differential that localizes cost-model misses to a
+//!   (stage, slice) cell.
 //! * [`config`] — model / cluster / parallelism configuration incl. the
 //!   paper's Table 1 presets.
 //! * [`data`] — synthetic corpus + byte-level tokenizer + batcher for the
@@ -38,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod obs;
 pub mod perfmodel;
 pub mod planner;
 pub mod runtime;

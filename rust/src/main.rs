@@ -70,6 +70,7 @@ USAGE: terapipe <command> [--options]
   solve    --setting N [--granularity 8] [--eps 0.1]
   autotune --setting N [--events trace.json] [--granularity 16] [--eps 0.1]
            [--hysteresis 0.02] [--tolerance 1e-9]
+           [--trace-out trace.json] [--metrics-out metrics.prom]
   simulate --setting N [--granularity 16]
   timeline --setting N [--mode terapipe|gpipe] [--width 100] [--chrome]
   fig3     [--model gpt3-1b]
@@ -82,6 +83,8 @@ USAGE: terapipe <command> [--options]
            [--drift-threshold 0.35] [--drift-window 16]
            [--recv-timeout-ms 120000] (0 = wait forever)
            [--save-checkpoint DIR] [--resume DIR]
+           [--trace-out trace.json] [--metrics-out metrics.prom]
+           (Perfetto span trace + Prometheus-style metrics snapshot)
            native model: [--hidden 64] [--heads 4] [--layers 2] [--stages 2]
            [--seq-len 128] [--batch 4] [--vocab 256] [--granularity 16]
            [--seed 42]; or [--artifacts DIR] for the AOT/PJRT backend
@@ -169,6 +172,11 @@ fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
     let setting = presets::setting(id);
     let gran = args.u32("granularity", 16);
     let tol = args.f64("tolerance", 1e-9);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if trace_out.is_some() || metrics_out.is_some() {
+        terapipe::obs::set_enabled(true);
+    }
     let k = setting.parallel.pipeline_stages;
     let l = setting.model.seq_len;
     let cfg = PlannerConfig {
@@ -279,13 +287,30 @@ fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
         }
     }
 
-    let cs = planner.cache_stats();
-    println!(
-        "cost-table cache: {} densifications, {} rescales (diagonal reuse), {} hits",
-        cs.base_misses,
-        cs.rescales,
-        cs.base_hits + cs.scaled_hits
-    );
+    // Cache + drift telemetry goes through the metrics registry: the
+    // stdout summary and --metrics-out render the same counters from the
+    // same source (no bespoke print path to fall out of sync).
+    let spans = terapipe::obs::flush();
+    let mut reg = terapipe::obs::MetricsRegistry::new();
+    terapipe::obs::metrics::cache_metrics(&mut reg, &planner.cache_stats());
+    if !spans.spans.is_empty() || spans.dropped > 0 {
+        terapipe::obs::metrics::span_metrics(&mut reg, &spans);
+    }
+    print!("{}", reg.render());
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, reg.render())?;
+        println!("metrics written to {}", path.display());
+    }
+    if let Some(path) = &trace_out {
+        let bundle = terapipe::obs::export::TraceBundle {
+            exec: spans.spans,
+            predicted: Vec::new(),
+            stages: k as usize,
+            dropped: spans.dropped,
+        };
+        std::fs::write(path, terapipe::obs::export::perfetto_trace(&bundle).to_string())?;
+        println!("trace written to {} (open at ui.perfetto.dev)", path.display());
+    }
     Ok(())
 }
 
@@ -478,8 +503,24 @@ fn default_slicing(seq_len: usize, buckets: &[usize]) -> Vec<usize> {
 
 fn step_printer(r: &terapipe::coordinator::StepReport) {
     if r.step % 10 == 0 || r.step < 5 {
+        // per-stage utilization (busy / pipeline window) when timing
+        // collection is on (cfg.trace or a replan cadence)
+        let util = if !r.stage_busy_ms.is_empty() && r.pipe_ms > 0.0 {
+            let per: Vec<String> = r
+                .stage_busy_ms
+                .iter()
+                .map(|b| format!("{:.0}%", 100.0 * b / r.pipe_ms))
+                .collect();
+            let bubble = r
+                .bubble_fraction
+                .map(|b| format!(" bubble {:.0}%", 100.0 * b))
+                .unwrap_or_default();
+            format!("  util [{}]{}", per.join(" "), bubble)
+        } else {
+            String::new()
+        };
         println!(
-            "step {:>4}  loss {:.4}  {:>7.1} ms  {:.0} tok/s",
+            "step {:>4}  loss {:.4}  {:>7.1} ms  {:.0} tok/s{util}",
             r.step,
             r.loss,
             r.wall_ms,
@@ -506,6 +547,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let m = spec.model();
     let buckets = spec.buckets();
 
+    // Observability: either output flag turns the global span recorder
+    // on (before --auto's measure pass, so probe spans land in the
+    // trace) and enables per-slice timing collection (cfg.trace).
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let obs_on = trace_out.is_some() || metrics_out.is_some();
+    if obs_on {
+        terapipe::obs::set_enabled(true);
+    }
+
     // One measured model serves both --auto slicing and (when
     // --replan-every is set) the drift gate's solved-against belief.
     let mut auto_fit: Option<LinearCtxModel> = None;
@@ -529,7 +580,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         lr: args.f64("lr", 1e-3) as f32,
         seed: args.u32("seed", 42) as u64,
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
-        trace: false,
+        trace: obs_on,
         recv_timeout_ms: recv_timeout(args),
     };
     let corpus = match args.get("corpus") {
@@ -554,12 +605,21 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let seed = trainer.config().seed;
     let mut batcher = terapipe::data::Batcher::new(&corpus, m.batch, m.seq_len, seed);
 
+    // Per-step drains keep the fixed-capacity per-thread span buffers
+    // from overflowing across a long run.
+    let mut spans = terapipe::obs::Flush::default();
+    let on_step = |r: &terapipe::coordinator::StepReport, spans: &mut terapipe::obs::Flush| {
+        step_printer(r);
+        if obs_on {
+            spans.absorb(terapipe::obs::flush());
+        }
+    };
     let reports = if replan.is_some() {
         // Solver-in-the-loop with the drift gate (ROADMAP "planner on the
         // real runtime"): live per-slice samples stream into the
         // DriftDetector; a re-measure + re-solve is paid only when the
         // window says the solved-against model drifted.
-        let solved_against = match auto_fit {
+        let solved_against = match auto_fit.clone() {
             Some(f) => f,
             None => terapipe::backend::measure_fit(&spec, 3)?,
         };
@@ -570,7 +630,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         let respec = spec.clone();
         let (reports, drift) = trainer.train_with_drift_replan(
             || batcher.next_batch(),
-            step_printer,
+            |r| on_step(r, &mut spans),
             solved_against,
             dcfg,
             |step, factor| {
@@ -590,11 +650,61 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         );
         reports
     } else {
-        trainer.train(|| batcher.next_batch(), step_printer)?
+        trainer.train(|| batcher.next_batch(), |r| on_step(r, &mut spans))?
     };
     if let Some(ckpt) = save {
         trainer.save_checkpoint(&ckpt)?;
         println!("checkpoint written to {}", ckpt.display());
+    }
+    if obs_on {
+        // trailing spans: the final update acks, checkpoint traffic
+        spans.absorb(terapipe::obs::flush());
+    }
+    if let Some(path) = &metrics_out {
+        let mut reg = terapipe::obs::MetricsRegistry::new();
+        terapipe::obs::metrics::span_metrics(&mut reg, &spans);
+        terapipe::obs::metrics::step_metrics(&mut reg, &reports);
+        std::fs::write(path, reg.render())?;
+        println!("metrics written to {}", path.display());
+    }
+    if let Some(path) = &trace_out {
+        // Predicted counterpart: the Eq. 9 fit replayed through the
+        // wavefront over the *current* slicing (a replan may have
+        // switched it mid-run) — stacked under the exec tracks in
+        // Perfetto and aligned cell-by-cell in the differential.
+        let fitted = match auto_fit {
+            Some(f) => f,
+            None => terapipe::backend::measure_fit(&spec, 1)?,
+        };
+        let slicing = trainer.config().slicing.clone();
+        let mut stage_durs = Vec::with_capacity(slicing.len());
+        let mut off = 0u32;
+        for &len in &slicing {
+            stage_durs.push(fitted.t(len as u32, off));
+            off += len as u32;
+        }
+        let plan = terapipe::sim::schedule::stream_plan_per_stage(&vec![
+            stage_durs;
+            m.num_stages
+        ]);
+        let predicted = terapipe::sim::wavefront::evaluate(&plan, true)
+            .map(|r| r.trace)
+            .unwrap_or_default();
+        let diff = terapipe::obs::Differential::from_spans(&spans.spans, &predicted);
+        let bundle = terapipe::obs::export::TraceBundle {
+            exec: spans.spans,
+            predicted,
+            stages: m.num_stages,
+            dropped: spans.dropped,
+        };
+        std::fs::write(path, terapipe::obs::export::perfetto_trace(&bundle).to_string())?;
+        println!("trace written to {} (open at ui.perfetto.dev)", path.display());
+        print!("exec↔sim differential: {}", diff.report());
+        if let Some(bf) =
+            terapipe::obs::differential::measured_bubble_fraction(&bundle.exec, m.num_stages)
+        {
+            println!("measured bubble fraction {:.1}%", 100.0 * bf);
+        }
     }
     let first = reports.first().unwrap();
     let last = reports.last().unwrap();

@@ -1,0 +1,296 @@
+//! Exec↔sim span differential: the §3.5 contract, localized.
+//!
+//! The wavefront simulator predicts, per (stage, slice), how long each
+//! forward/backward work item takes; the recorder measures what actually
+//! happened. This module aligns the two streams into per-cell relative
+//! error so a contract miss *names the worst-offending (stage, slice)*
+//! instead of failing on an aggregate makespan number — and computes a
+//! measured counterpart to the simulator's `bubble_fraction` from real
+//! spans.
+//!
+//! Alignment is per-occurrence-mean: for each (stage, slice) cell the
+//! executed time is mean(slice_fwd durations) + mean(slice_bwd
+//! durations) over every microbatch and step that touched the cell, and
+//! the predicted time is the same statistic over the wavefront's spans.
+//! Means (not sums) make the comparison invariant to how many steps or
+//! microbatches each stream covers. Measurement probes
+//! ([`super::MB_PROBE`]) and driver-side spans are excluded.
+
+use std::collections::BTreeMap;
+
+use super::{SpanKind, SpanRecord, MB_PROBE};
+use crate::sim::trace::Span;
+use crate::sim::Phase;
+
+/// One aligned (stage, slice) cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cell {
+    pub stage: usize,
+    pub slice: usize,
+    /// Mean executed fwd+bwd time per occurrence (ms).
+    pub exec_ms: f64,
+    /// Mean predicted fwd+bwd time per occurrence (ms).
+    pub pred_ms: f64,
+    /// `|exec - pred| / pred` (0 when both sides are 0).
+    pub rel_err: f64,
+}
+
+/// The aligned exec↔sim timeline.
+#[derive(Debug, Clone, Default)]
+pub struct Differential {
+    /// One entry per (stage, slice) present in either stream, ordered.
+    pub cells: Vec<Cell>,
+    /// Wall span of the executed slice-compute window (ms).
+    pub exec_makespan_ms: f64,
+    /// Predicted makespan (ms).
+    pub pred_makespan_ms: f64,
+}
+
+/// (sum fwd, n fwd, sum bwd, n bwd) accumulator per cell.
+type Acc = (f64, u64, f64, u64);
+
+fn add(acc: &mut Acc, is_fwd: bool, ms: f64) {
+    if is_fwd {
+        acc.0 += ms;
+        acc.1 += 1;
+    } else {
+        acc.2 += ms;
+        acc.3 += 1;
+    }
+}
+
+fn mean_total(acc: &Acc) -> f64 {
+    let f = if acc.1 > 0 { acc.0 / acc.1 as f64 } else { 0.0 };
+    let b = if acc.3 > 0 { acc.2 / acc.3 as f64 } else { 0.0 };
+    f + b
+}
+
+fn rel_err(exec: f64, pred: f64) -> f64 {
+    if pred > 0.0 {
+        (exec - pred).abs() / pred
+    } else if exec > 0.0 {
+        f64::INFINITY
+    } else {
+        0.0
+    }
+}
+
+/// An exec-side span that participates in cell alignment: slice compute
+/// on a real stage, not a measurement probe.
+fn is_exec_cell_span(r: &SpanRecord) -> bool {
+    matches!(r.kind, SpanKind::SliceFwd | SpanKind::SliceBwd) && r.stage >= 0 && r.mb != MB_PROBE
+}
+
+impl Differential {
+    /// Align an executed span stream against wavefront-predicted spans.
+    pub fn from_spans(exec: &[SpanRecord], pred: &[Span]) -> Differential {
+        let mut table: BTreeMap<(usize, usize), (Acc, Acc)> = BTreeMap::new();
+        let mut t_min = f64::INFINITY;
+        let mut t_max = f64::NEG_INFINITY;
+        for r in exec.iter().filter(|r| is_exec_cell_span(r)) {
+            let e = table.entry((r.stage as usize, r.slice as usize)).or_default();
+            add(&mut e.0, r.kind == SpanKind::SliceFwd, r.dur_ms());
+            t_min = t_min.min(r.start_ms());
+            t_max = t_max.max(r.start_ms() + r.dur_ms());
+        }
+        let mut pred_makespan = 0.0f64;
+        for s in pred {
+            let e = table.entry((s.stage, s.slice)).or_default();
+            add(&mut e.1, s.phase == Phase::Fwd, s.end_ms - s.start_ms);
+            pred_makespan = pred_makespan.max(s.end_ms);
+        }
+        let cells = table
+            .into_iter()
+            .map(|((stage, slice), (e, p))| {
+                let exec_ms = mean_total(&e);
+                let pred_ms = mean_total(&p);
+                Cell { stage, slice, exec_ms, pred_ms, rel_err: rel_err(exec_ms, pred_ms) }
+            })
+            .collect();
+        Differential {
+            cells,
+            exec_makespan_ms: if t_max > t_min { t_max - t_min } else { 0.0 },
+            pred_makespan_ms: pred_makespan,
+        }
+    }
+
+    /// Align pre-aggregated per-stage, per-slice times (row = stage).
+    pub fn from_cells(exec: &[Vec<f64>], pred: &[Vec<f64>]) -> Differential {
+        let mut cells = Vec::new();
+        let stages = exec.len().max(pred.len());
+        for stage in 0..stages {
+            let er = exec.get(stage).map(|v| v.as_slice()).unwrap_or(&[]);
+            let pr = pred.get(stage).map(|v| v.as_slice()).unwrap_or(&[]);
+            for slice in 0..er.len().max(pr.len()) {
+                let e = er.get(slice).copied().unwrap_or(0.0);
+                let p = pr.get(slice).copied().unwrap_or(0.0);
+                cells.push(Cell { stage, slice, exec_ms: e, pred_ms: p, rel_err: rel_err(e, p) });
+            }
+        }
+        Differential {
+            cells,
+            exec_makespan_ms: exec.iter().map(|v| v.iter().sum::<f64>()).fold(0.0, f64::max),
+            pred_makespan_ms: pred.iter().map(|v| v.iter().sum::<f64>()).fold(0.0, f64::max),
+        }
+    }
+
+    /// The worst-offending cell by relative error.
+    pub fn worst(&self) -> Option<&Cell> {
+        self.cells
+            .iter()
+            .max_by(|a, b| a.rel_err.partial_cmp(&b.rel_err).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Mean per-cell relative error (cells with prediction coverage).
+    pub fn mean_rel_err(&self) -> f64 {
+        let finite: Vec<f64> =
+            self.cells.iter().map(|c| c.rel_err).filter(|e| e.is_finite()).collect();
+        if finite.is_empty() {
+            0.0
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        }
+    }
+
+    /// Human-readable summary naming the worst cell first.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        match self.worst() {
+            Some(w) => out.push_str(&format!(
+                "worst cell: stage {} slice {} — exec {:.3} ms vs pred {:.3} ms (rel err {:.1}%)\n",
+                w.stage,
+                w.slice,
+                w.exec_ms,
+                w.pred_ms,
+                w.rel_err * 100.0
+            )),
+            None => out.push_str("no aligned cells\n"),
+        }
+        out.push_str(&format!(
+            "mean rel err {:.1}% over {} cells; makespan exec {:.3} ms vs pred {:.3} ms\n",
+            self.mean_rel_err() * 100.0,
+            self.cells.len(),
+            self.exec_makespan_ms,
+            self.pred_makespan_ms
+        ));
+        out
+    }
+}
+
+/// Measured bubble fraction: `1 - Σ busy / (stages · window)` over the
+/// executed slice-compute spans — the real-run counterpart to
+/// [`crate::sim::SimResult::bubble_fraction`]. `None` without spans.
+pub fn measured_bubble_fraction(spans: &[SpanRecord], stages: usize) -> Option<f64> {
+    if stages == 0 {
+        return None;
+    }
+    let mut busy = 0.0f64;
+    let mut t_min = f64::INFINITY;
+    let mut t_max = f64::NEG_INFINITY;
+    let mut any = false;
+    for r in spans.iter().filter(|r| is_exec_cell_span(r)) {
+        any = true;
+        busy += r.dur_ms();
+        t_min = t_min.min(r.start_ms());
+        t_max = t_max.max(r.start_ms() + r.dur_ms());
+    }
+    if !any || t_max <= t_min {
+        return None;
+    }
+    Some((1.0 - busy / (stages as f64 * (t_max - t_min))).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred_span(stage: usize, slice: usize, phase: Phase, start: f64, dur: f64) -> Span {
+        Span { stage, start_ms: start, end_ms: start + dur, phase, part: 0, slice }
+    }
+
+    fn exec_span(stage: i32, mb: u32, slice: u32, kind: SpanKind, start_us: u64, dur_us: u64) -> SpanRecord {
+        SpanRecord { kind, stage, mb, slice, a: 0, b: 0, start_us, dur_us }
+    }
+
+    #[test]
+    fn perfect_agreement_has_zero_error() {
+        let pred = vec![
+            pred_span(0, 0, Phase::Fwd, 0.0, 1.0),
+            pred_span(0, 0, Phase::Bwd, 2.0, 2.0),
+        ];
+        let exec = vec![
+            exec_span(0, 0, 0, SpanKind::SliceFwd, 0, 1000),
+            exec_span(0, 0, 0, SpanKind::SliceBwd, 2000, 2000),
+        ];
+        let d = Differential::from_spans(&exec, &pred);
+        assert_eq!(d.cells.len(), 1);
+        assert!(d.cells[0].rel_err < 1e-9);
+        assert!((d.exec_makespan_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn means_are_occurrence_invariant() {
+        // exec covers 3 steps of the same cell; pred covers 1 step.
+        let pred = vec![pred_span(1, 2, Phase::Fwd, 0.0, 1.0)];
+        let exec: Vec<SpanRecord> = (0..3)
+            .map(|i| exec_span(1, 0, 2, SpanKind::SliceFwd, i * 10_000, 1000))
+            .collect();
+        let d = Differential::from_spans(&exec, &pred);
+        assert_eq!(d.cells.len(), 1);
+        assert!(d.cells[0].rel_err < 1e-9, "3x occurrences must not triple the cell time");
+    }
+
+    #[test]
+    fn straggler_stage_is_worst_offender() {
+        let mut pred = Vec::new();
+        let mut exec = Vec::new();
+        for stage in 0..4usize {
+            for slice in 0..3u32 {
+                let start = (stage as f64) + slice as f64 * 0.5;
+                pred.push(pred_span(stage, slice as usize, Phase::Fwd, start, 1.0));
+                // stage 2 runs 4x slower than predicted
+                let dur_us = if stage == 2 { 4000 } else { 1000 };
+                exec.push(exec_span(stage as i32, 0, slice, SpanKind::SliceFwd, (start * 1000.0) as u64, dur_us));
+            }
+        }
+        let d = Differential::from_spans(&exec, &pred);
+        let w = d.worst().unwrap();
+        assert_eq!(w.stage, 2);
+        assert!((w.rel_err - 3.0).abs() < 1e-9);
+        assert!(d.report().contains("stage 2"));
+    }
+
+    #[test]
+    fn probes_and_driver_spans_are_excluded() {
+        let exec = vec![
+            exec_span(super::super::DRIVER, 0, 0, SpanKind::SliceFwd, 0, 1000),
+            exec_span(0, MB_PROBE, 0, SpanKind::SliceFwd, 0, 1000),
+        ];
+        let d = Differential::from_spans(&exec, &[]);
+        assert!(d.cells.is_empty());
+        assert_eq!(measured_bubble_fraction(&exec, 2), None);
+    }
+
+    #[test]
+    fn bubble_fraction_counts_idle() {
+        // 2 stages, window 4 ms, busy 1+1 ms -> bubble = 1 - 2/8 = 0.75
+        let exec = vec![
+            exec_span(0, 0, 0, SpanKind::SliceFwd, 0, 1000),
+            exec_span(1, 0, 0, SpanKind::SliceFwd, 3000, 1000),
+        ];
+        let bf = measured_bubble_fraction(&exec, 2).unwrap();
+        assert!((bf - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_cells_aligns_rows() {
+        let d = Differential::from_cells(
+            &[vec![1.0, 1.0], vec![4.0]],
+            &[vec![1.0, 2.0], vec![1.0]],
+        );
+        assert_eq!(d.cells.len(), 3);
+        let w = d.worst().unwrap();
+        assert_eq!((w.stage, w.slice), (1, 0));
+        assert!((w.rel_err - 3.0).abs() < 1e-9);
+    }
+}

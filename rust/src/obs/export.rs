@@ -1,0 +1,231 @@
+//! Exporters: Chrome/Perfetto trace-event JSON for the merged exec+sim
+//! timeline, layered over the same span stream the metrics snapshot
+//! summarizes.
+//!
+//! Track layout (`pid`/`tid` in trace-event terms):
+//!
+//! * **pid 0 "exec"** — one track per stage (`tid = stage`) plus a
+//!   driver track (`tid = k`) for planner events. Slice compute spans
+//!   keep the simulator's naming (`F{mb}.{slice}` / `B{mb}.{slice}`)
+//!   so the same cell is string-identical across exec and sim tracks.
+//! * **pid 1 "links"** — one track per directed link (`tid` = dense
+//!   [`LinkId::index`]), carrying send/recv instants.
+//! * **pid 2 "sim (predicted)"** — the wavefront's predicted spans, one
+//!   track per stage, so Perfetto shows prediction and reality stacked.
+//!
+//! Plan switches, drift verdicts and cache hits render as instant
+//! events (`ph:"i"`) on the driver track. Executed timestamps are
+//! re-based to the earliest exec span so both timelines start at 0.
+
+use super::{SpanKind, SpanRecord};
+use crate::coordinator::transport::LinkId;
+use crate::sim::trace::Span;
+use crate::sim::Phase;
+use crate::util::json::Json;
+
+/// Trainer-facing bundle: everything one traced run exports.
+pub struct TraceBundle {
+    /// Executed spans (merged recorder flushes).
+    pub exec: Vec<SpanRecord>,
+    /// Wavefront-predicted spans for the active plan (may be empty).
+    pub predicted: Vec<Span>,
+    /// Pipeline stage count.
+    pub stages: usize,
+    /// Spans lost to recorder-buffer overflow (surfaced in metrics).
+    pub dropped: u64,
+}
+
+fn meta(pid: u32, tid: u32, what: &str, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(what.into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+/// Human-readable name for one directed link's track.
+pub fn link_label(l: LinkId) -> String {
+    match l {
+        LinkId::DriverTo(s) => format!("driver->s{s}"),
+        LinkId::Fwd(s) => format!("s{s}->s{}", s + 1),
+        LinkId::Bwd(s) => format!("s{s}->s{}", s - 1),
+        LinkId::ToDriver(s) => format!("s{s}->driver"),
+    }
+}
+
+/// Exec-track tid for a span: stages map to themselves, driver-side
+/// events ([`super::DRIVER`]) to the extra track after the last stage.
+fn exec_tid(stage: i32, k: usize) -> u32 {
+    if stage < 0 {
+        k as u32
+    } else {
+        stage as u32
+    }
+}
+
+fn slice_name(kind: SpanKind, mb: u32, slice: u32) -> String {
+    let tag = if kind == SpanKind::SliceFwd { "F" } else { "B" };
+    format!("{tag}{mb}.{slice}")
+}
+
+/// Build the full Chrome trace-event document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}` — loadable by
+/// Perfetto (ui.perfetto.dev) and chrome://tracing.
+pub fn perfetto_trace(bundle: &TraceBundle) -> Json {
+    let k = bundle.stages;
+    let mut evs: Vec<Json> = Vec::new();
+
+    evs.push(meta(0, 0, "process_name", "exec"));
+    evs.push(meta(1, 0, "process_name", "links"));
+    evs.push(meta(2, 0, "process_name", "sim (predicted)"));
+    for s in 0..k {
+        evs.push(meta(0, s as u32, "thread_name", &format!("stage {s}")));
+        evs.push(meta(2, s as u32, "thread_name", &format!("stage {s} (sim)")));
+    }
+    evs.push(meta(0, k as u32, "thread_name", "driver"));
+    if k >= 1 {
+        for l in LinkId::all(k) {
+            evs.push(meta(1, l.index(k) as u32, "thread_name", &link_label(l)));
+        }
+    }
+
+    // Re-base exec time so the trace starts at 0 like the sim track.
+    let t0 = bundle.exec.iter().map(|r| r.start_us).min().unwrap_or(0);
+    for r in &bundle.exec {
+        let ts = (r.start_us - t0) as f64;
+        let name = match r.kind {
+            SpanKind::SliceFwd | SpanKind::SliceBwd => slice_name(r.kind, r.mb, r.slice),
+            _ => r.kind.name().to_string(),
+        };
+        let (pid, tid) = match r.kind {
+            SpanKind::Send | SpanKind::Recv => (1u32, r.b as u32),
+            _ => (0u32, exec_tid(r.stage, k)),
+        };
+        let mut fields = vec![
+            ("name", Json::Str(name)),
+            ("cat", Json::Str(r.kind.category().into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("ts", Json::Num(ts)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("a", Json::Num(r.a as f64)),
+                    ("b", Json::Num(r.b as f64)),
+                    ("mb", Json::Num(r.mb as f64)),
+                    ("slice", Json::Num(r.slice as f64)),
+                ]),
+            ),
+        ];
+        if r.kind.is_instant() {
+            fields.push(("ph", Json::Str("i".into())));
+            fields.push(("s", Json::Str("t".into())));
+        } else {
+            fields.push(("ph", Json::Str("X".into())));
+            fields.push(("dur", Json::Num(r.dur_us as f64)));
+        }
+        evs.push(Json::obj(fields));
+    }
+
+    for s in &bundle.predicted {
+        let kind =
+            if s.phase == Phase::Fwd { SpanKind::SliceFwd } else { SpanKind::SliceBwd };
+        evs.push(Json::obj(vec![
+            ("name", Json::Str(slice_name(kind, s.part as u32, s.slice as u32))),
+            ("cat", Json::Str(if s.phase == Phase::Fwd { "fwd" } else { "bwd" }.into())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::Num(s.start_ms * 1000.0)),
+            ("dur", Json::Num((s.end_ms - s.start_ms) * 1000.0)),
+            ("pid", Json::Num(2.0)),
+            ("tid", Json::Num(s.stage as f64)),
+        ]));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::DRIVER;
+
+    fn rec(kind: SpanKind, stage: i32, mb: u32, slice: u32, start_us: u64, dur_us: u64) -> SpanRecord {
+        SpanRecord { kind, stage, mb, slice, a: 4, b: 1, start_us, dur_us }
+    }
+
+    fn bundle() -> TraceBundle {
+        TraceBundle {
+            exec: vec![
+                rec(SpanKind::SliceFwd, 0, 0, 0, 1000, 500),
+                rec(SpanKind::Send, 0, 0, 0, 1500, 0),
+                rec(SpanKind::SliceBwd, 1, 0, 0, 2000, 700),
+                rec(SpanKind::PlanSwitch, DRIVER, 0, 0, 2500, 0),
+            ],
+            predicted: vec![Span {
+                stage: 0,
+                start_ms: 0.0,
+                end_ms: 0.5,
+                phase: Phase::Fwd,
+                part: 0,
+                slice: 0,
+            }],
+            stages: 2,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn trace_parses_back_and_has_all_tracks() {
+        let doc = perfetto_trace(&bundle());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 3 process names + 2*2 stage threads + driver + 6 links + 4 exec + 1 sim
+        assert_eq!(evs.len(), 3 + 4 + 1 + LinkId::count(2) + 4 + 1);
+        assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn exec_time_is_rebased_and_names_match_sim() {
+        let doc = perfetto_trace(&bundle());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let first_exec = evs
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("X") && e.get("pid").unwrap().as_usize() == Some(0))
+            .unwrap();
+        assert_eq!(first_exec.get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(first_exec.get("name").unwrap().as_str(), Some("F0.0"));
+        let sim_ev = evs.iter().find(|e| e.get("pid").unwrap().as_usize() == Some(2)).unwrap();
+        assert_eq!(sim_ev.get("name").unwrap().as_str(), Some("F0.0"));
+    }
+
+    #[test]
+    fn instants_land_on_link_and_driver_tracks() {
+        let doc = perfetto_trace(&bundle());
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let send = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("send"))
+            .unwrap();
+        assert_eq!(send.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(send.get("ph").unwrap().as_str(), Some("i"));
+        let switch = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("plan_switch"))
+            .unwrap();
+        assert_eq!(switch.get("pid").unwrap().as_usize(), Some(0));
+        assert_eq!(switch.get("tid").unwrap().as_usize(), Some(2)); // driver track = k
+    }
+
+    #[test]
+    fn link_labels_name_both_endpoints() {
+        assert_eq!(link_label(LinkId::Fwd(0)), "s0->s1");
+        assert_eq!(link_label(LinkId::Bwd(1)), "s1->s0");
+        assert_eq!(link_label(LinkId::DriverTo(0)), "driver->s0");
+        assert_eq!(link_label(LinkId::ToDriver(1)), "s1->driver");
+    }
+}

@@ -1,0 +1,450 @@
+//! Prometheus-style text metrics: one registry, rendered identically to
+//! `metrics.prom` and stdout (single source of truth — `terapipe
+//! autotune`'s old bespoke print path routes through here).
+//!
+//! The registry is deliberately small: counters, gauges and fixed-bucket
+//! histograms, labeled, rendered in insertion order (deterministic
+//! output for pinned tests). Populator helpers at the bottom translate
+//! the repo's existing telemetry structs — recorder flushes, step
+//! reports, planner cache stats, virtual-transport link metrics — into
+//! metric families with a stable naming scheme (`terapipe_*`).
+
+use super::recorder::Flush;
+use super::SpanKind;
+use crate::coordinator::trainer::StepReport;
+use crate::coordinator::transport::virt::LinkMetrics;
+use crate::coordinator::transport::LinkId;
+use crate::planner::cache::CacheStats;
+use std::fmt::Write as _;
+
+/// Injected-delay histogram bounds (ms) for link metrics; `+Inf` is
+/// implicit.
+pub const DELAY_BUCKETS_MS: [f64; 8] = [0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Value {
+    Scalar(f64),
+    Hist {
+        /// Upper bounds, ascending; the `+Inf` bucket is implicit.
+        bounds: Vec<f64>,
+        /// Non-cumulative per-bucket counts, `bounds.len() + 1` long.
+        counts: Vec<u64>,
+        sum: f64,
+        count: u64,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct Sample {
+    labels: Vec<(String, String)>,
+    value: Value,
+}
+
+#[derive(Debug, Clone)]
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    samples: Vec<Sample>,
+}
+
+/// An insertion-ordered metrics registry with Prometheus text rendering.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    families: Vec<Family>,
+}
+
+fn labels_eq(a: &[(String, String)], b: &[(&str, &str)]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|((k, v), (k2, v2))| k == k2 && v == v2)
+}
+
+fn own(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: Kind) -> &mut Family {
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            assert_eq!(self.families[i].kind, kind, "metric '{name}' re-registered as {kind:?}");
+            return &mut self.families[i];
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        self.families.last_mut().unwrap()
+    }
+
+    fn scalar(&mut self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)], v: f64, add: bool) {
+        let fam = self.family(name, help, kind);
+        if let Some(s) = fam.samples.iter_mut().find(|s| labels_eq(&s.labels, labels)) {
+            match &mut s.value {
+                Value::Scalar(x) => {
+                    if add {
+                        *x += v;
+                    } else {
+                        *x = v;
+                    }
+                }
+                Value::Hist { .. } => unreachable!("scalar write to histogram sample"),
+            }
+            return;
+        }
+        fam.samples.push(Sample { labels: own(labels), value: Value::Scalar(v) });
+    }
+
+    /// Add `v` to a counter (creating it at `v`).
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.scalar(name, help, Kind::Counter, labels, v, true);
+    }
+
+    /// Set a gauge to `v`.
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], v: f64) {
+        self.scalar(name, help, Kind::Gauge, labels, v, false);
+    }
+
+    /// Observe `v` into a fixed-bucket histogram (`bounds` ascending;
+    /// the `+Inf` bucket is implicit).
+    pub fn observe(&mut self, name: &str, help: &str, labels: &[(&str, &str)], bounds: &[f64], v: f64) {
+        let fam = self.family(name, help, Kind::Histogram);
+        let sample = match fam.samples.iter_mut().find(|s| labels_eq(&s.labels, labels)) {
+            Some(s) => s,
+            None => {
+                fam.samples.push(Sample {
+                    labels: own(labels),
+                    value: Value::Hist {
+                        bounds: bounds.to_vec(),
+                        counts: vec![0; bounds.len() + 1],
+                        sum: 0.0,
+                        count: 0,
+                    },
+                });
+                fam.samples.last_mut().unwrap()
+            }
+        };
+        match &mut sample.value {
+            Value::Hist { bounds, counts, sum, count } => {
+                let i = bounds.iter().position(|b| v <= *b).unwrap_or(bounds.len());
+                counts[i] += 1;
+                *sum += v;
+                *count += 1;
+            }
+            Value::Scalar(_) => unreachable!("histogram observe on scalar sample"),
+        }
+    }
+
+    /// Current value of a counter/gauge sample (tests, stdout summaries).
+    pub fn get(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let fam = self.families.iter().find(|f| f.name == name)?;
+        let s = fam.samples.iter().find(|s| labels_eq(&s.labels, labels))?;
+        match &s.value {
+            Value::Scalar(v) => Some(*v),
+            Value::Hist { sum, .. } => Some(*sum),
+        }
+    }
+
+    /// Prometheus text exposition format, families in insertion order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
+            let _ = writeln!(out, "# TYPE {} {}", f.name, f.kind.as_str());
+            for s in &f.samples {
+                match &s.value {
+                    Value::Scalar(v) => {
+                        let _ = writeln!(out, "{}{} {}", f.name, label_str(&s.labels, None), num(*v));
+                    }
+                    Value::Hist { bounds, counts, sum, count } => {
+                        let mut cum = 0u64;
+                        for (i, b) in bounds.iter().enumerate() {
+                            cum += counts[i];
+                            let _ = writeln!(
+                                out,
+                                "{}_bucket{} {}",
+                                f.name,
+                                label_str(&s.labels, Some(&num(*b))),
+                                cum
+                            );
+                        }
+                        cum += counts[bounds.len()];
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            f.name,
+                            label_str(&s.labels, Some("+Inf")),
+                            cum
+                        );
+                        let _ = writeln!(out, "{}_sum{} {}", f.name, label_str(&s.labels, None), num(*sum));
+                        let _ = writeln!(out, "{}_count{} {}", f.name, label_str(&s.labels, None), count);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn label_str(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+// ---- populators: repo telemetry -> metric families ----
+
+/// Per-kind span counts + recorder overflow from a (merged) flush.
+pub fn span_metrics(reg: &mut MetricsRegistry, flush: &Flush) {
+    for kind in SpanKind::ALL {
+        let n = flush.spans.iter().filter(|s| s.kind == kind).count();
+        reg.counter(
+            "terapipe_spans_total",
+            "Recorded spans by kind",
+            &[("kind", kind.name())],
+            n as f64,
+        );
+    }
+    reg.counter(
+        "terapipe_spans_dropped_total",
+        "Spans lost to per-thread recorder buffer overflow",
+        &[],
+        flush.dropped as f64,
+    );
+    for (code, name) in [(0u64, "warmup"), (1, "stable"), (2, "drifted")] {
+        let n = flush
+            .spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::DriftVerdict && s.a == code)
+            .count();
+        reg.counter(
+            "terapipe_drift_verdicts_total",
+            "Drift-window verdicts by outcome",
+            &[("verdict", name)],
+            n as f64,
+        );
+    }
+    let switches = flush.spans.iter().filter(|s| s.kind == SpanKind::PlanSwitch).count();
+    reg.counter(
+        "terapipe_plan_switches_total",
+        "Times the active slicing plan was replaced",
+        &[],
+        switches as f64,
+    );
+}
+
+/// Training progress: totals plus per-stage busy time and the measured
+/// bubble fraction from the most recent step that carried one.
+pub fn step_metrics(reg: &mut MetricsRegistry, reports: &[StepReport]) {
+    reg.counter("terapipe_steps_total", "Optimizer steps completed", &[], reports.len() as f64);
+    let tokens: usize = reports.iter().map(|r| r.tokens).sum();
+    let wall_ms: f64 = reports.iter().map(|r| r.wall_ms).sum();
+    reg.counter("terapipe_tokens_total", "Tokens processed", &[], tokens as f64);
+    reg.counter("terapipe_step_wall_ms_total", "Wall time spent in steps (ms)", &[], wall_ms);
+    if wall_ms > 0.0 {
+        reg.gauge(
+            "terapipe_tokens_per_sec",
+            "Training throughput over the reported window",
+            &[],
+            tokens as f64 / (wall_ms / 1e3),
+        );
+    }
+    let stages = reports.iter().map(|r| r.stage_busy_ms.len()).max().unwrap_or(0);
+    for s in 0..stages {
+        let busy: f64 = reports.iter().map(|r| r.stage_busy_ms.get(s).copied().unwrap_or(0.0)).sum();
+        let stage = s.to_string();
+        reg.counter(
+            "terapipe_stage_busy_ms_total",
+            "Per-stage compute busy time (ms)",
+            &[("stage", stage.as_str())],
+            busy,
+        );
+    }
+    if let Some(bf) = reports.iter().rev().find_map(|r| r.bubble_fraction) {
+        reg.gauge(
+            "terapipe_bubble_fraction",
+            "Measured pipeline bubble fraction (latest step)",
+            &[],
+            bf,
+        );
+    }
+}
+
+/// Planner cost-table cache counters (the autotune stdout summary reads
+/// these back via [`MetricsRegistry::get`]).
+pub fn cache_metrics(reg: &mut MetricsRegistry, stats: &CacheStats) {
+    let pairs: [(&str, usize); 5] = [
+        ("base_hits", stats.base_hits),
+        ("base_misses", stats.base_misses),
+        ("scaled_hits", stats.scaled_hits),
+        ("rescales", stats.rescales),
+        ("evictions", stats.evictions),
+    ];
+    for (event, n) in pairs {
+        reg.counter(
+            "terapipe_planner_cache_events_total",
+            "Cost-table cache events by type",
+            &[("event", event)],
+            n as f64,
+        );
+    }
+    let hits = (stats.base_hits + stats.scaled_hits) as f64;
+    let lookups = hits + stats.base_misses as f64 + stats.rescales as f64;
+    if lookups > 0.0 {
+        reg.gauge(
+            "terapipe_planner_cache_hit_rate",
+            "Cache lookups served without densify or rescale",
+            &[],
+            hits / lookups,
+        );
+    }
+}
+
+/// Virtual-transport link telemetry: per-link traffic counters plus an
+/// injected-delay histogram per link (satellite: previously reachable
+/// only from tests).
+pub fn link_metrics(reg: &mut MetricsRegistry, links: &[(LinkId, LinkMetrics)]) {
+    for (id, m) in links {
+        let label = super::export::link_label(*id);
+        let labels: [(&str, &str); 1] = [("link", label.as_str())];
+        reg.counter("terapipe_link_sent_total", "Messages sent per link", &labels, m.sent as f64);
+        reg.counter(
+            "terapipe_link_dropped_total",
+            "Messages dropped per link (injected loss)",
+            &labels,
+            m.dropped as f64,
+        );
+        reg.counter("terapipe_link_bytes_total", "Approx wire bytes per link", &labels, m.bytes as f64);
+        for d in &m.deliveries {
+            reg.observe(
+                "terapipe_link_delay_ms",
+                "Injected delivery delay per link (ms)",
+                &labels,
+                &DELAY_BUCKETS_MS,
+                d.delay_ms,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::virt::DeliverySample;
+    use crate::obs::SpanRecord;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("c", "h", &[("k", "v")], 1.0);
+        reg.counter("c", "h", &[("k", "v")], 2.0);
+        reg.counter("c", "h", &[("k", "w")], 5.0);
+        reg.gauge("g", "h", &[], 1.0);
+        reg.gauge("g", "h", &[], 9.0);
+        assert_eq!(reg.get("c", &[("k", "v")]), Some(3.0));
+        assert_eq!(reg.get("c", &[("k", "w")]), Some(5.0));
+        assert_eq!(reg.get("g", &[]), Some(9.0));
+        assert_eq!(reg.get("c", &[("k", "x")]), None);
+    }
+
+    #[test]
+    fn render_is_prometheus_shaped() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("terapipe_steps_total", "Steps", &[], 3.0);
+        reg.observe("d", "Delay", &[("link", "s0->s1")], &[1.0, 10.0], 0.5);
+        reg.observe("d", "Delay", &[("link", "s0->s1")], &[1.0, 10.0], 5.0);
+        reg.observe("d", "Delay", &[("link", "s0->s1")], &[1.0, 10.0], 99.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE terapipe_steps_total counter"));
+        assert!(text.contains("terapipe_steps_total 3"));
+        assert!(text.contains("d_bucket{link=\"s0->s1\",le=\"1\"} 1"));
+        assert!(text.contains("d_bucket{link=\"s0->s1\",le=\"10\"} 2"));
+        assert!(text.contains("d_bucket{link=\"s0->s1\",le=\"+Inf\"} 3"));
+        assert!(text.contains("d_sum{link=\"s0->s1\"} 104.5"));
+        assert!(text.contains("d_count{link=\"s0->s1\"} 3"));
+    }
+
+    #[test]
+    fn span_populator_counts_kinds_and_verdicts() {
+        let mk = |kind: SpanKind, a: u64| SpanRecord {
+            kind,
+            stage: 0,
+            mb: 0,
+            slice: 0,
+            a,
+            b: 0,
+            start_us: 0,
+            dur_us: 0,
+        };
+        let flush = Flush {
+            spans: vec![
+                mk(SpanKind::SliceFwd, 0),
+                mk(SpanKind::SliceFwd, 0),
+                mk(SpanKind::DriftVerdict, 2),
+                mk(SpanKind::PlanSwitch, 0),
+            ],
+            dropped: 7,
+        };
+        let mut reg = MetricsRegistry::new();
+        span_metrics(&mut reg, &flush);
+        assert_eq!(reg.get("terapipe_spans_total", &[("kind", "slice_fwd")]), Some(2.0));
+        assert_eq!(reg.get("terapipe_spans_dropped_total", &[]), Some(7.0));
+        assert_eq!(reg.get("terapipe_drift_verdicts_total", &[("verdict", "drifted")]), Some(1.0));
+        assert_eq!(reg.get("terapipe_plan_switches_total", &[]), Some(1.0));
+    }
+
+    #[test]
+    fn link_populator_builds_histograms() {
+        let m = LinkMetrics {
+            sent: 3,
+            dropped: 1,
+            bytes: 640,
+            delay_ms_sum: 6.0,
+            deliveries: vec![
+                DeliverySample { delay_ms: 0.01, len: Some(4), bytes: 320 },
+                DeliverySample { delay_ms: 6.0, len: Some(4), bytes: 320 },
+            ],
+        };
+        let mut reg = MetricsRegistry::new();
+        link_metrics(&mut reg, &[(LinkId::Fwd(0), m)]);
+        assert_eq!(reg.get("terapipe_link_sent_total", &[("link", "s0->s1")]), Some(3.0));
+        let text = reg.render();
+        assert!(text.contains("terapipe_link_delay_ms_bucket{link=\"s0->s1\",le=\"0.05\"} 1"));
+        assert!(text.contains("terapipe_link_delay_ms_count{link=\"s0->s1\"} 2"));
+    }
+}

@@ -1,0 +1,351 @@
+//! Unified tracing & metrics: span-level exec↔sim attribution for the
+//! whole measure→plan→execute loop.
+//!
+//! Everything the repo previously scattered over ad-hoc channels —
+//! `SliceTime` samples in the worker, `LinkMetrics` in the virtual
+//! transport, cache counters in the planner, printf diagnostics in
+//! `terapipe autotune` — flows through one structured span stream:
+//!
+//! * [`recorder`] — a lock-free per-thread span recorder: fixed-capacity
+//!   per-thread buffers claimed on first use, merged deterministically at
+//!   flush, **zero steady-state heap allocations** on the hot path (the
+//!   same counting-allocator discipline `benches/exec.rs` pins for the
+//!   kernels; the `obs` bench section pins it with the recorder enabled).
+//! * [`export`] — Chrome/Perfetto trace-event JSON (one track per stage,
+//!   one per link, one per predicted sim stage; instant events for plan
+//!   switches and drift verdicts) and a Prometheus-style text metrics
+//!   snapshot ([`metrics::MetricsRegistry`]).
+//! * [`differential`] — the payoff: the executed span stream and the
+//!   wavefront's predicted [`crate::sim::trace::Span`]s converted into
+//!   one aligned timeline with per-(stage, slice) relative error, so a
+//!   §3.5 contract miss names the worst-offending cell instead of
+//!   failing on an aggregate number, and `bubble_fraction` gets a
+//!   measured counterpart computed from real spans.
+//!
+//! The global recorder is **off by default**: every emission site guards
+//! on one relaxed atomic load, so untraced runs pay a few nanoseconds
+//! per would-be span. `terapipe train --trace-out trace.json
+//! --metrics-out metrics.prom` (and the same flags on `autotune`) turn
+//! it on. See `rust/src/obs/README.md` for the span taxonomy, the
+//! overhead budget, and how to open a trace in Perfetto.
+
+pub mod differential;
+pub mod export;
+pub mod metrics;
+pub mod recorder;
+
+pub use differential::Differential;
+pub use metrics::MetricsRegistry;
+pub use recorder::{Flush, Recorder};
+
+use crate::util::json::Json;
+
+/// Stage id recorded for driver/planner-side events (no stage thread).
+pub const DRIVER: i32 = -1;
+
+/// Microbatch sentinel for offline measurement probes (the
+/// `backend::slice_timer` harness runs outside any training step).
+pub const MB_PROBE: u32 = u32::MAX;
+
+/// What a span covers. Codes are part of the on-disk schema
+/// ([`SpanRecord::to_json`]) — append, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    /// One slice's forward compute on one stage (embed + cell on the
+    /// first stage, cell + head loss on the last). `a` = token offset,
+    /// `b` = slice length.
+    SliceFwd,
+    /// One slice's backward compute (recompute included). Same payload.
+    SliceBwd,
+    /// Growing the per-microbatch KV context buffers after a slice's
+    /// forward (the token-level pipeline's routing step). Same payload.
+    KvRoute,
+    /// A transport send (instant). `a` = approx wire bytes, `b` = dense
+    /// link index ([`crate::coordinator::transport::LinkId::index`]).
+    Send,
+    /// A transport delivery (instant). Same payload.
+    Recv,
+    /// One stage's Adam update. `a` = global step.
+    AdamUpdate,
+    /// A cold DP solve in the planner. `a` = stages, `b` = trigger code.
+    PlannerSolve,
+    /// A warm-started re-solve. Same payload.
+    PlannerWarmResolve,
+    /// The cost-table cache served a solve without densifying (instant).
+    PlannerCacheHit,
+    /// A drift-window verdict (instant). `a` = 0 warmup / 1 stable /
+    /// 2 drifted, `b` = `f64::to_bits(mean_rel_err)`.
+    DriftVerdict,
+    /// One simulator replay of a plan (validation). `a` = plans replayed.
+    SimReplay,
+    /// The active plan was replaced (instant). `a` = step when known.
+    PlanSwitch,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 12] = [
+        SpanKind::SliceFwd,
+        SpanKind::SliceBwd,
+        SpanKind::KvRoute,
+        SpanKind::Send,
+        SpanKind::Recv,
+        SpanKind::AdamUpdate,
+        SpanKind::PlannerSolve,
+        SpanKind::PlannerWarmResolve,
+        SpanKind::PlannerCacheHit,
+        SpanKind::DriftVerdict,
+        SpanKind::SimReplay,
+        SpanKind::PlanSwitch,
+    ];
+
+    pub fn code(self) -> u8 {
+        match self {
+            SpanKind::SliceFwd => 0,
+            SpanKind::SliceBwd => 1,
+            SpanKind::KvRoute => 2,
+            SpanKind::Send => 3,
+            SpanKind::Recv => 4,
+            SpanKind::AdamUpdate => 5,
+            SpanKind::PlannerSolve => 6,
+            SpanKind::PlannerWarmResolve => 7,
+            SpanKind::PlannerCacheHit => 8,
+            SpanKind::DriftVerdict => 9,
+            SpanKind::SimReplay => 10,
+            SpanKind::PlanSwitch => 11,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(c as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::SliceFwd => "slice_fwd",
+            SpanKind::SliceBwd => "slice_bwd",
+            SpanKind::KvRoute => "kv_route",
+            SpanKind::Send => "send",
+            SpanKind::Recv => "recv",
+            SpanKind::AdamUpdate => "adam_update",
+            SpanKind::PlannerSolve => "planner_solve",
+            SpanKind::PlannerWarmResolve => "planner_warm_resolve",
+            SpanKind::PlannerCacheHit => "planner_cache_hit",
+            SpanKind::DriftVerdict => "drift_verdict",
+            SpanKind::SimReplay => "sim_replay",
+            SpanKind::PlanSwitch => "plan_switch",
+        }
+    }
+
+    pub fn from_name(n: &str) -> Option<SpanKind> {
+        SpanKind::ALL.into_iter().find(|k| k.name() == n)
+    }
+
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::SliceFwd | SpanKind::SliceBwd | SpanKind::KvRoute | SpanKind::AdamUpdate => {
+                "compute"
+            }
+            SpanKind::Send | SpanKind::Recv => "transport",
+            SpanKind::PlannerSolve
+            | SpanKind::PlannerWarmResolve
+            | SpanKind::PlannerCacheHit
+            | SpanKind::DriftVerdict
+            | SpanKind::PlanSwitch => "planner",
+            SpanKind::SimReplay => "sim",
+        }
+    }
+
+    /// Zero-duration point events (Perfetto `ph:"i"`).
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Send
+                | SpanKind::Recv
+                | SpanKind::PlannerCacheHit
+                | SpanKind::DriftVerdict
+                | SpanKind::PlanSwitch
+        )
+    }
+}
+
+/// One recorded span: fixed-size, `Copy`, no heap — the unit the
+/// per-thread buffers store verbatim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    /// Stage index, or [`DRIVER`] for driver/planner-side events.
+    pub stage: i32,
+    pub mb: u32,
+    pub slice: u32,
+    /// Kind-specific payload (see [`SpanKind`]).
+    pub a: u64,
+    pub b: u64,
+    /// Microseconds since the process trace epoch ([`now_us`]).
+    pub start_us: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: u64,
+}
+
+impl SpanRecord {
+    pub fn start_ms(&self) -> f64 {
+        self.start_us as f64 / 1e3
+    }
+
+    pub fn dur_ms(&self) -> f64 {
+        self.dur_us as f64 / 1e3
+    }
+
+    /// Schema round-trip: the record as a JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.name().into())),
+            ("stage", Json::Num(self.stage as f64)),
+            ("mb", Json::Num(self.mb as f64)),
+            ("slice", Json::Num(self.slice as f64)),
+            ("a", Json::Num(self.a as f64)),
+            ("b", Json::Num(self.b as f64)),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ])
+    }
+
+    /// Inverse of [`SpanRecord::to_json`]. `Err` names the missing or
+    /// malformed field (payloads above 2^53 µs/bytes are out of scope —
+    /// the JSON carrier is f64).
+    pub fn from_json(v: &Json) -> Result<SpanRecord, String> {
+        let kind_name = v.req("kind")?.as_str().ok_or("kind must be a string")?;
+        let kind = SpanKind::from_name(kind_name)
+            .ok_or_else(|| format!("unknown span kind '{kind_name}'"))?;
+        let num = |key: &str| -> Result<f64, String> {
+            v.req(key)?.as_f64().ok_or_else(|| format!("{key} must be a number"))
+        };
+        Ok(SpanRecord {
+            kind,
+            stage: num("stage")? as i32,
+            mb: num("mb")? as u32,
+            slice: num("slice")? as u32,
+            a: num("a")? as u64,
+            b: num("b")? as u64,
+            start_us: num("start_us")? as u64,
+            dur_us: num("dur_us")? as u64,
+        })
+    }
+}
+
+// ---- global recorder conveniences (the emission-site API) ----
+
+/// Microseconds since the process trace epoch (first call wins).
+pub fn now_us() -> u64 {
+    recorder::now_us()
+}
+
+/// Is the global recorder collecting?
+#[inline]
+pub fn enabled() -> bool {
+    recorder::global().is_enabled()
+}
+
+/// Turn the global recorder on/off (off by default).
+pub fn set_enabled(on: bool) {
+    recorder::global().set_enabled(on);
+}
+
+/// Record one span on the global recorder (no-op when disabled).
+#[inline]
+pub fn record(rec: SpanRecord) {
+    recorder::global().record(rec);
+}
+
+/// Drain the global recorder (see [`Recorder::flush`] for the contract).
+pub fn flush() -> Flush {
+    recorder::global().flush()
+}
+
+/// Start timestamp for a would-be span: `u64::MAX` when the recorder is
+/// off, so the matching [`emit`] is a no-op. Keeps disabled-path cost to
+/// one relaxed load.
+#[inline]
+pub fn maybe_start() -> u64 {
+    if enabled() {
+        now_us()
+    } else {
+        u64::MAX
+    }
+}
+
+/// Close and record a span opened with [`maybe_start`].
+#[inline]
+pub fn emit(kind: SpanKind, stage: i32, mb: u32, slice: u32, a: u64, b: u64, start_us: u64) {
+    if start_us != u64::MAX {
+        record(SpanRecord {
+            kind,
+            stage,
+            mb,
+            slice,
+            a,
+            b,
+            start_us,
+            dur_us: now_us().saturating_sub(start_us),
+        });
+    }
+}
+
+/// Record an instant event (zero duration) on the global recorder.
+#[inline]
+pub fn instant(kind: SpanKind, stage: i32, a: u64, b: u64) {
+    if enabled() {
+        record(SpanRecord {
+            kind,
+            stage,
+            mb: 0,
+            slice: 0,
+            a,
+            b,
+            start_us: now_us(),
+            dur_us: 0,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_codes_round_trip_and_are_dense() {
+        for (i, k) in SpanKind::ALL.into_iter().enumerate() {
+            assert_eq!(k.code() as usize, i);
+            assert_eq!(SpanKind::from_code(k.code()), Some(k));
+            assert_eq!(SpanKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::from_code(200), None);
+        assert_eq!(SpanKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn record_json_round_trip() {
+        let r = SpanRecord {
+            kind: SpanKind::SliceBwd,
+            stage: 3,
+            mb: 2,
+            slice: 7,
+            a: 16,
+            b: 8,
+            start_us: 1234,
+            dur_us: 567,
+        };
+        let back = SpanRecord::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // driver-side (negative stage) survives the f64 carrier
+        let d = SpanRecord { stage: DRIVER, ..r };
+        let back = SpanRecord::from_json(&Json::parse(&d.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.stage, DRIVER);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(SpanRecord::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_kind = Json::parse(r#"{"kind":"zzz","stage":0,"mb":0,"slice":0,"a":0,"b":0,"start_us":0,"dur_us":0}"#).unwrap();
+        assert!(SpanRecord::from_json(&bad_kind).is_err());
+    }
+}

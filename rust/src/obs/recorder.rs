@@ -1,0 +1,323 @@
+//! Lock-free per-thread span recorder.
+//!
+//! # Design
+//!
+//! Each recording thread owns one fixed-capacity buffer ([`SLOT_CAP`]
+//! spans), claimed from the recorder on its first span and cached in
+//! thread-local storage. The hot path is a single-producer append: one
+//! relaxed enabled-check, one head load, six relaxed word stores, one
+//! release head store — no locks, no CAS loops, and **zero heap
+//! allocations** once the thread's slot exists (the claim itself is the
+//! only allocation, paid once per thread per recorder — a warmup cost,
+//! like the kernels' scratch arena).
+//!
+//! Spans are stored as atomic `u64` words rather than raw memory so a
+//! racing flush reads stale-but-defined values instead of UB; the
+//! *consistency* contract is still quiescence (below).
+//!
+//! # Flush contract
+//!
+//! [`Recorder::flush`] drains every slot, merges, and sorts into one
+//! deterministic timeline. Call it at a quiescent point — a step
+//! boundary, after a pool's tasks joined, after shutdown. A span
+//! recorded concurrently with the flush that drains it may be lost or
+//! duplicated (never torn into UB); the trainer flushes between steps,
+//! where workers are parked on their inboxes.
+//!
+//! When a thread outruns its buffer the overflow spans are counted in
+//! [`Flush::dropped`], not silently lost — the metrics snapshot surfaces
+//! the counter so a truncated trace is visible as such.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::{SpanKind, SpanRecord};
+
+/// Spans one thread can hold between flushes.
+pub const SLOT_CAP: usize = 8192;
+
+/// `u64` words per encoded span.
+const WORDS: usize = 6;
+
+fn encode(r: &SpanRecord) -> [u64; WORDS] {
+    [
+        r.kind.code() as u64 | ((r.stage as u32 as u64) << 32),
+        r.mb as u64 | ((r.slice as u64) << 32),
+        r.a,
+        r.b,
+        r.start_us,
+        r.dur_us,
+    ]
+}
+
+fn decode(w: &[u64; WORDS]) -> SpanRecord {
+    SpanRecord {
+        kind: SpanKind::from_code((w[0] & 0xFF) as u8).unwrap_or(SpanKind::SliceFwd),
+        stage: ((w[0] >> 32) as u32) as i32,
+        mb: w[1] as u32,
+        slice: (w[1] >> 32) as u32,
+        a: w[2],
+        b: w[3],
+        start_us: w[4],
+        dur_us: w[5],
+    }
+}
+
+/// One thread's buffer. Single producer (the owning thread); the
+/// flusher reads through the same atomics.
+struct Slot {
+    /// Spans written since the last flush (may exceed [`SLOT_CAP`]; the
+    /// excess is counted, not stored).
+    head: AtomicUsize,
+    dropped: AtomicU64,
+    /// `SLOT_CAP * WORDS` words, span `i` at `i * WORDS`.
+    buf: Box<[AtomicU64]>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            buf: (0..SLOT_CAP * WORDS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    fn push(&self, rec: &SpanRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        if h >= SLOT_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let words = encode(rec);
+        let base = h * WORDS;
+        for (i, w) in words.iter().enumerate() {
+            self.buf[base + i].store(*w, Ordering::Relaxed);
+        }
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    fn read(&self, i: usize) -> SpanRecord {
+        let base = i * WORDS;
+        let mut w = [0u64; WORDS];
+        for (j, slot) in w.iter_mut().enumerate() {
+            *slot = self.buf[base + j].load(Ordering::Acquire);
+        }
+        decode(&w)
+    }
+}
+
+/// Result of one [`Recorder::flush`]: the merged, deterministically
+/// sorted span stream plus the overflow count.
+#[derive(Debug, Clone, Default)]
+pub struct Flush {
+    pub spans: Vec<SpanRecord>,
+    /// Spans lost to per-thread buffer overflow since the last flush.
+    pub dropped: u64,
+}
+
+impl Flush {
+    /// Fold another flush (e.g. per-step drains) into this one, keeping
+    /// the merged stream sorted.
+    pub fn absorb(&mut self, mut other: Flush) {
+        self.spans.append(&mut other.spans);
+        self.dropped += other.dropped;
+        sort_spans(&mut self.spans);
+    }
+}
+
+fn sort_key(r: &SpanRecord) -> (u64, i32, u8, u32, u32, u64, u64, u64) {
+    (r.start_us, r.stage, r.kind.code(), r.mb, r.slice, r.dur_us, r.a, r.b)
+}
+
+fn sort_spans(spans: &mut [SpanRecord]) {
+    spans.sort_unstable_by_key(sort_key);
+}
+
+static NEXT_RECORDER_ID: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// (recorder id → slot) for every recorder this thread has recorded
+    /// to. Tiny (one global + test instances); linear scan.
+    static SLOTS: RefCell<Vec<(usize, Arc<Slot>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A span recorder. Most code uses the process-global instance through
+/// [`super::record`]/[`super::flush`]; tests build private instances so
+/// concurrent test threads cannot pollute each other's streams.
+pub struct Recorder {
+    id: usize,
+    enabled: AtomicBool,
+    /// Every slot ever claimed (slots are never reclaimed; threads are
+    /// bounded — stage workers, the driver, a rayon pool).
+    slots: Mutex<Vec<Arc<Slot>>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            id: NEXT_RECORDER_ID.fetch_add(1, Ordering::Relaxed),
+            enabled: AtomicBool::new(false),
+            slots: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    /// Record one span (no-op when disabled). Allocation-free once this
+    /// thread's slot exists.
+    #[inline]
+    pub fn record(&self, rec: SpanRecord) {
+        if !self.is_enabled() {
+            return;
+        }
+        SLOTS.with(|tl| {
+            let mut tl = tl.borrow_mut();
+            if let Some((_, slot)) = tl.iter().find(|(id, _)| *id == self.id) {
+                slot.push(&rec);
+                return;
+            }
+            let slot = Arc::new(Slot::new());
+            self.slots.lock().unwrap().push(slot.clone());
+            slot.push(&rec);
+            tl.push((self.id, slot));
+        });
+    }
+
+    /// Drain every thread's buffer into one deterministically ordered
+    /// stream (sorted by start time, then stage/kind/ids — identical
+    /// span sets merge identically regardless of which threads recorded
+    /// them). See the module docs for the quiescence contract.
+    pub fn flush(&self) -> Flush {
+        let slots = self.slots.lock().unwrap();
+        let mut out = Flush::default();
+        for s in slots.iter() {
+            let h = s.head.swap(0, Ordering::AcqRel).min(SLOT_CAP);
+            out.dropped += s.dropped.swap(0, Ordering::AcqRel);
+            for i in 0..h {
+                out.spans.push(s.read(i));
+            }
+        }
+        sort_spans(&mut out.spans);
+        out
+    }
+}
+
+static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-global recorder (off until [`Recorder::set_enabled`]).
+pub fn global() -> &'static Recorder {
+    GLOBAL.get_or_init(Recorder::new)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process trace epoch (set on first call).
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(stage: i32, start_us: u64) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::SliceFwd,
+            stage,
+            mb: 0,
+            slice: 0,
+            a: 1,
+            b: 2,
+            start_us,
+            dur_us: 10,
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let r = Recorder::new();
+        r.record(span(0, 1));
+        assert!(r.flush().spans.is_empty());
+    }
+
+    #[test]
+    fn flush_merges_and_sorts_across_threads() {
+        let r = Arc::new(Recorder::new());
+        r.set_enabled(true);
+        let mut handles = Vec::new();
+        for t in 0..4i32 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10u64 {
+                    r.record(span(t, 1000 - i * 7 - t as u64));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let f = r.flush();
+        assert_eq!(f.spans.len(), 40);
+        assert_eq!(f.dropped, 0);
+        assert!(f.spans.windows(2).all(|w| sort_key(&w[0]) <= sort_key(&w[1])));
+        // drained: a second flush is empty
+        assert!(r.flush().spans.is_empty());
+    }
+
+    #[test]
+    fn overflow_is_counted_not_lost_silently() {
+        let r = Recorder::new();
+        r.set_enabled(true);
+        for i in 0..(SLOT_CAP as u64 + 100) {
+            r.record(span(0, i));
+        }
+        let f = r.flush();
+        assert_eq!(f.spans.len(), SLOT_CAP);
+        assert_eq!(f.dropped, 100);
+        // counters reset with the flush
+        assert_eq!(r.flush().dropped, 0);
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let r = SpanRecord {
+            kind: SpanKind::DriftVerdict,
+            stage: super::super::DRIVER,
+            mb: 7,
+            slice: 11,
+            a: u64::MAX,
+            b: 42,
+            start_us: 123_456,
+            dur_us: 0,
+        };
+        assert_eq!(decode(&encode(&r)), r);
+    }
+
+    #[test]
+    fn absorb_keeps_order() {
+        let mut a = Flush { spans: vec![span(0, 5), span(0, 9)], dropped: 1 };
+        let b = Flush { spans: vec![span(1, 2), span(1, 7)], dropped: 2 };
+        a.absorb(b);
+        assert_eq!(a.dropped, 3);
+        let starts: Vec<u64> = a.spans.iter().map(|s| s.start_us).collect();
+        assert_eq!(starts, vec![2, 5, 7, 9]);
+    }
+}

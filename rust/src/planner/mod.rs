@@ -249,7 +249,13 @@ impl<M: CostModel> Planner<M> {
             None => return None,
         };
         match verdict {
-            DriftVerdict::Drifted { factor, .. } => {
+            DriftVerdict::Drifted { factor, mean_rel_err } => {
+                crate::obs::instant(
+                    crate::obs::SpanKind::DriftVerdict,
+                    crate::obs::DRIVER,
+                    2,
+                    mean_rel_err.to_bits(),
+                );
                 self.detector.clear();
                 self.compute_scale *= factor;
                 if let Some(h) = self.hint_tmax.as_mut() {
@@ -267,9 +273,14 @@ impl<M: CostModel> Planner<M> {
     }
 
     fn resolve(&mut self, trigger: ReplanTrigger) -> ReplanDecision {
+        let t_us = crate::obs::maybe_start();
+        let hits_before = self.cache.stats.base_hits + self.cache.stats.scaled_hits;
         let table =
             self.cache
                 .scaled(&self.key, self.compute_scale, self.comm_scale, &self.base);
+        if self.cache.stats.base_hits + self.cache.stats.scaled_hits > hits_before {
+            crate::obs::instant(crate::obs::SpanKind::PlannerCacheHit, crate::obs::DRIVER, 0, 0);
+        }
 
         let (scheme, stats, warm) = match self.hint_tmax {
             Some(hint) => {
@@ -308,11 +319,25 @@ impl<M: CostModel> Planner<M> {
         };
         if switched {
             self.active = Some(ActivePlan { scheme: scheme.clone(), table: table.clone() });
+            crate::obs::instant(crate::obs::SpanKind::PlanSwitch, crate::obs::DRIVER, 0, 0);
         } else if let Some(a) = self.active.as_mut() {
             // the active plan is now judged against the new model: future
             // drift verdicts must compare samples to it
             a.table = table.clone();
         }
+        crate::obs::emit(
+            if warm.is_some() {
+                crate::obs::SpanKind::PlannerWarmResolve
+            } else {
+                crate::obs::SpanKind::PlannerSolve
+            },
+            crate::obs::DRIVER,
+            0,
+            0,
+            self.stages as u64,
+            trigger as u64,
+            t_us,
+        );
 
         ReplanDecision {
             trigger,

@@ -51,7 +51,18 @@ pub fn replay_plan<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> Plan {
 /// (NaN/negative stage times) is a validation failure, not a panic: this
 /// runs inside the long-lived planner service.
 pub fn replay_latency<M: CostModel>(model: &M, lens: &[u32], stages: u32) -> Result<f64, String> {
-    Ok(simulate_opts(&replay_plan(model, lens, stages), false)?.makespan_ms)
+    let t_us = crate::obs::maybe_start();
+    let out = simulate_opts(&replay_plan(model, lens, stages), false)?.makespan_ms;
+    crate::obs::emit(
+        crate::obs::SpanKind::SimReplay,
+        crate::obs::DRIVER,
+        0,
+        0,
+        1,
+        0,
+        t_us,
+    );
+    Ok(out)
 }
 
 /// Replay `scheme` and compare against its own predicted latency.
@@ -97,7 +108,17 @@ pub fn validate_plans(
             predicted_ms.len()
         ));
     }
+    let t_us = crate::obs::maybe_start();
     let results = simulate_many(plans, false);
+    crate::obs::emit(
+        crate::obs::SpanKind::SimReplay,
+        crate::obs::DRIVER,
+        0,
+        0,
+        plans.len() as u64,
+        0,
+        t_us,
+    );
     let mut sims = Vec::with_capacity(plans.len());
     for (i, (r, &pred)) in results.into_iter().zip(predicted_ms).enumerate() {
         let sim = r

@@ -65,7 +65,7 @@ fn traced_run(slicing: &[usize], steps: usize) -> (Vec<(usize, u32, u32, f64)>, 
     let mut fwd_makespans = Vec::new();
     for step in 0..steps {
         let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
-        let (_, _, fwd_ms) = t.step(&batches).unwrap();
+        let fwd_ms = t.step(&batches).unwrap().fwd_ms;
         if step == 0 {
             continue; // warmup: cold caches, lazy thread spin-up
         }

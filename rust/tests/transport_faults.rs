@@ -351,7 +351,7 @@ fn fitted_comm_recovers_injected_latency_and_predicts_makespan() {
         let mut makespans = Vec::new();
         for step in 0..steps {
             let batches: Vec<_> = (0..1).map(|_| batcher.next_batch()).collect();
-            let (_, _, fwd_ms) = t.step(&batches).unwrap();
+            let fwd_ms = t.step(&batches).unwrap().fwd_ms;
             if step == 0 {
                 continue; // warmup: cold caches, lazy thread spin-up
             }
