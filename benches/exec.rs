@@ -5,16 +5,19 @@
 //!
 //! Measured:
 //!
-//! * kernel microbench: GFLOP/s of the blocked matmul vs the naive
-//!   reference loops on model-relevant shapes (gated: blocked must be
-//!   ≥1.5× ref in non-quick runs);
+//! * kernel microbench: GFLOP/s of the blocked matmul — under both the
+//!   scalar and (when active) the AVX2+FMA dispatch tiers — vs the
+//!   naive reference loops on model-relevant shapes (gated in non-quick
+//!   runs: blocked ≥1.5× ref, and simd ≥1.5× blocked on hosts where the
+//!   simd tier is active, skipped with a printed notice otherwise);
 //! * per-bucket cell latency: `stage_fwd` alone and `stage_fwd +
 //!   stage_bwd` (the `CostModel` unit) at empty and near-full context —
 //!   the real-execution analogue of Fig. 3's latency-vs-tokens curve;
 //! * steady-state allocation count of the cell-level `_into` hot path
 //!   (`stage_fwd_into` + `stage_bwd_into`), asserted **zero** once the
 //!   per-thread scratch arena is warm — pinned with a counting global
-//!   allocator;
+//!   allocator, under the scalar tier *and* (when active) the simd
+//!   tier;
 //! * one full pipelined training step through the threaded coordinator
 //!   vs *serial* execution of the same slices (the sum of every traced
 //!   per-slice fwd/bwd time across all stages) — how much of the
@@ -36,6 +39,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use terapipe::backend::math::{matmul_into, matmul_ref};
 use terapipe::backend::native::init_stage;
+use terapipe::backend::simd::{active_tier, set_tier, Tier};
 use terapipe::backend::{cell, BackendSpec, NativeSpec, StageBackend};
 use terapipe::coordinator::{TrainConfig, Trainer};
 use terapipe::data::{synthetic_corpus, Batcher};
@@ -110,44 +114,90 @@ fn main() {
         if quick { ", --quick" } else { "" }
     );
 
-    // ---- kernel microbench: blocked vs naive reference matmul ----
+    // ---- kernel microbench: simd vs scalar-blocked vs naive ref ----
+    // The "blocked" numbers pin the scalar dispatch tier so the simd
+    // column is a tier-vs-tier comparison over identical outer blocking;
+    // the detected tier is restored afterwards so the pipeline sections
+    // below run what production runs.
+    let detected = active_tier();
+    let simd_on = detected == Tier::Avx2;
+    if !simd_on {
+        println!("note: AVX2+FMA tier off (unsupported host or TERAPIPE_NO_SIMD) — simd legs skipped");
+    }
     let shapes: &[(usize, usize, usize)] = if quick {
         &[(64, 32, 128), (1, 64, 512)]
     } else {
         &[(256, 128, 512), (512, 256, 128), (128, 512, 256), (1, 256, 4096)]
     };
     let mut kernel_rows: Vec<Json> = Vec::new();
-    println!("\n## matmul GFLOP/s (blocked vs ref)");
-    println!("| m | k | n | blocked | ref | speedup |");
+    let mut best_simd_speedup = 0.0f64;
+    println!("\n## matmul GFLOP/s (simd vs blocked vs ref)");
+    println!("| m | k | n | simd | blocked | ref | blocked/ref | simd/blocked |");
     for &(mm, kk, nn) in shapes {
         let a = vec![0.5f32; mm * kk];
         let b = vec![0.25f32; kk * nn];
         let mut out = vec![0f32; mm * nn];
         let flops = 2.0 * (mm * kk * nn) as f64;
+        set_tier(Tier::Scalar);
         matmul_into(&a, &b, mm, kk, nn, &mut out); // warm pack buffers
         let blocked_ms = (0..reps.max(3))
             .map(|_| time_ms(|| matmul_into(&a, &b, mm, kk, nn, &mut out)).1)
             .fold(f64::INFINITY, f64::min);
+        let simd_ms = if simd_on {
+            set_tier(Tier::Avx2);
+            matmul_into(&a, &b, mm, kk, nn, &mut out); // warm under the simd tier
+            (0..reps.max(3))
+                .map(|_| time_ms(|| matmul_into(&a, &b, mm, kk, nn, &mut out)).1)
+                .fold(f64::INFINITY, f64::min)
+        } else {
+            f64::INFINITY
+        };
+        set_tier(detected);
         let ref_ms = (0..reps.max(3))
             .map(|_| time_ms(|| std::hint::black_box(matmul_ref(&a, &b, mm, kk, nn))).1)
             .fold(f64::INFINITY, f64::min);
         let gf_blocked = flops / (blocked_ms * 1e6);
         let gf_ref = flops / (ref_ms * 1e6);
         let speedup = ref_ms / blocked_ms.max(1e-9);
-        println!("| {mm} | {kk} | {nn} | {gf_blocked:.2} | {gf_ref:.2} | {speedup:.2}x |");
-        kernel_rows.push(Json::obj(vec![
+        let (simd_col, ratio_col) = if simd_on {
+            let gf_simd = flops / (simd_ms * 1e6);
+            let simd_speedup = blocked_ms / simd_ms.max(1e-9);
+            best_simd_speedup = best_simd_speedup.max(simd_speedup);
+            (format!("{gf_simd:.2}"), format!("{simd_speedup:.2}x"))
+        } else {
+            ("-".into(), "-".into())
+        };
+        println!(
+            "| {mm} | {kk} | {nn} | {simd_col} | {gf_blocked:.2} | {gf_ref:.2} | {speedup:.2}x | {ratio_col} |"
+        );
+        let mut row = vec![
             ("m", Json::Num(mm as f64)),
             ("k", Json::Num(kk as f64)),
             ("n", Json::Num(nn as f64)),
             ("blocked_gflops", Json::Num(gf_blocked)),
             ("ref_gflops", Json::Num(gf_ref)),
             ("speedup", Json::Num(speedup)),
-        ]));
+        ];
+        if simd_on {
+            row.push(("simd_gflops", Json::Num(flops / (simd_ms * 1e6))));
+            row.push(("simd_speedup", Json::Num(blocked_ms / simd_ms.max(1e-9))));
+        }
+        kernel_rows.push(Json::obj(row));
         if !quick {
             assert!(
                 speedup >= 1.5,
                 "blocked matmul ({mm},{kk},{nn}) only {speedup:.2}x over ref (gate: 1.5x)"
             );
+        }
+    }
+    if !quick {
+        if simd_on {
+            assert!(
+                best_simd_speedup >= 1.5,
+                "simd tier best speedup over scalar-blocked is {best_simd_speedup:.2}x (gate: 1.5x)"
+            );
+        } else {
+            println!("simd ≥ 1.5x gate skipped: AVX2+FMA tier not active on this host");
         }
     }
 
@@ -199,8 +249,9 @@ fn main() {
     // by design; the contract pinned here is that the *cell* hot path —
     // everything inside stage_fwd_into/stage_bwd_into — performs zero
     // heap allocations once the per-thread scratch arena is warm.
-    let steady_allocs;
-    {
+    // Measured once per available dispatch tier: the simd kernels must
+    // preserve the contract, not just the scalar ones.
+    let hot_path_allocs = || {
         let mut ps = init_stage(&m, 1 % m.num_stages);
         let s = buckets[0];
         let off = m.seq_len / 2;
@@ -252,14 +303,29 @@ fn main() {
             iter();
             deltas.push(ALLOCS.load(Ordering::SeqCst) - before);
         }
-        steady_allocs = *deltas.iter().min().unwrap();
-        println!("\n## steady-state hot-path allocations (fwd+bwd, warm arena)");
-        println!("allocations per iteration: {steady_allocs} (deltas {deltas:?})");
+        (*deltas.iter().min().unwrap(), deltas)
+    };
+    set_tier(Tier::Scalar);
+    let (steady_allocs, deltas) = hot_path_allocs();
+    println!("\n## steady-state hot-path allocations (fwd+bwd, warm arena)");
+    println!("scalar tier: allocations per iteration: {steady_allocs} (deltas {deltas:?})");
+    assert_eq!(
+        steady_allocs, 0,
+        "warm cell hot path must be allocation-free, saw {deltas:?}"
+    );
+    let simd_steady_allocs = if simd_on {
+        set_tier(Tier::Avx2);
+        let (sa, sd) = hot_path_allocs();
+        println!("simd tier:   allocations per iteration: {sa} (deltas {sd:?})");
         assert_eq!(
-            steady_allocs, 0,
-            "warm cell hot path must be allocation-free, saw {deltas:?}"
+            sa, 0,
+            "warm cell hot path must stay allocation-free under the simd tier, saw {sd:?}"
         );
-    }
+        sa as f64
+    } else {
+        -1.0
+    };
+    set_tier(detected);
 
     // ---- pipelined step vs serial execution of the same slices ----
     let slice_len = spec.buckets()[0];
@@ -308,6 +374,7 @@ fn main() {
         ("bench", Json::Str("exec".into())),
         ("quick", Json::Num(if quick { 1.0 } else { 0.0 })),
         ("reps", Json::Num(reps as f64)),
+        ("simd_tier_active", Json::Num(if simd_on { 1.0 } else { 0.0 })),
         (
             "model",
             Json::obj(vec![
@@ -325,6 +392,8 @@ fn main() {
             "alloc",
             Json::obj(vec![
                 ("hot_path_steady_allocs", Json::Num(steady_allocs as f64)),
+                // -1 ⇒ simd tier not active on this host/run
+                ("hot_path_steady_allocs_simd", Json::Num(simd_steady_allocs)),
                 ("pipelined_step_allocs_min", Json::Num(step_allocs as f64)),
             ]),
         ),

@@ -36,6 +36,7 @@ use super::math::{
     matmul_bias_into, matmul_nt_into, matmul_tn_acc, LnStats, PAR_THRESHOLD,
 };
 use super::native::scratch;
+use super::simd;
 use crate::runtime::manifest::ModelDims;
 use crate::runtime::tensor::HostTensor;
 use rayon::prelude::*;
@@ -827,9 +828,10 @@ pub fn head_fwd(d: &ModelDims, s: usize, params: &[HostTensor], h: &[f32], targe
     let mut logits = scratch::grab(rows * v);
     matmul_bias_into(&x, params[2].as_f32(), params[3].as_f32(), rows, hd, v, &mut logits);
     let mut row_loss = scratch::grab(rows);
+    let ops = simd::ops();
     let per_row = |r: usize, row: &[f32]| -> f32 {
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let z: f32 = row.iter().map(|&l| (l - mx).exp()).sum();
+        let mx = (ops.row_max)(row);
+        let z = (ops.exp_sum_sub)(row, mx);
         let gold = row[targets[r] as usize] - mx;
         z.ln() - gold
     };
@@ -872,13 +874,10 @@ pub fn head_bwd(
     let mut g_logits = scratch::grab(rows * v);
     matmul_bias_into(&x, w_out, params[3].as_f32(), rows, hd, v, &mut g_logits);
     // g_logits = softmax(logits) - onehot(target), row-parallel
+    let ops = simd::ops();
     let per_row = |r: usize, row: &mut [f32]| {
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut z = 0f32;
-        for l in row.iter_mut() {
-            *l = (*l - mx).exp();
-            z += *l;
-        }
+        let mx = (ops.row_max)(row);
+        let z = (ops.exp_norm_sub)(row, mx);
         for l in row.iter_mut() {
             *l /= z;
         }
@@ -919,19 +918,13 @@ pub fn adam_step(
     step: i32,
     lr: f32,
 ) {
-    const BETA1: f32 = 0.9;
-    const BETA2: f32 = 0.999;
-    const EPS: f32 = 1e-8;
     const CHUNK: usize = 1 << 13;
     let t = step as f32;
-    let c1 = 1.0 - BETA1.powf(t);
-    let c2 = 1.0 - BETA2.powf(t);
+    let c1 = 1.0 - simd::ADAM_BETA1.powf(t);
+    let c2 = 1.0 - simd::ADAM_BETA2.powf(t);
+    let ops = simd::ops();
     let upd = |pd: &mut [f32], gd: &[f32], md: &mut [f32], vd: &mut [f32]| {
-        for i in 0..pd.len() {
-            md[i] = BETA1 * md[i] + (1.0 - BETA1) * gd[i];
-            vd[i] = BETA2 * vd[i] + (1.0 - BETA2) * gd[i] * gd[i];
-            pd[i] -= lr * (md[i] / c1) / ((vd[i] / c2).sqrt() + EPS);
-        }
+        (ops.adam_chunk)(pd, gd, md, vd, lr, c1, c2)
     };
     for (((p, g), mi), vi) in params.iter_mut().zip(grads).zip(m.iter_mut()).zip(v.iter_mut()) {
         let pd = p.as_f32_mut();

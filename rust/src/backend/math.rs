@@ -20,14 +20,27 @@
 //!   column sums — are row-/element-parallel passes, and bias is fused
 //!   into the matmul store ([`matmul_bias_into`]).
 //!
+//! **Kernel tiers.** The outer blocking and parallel decomposition live
+//! here once, but every inner loop routes through the function-pointer
+//! table in [`super::simd`] ([`simd::ops`]), which resolves exactly once
+//! at startup to either the scalar tier (the PR 6 loops, moved verbatim
+//! to `simd::scalar`) or the AVX2+FMA tier (`simd::avx2`, x86-64 hosts
+//! with both features; `TERAPIPE_NO_SIMD=1` forces scalar). Kernel entry
+//! points load the table once and capture it in their closures, so the
+//! hot path pays zero per-call probing.
+//!
 //! **Determinism.** Results are bit-identical for any rayon pool size:
 //!
 //! 1. Every output element is owned by exactly one worker, and its
-//!    reduction runs in a fixed sequential order (ascending contraction
-//!    index, one accumulator — never split across lanes). Rust does not
-//!    contract `mul`+`add` into FMA, so the blocked `matmul`/`matmul_nt`
-//!    are *bit-identical to the naive refs*, tiled or not. This is why
-//!    the microkernels block over M/N only and keep K monolithic.
+//!    reduction runs in a fixed order that depends only on its (row,
+//!    column) position and the contraction length — never on tile
+//!    position, slice boundary, or lane split. Under the scalar tier
+//!    Rust does not contract `mul`+`add` into FMA, so the blocked
+//!    `matmul`/`matmul_nt` are *bit-identical to the naive refs*, tiled
+//!    or not; the AVX2 tier changes the association (FMA + 8-lane
+//!    trees) and is tolerance-pinned against scalar instead, but keeps
+//!    the same position-only ownership, so it is equally pool- and
+//!    slicing-invariant *within* the tier.
 //! 2. Cross-row reductions (`matmul_tn`, `layernorm_bwd` gamma/beta)
 //!    split the contraction into [`REDUCE_CHUNKS`] *fixed* ranges whose
 //!    partials are summed in chunk order, independent of thread count.
@@ -43,6 +56,7 @@
 
 #![allow(clippy::needless_range_loop)] // index loops are the idiom in kernels
 
+use super::simd::{self, KernelOps, MR, NR, NT_TILE};
 use rayon::prelude::*;
 use std::cell::RefCell;
 
@@ -52,13 +66,6 @@ pub const PAR_THRESHOLD: usize = 1 << 16;
 /// Fixed chunk count for deterministic cross-row reductions (independent
 /// of the rayon pool size, so results don't vary with `RAYON_NUM_THREADS`).
 const REDUCE_CHUNKS: usize = 8;
-
-/// Microkernel rows (output rows processed per register block).
-const MR: usize = 4;
-/// Microkernel lanes (packed B panel width).
-const NR: usize = 8;
-/// Column tile for the `matmul_nt` dot-product microkernel.
-const NT_TILE: usize = 4;
 /// Column panel width for `matmul_tn`'s blocked rank-1 updates.
 const TN_JP: usize = 128;
 /// Column block for parallel column sums.
@@ -173,47 +180,9 @@ fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
     }
 }
 
-/// `MR×NR` register microkernel: `acc[r][c] = Σ_l a[i0+r, l] · panel[l, c]`
-/// with `l` strictly ascending and one accumulator per element — the same
-/// reduction order as [`matmul_ref`], hence bit-identical results.
-#[inline]
-fn mm_micro(a: &[f32], i0: usize, mr: usize, k: usize, strip: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for row in acc.iter_mut() {
-        *row = [0.0; NR];
-    }
-    if mr == MR {
-        // hot case with constant bounds so the 4×8 accumulators stay in registers
-        let (a0, a1, a2, a3) = (
-            &a[i0 * k..(i0 + 1) * k],
-            &a[(i0 + 1) * k..(i0 + 2) * k],
-            &a[(i0 + 2) * k..(i0 + 3) * k],
-            &a[(i0 + 3) * k..(i0 + 4) * k],
-        );
-        for l in 0..k {
-            let bp = &strip[l * NR..l * NR + NR];
-            let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
-            for c in 0..NR {
-                let bv = bp[c];
-                acc[0][c] += x0 * bv;
-                acc[1][c] += x1 * bv;
-                acc[2][c] += x2 * bv;
-                acc[3][c] += x3 * bv;
-            }
-        }
-    } else {
-        for l in 0..k {
-            let bp = &strip[l * NR..l * NR + NR];
-            for r in 0..mr {
-                let av = a[(i0 + r) * k + l];
-                for c in 0..NR {
-                    acc[r][c] += av * bp[c];
-                }
-            }
-        }
-    }
-}
-
-/// Blocked core shared by [`matmul_into`] / [`matmul_bias_into`].
+/// Blocked core shared by [`matmul_into`] / [`matmul_bias_into`]. The
+/// `MR×NR` microkernel (`ops.mm_micro`) and the 1×NR skinny-row kernel
+/// (`ops.mm_panel_row`) come from the active [`simd`] tier.
 fn mm_blocked(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -221,6 +190,7 @@ fn mm_blocked(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n:
     if let Some(bs) = bias {
         assert_eq!(bs.len(), n);
     }
+    let ops = simd::ops();
     let np = n.div_ceil(NR);
     let mut packed = take_buf();
     pack_b(b, k, n, &mut packed);
@@ -242,7 +212,7 @@ fn mm_blocked(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n:
             let strip = &pk[p * k * NR..(p + 1) * k * NR];
             let j0 = p * NR;
             let w = NR.min(n - j0);
-            mm_micro(a, i0, mr, k, strip, &mut acc);
+            (ops.mm_micro)(a, i0, mr, k, strip, &mut acc);
             for r in 0..mr {
                 store(&acc[r], j0, w, &mut blk[r * n + j0..r * n + j0 + w]);
             }
@@ -255,13 +225,7 @@ fn mm_blocked(a: &[f32], b: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n:
         let w = dst.len();
         let ar = &a[i * k..(i + 1) * k];
         let mut acc = [0f32; NR];
-        for l in 0..k {
-            let bp = &strip[l * NR..l * NR + NR];
-            let av = ar[l];
-            for c in 0..NR {
-                acc[c] += av * bp[c];
-            }
-        }
+        (ops.mm_panel_row)(ar, strip, k, &mut acc);
         store(&acc, j0, w, dst);
     };
 
@@ -303,58 +267,19 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 // ---------------------------------------------------------------------------
 
 /// `out[m,k] = a[m,n] @ b[k,n]ᵀ` into a caller-provided buffer — the
-/// backward-through-weights product (`grad @ Wᵀ`). 4×4 tiles of dots: 16
-/// independent sequential chains (ILP) with the per-dot order of
-/// [`matmul_nt_ref`], hence bit-identical.
+/// backward-through-weights product (`grad @ Wᵀ`). 4×4 tiles of dots
+/// (`ops.nt_tile`): under the scalar tier 16 independent sequential
+/// chains with the per-dot order of [`matmul_nt_ref`], hence
+/// bit-identical; under AVX2 each dot uses the same fixed-lane FMA
+/// association as the skinny-path `ops.nt_dot`.
 pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * n);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * k);
+    let ops = simd::ops();
     let tile = |i0: usize, j0: usize, mr: usize, jw: usize, blk: &mut [f32]| {
         let mut acc = [[0f32; NT_TILE]; NT_TILE];
-        if mr == NT_TILE && jw == NT_TILE {
-            let (a0, a1, a2, a3) = (
-                &a[i0 * n..(i0 + 1) * n],
-                &a[(i0 + 1) * n..(i0 + 2) * n],
-                &a[(i0 + 2) * n..(i0 + 3) * n],
-                &a[(i0 + 3) * n..(i0 + 4) * n],
-            );
-            let (b0, b1, b2, b3) = (
-                &b[j0 * n..(j0 + 1) * n],
-                &b[(j0 + 1) * n..(j0 + 2) * n],
-                &b[(j0 + 2) * n..(j0 + 3) * n],
-                &b[(j0 + 3) * n..(j0 + 4) * n],
-            );
-            for l in 0..n {
-                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
-                let (y0, y1, y2, y3) = (b0[l], b1[l], b2[l], b3[l]);
-                acc[0][0] += x0 * y0;
-                acc[0][1] += x0 * y1;
-                acc[0][2] += x0 * y2;
-                acc[0][3] += x0 * y3;
-                acc[1][0] += x1 * y0;
-                acc[1][1] += x1 * y1;
-                acc[1][2] += x1 * y2;
-                acc[1][3] += x1 * y3;
-                acc[2][0] += x2 * y0;
-                acc[2][1] += x2 * y1;
-                acc[2][2] += x2 * y2;
-                acc[2][3] += x2 * y3;
-                acc[3][0] += x3 * y0;
-                acc[3][1] += x3 * y1;
-                acc[3][2] += x3 * y2;
-                acc[3][3] += x3 * y3;
-            }
-        } else {
-            for l in 0..n {
-                for r in 0..mr {
-                    let av = a[(i0 + r) * n + l];
-                    for c in 0..jw {
-                        acc[r][c] += av * b[(j0 + c) * n + l];
-                    }
-                }
-            }
-        }
+        (ops.nt_tile)(a, b, n, i0, j0, mr, jw, &mut acc);
         for r in 0..mr {
             blk[r * k + j0..r * k + j0 + jw].copy_from_slice(&acc[r][..jw]);
         }
@@ -383,11 +308,7 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &
                 let ar = &a[i * n..(i + 1) * n];
                 for c in 0..jw {
                     let br = &b[(j0 + c) * n..(j0 + c + 1) * n];
-                    let mut acc = 0f32;
-                    for (&x, &y) in ar.iter().zip(br) {
-                        acc += x * y;
-                    }
-                    dst[c] = acc;
+                    dst[c] = (ops.nt_dot)(ar, br);
                 }
             });
         }
@@ -409,7 +330,15 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32>
 /// blocked over [`TN_JP`]-wide column panels so the partial stays cache
 /// resident. Per output element the updates run in ascending-`r` order —
 /// the same association as [`matmul_tn_ref`] restricted to `range`.
-fn tn_accumulate(a: &[f32], b: &[f32], k: usize, n: usize, range: std::ops::Range<usize>, out: &mut [f32]) {
+fn tn_accumulate(
+    ops: &KernelOps,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    range: std::ops::Range<usize>,
+    out: &mut [f32],
+) {
     let mut jp = 0;
     while jp < n {
         let w = TN_JP.min(n - jp);
@@ -418,9 +347,7 @@ fn tn_accumulate(a: &[f32], b: &[f32], k: usize, n: usize, range: std::ops::Rang
             let br = &b[r * n + jp..r * n + jp + w];
             for (i, &av) in ar.iter().enumerate() {
                 let o = &mut out[i * n + jp..i * n + jp + w];
-                for (ov, &bv) in o.iter_mut().zip(br) {
-                    *ov += av * bv;
-                }
+                (ops.tn_axpy)(o, br, av);
             }
         }
         jp += w;
@@ -431,11 +358,16 @@ fn tn_accumulate(a: &[f32], b: &[f32], k: usize, n: usize, range: std::ops::Rang
 /// (`xᵀ @ grad`), accumulating into the gradient buffer. The contraction
 /// runs over `m`, so the parallel path splits it into [`REDUCE_CHUNKS`]
 /// fixed ranges (private partials from the thread-local pool, summed into
-/// `out` in chunk order) — deterministic for any pool size.
+/// `out` in chunk order) — deterministic for any pool size. Products
+/// with too few contraction rows for the chunked reduction (skinny `m`:
+/// a short token slice against a wide gradient) instead parallelize
+/// over the `k` output rows, each accumulated in ascending-`r` order —
+/// bit-identical to the serial pass, no silent serial fallback.
 pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     assert_eq!(out.len(), k * n);
+    let ops = simd::ops();
     if m * k * n >= PAR_THRESHOLD && m >= 2 * REDUCE_CHUNKS {
         let chunk = m.div_ceil(REDUCE_CHUNKS);
         let kn = k * n;
@@ -446,7 +378,7 @@ pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &m
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(m);
             if lo < hi {
-                tn_accumulate(a, b, k, n, lo..hi, p);
+                tn_accumulate(ops, a, b, k, n, lo..hi, p);
             }
         });
         let pr: &[f32] = &partials;
@@ -461,8 +393,18 @@ pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &m
             }
         });
         put_buf(partials);
+    } else if m * k * n >= PAR_THRESHOLD {
+        // skinny m: each output row i = column i of a — one owner per
+        // row, updates in the same ascending-r order as the serial pass
+        out.par_chunks_mut(n).enumerate().for_each(|(i, orow)| {
+            for r in 0..m {
+                let av = a[r * k + i];
+                let br = &b[r * n..(r + 1) * n];
+                (ops.tn_axpy)(orow, br, av);
+            }
+        });
     } else {
-        tn_accumulate(a, b, k, n, 0..m, out);
+        tn_accumulate(ops, a, b, k, n, 0..m, out);
     }
 }
 
@@ -544,10 +486,10 @@ pub struct LnStats {
 pub const LN_EPS: f32 = 1e-5;
 
 #[inline]
-fn ln_row(xr: &[f32], gamma: &[f32], beta: &[f32], yr: &mut [f32]) -> (f32, f32) {
+fn ln_row(ops: &KernelOps, xr: &[f32], gamma: &[f32], beta: &[f32], yr: &mut [f32]) -> (f32, f32) {
     let n = xr.len();
-    let mu = xr.iter().sum::<f32>() / n as f32;
-    let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+    let mu = (ops.sum)(xr) / n as f32;
+    let var = (ops.sq_dev_sum)(xr, mu) / n as f32;
     let rs = 1.0 / (var + LN_EPS).sqrt();
     for ((o, &xv), (&g, &b)) in yr.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
         *o = (xv - mu) * rs * g + b;
@@ -571,19 +513,20 @@ pub fn layernorm_into(
     assert_eq!(y.len(), x.len());
     assert_eq!(mean.len(), rows);
     assert_eq!(rstd.len(), rows);
+    let ops = simd::ops();
     if x.len() >= PAR_THRESHOLD {
         y.par_chunks_mut(n)
             .zip(mean.par_iter_mut().zip(rstd.par_iter_mut()))
             .enumerate()
             .for_each(|(r, (yr, (mu, rs)))| {
-                let (m, s) = ln_row(&x[r * n..(r + 1) * n], gamma, beta, yr);
+                let (m, s) = ln_row(ops, &x[r * n..(r + 1) * n], gamma, beta, yr);
                 *mu = m;
                 *rs = s;
             });
     } else {
         let stats = mean.iter_mut().zip(rstd.iter_mut());
         for ((r, yr), (mu, rs)) in y.chunks_mut(n).enumerate().zip(stats) {
-            let (m, s) = ln_row(&x[r * n..(r + 1) * n], gamma, beta, yr);
+            let (m, s) = ln_row(ops, &x[r * n..(r + 1) * n], gamma, beta, yr);
             *mu = m;
             *rs = s;
         }
@@ -603,6 +546,7 @@ pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], n: usize) -> (Vec<f32>,
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn ln_bwd_row(
+    ops: &KernelOps,
     xr: &[f32],
     gyr: &[f32],
     mu: f32,
@@ -614,23 +558,10 @@ fn ln_bwd_row(
 ) {
     let n = xr.len();
     // dxhat = g_y * gamma; dx = rs*(dxhat - mean(dxhat) - xhat*mean(dxhat*xhat))
-    let mut sum_dxhat = 0f32;
-    let mut sum_dxhat_xhat = 0f32;
-    for i in 0..n {
-        let xhat = (xr[i] - mu) * rs;
-        let dxhat = gyr[i] * gamma[i];
-        sum_dxhat += dxhat;
-        sum_dxhat_xhat += dxhat * xhat;
-        gg[i] += gyr[i] * xhat;
-        gb[i] += gyr[i];
-    }
+    let (sum_dxhat, sum_dxhat_xhat) = (ops.ln_bwd_sums)(xr, gyr, gamma, mu, rs, gg, gb);
     let m1 = sum_dxhat / n as f32;
     let m2 = sum_dxhat_xhat / n as f32;
-    for i in 0..n {
-        let xhat = (xr[i] - mu) * rs;
-        let dxhat = gyr[i] * gamma[i];
-        gxr[i] = rs * (dxhat - m1 - xhat * m2);
-    }
+    (ops.ln_bwd_gx)(xr, gyr, gamma, mu, rs, m1, m2, gxr);
 }
 
 /// VJP of [`layernorm`] into a caller-provided `g_x`; accumulates the
@@ -651,6 +582,7 @@ pub fn layernorm_bwd_into(
 ) {
     let rows = x.len() / n;
     assert_eq!(g_x.len(), x.len());
+    let ops = simd::ops();
     if x.len() >= PAR_THRESHOLD && rows >= 2 * REDUCE_CHUNKS {
         let chunk_rows = rows.div_ceil(REDUCE_CHUNKS);
         let mut partials = take_buf();
@@ -665,6 +597,7 @@ pub fn layernorm_bwd_into(
                 for (ri, gxr) in gx_chunk.chunks_mut(n).enumerate() {
                     let r = lo + ri;
                     ln_bwd_row(
+                        ops,
                         &x[r * n..(r + 1) * n],
                         &g_y[r * n..(r + 1) * n],
                         stats.mean[r],
@@ -689,6 +622,7 @@ pub fn layernorm_bwd_into(
     } else {
         for (r, gxr) in g_x.chunks_mut(n).enumerate() {
             ln_bwd_row(
+                ops,
                 &x[r * n..(r + 1) * n],
                 &g_y[r * n..(r + 1) * n],
                 stats.mean[r],
@@ -717,37 +651,19 @@ pub fn layernorm_bwd(
     g_x
 }
 
-const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi), matching model.py's constant
-const GELU_A: f32 = 0.044_715;
-
-#[inline]
-fn gelu_one(v: f32) -> f32 {
-    let u = GELU_C * (v + GELU_A * v * v * v);
-    0.5 * v * (1.0 + u.tanh())
-}
-
-#[inline]
-fn gelu_grad_one(v: f32) -> f32 {
-    let u = GELU_C * (v + GELU_A * v * v * v);
-    let t = u.tanh();
-    let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-    0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du
-}
-
 /// Tanh-approximation GELU into a caller-provided buffer
-/// (element-parallel: each element owned by one worker).
+/// (element-parallel: each element owned by one worker; [`ELEM_CHUNK`]
+/// is a multiple of the 8-lane vector width, so chunking never shifts
+/// which elements land in a vector tail).
 pub fn gelu_into(x: &[f32], out: &mut [f32]) {
     assert_eq!(out.len(), x.len());
+    let ops = simd::ops();
     if x.len() >= PAR_THRESHOLD {
-        out.par_chunks_mut(ELEM_CHUNK).zip(x.par_chunks(ELEM_CHUNK)).for_each(|(o, xs)| {
-            for (ov, &v) in o.iter_mut().zip(xs) {
-                *ov = gelu_one(v);
-            }
-        });
+        out.par_chunks_mut(ELEM_CHUNK)
+            .zip(x.par_chunks(ELEM_CHUNK))
+            .for_each(|(o, xs)| (ops.gelu)(xs, o));
     } else {
-        for (ov, &v) in out.iter_mut().zip(x) {
-            *ov = gelu_one(v);
-        }
+        (ops.gelu)(x, out);
     }
 }
 
@@ -762,26 +678,25 @@ pub fn gelu(x: &[f32]) -> Vec<f32> {
 /// `gelu_grad(mpre) ⊙ g` product without the temporary.
 pub fn gelu_grad_mul(x: &[f32], g: &mut [f32]) {
     assert_eq!(g.len(), x.len());
+    let ops = simd::ops();
     if x.len() >= PAR_THRESHOLD {
-        g.par_chunks_mut(ELEM_CHUNK).zip(x.par_chunks(ELEM_CHUNK)).for_each(|(gs, xs)| {
-            for (gv, &v) in gs.iter_mut().zip(xs) {
-                *gv *= gelu_grad_one(v);
-            }
-        });
+        g.par_chunks_mut(ELEM_CHUNK)
+            .zip(x.par_chunks(ELEM_CHUNK))
+            .for_each(|(gs, xs)| (ops.gelu_grad_mul)(xs, gs));
     } else {
-        for (gv, &v) in g.iter_mut().zip(x) {
-            *gv *= gelu_grad_one(v);
-        }
+        (ops.gelu_grad_mul)(x, g);
     }
 }
 
-/// d gelu(x) / dx, elementwise (test/reference helper).
+/// d gelu(x) / dx, elementwise (test/reference helper — always the
+/// scalar-tier formula, so it can serve as the oracle for both tiers).
 pub fn gelu_grad(x: &[f32]) -> Vec<f32> {
-    x.iter().map(|&v| gelu_grad_one(v)).collect()
+    x.iter().map(|&v| simd::scalar::gelu_grad_one(v)).collect()
 }
 
 #[cfg(test)]
 mod tests {
+    use super::simd::{tier_guard, Tier};
     use super::*;
 
     #[test]
@@ -827,6 +742,8 @@ mod tests {
 
     #[test]
     fn blocked_matmul_bit_identical_to_ref() {
+        // bit-identity to the refs is a scalar-tier contract
+        let _g = tier_guard(Tier::Scalar);
         // spans the parallel row-block path and remainder tiles
         for (m, k, n) in [(65, 33, 50), (4, 8, 8), (1, 64, 1100), (7, 19, 23), (128, 32, 48)] {
             let a: Vec<f32> = (0..m * k).map(|i| ((i * 37) % 101) as f32 * 0.013 - 0.5).collect();
@@ -841,6 +758,7 @@ mod tests {
 
     #[test]
     fn matmul_bias_fusion_matches_separate_passes() {
+        let _g = tier_guard(Tier::Scalar);
         let (m, k, n) = (9, 11, 13);
         let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.11).sin()).collect();
         let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).cos()).collect();
@@ -860,6 +778,7 @@ mod tests {
 
     #[test]
     fn matmul_tn_parallel_matches_serial() {
+        let _g = tier_guard(Tier::Scalar);
         // Force the parallel path and compare against the serial chunking.
         let m = 64;
         let k = 16;
@@ -885,6 +804,24 @@ mod tests {
         }
         for (x, y) in par.iter().zip(&serial) {
             assert_eq!(x.to_bits(), y.to_bits(), "nondeterministic reduction");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_skinny_m_parallel_is_bit_identical_to_serial() {
+        // 4·64·512 = 131072 ≥ PAR_THRESHOLD with m < 2·REDUCE_CHUNKS:
+        // exercises the column-parallel skinny-m path. Per output element
+        // both paths apply ascending-r single-rounded updates, so they
+        // agree bit-for-bit under either tier — pin scalar so the oracle
+        // (matmul_tn_ref) matches too.
+        let _g = tier_guard(Tier::Scalar);
+        let (m, k, n) = (4, 64, 512);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 37) % 101) as f32 * 0.013 - 0.5).collect();
+        let b: Vec<f32> = (0..m * n).map(|i| ((i * 53) % 97) as f32 * 0.021 - 1.0).collect();
+        let par = matmul_tn(&a, &b, m, k, n);
+        let reference = matmul_tn_ref(&a, &b, m, k, n);
+        for (x, y) in par.iter().zip(&reference) {
+            assert_eq!(x.to_bits(), y.to_bits(), "skinny-m tn diverged from serial order");
         }
     }
 
@@ -966,6 +903,7 @@ mod tests {
 
     #[test]
     fn gelu_grad_mul_fuses_product() {
+        let _g = tier_guard(Tier::Scalar);
         let x: Vec<f32> = (0..40).map(|i| (i as f32 * 0.17).sin() * 2.0).collect();
         let mut g: Vec<f32> = (0..40).map(|i| (i as f32 * 0.29).cos()).collect();
         let expect: Vec<f32> =

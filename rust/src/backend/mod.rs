@@ -33,6 +33,7 @@ use crate::runtime::tensor::HostTensor;
 pub mod cell;
 pub mod math;
 pub mod native;
+pub mod simd;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 

@@ -1,0 +1,332 @@
+//! Runtime-dispatched kernel tiers for the native backend.
+//!
+//! The blocked kernels in [`super::math`] and the hot loops in
+//! [`super::cell`] do their outer blocking / parallel decomposition in
+//! one place, but route every *inner* loop through a table of function
+//! pointers — [`KernelOps`] — with exactly two implementations:
+//!
+//! * [`scalar`] — the inner loops of the PR 6 cache-blocked kernels,
+//!   moved here verbatim. Rust/LLVM does not contract `a * b + c` into
+//!   an FMA, every reduction keeps one accumulator in fixed ascending
+//!   order, so this tier is **bit-identical** to the naive `*_ref`
+//!   oracles and is the determinism baseline for all differential
+//!   tests.
+//! * [`avx2`] — explicit `std::arch` AVX2+FMA microkernels
+//!   (`x86_64` only). FMA contraction and 8-lane reduction trees change
+//!   rounding, so this tier is *tolerance-pinned* against the scalar
+//!   tier (see `tests/kernel_properties.rs` for the per-op bounds), but
+//!   within the tier every element's floating-point association is a
+//!   pure function of its (row, column) position — independent of slice
+//!   boundaries, tile position, and rayon pool size — so slicing- and
+//!   pool-invariance hold exactly as they do for the scalar tier.
+//!
+//! Dispatch is resolved **once**: the first call to [`ops`] probes
+//! `TERAPIPE_NO_SIMD` (any non-empty value other than `"0"` forces the
+//! scalar tier) and then `is_x86_feature_detected!("avx2"/"fma")`, and
+//! caches a `&'static KernelOps` in an atomic. Steady-state calls are
+//! one `Acquire` load — no per-call probing, no allocation. Kernel
+//! entry points load the table once and capture it in their closures,
+//! so rayon workers never touch the atomic in inner loops.
+//!
+//! [`set_tier`] / [`tier_guard`] exist for tests and benches that need
+//! an in-process A/B (the guard serializes tier flips behind a mutex
+//! and restores the previous tier on drop). Production code never
+//! flips tiers after startup.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+/// Microkernel row count (rows of A per register block).
+pub const MR: usize = 4;
+/// Microkernel column count (one packed B panel width).
+pub const NR: usize = 8;
+/// `matmul_nt` square tile edge.
+pub const NT_TILE: usize = 4;
+
+/// Adam moment decay for the first moment.
+pub const ADAM_BETA1: f32 = 0.9;
+/// Adam moment decay for the second moment.
+pub const ADAM_BETA2: f32 = 0.999;
+/// Adam denominator epsilon.
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Which kernel tier a [`KernelOps`] table belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Blocked scalar loops — the bit-exact determinism oracle.
+    Scalar,
+    /// AVX2+FMA intrinsics — tolerance-pinned against `Scalar`.
+    Avx2,
+}
+
+/// `matmul_nt` tile kernel: `(a, b, n, i0, j0, mr, jw, acc)` fills
+/// `acc[r][c] = dot(a[i0+r], b[j0+c])` for `r < mr`, `c < jw` (rows of
+/// length `n`); the caller zeroes `acc`.
+pub type NtTileFn = fn(&[f32], &[f32], usize, usize, usize, usize, usize, &mut [[f32; NT_TILE]; NT_TILE]);
+
+/// LayerNorm backward fused first pass: `(xr, gyr, gamma, mu, rs, gg, gb)`
+/// accumulates the gamma/beta grads in place and returns
+/// `(sum_dxhat, sum_dxhat_xhat)`.
+pub type LnBwdSumsFn = fn(&[f32], &[f32], &[f32], f32, f32, &mut [f32], &mut [f32]) -> (f32, f32);
+
+/// LayerNorm backward second pass: `(xr, gyr, gamma, mu, rs, m1, m2, gxr)`
+/// writes `gxr[i] = rs * (dxhat - m1 - xhat * m2)`.
+pub type LnBwdGxFn = fn(&[f32], &[f32], &[f32], f32, f32, f32, f32, &mut [f32]);
+
+/// Fused Adam chunk update: `(pd, gd, md, vd, lr, c1, c2)` with the
+/// `ADAM_*` constants baked in.
+pub type AdamChunkFn = fn(&mut [f32], &[f32], &mut [f32], &mut [f32], f32, f32, f32);
+
+/// The full inner-loop surface the blocked kernels dispatch over.
+///
+/// Each field documents its contract where the type alias (or the
+/// scalar implementation) is defined; both tiers must satisfy the same
+/// contracts, differing only in floating-point association.
+pub struct KernelOps {
+    /// Which tier this table implements.
+    pub tier: Tier,
+    /// `(a, i0, mr, k, strip, acc)` — MR×NR microkernel over one packed
+    /// B panel; writes all MR rows of `acc` (rows ≥ `mr` zeroed).
+    pub mm_micro: fn(&[f32], usize, usize, usize, &[f32], &mut [[f32; NR]; MR]),
+    /// `(ar, strip, k, acc)` — 1×NR row kernel for the skinny-M path;
+    /// accumulates into caller-zeroed `acc`.
+    pub mm_panel_row: fn(&[f32], &[f32], usize, &mut [f32; NR]),
+    /// 4×4 dot-product tile for `matmul_nt`.
+    pub nt_tile: NtTileFn,
+    /// Plain dot product for the skinny-M `matmul_nt` path.
+    pub nt_dot: fn(&[f32], &[f32]) -> f32,
+    /// `(o, br, av)` — `o[j] += av * br[j]` rank-1 row update for
+    /// `matmul_tn_acc`.
+    pub tn_axpy: fn(&mut [f32], &[f32], f32),
+    /// Row sum (LayerNorm mean).
+    pub sum: fn(&[f32]) -> f32,
+    /// `(xr, mu)` — `Σ (x - mu)²` (LayerNorm variance numerator).
+    pub sq_dev_sum: fn(&[f32], f32) -> f32,
+    /// LayerNorm backward fused reduction pass.
+    pub ln_bwd_sums: LnBwdSumsFn,
+    /// LayerNorm backward input-grad pass.
+    pub ln_bwd_gx: LnBwdGxFn,
+    /// `(x, out)` — tanh-approximation GELU over one chunk.
+    pub gelu: fn(&[f32], &mut [f32]),
+    /// `(x, g)` — `g[i] *= gelu'(x[i])` over one chunk.
+    pub gelu_grad_mul: fn(&[f32], &mut [f32]),
+    /// Row max (softmax stabilizer). Max is exact under reassociation,
+    /// so both tiers agree bit-for-bit on finite inputs.
+    pub row_max: fn(&[f32]) -> f32,
+    /// `(row, mx)` — `Σ exp(x - mx)` without mutating the row
+    /// (`head_fwd` log-sum-exp).
+    pub exp_sum_sub: fn(&[f32], f32) -> f32,
+    /// `(row, mx)` — rewrites the row to `exp(x - mx)` and returns the
+    /// sum (`head_bwd` softmax; the `/z` normalize stays in the caller).
+    pub exp_norm_sub: fn(&mut [f32], f32) -> f32,
+    /// Fused Adam parameter/moment update over one chunk.
+    pub adam_chunk: AdamChunkFn,
+}
+
+static SCALAR_OPS: KernelOps = KernelOps {
+    tier: Tier::Scalar,
+    mm_micro: scalar::mm_micro,
+    mm_panel_row: scalar::mm_panel_row,
+    nt_tile: scalar::nt_tile,
+    nt_dot: scalar::nt_dot,
+    tn_axpy: scalar::tn_axpy,
+    sum: scalar::sum,
+    sq_dev_sum: scalar::sq_dev_sum,
+    ln_bwd_sums: scalar::ln_bwd_sums,
+    ln_bwd_gx: scalar::ln_bwd_gx,
+    gelu: scalar::gelu,
+    gelu_grad_mul: scalar::gelu_grad_mul,
+    row_max: scalar::row_max,
+    exp_sum_sub: scalar::exp_sum_sub,
+    exp_norm_sub: scalar::exp_norm_sub,
+    adam_chunk: scalar::adam_chunk,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_OPS: KernelOps = KernelOps {
+    tier: Tier::Avx2,
+    mm_micro: avx2::mm_micro,
+    mm_panel_row: avx2::mm_panel_row,
+    nt_tile: avx2::nt_tile,
+    nt_dot: avx2::nt_dot,
+    tn_axpy: avx2::tn_axpy,
+    sum: avx2::sum,
+    sq_dev_sum: avx2::sq_dev_sum,
+    ln_bwd_sums: avx2::ln_bwd_sums,
+    ln_bwd_gx: avx2::ln_bwd_gx,
+    gelu: avx2::gelu,
+    gelu_grad_mul: avx2::gelu_grad_mul,
+    row_max: avx2::row_max,
+    exp_sum_sub: avx2::exp_sum_sub,
+    exp_norm_sub: avx2::exp_norm_sub,
+    adam_chunk: avx2::adam_chunk,
+};
+
+/// Resolved dispatch table. Null until the first [`ops`] call; after
+/// that always one of the two `static` tables above, so the pointer is
+/// `'static` and a racing double-initialize is benign.
+static CURRENT: AtomicPtr<KernelOps> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Serializes [`set_tier`] / [`tier_guard`] flips (tests run
+/// concurrently in one process and the table is global).
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+/// True iff the host supports the AVX2+FMA tier. Pure probe: ignores
+/// `TERAPIPE_NO_SIMD` and the currently installed tier.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+/// True iff the host supports the AVX2+FMA tier (never, off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_available() -> bool {
+    false
+}
+
+fn no_simd_env() -> bool {
+    match std::env::var_os("TERAPIPE_NO_SIMD") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_ops() -> &'static KernelOps {
+    &AVX2_OPS
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_ops() -> &'static KernelOps {
+    unreachable!("AVX2 tier requested on a non-x86_64 target")
+}
+
+fn detect() -> &'static KernelOps {
+    if no_simd_env() {
+        return &SCALAR_OPS;
+    }
+    if simd_available() {
+        return avx2_ops();
+    }
+    &SCALAR_OPS
+}
+
+/// The active dispatch table. First call resolves the tier (env +
+/// CPUID probe, may allocate for the env read); every later call is a
+/// single atomic load. Kernel entry points call this **once** and
+/// capture the reference in their parallel closures.
+#[inline]
+pub fn ops() -> &'static KernelOps {
+    let p = CURRENT.load(Ordering::Acquire);
+    if p.is_null() {
+        let resolved = detect();
+        CURRENT.store(resolved as *const KernelOps as *mut KernelOps, Ordering::Release);
+        resolved
+    } else {
+        // SAFETY: only ever set to one of the two `'static` tables.
+        unsafe { &*p }
+    }
+}
+
+/// The tier the next kernel call will run under.
+pub fn active_tier() -> Tier {
+    ops().tier
+}
+
+/// Installs `tier` as the global dispatch table, returning the
+/// previously active tier. Panics if [`Tier::Avx2`] is requested on a
+/// host without AVX2+FMA. Meant for benches and tests; use
+/// [`tier_guard`] from tests so concurrent tier flips serialize.
+pub fn set_tier(tier: Tier) -> Tier {
+    let prev = active_tier();
+    let next = match tier {
+        Tier::Scalar => &SCALAR_OPS,
+        Tier::Avx2 => {
+            assert!(simd_available(), "AVX2+FMA tier requested but the host lacks it");
+            avx2_ops()
+        }
+    };
+    CURRENT.store(next as *const KernelOps as *mut KernelOps, Ordering::Release);
+    prev
+}
+
+/// Holds the tier-flip lock and restores the previous tier on drop.
+pub struct TierGuard {
+    prev: Tier,
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// Pins the global dispatch to `tier` for the guard's lifetime. Tests
+/// that assert scalar-tier bit-identity (or force an A/B) take this so
+/// concurrently running tier-sensitive tests serialize; the previous
+/// tier is restored when the guard drops. A panic while holding the
+/// guard poisons only the flip lock, which later guards recover.
+pub fn tier_guard(tier: Tier) -> TierGuard {
+    let lock = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = set_tier(tier);
+    TierGuard { prev, _lock: lock }
+}
+
+impl Drop for TierGuard {
+    fn drop(&mut self) {
+        set_tier(self.prev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_resolves_once_and_is_stable() {
+        let first = ops() as *const KernelOps;
+        for _ in 0..4 {
+            assert_eq!(ops() as *const KernelOps, first);
+        }
+    }
+
+    #[test]
+    fn tier_guard_restores_previous_tier() {
+        let before = {
+            let _g = tier_guard(Tier::Scalar);
+            assert_eq!(active_tier(), Tier::Scalar);
+            // Nested flip inside the guard's critical section.
+            let prev = set_tier(Tier::Scalar);
+            assert_eq!(prev, Tier::Scalar);
+            Tier::Scalar
+        };
+        // Whatever tier the process detected is back after the guard,
+        // and pinning scalar again still works.
+        let _ = before;
+        let _g = tier_guard(Tier::Scalar);
+        assert_eq!(active_tier(), Tier::Scalar);
+    }
+
+    #[test]
+    fn avx2_guard_round_trips_when_available() {
+        if !simd_available() {
+            eprintln!("note: host lacks AVX2+FMA, skipping avx2 guard test");
+            return;
+        }
+        {
+            let _g = tier_guard(Tier::Avx2);
+            assert_eq!(active_tier(), Tier::Avx2);
+        }
+        {
+            let _g = tier_guard(Tier::Scalar);
+            assert_eq!(active_tier(), Tier::Scalar);
+        }
+    }
+
+    #[test]
+    fn scalar_table_reports_scalar_tier() {
+        assert_eq!(SCALAR_OPS.tier, Tier::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(AVX2_OPS.tier, Tier::Avx2);
+    }
+}

@@ -1,0 +1,261 @@
+//! Scalar kernel tier — the inner loops of the PR 6 cache-blocked
+//! kernels, moved here verbatim so the blocked outer structure in
+//! `math.rs`/`cell.rs` can dispatch over [`super::KernelOps`].
+//!
+//! Every reduction keeps one accumulator in fixed ascending order and
+//! Rust/LLVM does not contract `a * b + c` into an FMA, so this tier is
+//! bit-identical to the naive `*_ref` oracles — it is the determinism
+//! baseline the AVX2 tier is tolerance-pinned against, and the tier
+//! `TERAPIPE_NO_SIMD` forces.
+
+#![allow(clippy::needless_range_loop)] // index loops are the idiom in kernels
+
+use super::{ADAM_BETA1, ADAM_BETA2, ADAM_EPS, MR, NR, NT_TILE};
+
+/// `MR×NR` register microkernel: `acc[r][c] = Σ_l a[i0+r, l] · panel[l, c]`
+/// with `l` strictly ascending and one accumulator per element — the same
+/// reduction order as `matmul_ref`, hence bit-identical results.
+pub fn mm_micro(a: &[f32], i0: usize, mr: usize, k: usize, strip: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for row in acc.iter_mut() {
+        *row = [0.0; NR];
+    }
+    if mr == MR {
+        // hot case with constant bounds so the 4×8 accumulators stay in registers
+        let (a0, a1, a2, a3) = (
+            &a[i0 * k..(i0 + 1) * k],
+            &a[(i0 + 1) * k..(i0 + 2) * k],
+            &a[(i0 + 2) * k..(i0 + 3) * k],
+            &a[(i0 + 3) * k..(i0 + 4) * k],
+        );
+        for l in 0..k {
+            let bp = &strip[l * NR..l * NR + NR];
+            let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+            for c in 0..NR {
+                let bv = bp[c];
+                acc[0][c] += x0 * bv;
+                acc[1][c] += x1 * bv;
+                acc[2][c] += x2 * bv;
+                acc[3][c] += x3 * bv;
+            }
+        }
+    } else {
+        for l in 0..k {
+            let bp = &strip[l * NR..l * NR + NR];
+            for r in 0..mr {
+                let av = a[(i0 + r) * k + l];
+                for c in 0..NR {
+                    acc[r][c] += av * bp[c];
+                }
+            }
+        }
+    }
+}
+
+/// 1×NR microkernel for the column-parallel (skinny-M) matmul path;
+/// accumulates into caller-zeroed `acc` in the same ascending-`l` order
+/// as [`mm_micro`].
+pub fn mm_panel_row(ar: &[f32], strip: &[f32], k: usize, acc: &mut [f32; NR]) {
+    for l in 0..k {
+        let bp = &strip[l * NR..l * NR + NR];
+        let av = ar[l];
+        for c in 0..NR {
+            acc[c] += av * bp[c];
+        }
+    }
+}
+
+/// 4×4 dot-product tile for `matmul_nt`: 16 independent sequential
+/// chains (ILP) with the per-dot order of `matmul_nt_ref`, hence
+/// bit-identical. `acc` arrives zeroed from the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn nt_tile(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    jw: usize,
+    acc: &mut [[f32; NT_TILE]; NT_TILE],
+) {
+    if mr == NT_TILE && jw == NT_TILE {
+        let (a0, a1, a2, a3) = (
+            &a[i0 * n..(i0 + 1) * n],
+            &a[(i0 + 1) * n..(i0 + 2) * n],
+            &a[(i0 + 2) * n..(i0 + 3) * n],
+            &a[(i0 + 3) * n..(i0 + 4) * n],
+        );
+        let (b0, b1, b2, b3) = (
+            &b[j0 * n..(j0 + 1) * n],
+            &b[(j0 + 1) * n..(j0 + 2) * n],
+            &b[(j0 + 2) * n..(j0 + 3) * n],
+            &b[(j0 + 3) * n..(j0 + 4) * n],
+        );
+        for l in 0..n {
+            let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+            let (y0, y1, y2, y3) = (b0[l], b1[l], b2[l], b3[l]);
+            acc[0][0] += x0 * y0;
+            acc[0][1] += x0 * y1;
+            acc[0][2] += x0 * y2;
+            acc[0][3] += x0 * y3;
+            acc[1][0] += x1 * y0;
+            acc[1][1] += x1 * y1;
+            acc[1][2] += x1 * y2;
+            acc[1][3] += x1 * y3;
+            acc[2][0] += x2 * y0;
+            acc[2][1] += x2 * y1;
+            acc[2][2] += x2 * y2;
+            acc[2][3] += x2 * y3;
+            acc[3][0] += x3 * y0;
+            acc[3][1] += x3 * y1;
+            acc[3][2] += x3 * y2;
+            acc[3][3] += x3 * y3;
+        }
+    } else {
+        for l in 0..n {
+            for r in 0..mr {
+                let av = a[(i0 + r) * n + l];
+                for c in 0..jw {
+                    acc[r][c] += av * b[(j0 + c) * n + l];
+                }
+            }
+        }
+    }
+}
+
+/// Plain ascending dot product — the skinny-M `matmul_nt` path, same
+/// association as `matmul_nt_ref`.
+pub fn nt_dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (&a, &b) in x.iter().zip(y) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// Rank-1 row update `o[j] += av * br[j]` for `matmul_tn_acc` (the
+/// caller iterates `r` ascending, preserving `matmul_tn_ref`'s order).
+pub fn tn_axpy(o: &mut [f32], br: &[f32], av: f32) {
+    for (ov, &bv) in o.iter_mut().zip(br) {
+        *ov += av * bv;
+    }
+}
+
+/// Ascending row sum (layernorm mean numerator).
+pub fn sum(x: &[f32]) -> f32 {
+    x.iter().sum::<f32>()
+}
+
+/// Ascending `Σ (x - mu)²` (layernorm variance numerator).
+pub fn sq_dev_sum(x: &[f32], mu: f32) -> f32 {
+    x.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
+}
+
+/// LayerNorm backward fused first pass: accumulates gamma/beta grads in
+/// place and returns `(Σ dxhat, Σ dxhat·xhat)`.
+pub fn ln_bwd_sums(
+    xr: &[f32],
+    gyr: &[f32],
+    gamma: &[f32],
+    mu: f32,
+    rs: f32,
+    gg: &mut [f32],
+    gb: &mut [f32],
+) -> (f32, f32) {
+    let n = xr.len();
+    let mut sum_dxhat = 0f32;
+    let mut sum_dxhat_xhat = 0f32;
+    for i in 0..n {
+        let xhat = (xr[i] - mu) * rs;
+        let dxhat = gyr[i] * gamma[i];
+        sum_dxhat += dxhat;
+        sum_dxhat_xhat += dxhat * xhat;
+        gg[i] += gyr[i] * xhat;
+        gb[i] += gyr[i];
+    }
+    (sum_dxhat, sum_dxhat_xhat)
+}
+
+/// LayerNorm backward second pass: `gxr[i] = rs·(dxhat − m1 − xhat·m2)`.
+#[allow(clippy::too_many_arguments)]
+pub fn ln_bwd_gx(
+    xr: &[f32],
+    gyr: &[f32],
+    gamma: &[f32],
+    mu: f32,
+    rs: f32,
+    m1: f32,
+    m2: f32,
+    gxr: &mut [f32],
+) {
+    let n = xr.len();
+    for i in 0..n {
+        let xhat = (xr[i] - mu) * rs;
+        let dxhat = gyr[i] * gamma[i];
+        gxr[i] = rs * (dxhat - m1 - xhat * m2);
+    }
+}
+
+/// sqrt(2/pi), matching model.py's constant.
+pub const GELU_C: f32 = 0.797_884_56;
+pub const GELU_A: f32 = 0.044_715;
+
+/// Tanh-approximation GELU, one element.
+#[inline]
+pub fn gelu_one(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    0.5 * v * (1.0 + u.tanh())
+}
+
+/// d gelu(v) / dv, one element.
+#[inline]
+pub fn gelu_grad_one(v: f32) -> f32 {
+    let u = GELU_C * (v + GELU_A * v * v * v);
+    let t = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+    0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du
+}
+
+/// GELU over one chunk (outer chunking stays in `math.rs`).
+pub fn gelu(x: &[f32], out: &mut [f32]) {
+    for (ov, &v) in out.iter_mut().zip(x) {
+        *ov = gelu_one(v);
+    }
+}
+
+/// `g[i] *= gelu'(x[i])` over one chunk.
+pub fn gelu_grad_mul(x: &[f32], g: &mut [f32]) {
+    for (gv, &v) in g.iter_mut().zip(x) {
+        *gv *= gelu_grad_one(v);
+    }
+}
+
+/// Row max (softmax stabilizer).
+pub fn row_max(row: &[f32]) -> f32 {
+    row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+/// `Σ exp(x − mx)` without mutating the row (`head_fwd` log-sum-exp).
+pub fn exp_sum_sub(row: &[f32], mx: f32) -> f32 {
+    row.iter().map(|&l| (l - mx).exp()).sum()
+}
+
+/// Rewrites the row to `exp(x − mx)` and returns the sum (`head_bwd`
+/// softmax numerators; the `/z` normalize stays in the caller).
+pub fn exp_norm_sub(row: &mut [f32], mx: f32) -> f32 {
+    let mut z = 0f32;
+    for l in row.iter_mut() {
+        *l = (*l - mx).exp();
+        z += *l;
+    }
+    z
+}
+
+/// Fused Adam chunk update (moments + parameter, `ADAM_*` baked in).
+pub fn adam_chunk(pd: &mut [f32], gd: &[f32], md: &mut [f32], vd: &mut [f32], lr: f32, c1: f32, c2: f32) {
+    for i in 0..pd.len() {
+        md[i] = ADAM_BETA1 * md[i] + (1.0 - ADAM_BETA1) * gd[i];
+        vd[i] = ADAM_BETA2 * vd[i] + (1.0 - ADAM_BETA2) * gd[i] * gd[i];
+        pd[i] -= lr * (md[i] / c1) / ((vd[i] / c2).sqrt() + ADAM_EPS);
+    }
+}

@@ -25,7 +25,9 @@ use terapipe::config::{dump_setting, presets};
 use terapipe::data::synthetic_corpus;
 use terapipe::experiments as exp;
 use terapipe::perfmodel::analytic::AnalyticModel;
+#[cfg(feature = "pjrt")]
 use terapipe::perfmodel::linear::LinearCtxModel;
+use terapipe::perfmodel::measure::StageModels;
 use terapipe::perfmodel::CostModel;
 use terapipe::runtime::manifest::ModelDims;
 use terapipe::sim::schedule::build_plan;
@@ -482,7 +484,12 @@ fn native_spec(args: &Args) -> anyhow::Result<NativeSpec> {
 }
 
 /// Bucket-restricted DP over a fitted cost model (solver::bucketed).
-fn dp_bucketed(fitted: &LinearCtxModel, seq_len: usize, stages: usize, buckets: &[usize]) -> Vec<usize> {
+fn dp_bucketed<M: CostModel>(
+    fitted: &M,
+    seq_len: usize,
+    stages: usize,
+    buckets: &[usize],
+) -> Vec<usize> {
     let bu: Vec<u32> = buckets.iter().map(|&b| b as u32).collect();
     let (scheme, _) = terapipe::solver::bucketed::solve_tokens_bucketed(
         fitted, seq_len as u32, stages as u32, &bu, 0.0,
@@ -557,15 +564,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         terapipe::obs::set_enabled(true);
     }
 
-    // One measured model serves both --auto slicing and (when
-    // --replan-every is set) the drift gate's solved-against belief.
-    let mut auto_fit: Option<LinearCtxModel> = None;
+    // One measured per-stage fit serves --auto slicing, the drift gate's
+    // solved-against belief (when --replan-every is set), and the
+    // predicted trace-out tracks.
+    let mut auto_fit: Option<StageModels> = None;
     let slicing: Vec<usize> = if args.flag("auto") {
-        // measure real native timings → fit Eq. 9 → DP over the buckets
-        let fitted = terapipe::backend::measure_fit(&spec, 3)?;
-        let lens = dp_bucketed(&fitted, m.seq_len, m.num_stages, &buckets);
-        println!("auto slicing from measured model: {lens:?}");
-        auto_fit = Some(fitted);
+        // measure real native timings per stage role → fit Eq. 9 per
+        // role → bottleneck DP over the buckets
+        let models = terapipe::backend::measure_fit_per_stage(&spec, 3)?;
+        let lens = dp_bucketed(
+            &models.planning_model(m.num_stages),
+            m.seq_len,
+            m.num_stages,
+            &buckets,
+        );
+        println!("auto slicing from per-stage measured models (bottleneck DP): {lens:?}");
+        auto_fit = Some(models);
         lens
     } else if args.get("slicing").is_some() {
         args.u32_list("slicing", &[]).into_iter().map(|x| x as usize).collect()
@@ -620,9 +634,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // DriftDetector; a re-measure + re-solve is paid only when the
         // window says the solved-against model drifted.
         let solved_against = match auto_fit.clone() {
-            Some(f) => f,
-            None => terapipe::backend::measure_fit(&spec, 3)?,
-        };
+            Some(models) => models,
+            None => terapipe::backend::measure_fit_per_stage(&spec, 3)?,
+        }
+        .planning_model(m.num_stages);
         let dcfg = terapipe::planner::drift::DriftConfig {
             window: args.usize("drift-window", 16),
             rel_threshold: args.f64("drift-threshold", 0.35),
@@ -635,8 +650,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             dcfg,
             |step, factor| {
                 println!("drift at step {step} (×{factor:.3}): re-measuring + re-solving");
-                match terapipe::backend::measure_fit(&respec, 3) {
-                    Ok(f2) => Some(dp_bucketed(&f2, m.seq_len, m.num_stages, &buckets)),
+                match terapipe::backend::measure_fit_per_stage(&respec, 3) {
+                    Ok(m2) => Some(dp_bucketed(
+                        &m2.planning_model(m.num_stages),
+                        m.seq_len,
+                        m.num_stages,
+                        &buckets,
+                    )),
                     Err(e) => {
                         eprintln!("re-measure failed, keeping slicing: {e:#}");
                         None
@@ -668,25 +688,28 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!("metrics written to {}", path.display());
     }
     if let Some(path) = &trace_out {
-        // Predicted counterpart: the Eq. 9 fit replayed through the
-        // wavefront over the *current* slicing (a replan may have
-        // switched it mid-run) — stacked under the exec tracks in
-        // Perfetto and aligned cell-by-cell in the differential.
-        let fitted = match auto_fit {
-            Some(f) => f,
-            None => terapipe::backend::measure_fit(&spec, 1)?,
+        // Predicted counterpart: the per-role Eq. 9 fits replayed through
+        // the wavefront over the *current* slicing (a replan may have
+        // switched it mid-run) — each stage track uses its own role's
+        // model, stacked under the exec tracks in Perfetto and aligned
+        // cell-by-cell in the differential.
+        let models = match auto_fit {
+            Some(models) => models,
+            None => terapipe::backend::measure_fit_per_stage(&spec, 1)?,
         };
         let slicing = trainer.config().slicing.clone();
-        let mut stage_durs = Vec::with_capacity(slicing.len());
-        let mut off = 0u32;
-        for &len in &slicing {
-            stage_durs.push(fitted.t(len as u32, off));
-            off += len as u32;
+        let mut per_stage = Vec::with_capacity(m.num_stages);
+        for stage in 0..m.num_stages {
+            let fit = models.for_stage(stage, m.num_stages);
+            let mut stage_durs = Vec::with_capacity(slicing.len());
+            let mut off = 0u32;
+            for &len in &slicing {
+                stage_durs.push(fit.t(len as u32, off));
+                off += len as u32;
+            }
+            per_stage.push(stage_durs);
         }
-        let plan = terapipe::sim::schedule::stream_plan_per_stage(&vec![
-            stage_durs;
-            m.num_stages
-        ]);
+        let plan = terapipe::sim::schedule::stream_plan_per_stage(&per_stage);
         let predicted = terapipe::sim::wavefront::evaluate(&plan, true)
             .map(|r| r.trace)
             .unwrap_or_default();
@@ -828,8 +851,8 @@ fn cmd_measure(args: &Args) -> anyhow::Result<()> {
     let spec = native_spec(args)?;
     let m = spec.model();
     let buckets = spec.buckets();
-    let fitted = terapipe::backend::measure_fit(&spec, args.u32("repeats", 5))?;
-    print_measure(&fitted, &buckets, m.seq_len, m.num_stages, "native CPU");
+    let models = terapipe::backend::measure_fit_per_stage(&spec, args.u32("repeats", 5))?;
+    print_measure_per_stage(&models, &buckets, m.seq_len, m.num_stages, "native CPU");
     Ok(())
 }
 
@@ -855,6 +878,43 @@ fn cmd_measure_pjrt(_args: &Args) -> anyhow::Result<()> {
     ))
 }
 
+/// Per-role Eq. 9 coefficients + the bottleneck table the slicing DP
+/// actually consumes (native path; the PJRT path keeps the single-model
+/// printout in [`print_measure`]).
+fn print_measure_per_stage(
+    models: &StageModels,
+    buckets: &[usize],
+    seq_len: usize,
+    stages: usize,
+    label: &str,
+) {
+    println!("# measured per-stage fwd+bwd latency (real {label} backend) + Eq. 9 fit per role");
+    for (role, fit) in [
+        ("first", &models.first),
+        ("middle", &models.middle),
+        ("last", &models.last),
+    ] {
+        println!(
+            "{role:>6}: t_ctx(i,j) = {:.4} + {:.6}·i + {:.6}·j + {:.8}·ij  (ms)",
+            fit.coeffs.a0, fit.coeffs.a1, fit.coeffs.a2, fit.coeffs.a3
+        );
+    }
+    let pm = models.planning_model(stages);
+    println!("| i (slice) | j (ctx) | bottleneck ms |");
+    let g = *buckets.iter().min().unwrap();
+    for &i in buckets {
+        for j in [0usize, seq_len / 2] {
+            let jj = (j / g) * g;
+            if i + jj <= seq_len {
+                println!("| {i} | {jj} | {:.3} |", pm.t(i as u32, jj as u32));
+            }
+        }
+    }
+    let lens = dp_bucketed(&pm, seq_len, stages, buckets);
+    println!("DP slicing over per-stage measured models (bottleneck, bucketed): {lens:?}");
+}
+
+#[cfg(feature = "pjrt")]
 fn print_measure(fitted: &LinearCtxModel, buckets: &[usize], seq_len: usize, stages: usize, label: &str) {
     println!("# measured stage fwd+bwd latency (real {label} backend) + Eq. 9 fit");
     println!(

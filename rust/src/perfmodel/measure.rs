@@ -8,6 +8,7 @@
 //! small-number-of-simple-workloads calibration the paper describes.
 
 use super::linear::{CtxCoeffs, LinearCtxModel};
+use super::CostModel;
 
 /// What a pipeline stage actually computes per slice — the first stage
 /// adds the embedding, the last adds the LM head, so their latency laws
@@ -53,6 +54,61 @@ impl StageModels {
             StageRole::Middle => &self.middle,
             StageRole::Last => &self.last,
         }
+    }
+
+    /// The planner-facing [`CostModel`] over these fits: Alg. 1 plans one
+    /// slicing that *every* stage executes, and Eq. 5's latency is driven
+    /// by the slowest stage, so the DP's `t(i, j)` is the per-point
+    /// **bottleneck** across the roles a `num_stages`-stage pipeline
+    /// actually contains.
+    pub fn planning_model(&self, num_stages: usize) -> BottleneckStageModel {
+        BottleneckStageModel::new(self.clone(), num_stages)
+    }
+}
+
+/// Per-(i, j) max over the stage roles present in a K-stage pipeline —
+/// what the slicing DP consumes instead of one averaged model. Role
+/// presence follows [`StageRole::of`]: K=1 has only a `Last` stage (it
+/// carries the head), K=2 has `First`+`Last`, K≥3 adds `Middle`.
+#[derive(Debug, Clone)]
+pub struct BottleneckStageModel {
+    models: StageModels,
+    num_stages: usize,
+}
+
+impl BottleneckStageModel {
+    pub fn new(models: StageModels, num_stages: usize) -> BottleneckStageModel {
+        assert!(num_stages >= 1);
+        BottleneckStageModel { models, num_stages }
+    }
+
+    pub fn models(&self) -> &StageModels {
+        &self.models
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn present(&self) -> impl Iterator<Item = &LinearCtxModel> {
+        let k = self.num_stages;
+        [
+            (k > 1).then_some(&self.models.first),
+            (k > 2).then_some(&self.models.middle),
+            Some(&self.models.last),
+        ]
+        .into_iter()
+        .flatten()
+    }
+}
+
+impl CostModel for BottleneckStageModel {
+    fn t(&self, i: u32, j: u32) -> f64 {
+        self.present().map(|m| m.t(i, j)).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn t_comm(&self, i: u32) -> f64 {
+        self.present().map(|m| m.t_comm(i)).fold(f64::NEG_INFINITY, f64::max)
     }
 }
 
@@ -229,6 +285,47 @@ mod tests {
         let mut t = toy_timer();
         let m = measure(&mut t, 128, 4, 1);
         assert!(fit(&m, 100).is_err());
+    }
+
+    fn flat_model(g: u32, n: usize, level: f64) -> LinearCtxModel {
+        LinearCtxModel::new(g, vec![level; n + 1], CtxCoeffs { a0: 0.0, a1: 0.0, a2: 0.0, a3: 0.0 })
+    }
+
+    #[test]
+    fn bottleneck_takes_max_over_present_roles() {
+        let models = StageModels {
+            first: flat_model(4, 8, 3.0),
+            middle: flat_model(4, 8, 7.0),
+            last: flat_model(4, 8, 5.0),
+        };
+        // K=1: only a Last stage exists — the slow middle fit is ignored.
+        assert_eq!(models.planning_model(1).t(4, 0), 5.0);
+        // K=2: First vs Last.
+        assert_eq!(models.planning_model(2).t(4, 0), 5.0);
+        let heavy_first = StageModels { first: flat_model(4, 8, 9.0), ..models.clone() };
+        assert_eq!(heavy_first.planning_model(2).t(4, 0), 9.0);
+        // K≥3: the middle fit joins and dominates here.
+        assert_eq!(models.planning_model(3).t(4, 8), 7.0);
+        assert_eq!(models.planning_model(3).t_comm(4), 0.0);
+    }
+
+    #[test]
+    fn slicing_dp_consumes_bottleneck_model() {
+        // Flat per-slice cost: Eq. 5 says fewer slices always win, so the
+        // DP over the bottleneck model must return one full-length slice
+        // with latency (1 + (K-1)) · bottleneck.
+        let models = StageModels {
+            first: flat_model(4, 8, 1.0),
+            middle: flat_model(4, 8, 2.0),
+            last: flat_model(4, 8, 1.5),
+        };
+        let pm = models.planning_model(3);
+        let (scheme, _) =
+            crate::solver::bucketed::solve_tokens_bucketed(&pm, 32, 2, &[4, 8, 16, 32], 0.0)
+                .expect("solvable");
+        assert_eq!(scheme.lens.iter().sum::<u32>(), 32);
+        assert_eq!(scheme.lens, vec![32]);
+        assert!((scheme.latency_ms - 4.0).abs() < 1e-9, "got {}", scheme.latency_ms);
     }
 
     #[test]

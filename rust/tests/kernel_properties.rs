@@ -1,24 +1,37 @@
-//! Property suite for the blocked kernel layer (`backend::math`).
+//! Property suite for the blocked kernel layer (`backend::math`) and the
+//! runtime-dispatched SIMD tier (`backend::simd`).
 //!
-//! Two contracts are pinned here, both load-bearing for the measure →
+//! Three contracts are pinned here, all load-bearing for the measure →
 //! plan → execute loop:
 //!
-//! 1. **Blocked ≡ naive.** The cache-blocked/packed matmul family must
-//!    agree with the simple reference loops (`*_ref`) — *bit for bit* for
+//! 1. **Scalar tier ≡ naive, bit for bit.** Under the scalar dispatch
+//!    tier the cache-blocked/packed matmul family must agree with the
+//!    simple reference loops (`*_ref`) — *bit for bit* for
 //!    `matmul`/`matmul_nt` (each output element is accumulated in the
-//!    same strictly ascending contraction order with one accumulator, and
-//!    Rust does not contract mul+add into FMA), within tolerance for
+//!    same strictly ascending contraction order with one accumulator,
+//!    and Rust does not contract mul+add into FMA), within tolerance for
 //!    `matmul_tn`'s chunk-reduced parallel path — on randomized shapes
 //!    including remainder tiles (M, K, N not multiples of the block
-//!    sizes).
-//! 2. **Thread-count independence.** Every kernel with a parallel path
+//!    sizes). These tests pin the tier with `tier_guard(Tier::Scalar)`
+//!    so they hold on AVX2 hosts too.
+//! 2. **SIMD tier ≡ scalar tier, within stated tolerances.** The
+//!    AVX2+FMA tier reassociates reductions (8-lane trees) and contracts
+//!    mul+add into single-rounded FMAs, so it is pinned against the
+//!    scalar tier with one tolerance per kernel family (documented on
+//!    each test) on remainder-heavy shapes where vector tails are
+//!    exercised. Skipped with a printed notice on hosts without
+//!    AVX2+FMA.
+//! 3. **Thread-count independence.** Every kernel with a parallel path
 //!    returns bit-identical results under rayon pools of 1, 2 and 8
-//!    threads — the determinism contract `backend/README.md` documents.
+//!    threads — under *both* tiers: each element's floating-point
+//!    association is a pure function of its position, never of the
+//!    worker that computed it (`backend/README.md`).
 
 use terapipe::backend::math::{
     add_bias, add_into, colsum_into, gelu, gelu_grad_mul, layernorm, layernorm_bwd, matmul,
     matmul_nt, matmul_nt_ref, matmul_ref, matmul_tn, matmul_tn_ref,
 };
+use terapipe::backend::simd::{set_tier, simd_available, tier_guard, Tier};
 
 /// SplitMix64 → f32 in [-1, 1): deterministic test data.
 fn rnd(n: usize, seed: u64) -> Vec<f32> {
@@ -39,6 +52,15 @@ fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
 }
 
+/// Mixed absolute/relative bound: `|x − y| ≤ tol · max(1, |x|, |y|)`.
+fn assert_close(got: &[f32], want: &[f32], tol: f32, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        let bound = tol * x.abs().max(y.abs()).max(1.0);
+        assert!((x - y).abs() <= bound, "{label}[{i}]: {x} vs {y} (tol {tol})");
+    }
+}
+
 /// Random dims in [1, 96] — small enough to stay fast, large enough to
 /// cross MR/NR tile boundaries with remainders in every position.
 fn random_shapes(count: usize, seed: u64) -> Vec<(usize, usize, usize)> {
@@ -53,6 +75,8 @@ fn random_shapes(count: usize, seed: u64) -> Vec<(usize, usize, usize)> {
 
 #[test]
 fn blocked_matmul_matches_ref_bit_for_bit() {
+    // the bit-identity contract is a scalar-tier property
+    let _tier = tier_guard(Tier::Scalar);
     // hand-picked remainder/edge shapes + serial and both parallel paths
     let mut shapes = vec![
         (1, 1, 1),
@@ -78,6 +102,7 @@ fn blocked_matmul_matches_ref_bit_for_bit() {
 
 #[test]
 fn blocked_matmul_nt_matches_ref_bit_for_bit() {
+    let _tier = tier_guard(Tier::Scalar);
     let mut shapes = vec![
         (1, 1, 1),
         (5, 3, 2),
@@ -100,6 +125,7 @@ fn blocked_matmul_nt_matches_ref_bit_for_bit() {
 
 #[test]
 fn matmul_tn_serial_bitwise_parallel_within_tolerance() {
+    let _tier = tier_guard(Tier::Scalar);
     // below the parallel threshold the panel-blocked accumulation keeps
     // the reference's per-element ascending-r association: bit-identical
     for (m, k, n) in [(9usize, 7usize, 13usize), (33, 17, 29), (4, 8, 8)] {
@@ -120,6 +146,153 @@ fn matmul_tn_serial_bitwise_parallel_within_tolerance() {
     let want = matmul_tn_ref(&a, &b, m, k, n);
     for (i, (x, y)) in got.iter().zip(&want).enumerate() {
         assert!((x - y).abs() < 1e-3, "matmul_tn parallel [{i}]: {x} vs {y}");
+    }
+}
+
+/// SIMD tier vs scalar tier for the matmul families, on remainder-heavy
+/// shapes (no dimension a multiple of MR=4 / NR=8, so every kernel runs
+/// its vector tail).
+///
+/// Tolerance: **1e-4** mixed abs/rel. FMA contraction plus the 8-lane
+/// reduction tree reassociate a K-deep dot product; with K ≤ 521 and
+/// inputs in [-1, 1) the observed divergence is well under 1e-5, so 1e-4
+/// leaves an order of magnitude of slack without masking real bugs.
+#[test]
+fn simd_matmul_family_matches_scalar_within_tolerance() {
+    if !simd_available() {
+        eprintln!("note: host lacks AVX2+FMA, skipping simd-vs-scalar matmul differential");
+        return;
+    }
+    let _tier = tier_guard(Tier::Scalar);
+    let shapes = [
+        (13usize, 9usize, 31usize),
+        (5, 23, 17),
+        (1, 1, 1),
+        (130, 71, 89),
+        (1, 521, 259),
+        (3, 261, 121),
+    ];
+    for &(m, k, n) in &shapes {
+        let a = rnd(m * k, 50);
+        let b = rnd(k * n, 51);
+        let c = rnd(m * n, 52);
+        set_tier(Tier::Scalar);
+        let mm_s = matmul(&a, &b, m, k, n);
+        let nt_s = matmul_nt(&c, &b, m, n, k);
+        let tn_s = matmul_tn(&a, &c, m, k, n);
+        set_tier(Tier::Avx2);
+        let mm_v = matmul(&a, &b, m, k, n);
+        let nt_v = matmul_nt(&c, &b, m, n, k);
+        let tn_v = matmul_tn(&a, &c, m, k, n);
+        set_tier(Tier::Scalar);
+        assert_close(&mm_v, &mm_s, 1e-4, &format!("matmul ({m},{k},{n})"));
+        assert_close(&nt_v, &nt_s, 1e-4, &format!("matmul_nt ({m},{n},{k})"));
+        assert_close(&tn_v, &tn_s, 1e-4, &format!("matmul_tn ({m},{k},{n})"));
+    }
+}
+
+/// SIMD tier vs scalar tier for LayerNorm fwd/bwd and GELU fwd/grad on
+/// row lengths with 8-lane remainders.
+///
+/// Tolerance: **1e-5** mixed abs/rel for all four. The LayerNorm moments
+/// and backward sums are single-row reductions (d = 131 here); the GELU
+/// paths additionally go through the vector exp polynomial, whose
+/// worst-case relative error against `f32::exp` is ≈ 4e-6 at the clamp
+/// edges and ≈ 1e-7 over the GELU operating range.
+#[test]
+fn simd_elementwise_family_matches_scalar_within_tolerance() {
+    if !simd_available() {
+        eprintln!("note: host lacks AVX2+FMA, skipping simd-vs-scalar elementwise differential");
+        return;
+    }
+    let _tier = tier_guard(Tier::Scalar);
+    let (rows, d) = (9usize, 131usize);
+    let x = rnd(rows * d, 60);
+    let gm = rnd(d, 61);
+    let bt = rnd(d, 62);
+    let gy = rnd(rows * d, 63);
+    let xe = rnd(1003, 64);
+    let gp0 = rnd(1003, 65);
+
+    set_tier(Tier::Scalar);
+    let (y_s, st_s) = layernorm(&x, &gm, &bt, d);
+    let mut gg_s = vec![0f32; d];
+    let mut gb_s = vec![0f32; d];
+    let gx_s = layernorm_bwd(&x, &st_s, &gm, &gy, d, &mut gg_s, &mut gb_s);
+    let ge_s = gelu(&xe);
+    let mut gp_s = gp0.clone();
+    gelu_grad_mul(&xe, &mut gp_s);
+
+    set_tier(Tier::Avx2);
+    let (y_v, st_v) = layernorm(&x, &gm, &bt, d);
+    let mut gg_v = vec![0f32; d];
+    let mut gb_v = vec![0f32; d];
+    let gx_v = layernorm_bwd(&x, &st_v, &gm, &gy, d, &mut gg_v, &mut gb_v);
+    let ge_v = gelu(&xe);
+    let mut gp_v = gp0.clone();
+    gelu_grad_mul(&xe, &mut gp_v);
+    set_tier(Tier::Scalar);
+
+    assert_close(&y_v, &y_s, 1e-5, "layernorm fwd");
+    assert_close(&gx_v, &gx_s, 1e-5, "layernorm bwd gx");
+    assert_close(&gg_v, &gg_s, 1e-5, "layernorm bwd gamma grad");
+    assert_close(&gb_v, &gb_s, 1e-5, "layernorm bwd beta grad");
+    assert_close(&ge_v, &ge_s, 1e-5, "gelu fwd");
+    assert_close(&gp_v, &gp_s, 1e-5, "gelu grad-mul");
+}
+
+/// The cell-level hot loops (softmax row ops, fused Adam) dispatch below
+/// the public math API, so pin the two tier implementations against each
+/// other directly, on lengths with 8-lane remainders.
+///
+/// Tolerances per op: `row_max` is **bit-exact** (max is invariant under
+/// reassociation on finite data); `exp_sum_sub` / `exp_norm_sub` go
+/// through the vector exp polynomial — **1e-5**; `adam_chunk` only
+/// reassociates the FMA-contracted moment updates — **1e-5**.
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn simd_cell_kernels_match_scalar_within_tolerance() {
+    use terapipe::backend::simd::{avx2, scalar};
+    if !simd_available() {
+        eprintln!("note: host lacks AVX2+FMA, skipping simd-vs-scalar cell kernel differential");
+        return;
+    }
+    for len in [1usize, 7, 64, 257, 1003] {
+        let row = rnd(len, 70);
+        let mx_s = scalar::row_max(&row);
+        let mx_v = avx2::row_max(&row);
+        assert_eq!(mx_s.to_bits(), mx_v.to_bits(), "row_max len {len}");
+
+        let z_s = scalar::exp_sum_sub(&row, mx_s);
+        let z_v = avx2::exp_sum_sub(&row, mx_v);
+        assert!(
+            (z_s - z_v).abs() <= 1e-5 * z_s.abs().max(1.0),
+            "exp_sum_sub len {len}: {z_s} vs {z_v}"
+        );
+
+        let mut r_s = row.clone();
+        let mut r_v = row.clone();
+        let n_s = scalar::exp_norm_sub(&mut r_s, mx_s);
+        let n_v = avx2::exp_norm_sub(&mut r_v, mx_v);
+        assert!(
+            (n_s - n_v).abs() <= 1e-5 * n_s.abs().max(1.0),
+            "exp_norm_sub sum len {len}: {n_s} vs {n_v}"
+        );
+        assert_close(&r_v, &r_s, 1e-5, &format!("exp_norm_sub row len {len}"));
+
+        // fused Adam from identical initial state, step-1 bias corrections
+        let g = rnd(len, 71);
+        let mut p_s = rnd(len, 72);
+        let mut p_v = p_s.clone();
+        let mut m_s = vec![0.01f32; len];
+        let mut m_v = m_s.clone();
+        let mut v_s = vec![0.02f32; len];
+        let mut v_v = v_s.clone();
+        scalar::adam_chunk(&mut p_s, &g, &mut m_s, &mut v_s, 1e-3, 0.1, 0.001);
+        avx2::adam_chunk(&mut p_v, &g, &mut m_v, &mut v_v, 1e-3, 0.1, 0.001);
+        assert_close(&p_v, &p_s, 1e-5, &format!("adam params len {len}"));
+        assert_close(&m_v, &m_s, 1e-5, &format!("adam m len {len}"));
+        assert_close(&v_v, &v_s, 1e-5, &format!("adam v len {len}"));
     }
 }
 
@@ -145,6 +318,10 @@ fn run_all_parallel_kernels() -> Vec<Vec<u32>> {
     let a4 = rnd(160 * 40, 16);
     let b4 = rnd(160 * 48, 17);
     outs.push(bits(&matmul_tn(&a4, &b4, 160, 40, 48)));
+    // matmul_tn skinny-m (column-panel parallel, k output rows)
+    let a5 = rnd(200 * 4, 32);
+    let b5 = rnd(200 * 96, 33);
+    outs.push(bits(&matmul_tn(&a5, &b5, 200, 4, 96)));
     // add_bias
     let mut x = rnd(1024 * 128, 18);
     let bias = rnd(128, 19);
@@ -191,12 +368,27 @@ fn every_parallel_kernel_is_bit_identical_across_thread_counts() {
             .unwrap()
             .install(run_all_parallel_kernels)
     };
-    let baseline = run(1);
-    for threads in [2usize, 8] {
-        let got = run(threads);
-        assert_eq!(baseline.len(), got.len());
-        for (i, (a, b)) in baseline.iter().zip(&got).enumerate() {
-            assert_eq!(a, b, "kernel output #{i} differs between 1 and {threads} threads");
+    // Pool invariance must hold under both tiers: ownership of each
+    // output element — and hence its association — depends only on its
+    // position, never on which worker computed it.
+    let mut tiers = vec![Tier::Scalar];
+    if simd_available() {
+        tiers.push(Tier::Avx2);
+    } else {
+        eprintln!("note: host lacks AVX2+FMA, checking pool invariance under the scalar tier only");
+    }
+    for tier in tiers {
+        let _g = tier_guard(tier);
+        let baseline = run(1);
+        for threads in [2usize, 8] {
+            let got = run(threads);
+            assert_eq!(baseline.len(), got.len());
+            for (i, (a, b)) in baseline.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "kernel output #{i} differs between 1 and {threads} threads ({tier:?} tier)"
+                );
+            }
         }
     }
 }
