@@ -118,6 +118,12 @@ pub enum DriverMsg {
     CheckpointDone { stage: usize },
     /// A worker hit an unrecoverable error.
     Fatal { stage: usize, error: String },
+    /// Periodic liveness beacon from a worker's heartbeat thread (sent
+    /// only when [`super::TrainConfig::heartbeat_ms`] is set). Consumed
+    /// by the driver's health monitor; never surfaced to collect loops
+    /// and never resets the recv inactivity deadline — a dead peer must
+    /// still trip it even while healthy stages keep beating.
+    Heartbeat { stage: usize },
 }
 
 impl DriverMsg {
@@ -140,7 +146,8 @@ impl DriverMsg {
             DriverMsg::SliceTime(t) => t.stage,
             DriverMsg::UpdateDone { stage }
             | DriverMsg::CheckpointDone { stage }
-            | DriverMsg::Fatal { stage, .. } => *stage,
+            | DriverMsg::Fatal { stage, .. }
+            | DriverMsg::Heartbeat { stage } => *stage,
         }
     }
 }

@@ -80,6 +80,14 @@ pub struct TrainConfig {
     /// bounds silence, not step duration. `None` waits forever (the
     /// pre-deadline behavior).
     pub recv_timeout_ms: Option<u64>,
+    /// Worker heartbeat period (ms): each worker spawns a beacon thread
+    /// sending [`messages::DriverMsg::Heartbeat`] at this cadence, so
+    /// the driver's health monitor can tell an *idle* stage from a
+    /// *dead* one between real messages. `None` (the default) sends no
+    /// heartbeats — note a heartbeat thread is a second sender on the
+    /// worker's driver link, which perturbs the virtual transport's
+    /// per-link RNG stream, so determinism-pinned runs leave this off.
+    pub heartbeat_ms: Option<u64>,
 }
 
 impl Default for TrainConfig {
@@ -93,6 +101,7 @@ impl Default for TrainConfig {
             replan_every: None,
             trace: false,
             recv_timeout_ms: Some(DEFAULT_RECV_TIMEOUT_MS),
+            heartbeat_ms: None,
         }
     }
 }
@@ -120,6 +129,9 @@ impl TrainConfig {
         }
         if self.recv_timeout_ms == Some(0) {
             bail!("recv_timeout_ms must be ≥ 1 when set (use None to wait forever)");
+        }
+        if self.heartbeat_ms == Some(0) {
+            bail!("heartbeat_ms must be ≥ 1 when set (use None to disable heartbeats)");
         }
         Ok(())
     }

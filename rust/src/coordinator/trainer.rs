@@ -24,6 +24,8 @@ use super::worker::{run_worker, WorkerCfg};
 use super::TrainConfig;
 use crate::backend::BackendSpec;
 use crate::data::Batch;
+use crate::obs::anomaly::{AnomalyDetector, Cause, Detection};
+use crate::obs::health::{HealthMonitor, HealthTimeline};
 use crate::perfmodel::{CostModel, ScaledModel};
 use crate::planner::drift::{DriftConfig, DriftDetector, DriftVerdict, LatencySample};
 use crate::runtime::manifest::ModelDims;
@@ -49,6 +51,11 @@ pub struct StepReport {
     /// Measured bubble fraction `1 - Σ busy / (stages · pipe_ms)`;
     /// `None` without timing collection.
     pub bubble_fraction: Option<f64>,
+    /// Per-stage health verdict codes after this step
+    /// ([`crate::obs::health::HealthState`]: 0 healthy, 1 suspect,
+    /// 2 unhealthy) — the monitor runs every step, so this is always
+    /// `num_stages` long.
+    pub stage_health: Vec<u8>,
 }
 
 /// What one [`Trainer::step`] returns: the scalars a driver loop needs,
@@ -92,6 +99,12 @@ pub struct DriftReplanReport {
     pub warmups: usize,
     /// Latency samples fed to the detector.
     pub samples_seen: usize,
+    /// Named-cause detections the anomaly attributor emitted during the
+    /// run (compute straggler / comm degradation / global slowdown) —
+    /// the typed evidence a planner can consume beyond the scalar drift
+    /// verdict. The detections themselves stay buffered on the trainer
+    /// ([`Trainer::take_anomalies`]).
+    pub named_causes: usize,
 }
 
 /// A running pipeline: workers + transport endpoints.
@@ -108,7 +121,22 @@ pub struct Trainer<S: BackendSpec> {
     handles: Vec<JoinHandle<()>>,
     /// Per-slice timing samples collected during the most recent step.
     timings: Vec<SliceTime>,
+    /// Per-stage liveness + latency state machines, fed by every driver
+    /// arrival (including heartbeats) and by recv-probe silence.
+    health: HealthMonitor,
+    /// Rolling robust-statistics attributor over per-slice timings.
+    anomaly: AnomalyDetector,
+    /// Detections accumulated across steps; drained by
+    /// [`Trainer::take_anomalies`].
+    anomalies: Vec<Detection>,
 }
+
+/// How many health probes the driver schedules across one recv deadline:
+/// a stage silent for a full `recv_timeout_ms / IDLE_PROBES` sub-interval
+/// accrues one liveness miss, so with the default thresholds a dead
+/// stage walks Healthy → Suspect → Unhealthy *before* the deadline
+/// finally fails the step.
+const IDLE_PROBES: u32 = 4;
 
 impl<S: BackendSpec> Trainer<S> {
     /// Spawn one worker thread per stage, each building its own backend
@@ -163,6 +191,7 @@ impl<S: BackendSpec> Trainer<S> {
                 spec: spec.clone(),
                 resume_from: resume_from.clone(),
                 timings,
+                heartbeat_ms: cfg.heartbeat_ms,
                 endpoint,
             };
             handles.push(
@@ -180,6 +209,9 @@ impl<S: BackendSpec> Trainer<S> {
             .unwrap_or(0);
 
         Ok(Trainer {
+            health: HealthMonitor::new(model.num_stages),
+            anomaly: AnomalyDetector::new(),
+            anomalies: Vec::new(),
             model,
             buckets,
             cfg,
@@ -193,24 +225,77 @@ impl<S: BackendSpec> Trainer<S> {
 
     /// One deadline-bounded driver receive. `progress` renders the
     /// collect loop's state into the diagnostic (only on failure).
+    ///
+    /// Every arrival marks its source stage alive for the health
+    /// monitor. Heartbeats are consumed here — they feed the monitor
+    /// but are never surfaced to collect loops and do NOT reset the
+    /// deadline, so a dead peer still trips it while healthy stages
+    /// keep beating. The deadline is split into [`IDLE_PROBES`]
+    /// sub-intervals; each silent sub-interval charges a liveness miss
+    /// to every stage unseen since the last probe.
     fn recv_driver(&mut self, phase: &str, progress: impl FnOnce() -> String) -> Result<DriverMsg> {
+        let k = self.model.num_stages;
         match self.cfg.recv_timeout_ms {
-            None => match self.from_workers.recv() {
-                Ok(m) => Ok(m),
-                Err(_) => bail!("all workers hung up during {phase} ({})", progress()),
-            },
-            Some(ms) => match self.from_workers.recv_timeout(Duration::from_millis(ms)) {
-                DriverRecv::Msg(m) => Ok(m),
-                DriverRecv::Disconnected => {
-                    bail!("all workers hung up during {phase} ({})", progress())
+            None => loop {
+                match self.from_workers.recv() {
+                    Ok(DriverMsg::Heartbeat { stage }) => self.health.on_arrival(stage),
+                    Ok(m) => {
+                        self.health.on_arrival(m.source_stage(k));
+                        return Ok(m);
+                    }
+                    Err(_) => bail!("all workers hung up during {phase} ({})", progress()),
                 }
-                DriverRecv::TimedOut => bail!(
-                    "no driver message for {ms} ms during {phase}: a stage is dead, wedged, \
-                     or a message was dropped ({})",
-                    progress()
-                ),
             },
+            Some(ms) => {
+                let start = Instant::now();
+                let deadline = start + Duration::from_millis(ms);
+                let probe = Duration::from_millis((ms / IDLE_PROBES as u64).max(1));
+                // Probe boundaries are *absolute* ticks within this
+                // deadline — heartbeat arrivals must not push them back,
+                // or a steadily-beating stage would mask a dead peer's
+                // silence forever.
+                let mut next_probe = start + probe;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        bail!(
+                            "no driver message for {ms} ms during {phase}: a stage is dead, \
+                             wedged, or a message was dropped ({})",
+                            progress()
+                        );
+                    }
+                    let target = next_probe.min(deadline);
+                    match self.from_workers.recv_timeout(target.saturating_duration_since(now)) {
+                        DriverRecv::Msg(DriverMsg::Heartbeat { stage }) => {
+                            self.health.on_arrival(stage);
+                        }
+                        DriverRecv::Msg(m) => {
+                            self.health.on_arrival(m.source_stage(k));
+                            return Ok(m);
+                        }
+                        DriverRecv::Disconnected => {
+                            bail!("all workers hung up during {phase} ({})", progress())
+                        }
+                        DriverRecv::TimedOut => {
+                            self.health.probe_tick();
+                            next_probe += probe;
+                        }
+                    }
+                }
+            }
         }
+    }
+
+    /// Fold one live slice sample into the timing buffer and both
+    /// observers (latency-track health evidence + anomaly windows).
+    fn note_slice_time(&mut self, t: SliceTime) {
+        self.health.observe_slice_ms(t.stage, t.ms);
+        let phase = match t.phase {
+            TimedPhase::Fwd => 0u8,
+            TimedPhase::Bwd => 1u8,
+        };
+        self.anomaly.observe_slice(t.stage, t.slice as u32, phase, t.ms);
+        self.timings.push(t);
     }
 
     /// One synchronous training step over `microbatches` batches.
@@ -220,6 +305,8 @@ impl<S: BackendSpec> Trainer<S> {
         let num_slices = self.cfg.slicing.len();
         let lr = self.cfg.lr;
         self.timings.clear();
+        let step_id = (self.steps_done + 1) as u64;
+        self.health.begin_step(step_id);
         let t0 = Instant::now();
 
         // ---- stream forward slices into the pipe ----
@@ -267,8 +354,11 @@ impl<S: BackendSpec> Trainer<S> {
                     }
                 }
                 DriverMsg::BwdDone { .. } => bwd_done += 1,
-                DriverMsg::SliceTime(t) => self.timings.push(t),
-                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                DriverMsg::SliceTime(t) => self.note_slice_time(t),
+                DriverMsg::Fatal { stage, error } => {
+                    self.health.on_fatal(stage);
+                    bail!("stage {stage} failed: {error}")
+                }
                 other => bail!("unexpected {other:?} mid-step"),
             }
         }
@@ -290,13 +380,39 @@ impl<S: BackendSpec> Trainer<S> {
                 .recv_driver("update", || format!("{updates}/{expected_updates} update acks"))?;
             match msg {
                 DriverMsg::UpdateDone { .. } => updates += 1,
-                DriverMsg::SliceTime(t) => self.timings.push(t),
-                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                DriverMsg::SliceTime(t) => self.note_slice_time(t),
+                DriverMsg::Fatal { stage, error } => {
+                    self.health.on_fatal(stage);
+                    bail!("stage {stage} failed: {error}")
+                }
                 _ => bail!("unexpected message during update"),
             }
         }
 
         self.steps_done += 1;
+
+        // ---- close out the step's health + anomaly bookkeeping ----
+        self.health.end_step(step_id);
+        for d in self.anomaly.end_step(step_id) {
+            let stage = match d.cause {
+                Cause::ComputeStraggler { stage, .. } => stage as i32,
+                _ => crate::obs::DRIVER,
+            };
+            crate::obs::instant(
+                crate::obs::SpanKind::Anomaly,
+                stage,
+                d.cause.code() as u64,
+                d.cause.factor().to_bits(),
+            );
+            eprintln!(
+                "anomaly at step {}: {} (factor {:.2}x)",
+                d.step,
+                d.cause.name(),
+                d.cause.factor()
+            );
+            self.anomalies.push(d);
+        }
+
         let tokens = self.cfg.microbatches * self.model.batch * self.model.seq_len;
         // Per-stage busy time from this step's slice samples. The update
         // collect loop above may have appended post-step samples too;
@@ -319,6 +435,42 @@ impl<S: BackendSpec> Trainer<S> {
     /// unless `cfg.trace` or a replan cadence enabled collection).
     pub fn last_timings(&self) -> &[SliceTime] {
         &self.timings
+    }
+
+    /// The driver-side health monitor (read-only view).
+    pub fn health(&self) -> &HealthMonitor {
+        &self.health
+    }
+
+    /// Every health transition recorded so far, in order.
+    pub fn health_timeline(&self) -> &HealthTimeline {
+        self.health.timeline()
+    }
+
+    /// Drain the anomaly detections accumulated since the last call
+    /// (oldest first). Each maps onto a typed planner event via
+    /// [`crate::obs::anomaly::Detection::to_event`].
+    pub fn take_anomalies(&mut self) -> Vec<Detection> {
+        std::mem::take(&mut self.anomalies)
+    }
+
+    /// Feed per-link delivery evidence into the anomaly attributor's
+    /// comm windows. The trainer only sees channel endpoints, so the
+    /// transport's owner bridges the evidence across — e.g. draining
+    /// [`super::transport::VirtualTransport::take_deliveries`] between
+    /// steps (a future TCP transport's stats thread fits the same
+    /// seam). Link keys are [`super::transport::LinkId::index`] values.
+    pub fn observe_deliveries(
+        &mut self,
+        deliveries: &[(super::transport::LinkId, Vec<super::transport::DeliverySample>)],
+    ) {
+        let k = self.model.num_stages;
+        for (link, samples) in deliveries {
+            let idx = link.index(k);
+            for s in samples {
+                self.anomaly.observe_link(idx, s.delay_ms);
+            }
+        }
     }
 
     /// Drive `cfg.steps` steps pulling microbatches from `next_batch`.
@@ -347,6 +499,7 @@ impl<S: BackendSpec> Trainer<S> {
             tokens: stats.tokens,
             bubble_fraction: stats.bubble_fraction(),
             stage_busy_ms: stats.stage_busy_ms,
+            stage_health: self.health.codes(),
         })
     }
 
@@ -428,6 +581,7 @@ impl<S: BackendSpec> Trainer<S> {
     ) -> Result<(Vec<StepReport>, DriftReplanReport)> {
         let steps = self.cfg.steps;
         let cadence = self.cfg.replan_every;
+        let anomalies_at_entry = self.anomalies.len();
         let mut detector = DriftDetector::new(drift_cfg);
         let mut scale = 1.0f64;
         let mut report = DriftReplanReport::default();
@@ -495,6 +649,7 @@ impl<S: BackendSpec> Trainer<S> {
             on_step(&rep);
             reports.push(rep);
         }
+        report.named_causes = self.anomalies.len() - anomalies_at_entry;
         Ok((reports, report))
     }
 
@@ -521,8 +676,11 @@ impl<S: BackendSpec> Trainer<S> {
                 self.recv_driver("checkpoint", || format!("{done}/{expected} checkpoint acks"))?;
             match msg {
                 DriverMsg::CheckpointDone { .. } => done += 1,
-                DriverMsg::SliceTime(t) => self.timings.push(t),
-                DriverMsg::Fatal { stage, error } => bail!("stage {stage} failed: {error}"),
+                DriverMsg::SliceTime(t) => self.note_slice_time(t),
+                DriverMsg::Fatal { stage, error } => {
+                    self.health.on_fatal(stage);
+                    bail!("stage {stage} failed: {error}")
+                }
                 _ => bail!("unexpected message during checkpoint"),
             }
         }

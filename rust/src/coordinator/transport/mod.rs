@@ -33,7 +33,7 @@ pub mod scenario;
 pub mod virt;
 
 pub use inproc::InProcTransport;
-pub use virt::{LinkCfg, NetConfig, VirtualTransport};
+pub use virt::{DeliverySample, LinkCfg, NetConfig, VirtualTransport};
 
 use std::time::Duration;
 

@@ -429,6 +429,27 @@ impl VirtualTransport {
         shared.links[id.index(shared.num_stages)].lock().unwrap().metrics.clone()
     }
 
+    /// Drain every link's buffered [`DeliverySample`]s (in [`LinkId::all`]
+    /// order), leaving the cumulative counters untouched. Draining resets
+    /// each link's sample buffer, so periodic callers — e.g. a driver
+    /// feeding per-link delays into [`crate::obs::anomaly`] — see each
+    /// delivery exactly once and the [`SAMPLE_CAP`] ceiling never starves
+    /// later windows. Links with no new deliveries are omitted.
+    pub fn take_deliveries(&self) -> Vec<(LinkId, Vec<DeliverySample>)> {
+        let shared = self.shared.lock().unwrap();
+        LinkId::all(shared.num_stages)
+            .into_iter()
+            .filter_map(|id| {
+                let mut l = shared.links[id.index(shared.num_stages)].lock().unwrap();
+                if l.metrics.deliveries.is_empty() {
+                    None
+                } else {
+                    Some((id, std::mem::take(&mut l.metrics.deliveries)))
+                }
+            })
+            .collect()
+    }
+
     /// Snapshot of every link's metrics, in [`LinkId::all`] order.
     pub fn all_metrics(&self) -> Vec<(LinkId, LinkMetrics)> {
         let shared = self.shared.lock().unwrap();
@@ -599,6 +620,34 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         vt.kill_stage(0);
         assert_eq!(h.join().unwrap(), Some(Disconnected));
+    }
+
+    #[test]
+    fn take_deliveries_drains_samples_but_keeps_counters() {
+        let net = NetConfig::seeded(7).with_link(LinkId::DriverTo(0), LinkCfg::with_latency(5.0));
+        let vt = VirtualTransport::new(net);
+        let mut fabric = vt.connect(1);
+        for _ in 0..3 {
+            fabric.to_stages[0].send(Msg::Update { step: 1, lr: 0.1 }).unwrap();
+        }
+        let drained = vt.take_deliveries();
+        let (id, samples) = drained
+            .iter()
+            .find(|(id, _)| *id == LinkId::DriverTo(0))
+            .expect("driver link has samples");
+        assert_eq!((*id, samples.len()), (LinkId::DriverTo(0), 3));
+        assert!(samples.iter().all(|s| (s.delay_ms - 5.0).abs() < 1e-9));
+        // second drain sees nothing new; cumulative counters survive
+        assert!(vt.take_deliveries().iter().all(|(l, _)| *l != LinkId::DriverTo(0)));
+        let m = vt.link_metrics(LinkId::DriverTo(0));
+        assert_eq!(m.sent, 3);
+        assert!(m.deliveries.is_empty());
+        // and the buffer refills after a drain
+        fabric.to_stages[0].send(Msg::Update { step: 2, lr: 0.1 }).unwrap();
+        assert_eq!(vt.take_deliveries().len(), 1);
+        for _ in 0..4 {
+            let _ = fabric.stages[0].inbox.recv();
+        }
     }
 
     #[test]

@@ -88,6 +88,10 @@ pub struct WorkerCfg<S: BackendSpec> {
     pub resume_from: Option<PathBuf>,
     /// Report per-slice fwd/bwd wall times to the driver.
     pub timings: bool,
+    /// Send [`DriverMsg::Heartbeat`] at this period (ms) from a beacon
+    /// thread, so the driver can tell idle from dead
+    /// ([`super::TrainConfig::heartbeat_ms`]).
+    pub heartbeat_ms: Option<u64>,
     /// This stage's view of the transport fabric.
     pub endpoint: StageEndpoint,
 }
@@ -100,7 +104,34 @@ pub struct WorkerCfg<S: BackendSpec> {
 pub fn run_worker<S: BackendSpec>(cfg: WorkerCfg<S>) {
     let stage = cfg.stage;
     let driver = cfg.endpoint.driver.clone_box();
-    let error = match catch_unwind(AssertUnwindSafe(|| Worker::<S::Backend>::init_and_run(cfg))) {
+    // Liveness beacon: a detached thread sending Heartbeat at the
+    // configured period until the worker body exits (or the driver
+    // hangs up). Lets the driver's health monitor distinguish a parked
+    // stage (waiting for work) from a dead one.
+    let beat = cfg.heartbeat_ms.map(|period_ms| {
+        let alive = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let flag = alive.clone();
+        let tx = cfg.endpoint.driver.clone_box();
+        let handle = std::thread::Builder::new()
+            .name(format!("terapipe-hb-{stage}"))
+            .spawn(move || {
+                let period = std::time::Duration::from_millis(period_ms.max(1));
+                while flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    if tx.send(DriverMsg::Heartbeat { stage }).is_err() {
+                        break;
+                    }
+                    std::thread::sleep(period);
+                }
+            })
+            .expect("spawn heartbeat thread");
+        (alive, handle)
+    });
+    let result = catch_unwind(AssertUnwindSafe(|| Worker::<S::Backend>::init_and_run(cfg)));
+    if let Some((alive, handle)) = beat {
+        alive.store(false, std::sync::atomic::Ordering::Relaxed);
+        let _ = handle.join();
+    }
+    let error = match result {
         Ok(Ok(())) => return,
         Ok(Err(e)) => format!("{e:#}"),
         Err(payload) => {
@@ -130,7 +161,7 @@ struct Worker<B: StageBackend> {
 
 impl<B: StageBackend> Worker<B> {
     fn init_and_run<S: BackendSpec<Backend = B>>(cfg: WorkerCfg<S>) -> Result<()> {
-        let WorkerCfg { stage, num_stages, spec, resume_from, timings, endpoint } = cfg;
+        let WorkerCfg { stage, num_stages, spec, resume_from, timings, heartbeat_ms: _, endpoint } = cfg;
         let StageEndpoint { mut inbox, next, prev, driver } = endpoint;
         let backend = spec.build(stage, num_stages, resume_from.as_deref())?;
         let dims = backend.dims().clone();

@@ -87,6 +87,12 @@ USAGE: terapipe <command> [--options]
            [--save-checkpoint DIR] [--resume DIR]
            [--trace-out trace.json] [--metrics-out metrics.prom]
            (Perfetto span trace + Prometheus-style metrics snapshot)
+           [--postmortem-dir DIR] [--flight-steps 8] (black-box flight
+           recorder: last-N-step bundle dumped on failure or at exit)
+           [--heartbeat-ms N] (worker liveness beacons; defaults to 250
+           when --postmortem-dir is set, off otherwise; 0 = off)
+           [--report-every N] (print the worst exec<->sim differential
+           cell every N steps; needs an obs output flag)
            native model: [--hidden 64] [--heads 4] [--layers 2] [--stages 2]
            [--seq-len 128] [--batch 4] [--vocab 256] [--granularity 16]
            [--seed 42]; or [--artifacts DIR] for the AOT/PJRT backend
@@ -285,6 +291,26 @@ fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
                         ev.step
                     );
                 }
+            }
+            EventKind::Straggler { stage, factor } => {
+                // the single-dimension cost model has no per-stage term:
+                // fold the named straggler into the compute scale (every
+                // stage pays, so the plan is conservative for the rest)
+                println!(
+                    "step {:>5} Straggler    stage {stage} ×{factor:.2} -> folding into compute scale",
+                    ev.step
+                );
+                let d = planner.on_slowdown(factor);
+                report(&planner, ev.step, &d)?;
+            }
+            EventKind::LinkDegraded { link, factor } => {
+                println!(
+                    "step {:>5} LinkDegraded link {link} ×{factor:.2} -> effective bandwidth ×{:.3}",
+                    ev.step,
+                    1.0 / factor
+                );
+                let d = planner.on_bandwidth_change(1.0 / factor);
+                report(&planner, ev.step, &d)?;
             }
         }
     }
@@ -498,6 +524,32 @@ fn dp_bucketed<M: CostModel>(
     scheme.lens.into_iter().map(|l| l as usize).collect()
 }
 
+/// Predicted (simulated) single-step trace: the per-role Eq. 9 fits
+/// replayed through the wavefront over `slicing` — each stage track uses
+/// its own role's model. Feeds the exec↔sim differential, the Perfetto
+/// predicted tracks, and the flight recorder's postmortem report.
+fn predicted_spans(
+    models: &StageModels,
+    slicing: &[usize],
+    stages: usize,
+) -> Vec<terapipe::sim::trace::Span> {
+    let mut per_stage = Vec::with_capacity(stages);
+    for stage in 0..stages {
+        let fit = models.for_stage(stage, stages);
+        let mut stage_durs = Vec::with_capacity(slicing.len());
+        let mut off = 0u32;
+        for &len in slicing {
+            stage_durs.push(fit.t(len as u32, off));
+            off += len as u32;
+        }
+        per_stage.push(stage_durs);
+    }
+    let plan = terapipe::sim::schedule::stream_plan_per_stage(&per_stage);
+    terapipe::sim::wavefront::evaluate(&plan, true)
+        .map(|r| r.trace)
+        .unwrap_or_default()
+}
+
 /// Uniform 4-way split when it lands on buckets, else one full slice.
 fn default_slicing(seq_len: usize, buckets: &[usize]) -> Vec<usize> {
     let quarter = seq_len / 4;
@@ -554,15 +606,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let m = spec.model();
     let buckets = spec.buckets();
 
-    // Observability: either output flag turns the global span recorder
+    // Observability: any output flag turns the global span recorder
     // on (before --auto's measure pass, so probe spans land in the
     // trace) and enables per-slice timing collection (cfg.trace).
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
-    let obs_on = trace_out.is_some() || metrics_out.is_some();
+    // Black-box flight recorder: ring of the last --flight-steps steps'
+    // spans + health verdicts, dumped as a postmortem bundle into
+    // --postmortem-dir when the run fails (or on exit, for drills).
+    let postmortem = args.get("postmortem-dir").map(PathBuf::from);
+    let flight_steps = args.usize("flight-steps", 8);
+    // Worst exec↔sim differential cell printed every N steps (0 = off).
+    let report_every = args.usize("report-every", 0);
+    let obs_on = trace_out.is_some() || metrics_out.is_some() || postmortem.is_some();
     if obs_on {
         terapipe::obs::set_enabled(true);
     }
+    // Worker liveness beacons default on when the flight recorder is
+    // armed (a postmortem should tell idle from dead), off otherwise:
+    // heartbeats add a second sender per driver link, which perturbs the
+    // virtual transport's RNG stream in determinism-pinned tests.
+    let heartbeat_ms =
+        match args.usize("heartbeat-ms", if postmortem.is_some() { 250 } else { 0 }) {
+            0 => None,
+            ms => Some(ms as u64),
+        };
 
     // One measured per-stage fit serves --auto slicing, the drift gate's
     // solved-against belief (when --replan-every is set), and the
@@ -596,6 +664,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
         trace: obs_on,
         recv_timeout_ms: recv_timeout(args),
+        heartbeat_ms,
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,
@@ -603,6 +672,30 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     let resume = args.get("resume").map(PathBuf::from);
     let save = args.get("save-checkpoint").map(PathBuf::from);
+
+    // The flight recorder and the per-step differential cell both need
+    // the predicted (simulated) step up front; measure once if --auto
+    // didn't already. The --trace-out predicted track is still built
+    // after the run (over the final slicing, which a replan may change).
+    let pre_predicted: Vec<terapipe::sim::trace::Span> =
+        if obs_on && (postmortem.is_some() || report_every > 0) {
+            let models = match &auto_fit {
+                Some(models) => models.clone(),
+                None => {
+                    let models = terapipe::backend::measure_fit_per_stage(&spec, 1)?;
+                    auto_fit = Some(models.clone());
+                    models
+                }
+            };
+            predicted_spans(&models, &cfg.slicing, m.num_stages)
+        } else {
+            Vec::new()
+        };
+    let mut flight = terapipe::obs::flight::FlightRecorder::new(flight_steps);
+    flight.set_fingerprint(terapipe::obs::flight::plan_fingerprint(
+        &cfg.slicing,
+        &[m.num_stages as u64, cfg.seed],
+    ));
 
     println!(
         "training {} params (native CPU backend), {} stages × {} layers, L={}, B={}, slicing {:?}",
@@ -620,15 +713,49 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut batcher = terapipe::data::Batcher::new(&corpus, m.batch, m.seq_len, seed);
 
     // Per-step drains keep the fixed-capacity per-thread span buffers
-    // from overflowing across a long run.
+    // from overflowing across a long run; each drained flush also feeds
+    // the flight ring and (on the --report-every cadence) the worst
+    // exec↔sim differential cell.
     let mut spans = terapipe::obs::Flush::default();
-    let on_step = |r: &terapipe::coordinator::StepReport, spans: &mut terapipe::obs::Flush| {
+    let mut last_step = 0u64;
+    let record_postmortem = postmortem.is_some();
+    let on_step = |r: &terapipe::coordinator::StepReport,
+                   spans: &mut terapipe::obs::Flush,
+                   flight: &mut terapipe::obs::flight::FlightRecorder,
+                   last_step: &mut u64| {
         step_printer(r);
-        if obs_on {
-            spans.absorb(terapipe::obs::flush());
+        *last_step = r.step as u64;
+        if !obs_on {
+            return;
         }
+        let f = terapipe::obs::flush();
+        if record_postmortem {
+            flight.record_step(
+                r.step as u64,
+                r.loss,
+                r.wall_ms,
+                &f.spans,
+                f.dropped,
+                &r.stage_health,
+                &[],
+            );
+        }
+        if report_every > 0 && r.step % report_every == 0 && !pre_predicted.is_empty() {
+            let d = terapipe::obs::Differential::from_spans(&f.spans, &pre_predicted);
+            if let Some(c) = d.worst() {
+                println!(
+                    "  worst exec<->sim cell: stage {} slice {}: exec {:.3} ms vs sim {:.3} ms ({:+.0}%)",
+                    c.stage,
+                    c.slice,
+                    c.exec_ms,
+                    c.pred_ms,
+                    100.0 * c.rel_err
+                );
+            }
+        }
+        spans.absorb(f);
     };
-    let reports = if replan.is_some() {
+    let result: anyhow::Result<Vec<terapipe::coordinator::StepReport>> = if replan.is_some() {
         // Solver-in-the-loop with the drift gate (ROADMAP "planner on the
         // real runtime"): live per-slice samples stream into the
         // DriftDetector; a re-measure + re-solve is paid only when the
@@ -643,35 +770,81 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             rel_threshold: args.f64("drift-threshold", 0.35),
         };
         let respec = spec.clone();
-        let (reports, drift) = trainer.train_with_drift_replan(
-            || batcher.next_batch(),
-            |r| on_step(r, &mut spans),
-            solved_against,
-            dcfg,
-            |step, factor| {
-                println!("drift at step {step} (×{factor:.3}): re-measuring + re-solving");
-                match terapipe::backend::measure_fit_per_stage(&respec, 3) {
-                    Ok(m2) => Some(dp_bucketed(
-                        &m2.planning_model(m.num_stages),
-                        m.seq_len,
-                        m.num_stages,
-                        &buckets,
-                    )),
-                    Err(e) => {
-                        eprintln!("re-measure failed, keeping slicing: {e:#}");
-                        None
+        trainer
+            .train_with_drift_replan(
+                || batcher.next_batch(),
+                |r| on_step(r, &mut spans, &mut flight, &mut last_step),
+                solved_against,
+                dcfg,
+                |step, factor| {
+                    println!("drift at step {step} (×{factor:.3}): re-measuring + re-solving");
+                    match terapipe::backend::measure_fit_per_stage(&respec, 3) {
+                        Ok(m2) => Some(dp_bucketed(
+                            &m2.planning_model(m.num_stages),
+                            m.seq_len,
+                            m.num_stages,
+                            &buckets,
+                        )),
+                        Err(e) => {
+                            eprintln!("re-measure failed, keeping slicing: {e:#}");
+                            None
+                        }
                     }
-                }
-            },
-        )?;
-        println!(
-            "drift gate: {} re-solves, {} stable checks, {} warmups over {} samples",
-            drift.resolves, drift.stable_checks, drift.warmups, drift.samples_seen
-        );
-        reports
+                },
+            )
+            .map(|(reports, drift)| {
+                println!(
+                    "drift gate: {} re-solves, {} stable checks, {} warmups over {} samples, {} named causes",
+                    drift.resolves, drift.stable_checks, drift.warmups, drift.samples_seen,
+                    drift.named_causes
+                );
+                reports
+            })
     } else {
-        trainer.train(|| batcher.next_batch(), |r| on_step(r, &mut spans))?
+        trainer.train(|| batcher.next_batch(), |r| on_step(r, &mut spans, &mut flight, &mut last_step))
     };
+
+    // ---- postmortem bundle: on any Err out of the loop, or on demand ----
+    if let Some(dir) = &postmortem {
+        if result.is_err() && obs_on {
+            // the failing step never reached on_step: capture its spans
+            // and the post-failure health verdicts in one last frame
+            let f = terapipe::obs::flush();
+            let health = trainer.health().codes();
+            flight.record_step(last_step + 1, f64::NAN, 0.0, &f.spans, f.dropped, &health, &[]);
+            spans.absorb(f);
+        }
+        let reason = match &result {
+            Ok(_) => "on-demand dump at end of run".to_string(),
+            Err(e) => format!("training failed: {e:#}"),
+        };
+        let mut reg = terapipe::obs::MetricsRegistry::new();
+        terapipe::obs::metrics::span_metrics(&mut reg, &spans);
+        terapipe::obs::health::health_metrics(&mut reg, trainer.health());
+        if let Ok(reports) = &result {
+            terapipe::obs::metrics::step_metrics(&mut reg, reports);
+        }
+        let metrics_text = reg.render();
+        let final_health = trainer.health().codes();
+        let ctx = terapipe::obs::flight::DumpContext {
+            reason: &reason,
+            slicing: &trainer.config().slicing,
+            stages: m.num_stages,
+            metrics_text: &metrics_text,
+            timeline: trainer.health_timeline(),
+            final_health: &final_health,
+            predicted: &pre_predicted,
+        };
+        match flight.dump(dir, &ctx) {
+            Ok(files) => println!(
+                "postmortem bundle written to {} ({})",
+                dir.display(),
+                files.join(", ")
+            ),
+            Err(e) => eprintln!("postmortem dump failed: {e}"),
+        }
+    }
+    let reports = result?;
     if let Some(ckpt) = save {
         trainer.save_checkpoint(&ckpt)?;
         println!("checkpoint written to {}", ckpt.display());
@@ -684,6 +857,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         let mut reg = terapipe::obs::MetricsRegistry::new();
         terapipe::obs::metrics::span_metrics(&mut reg, &spans);
         terapipe::obs::metrics::step_metrics(&mut reg, &reports);
+        terapipe::obs::health::health_metrics(&mut reg, trainer.health());
         std::fs::write(path, reg.render())?;
         println!("metrics written to {}", path.display());
     }
@@ -698,21 +872,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             None => terapipe::backend::measure_fit_per_stage(&spec, 1)?,
         };
         let slicing = trainer.config().slicing.clone();
-        let mut per_stage = Vec::with_capacity(m.num_stages);
-        for stage in 0..m.num_stages {
-            let fit = models.for_stage(stage, m.num_stages);
-            let mut stage_durs = Vec::with_capacity(slicing.len());
-            let mut off = 0u32;
-            for &len in &slicing {
-                stage_durs.push(fit.t(len as u32, off));
-                off += len as u32;
-            }
-            per_stage.push(stage_durs);
-        }
-        let plan = terapipe::sim::schedule::stream_plan_per_stage(&per_stage);
-        let predicted = terapipe::sim::wavefront::evaluate(&plan, true)
-            .map(|r| r.trace)
-            .unwrap_or_default();
+        let predicted = predicted_spans(&models, &slicing, m.num_stages);
         let diff = terapipe::obs::Differential::from_spans(&spans.spans, &predicted);
         let bundle = terapipe::obs::export::TraceBundle {
             exec: spans.spans,
@@ -768,6 +928,7 @@ fn cmd_train_pjrt(args: &Args) -> anyhow::Result<()> {
         replan_every: args.get("replan-every").map(|_| args.usize("replan-every", 0)),
         trace: false,
         recv_timeout_ms: recv_timeout(args),
+        heartbeat_ms: None,
     };
     let corpus = match args.get("corpus") {
         Some(path) => std::fs::read_to_string(path)?,

@@ -1,0 +1,453 @@
+//! Rolling anomaly attribution: robust per-(stage, slice, phase)
+//! statistics over the `SliceTime` stream plus per-link delivery
+//! delays, classified into *named* causes.
+//!
+//! Each sample stream keeps a bounded ring of recent values; a new
+//! sample is anomalous when it clears **all three** guards against the
+//! ring's robust statistics (median / MAD — immune to the occasional
+//! prior outlier, unlike mean / stddev):
+//!
+//! 1. `x > median + k_mad · 1.4826 · MAD` — statistically surprising;
+//! 2. `x > median · (1 + rel_floor)` — materially slower, not just a
+//!    tight-distribution blip;
+//! 3. `x > median + abs_floor_ms` — above timer noise.
+//!
+//! Anomalous samples are **not** absorbed into the window, so a
+//! persistent straggler keeps firing instead of becoming the new
+//! baseline (the drift detector handles legitimate regime changes).
+//!
+//! [`AnomalyDetector::end_step`] folds the step's per-slice flags into
+//! per-stage verdicts and classifies:
+//!
+//! * ≥ [`AnomalyConfig::global_frac`] of observed stages slow →
+//!   [`Cause::GlobalSlowdown`];
+//! * otherwise each slow stage (majority of its observed slices
+//!   anomalous) → [`Cause::ComputeStraggler`];
+//! * each flagged link → [`Cause::CommDegradation`].
+//!
+//! Detections convert to typed [`crate::planner::events`] via
+//! [`Detection::to_event`], so drift-replan reacts to named causes.
+
+use std::collections::BTreeMap;
+
+use crate::planner::events::{Event, EventKind};
+use crate::util::json::Json;
+
+/// Detector thresholds. Defaults are deliberately conservative: a 2×
+/// blip on one slice stays quiet; the ISSUE's planted 4× straggler and
+/// 10 ms link delay clear every guard within one window.
+#[derive(Debug, Clone, Copy)]
+pub struct AnomalyConfig {
+    /// Ring capacity per sample stream.
+    pub window: usize,
+    /// Minimum ring fill before verdicts are issued.
+    pub min_fill: usize,
+    /// MAD multiplier (guard 1), in normalized-MAD units.
+    pub k_mad: f64,
+    /// Relative floor (guard 2): sample must exceed `median · (1+this)`.
+    pub rel_floor: f64,
+    /// Absolute floor (guard 3), ms above the median.
+    pub abs_floor_ms: f64,
+    /// Fraction of observed stages slow at once ⇒ global slowdown.
+    pub global_frac: f64,
+}
+
+impl Default for AnomalyConfig {
+    fn default() -> AnomalyConfig {
+        AnomalyConfig {
+            window: 64,
+            min_fill: 12,
+            k_mad: 4.0,
+            rel_floor: 0.75,
+            abs_floor_ms: 0.25,
+            global_frac: 2.0 / 3.0,
+        }
+    }
+}
+
+/// What the detector decided a detection *is*.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Cause {
+    /// One stage's compute is slow; `factor` = observed / median.
+    ComputeStraggler { stage: usize, factor: f64 },
+    /// One link's delivery delay is inflated; `link` is the dense
+    /// [`crate::coordinator::transport::LinkId::index`].
+    CommDegradation { link: usize, factor: f64 },
+    /// Most stages slowed together (thermal, co-tenant, ...).
+    GlobalSlowdown { factor: f64 },
+}
+
+impl Cause {
+    /// Schema code (the `a` payload of an `Anomaly` span).
+    pub fn code(self) -> u8 {
+        match self {
+            Cause::ComputeStraggler { .. } => 0,
+            Cause::CommDegradation { .. } => 1,
+            Cause::GlobalSlowdown { .. } => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cause::ComputeStraggler { .. } => "compute_straggler",
+            Cause::CommDegradation { .. } => "comm_degradation",
+            Cause::GlobalSlowdown { .. } => "global_slowdown",
+        }
+    }
+
+    pub fn factor(self) -> f64 {
+        match self {
+            Cause::ComputeStraggler { factor, .. }
+            | Cause::CommDegradation { factor, .. }
+            | Cause::GlobalSlowdown { factor } => factor,
+        }
+    }
+}
+
+/// One classified detection.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    pub step: u64,
+    pub cause: Cause,
+}
+
+impl Detection {
+    /// The typed planner event this detection names.
+    pub fn to_event(&self) -> Event {
+        let kind = match self.cause {
+            Cause::ComputeStraggler { stage, factor } => {
+                EventKind::Straggler { stage: stage as u32, factor }
+            }
+            Cause::CommDegradation { link, factor } => {
+                EventKind::LinkDegraded { link: link as u32, factor }
+            }
+            Cause::GlobalSlowdown { factor } => EventKind::Slowdown(factor),
+        };
+        Event { step: self.step, kind }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("step", Json::Num(self.step as f64)),
+            ("cause", Json::Str(self.cause.name().into())),
+            ("factor", Json::Num(self.cause.factor())),
+        ];
+        match self.cause {
+            Cause::ComputeStraggler { stage, .. } => {
+                fields.push(("stage", Json::Num(stage as f64)));
+            }
+            Cause::CommDegradation { link, .. } => {
+                fields.push(("link", Json::Num(link as f64)));
+            }
+            Cause::GlobalSlowdown { .. } => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Fixed-capacity ring with reusable sort scratch.
+#[derive(Debug, Clone)]
+struct RollingWindow {
+    buf: Vec<f64>,
+    pos: usize,
+    cap: usize,
+}
+
+impl RollingWindow {
+    fn new(cap: usize) -> RollingWindow {
+        RollingWindow { buf: Vec::with_capacity(cap), pos: 0, cap: cap.max(4) }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.pos] = x;
+            self.pos = (self.pos + 1) % self.cap;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// (median, normalized MAD) over the current contents.
+    fn robust_stats(&self, scratch: &mut Vec<f64>) -> (f64, f64) {
+        scratch.clear();
+        scratch.extend_from_slice(&self.buf);
+        scratch.sort_by(f64::total_cmp);
+        let med = median_sorted(scratch);
+        for v in scratch.iter_mut() {
+            *v = (*v - med).abs();
+        }
+        scratch.sort_by(f64::total_cmp);
+        let mad = median_sorted(scratch);
+        (med, 1.4826 * mad)
+    }
+}
+
+fn median_sorted(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Per-stage flags accumulated within one step.
+#[derive(Debug, Clone, Copy, Default)]
+struct StageStep {
+    observed: u32,
+    anomalous: u32,
+    factor_sum: f64,
+}
+
+/// The rolling detector: one window per (stage, slice, phase) compute
+/// stream and one per transport link.
+#[derive(Debug, Clone)]
+pub struct AnomalyDetector {
+    cfg: AnomalyConfig,
+    compute: BTreeMap<(usize, u32, u8), RollingWindow>,
+    links: BTreeMap<usize, RollingWindow>,
+    stage_step: BTreeMap<usize, StageStep>,
+    link_step: BTreeMap<usize, (u32, f64)>,
+    scratch: Vec<f64>,
+}
+
+impl Default for AnomalyDetector {
+    fn default() -> AnomalyDetector {
+        AnomalyDetector::new()
+    }
+}
+
+impl AnomalyDetector {
+    pub fn new() -> AnomalyDetector {
+        AnomalyDetector::with_config(AnomalyConfig::default())
+    }
+
+    pub fn with_config(cfg: AnomalyConfig) -> AnomalyDetector {
+        AnomalyDetector {
+            cfg,
+            compute: BTreeMap::new(),
+            links: BTreeMap::new(),
+            stage_step: BTreeMap::new(),
+            link_step: BTreeMap::new(),
+            scratch: Vec::with_capacity(cfg.window),
+        }
+    }
+
+    /// Triple-guard verdict against one window; returns the anomaly
+    /// factor (`x / median`) when flagged. Clean samples join the
+    /// window, flagged ones do not.
+    fn check(cfg: &AnomalyConfig, scratch: &mut Vec<f64>, w: &mut RollingWindow, x: f64) -> Option<f64> {
+        if !x.is_finite() || x < 0.0 {
+            return None;
+        }
+        if w.len() < cfg.min_fill {
+            w.push(x);
+            return None;
+        }
+        let (med, nmad) = w.robust_stats(scratch);
+        let surprising = x > med + cfg.k_mad * nmad;
+        let material = x > med * (1.0 + cfg.rel_floor);
+        let above_noise = x > med + cfg.abs_floor_ms;
+        if surprising && material && above_noise {
+            Some(x / med.max(cfg.abs_floor_ms))
+        } else {
+            w.push(x);
+            None
+        }
+    }
+
+    /// Feed one measured slice time. `phase`: 0 = fwd, 1 = bwd.
+    pub fn observe_slice(&mut self, stage: usize, slice: u32, phase: u8, ms: f64) {
+        let cap = self.cfg.window;
+        let w = self
+            .compute
+            .entry((stage, slice, phase))
+            .or_insert_with(|| RollingWindow::new(cap));
+        let flagged = Self::check(&self.cfg, &mut self.scratch, w, ms);
+        let s = self.stage_step.entry(stage).or_default();
+        s.observed += 1;
+        if let Some(f) = flagged {
+            s.anomalous += 1;
+            s.factor_sum += f;
+        }
+    }
+
+    /// Feed one link delivery delay (`link` = dense `LinkId::index`).
+    pub fn observe_link(&mut self, link: usize, delay_ms: f64) {
+        let cap = self.cfg.window;
+        let w = self.links.entry(link).or_insert_with(|| RollingWindow::new(cap));
+        if let Some(f) = Self::check(&self.cfg, &mut self.scratch, w, delay_ms) {
+            let e = self.link_step.entry(link).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += f;
+        } else {
+            self.link_step.entry(link).or_insert((0, 0.0));
+        }
+    }
+
+    /// Close the step: fold per-slice flags into per-stage verdicts,
+    /// classify, and reset the step accumulators.
+    pub fn end_step(&mut self, step: u64) -> Vec<Detection> {
+        let mut out = Vec::new();
+        // a stage is "slow" when a majority of its observed slices
+        // flagged this step — one noisy slice is not a straggler
+        let mut slow: Vec<(usize, f64)> = Vec::new();
+        let mut observed_stages = 0usize;
+        for (&stage, s) in &self.stage_step {
+            if s.observed == 0 {
+                continue;
+            }
+            observed_stages += 1;
+            if s.anomalous * 2 >= s.observed && s.anomalous > 0 {
+                slow.push((stage, s.factor_sum / s.anomalous as f64));
+            }
+        }
+        if observed_stages > 0
+            && slow.len() >= 2
+            && slow.len() as f64 >= self.cfg.global_frac * observed_stages as f64
+        {
+            let factor = slow.iter().map(|(_, f)| f).sum::<f64>() / slow.len() as f64;
+            out.push(Detection { step, cause: Cause::GlobalSlowdown { factor } });
+        } else {
+            for (stage, factor) in slow {
+                out.push(Detection { step, cause: Cause::ComputeStraggler { stage, factor } });
+            }
+        }
+        for (&link, &(n, fsum)) in &self.link_step {
+            if n > 0 {
+                out.push(Detection {
+                    step,
+                    cause: Cause::CommDegradation { link, factor: fsum / n as f64 },
+                });
+            }
+        }
+        self.stage_step.clear();
+        self.link_step.clear();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed_baseline(det: &mut AnomalyDetector, stages: usize, slices: u32, steps: u64, ms: f64) {
+        for step in 0..steps {
+            for stage in 0..stages {
+                for slice in 0..slices {
+                    det.observe_slice(stage, slice, 0, ms);
+                }
+            }
+            assert!(det.end_step(step).is_empty(), "baseline must not trigger");
+        }
+    }
+
+    #[test]
+    fn stationary_stream_stays_quiet() {
+        let mut det = AnomalyDetector::new();
+        // deterministic small jitter around 1 ms
+        for step in 0..40u64 {
+            for stage in 0..4usize {
+                for slice in 0..4u32 {
+                    let jitter = ((step + stage as u64 + slice as u64) % 7) as f64 * 0.01;
+                    det.observe_slice(stage, slice, 0, 1.0 + jitter);
+                }
+            }
+            assert!(det.end_step(step).is_empty(), "stationary stream must not trigger (step {step})");
+        }
+    }
+
+    #[test]
+    fn planted_4x_straggler_is_named() {
+        let mut det = AnomalyDetector::new();
+        feed_baseline(&mut det, 4, 4, 20, 1.0);
+        // stage 2 goes 4x slow on every slice
+        for stage in 0..4usize {
+            for slice in 0..4u32 {
+                let ms = if stage == 2 { 4.0 } else { 1.0 };
+                det.observe_slice(stage, slice, 0, ms);
+            }
+        }
+        let det_out = det.end_step(20);
+        assert_eq!(det_out.len(), 1);
+        match det_out[0].cause {
+            Cause::ComputeStraggler { stage, factor } => {
+                assert_eq!(stage, 2);
+                assert!((factor - 4.0).abs() < 0.5, "factor {factor} should be ~4");
+            }
+            other => panic!("expected straggler, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn planted_link_delay_is_comm_degradation() {
+        let mut det = AnomalyDetector::new();
+        for step in 0..5u64 {
+            for _ in 0..4 {
+                det.observe_link(3, 0.1);
+                det.observe_link(4, 0.1);
+            }
+            assert!(det.end_step(step).is_empty());
+        }
+        // link 3 delivery delay jumps to 10 ms
+        det.observe_link(3, 10.0);
+        det.observe_link(4, 0.1);
+        let out = det.end_step(5);
+        assert_eq!(out.len(), 1);
+        match out[0].cause {
+            Cause::CommDegradation { link, factor } => {
+                assert_eq!(link, 3);
+                assert!(factor > 10.0, "10ms over a 0.1ms median, factor {factor}");
+            }
+            other => panic!("expected comm degradation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn correlated_slowdown_is_global() {
+        let mut det = AnomalyDetector::new();
+        feed_baseline(&mut det, 4, 4, 20, 1.0);
+        for stage in 0..4usize {
+            for slice in 0..4u32 {
+                det.observe_slice(stage, slice, 0, 3.0);
+            }
+        }
+        let out = det.end_step(20);
+        assert_eq!(out.len(), 1);
+        assert!(matches!(out[0].cause, Cause::GlobalSlowdown { .. }), "got {:?}", out[0].cause);
+    }
+
+    #[test]
+    fn anomalies_do_not_poison_the_window() {
+        let mut det = AnomalyDetector::new();
+        feed_baseline(&mut det, 1, 1, 20, 1.0);
+        // a persistent 4x straggler keeps firing every step
+        for step in 20..30u64 {
+            det.observe_slice(0, 0, 0, 4.0);
+            let out = det.end_step(step);
+            assert_eq!(out.len(), 1, "step {step}: straggler must keep firing");
+        }
+    }
+
+    #[test]
+    fn detections_map_to_typed_events() {
+        let d = Detection { step: 7, cause: Cause::ComputeStraggler { stage: 2, factor: 4.0 } };
+        let ev = d.to_event();
+        assert_eq!(ev.step, 7);
+        assert!(matches!(ev.kind, EventKind::Straggler { stage: 2, factor } if (factor - 4.0).abs() < 1e-12));
+        let d = Detection { step: 8, cause: Cause::CommDegradation { link: 3, factor: 10.0 } };
+        assert!(matches!(d.to_event().kind, EventKind::LinkDegraded { link: 3, .. }));
+        let d = Detection { step: 9, cause: Cause::GlobalSlowdown { factor: 2.0 } };
+        assert!(matches!(d.to_event().kind, EventKind::Slowdown(f) if (f - 2.0).abs() < 1e-12));
+        // JSON rendering names the cause
+        let j = d.to_json().to_string();
+        assert!(j.contains("global_slowdown"));
+    }
+}

@@ -1,0 +1,394 @@
+//! Black-box flight recorder: a bounded ring of the last N steps'
+//! telemetry, dumped as a postmortem bundle when a run dies (or on
+//! demand).
+//!
+//! Each [`StepFrame`] holds that step's span flush, loss/wall numbers,
+//! per-stage health codes, and per-link traffic snapshots. All frame
+//! storage is pre-allocated at construction and reused in place
+//! (`clear()` + `extend_from_slice`), so once the ring has filled and
+//! per-step volumes have stabilized, [`FlightRecorder::record_step`]
+//! performs **zero heap allocations** — the same counting-allocator
+//! contract `benches/exec.rs` pins for the kernels and the span
+//! recorder (gated in `BENCH_obs.json`).
+//!
+//! [`FlightRecorder::dump`] writes the bundle:
+//!
+//! * `trace.json`    — Perfetto trace of every retained span (plus the
+//!   predicted sim track when available);
+//! * `metrics.prom`  — the caller's rendered metrics snapshot;
+//! * `health.json`   — reason, plan fingerprint, final per-stage
+//!   states, and the full [`HealthTimeline`];
+//! * `report.txt`    — human-readable postmortem: per-step table and
+//!   the exec↔sim differential;
+//! * `manifest.json` — what's in the bundle.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::differential::Differential;
+use super::export::{perfetto_trace, TraceBundle};
+use super::health::{HealthState, HealthTimeline};
+use super::SpanRecord;
+use crate::sim::trace::Span;
+use crate::util::json::Json;
+
+/// One link's cumulative traffic counters at step end (`Copy` — the
+/// ring stores these by value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSnap {
+    /// Dense [`crate::coordinator::transport::LinkId::index`].
+    pub link: u32,
+    pub sent: u64,
+    pub dropped: u64,
+    pub bytes: u64,
+    pub mean_delay_ms: f64,
+}
+
+/// One retained step.
+#[derive(Debug, Clone, Default)]
+pub struct StepFrame {
+    pub step: u64,
+    pub loss: f64,
+    pub wall_ms: f64,
+    /// The step's merged span flush.
+    pub spans: Vec<SpanRecord>,
+    /// Spans lost to recorder overflow during the step.
+    pub dropped: u64,
+    /// Per-stage [`HealthState`] codes at step end.
+    pub health: Vec<u8>,
+    pub links: Vec<LinkSnap>,
+    used: bool,
+}
+
+/// Everything the bundle needs that the ring itself doesn't carry.
+pub struct DumpContext<'a> {
+    /// Why the bundle exists ("worker fatal: ...", "on demand", ...).
+    pub reason: &'a str,
+    /// The active slicing plan.
+    pub slicing: &'a [usize],
+    pub stages: usize,
+    /// Pre-rendered Prometheus text (written verbatim).
+    pub metrics_text: &'a str,
+    pub timeline: &'a HealthTimeline,
+    /// Per-stage health codes at dump time.
+    pub final_health: &'a [u8],
+    /// Wavefront-predicted spans for the active plan (may be empty).
+    pub predicted: &'a [Span],
+}
+
+/// The bounded ring.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    frames: Vec<StepFrame>,
+    next: usize,
+    recorded: u64,
+    fingerprint: u64,
+}
+
+/// FNV-1a fingerprint of the active plan (+ arbitrary salt words, e.g.
+/// a cost-model tag) — cheap identity for "which plan was flying".
+pub fn plan_fingerprint(slicing: &[usize], salt: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |x: u64| {
+        for i in 0..8 {
+            h ^= (x >> (8 * i)) & 0xff;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(slicing.len() as u64);
+    for &s in slicing {
+        mix(s as u64);
+    }
+    for &s in salt {
+        mix(s);
+    }
+    h
+}
+
+impl FlightRecorder {
+    /// A ring retaining the last `cap` steps (min 1). All frame slots
+    /// are pre-allocated; per-slot buffers grow on first use and are
+    /// reused thereafter.
+    pub fn new(cap: usize) -> FlightRecorder {
+        let cap = cap.max(1);
+        FlightRecorder {
+            frames: (0..cap).map(|_| StepFrame::default()).collect(),
+            next: 0,
+            recorded: 0,
+            fingerprint: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Frames currently retained.
+    pub fn len(&self) -> usize {
+        (self.recorded as usize).min(self.frames.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recorded == 0
+    }
+
+    /// Stamp the active plan/cost-model fingerprint
+    /// (see [`plan_fingerprint`]).
+    pub fn set_fingerprint(&mut self, fp: u64) {
+        self.fingerprint = fp;
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Record one step, overwriting the oldest frame in place.
+    pub fn record_step(
+        &mut self,
+        step: u64,
+        loss: f64,
+        wall_ms: f64,
+        spans: &[SpanRecord],
+        dropped: u64,
+        health: &[u8],
+        links: &[LinkSnap],
+    ) {
+        let f = &mut self.frames[self.next];
+        f.step = step;
+        f.loss = loss;
+        f.wall_ms = wall_ms;
+        f.dropped = dropped;
+        f.spans.clear();
+        f.spans.extend_from_slice(spans);
+        f.health.clear();
+        f.health.extend_from_slice(health);
+        f.links.clear();
+        f.links.extend_from_slice(links);
+        f.used = true;
+        self.next = (self.next + 1) % self.frames.len();
+        self.recorded += 1;
+    }
+
+    /// Retained frames, oldest first.
+    pub fn frames(&self) -> Vec<&StepFrame> {
+        let cap = self.frames.len();
+        let n = self.len();
+        (0..n)
+            .map(|i| &self.frames[(self.next + cap - n + i) % cap])
+            .filter(|f| f.used)
+            .collect()
+    }
+
+    /// Write the postmortem bundle into `dir` (created if missing).
+    /// Returns the list of files written.
+    pub fn dump(&self, dir: &Path, ctx: &DumpContext) -> Result<Vec<String>, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        let frames = self.frames();
+        let mut written = Vec::new();
+        let mut write = |name: &str, text: String| -> Result<(), String> {
+            let p = dir.join(name);
+            std::fs::write(&p, text).map_err(|e| format!("write {}: {e}", p.display()))?;
+            written.push(name.to_string());
+            Ok(())
+        };
+
+        // trace.json — every retained span, chronological across frames
+        let mut exec: Vec<SpanRecord> = Vec::new();
+        let mut dropped = 0u64;
+        for f in &frames {
+            exec.extend_from_slice(&f.spans);
+            dropped += f.dropped;
+        }
+        let bundle = TraceBundle {
+            exec,
+            predicted: ctx.predicted.to_vec(),
+            stages: ctx.stages,
+            dropped,
+        };
+        write("trace.json", perfetto_trace(&bundle).to_string() + "\n")?;
+
+        // metrics.prom
+        write("metrics.prom", ctx.metrics_text.to_string())?;
+
+        // health.json
+        let fp = format!("{:016x}", self.fingerprint);
+        let health_doc = Json::obj(vec![
+            ("reason", Json::Str(ctx.reason.into())),
+            ("plan_fingerprint", Json::Str(fp.clone())),
+            (
+                "slicing",
+                Json::Arr(ctx.slicing.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            (
+                "final",
+                Json::Arr(ctx.final_health.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("timeline", ctx.timeline.to_json()),
+        ]);
+        write("health.json", health_doc.to_string() + "\n")?;
+
+        // report.txt
+        let mut rep = String::new();
+        let _ = writeln!(rep, "terapipe postmortem");
+        let _ = writeln!(rep, "reason: {}", ctx.reason);
+        let _ = writeln!(rep, "plan fingerprint: {fp}");
+        let _ = writeln!(rep, "slicing: {:?}", ctx.slicing);
+        let _ = writeln!(rep, "retained steps: {} (ring capacity {})", frames.len(), self.capacity());
+        let _ = writeln!(rep, "\n| step | loss | wall ms | spans | dropped | health |");
+        for f in &frames {
+            let health: Vec<&str> = f
+                .health
+                .iter()
+                .map(|&c| HealthState::from_code(c).map(|s| s.name()).unwrap_or("?"))
+                .collect();
+            let _ = writeln!(
+                rep,
+                "| {} | {:.4} | {:.2} | {} | {} | {} |",
+                f.step,
+                f.loss,
+                f.wall_ms,
+                f.spans.len(),
+                f.dropped,
+                health.join(",")
+            );
+        }
+        if !ctx.predicted.is_empty() {
+            let d = Differential::from_spans(&bundle.exec, ctx.predicted);
+            let _ = writeln!(rep, "\nexec<->sim differential over retained spans:");
+            rep.push_str(&d.report());
+        }
+        if !ctx.timeline.entries.is_empty() {
+            let _ = writeln!(rep, "\nhealth transitions:");
+            for t in &ctx.timeline.entries {
+                let _ = writeln!(
+                    rep,
+                    "  step {} stage {}: {} -> {} ({})",
+                    t.step,
+                    t.stage,
+                    t.from.name(),
+                    t.to.name(),
+                    t.reason.name()
+                );
+            }
+        }
+        write("report.txt", rep)?;
+
+        // manifest.json
+        let manifest = Json::obj(vec![
+            ("bundle", Json::Str("terapipe_postmortem".into())),
+            ("reason", Json::Str(ctx.reason.into())),
+            ("plan_fingerprint", Json::Str(fp)),
+            ("steps_retained", Json::Num(frames.len() as f64)),
+            (
+                "files",
+                Json::Arr(
+                    ["trace.json", "metrics.prom", "health.json", "report.txt"]
+                        .iter()
+                        .map(|&f| Json::Str(f.into()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        write("manifest.json", manifest.to_string() + "\n")?;
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn span(step: u64) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::SliceFwd,
+            stage: 0,
+            mb: 0,
+            slice: 0,
+            a: 4,
+            b: 0,
+            start_us: step * 1000,
+            dur_us: 500,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_last_n_in_order() {
+        let mut fr = FlightRecorder::new(3);
+        assert!(fr.is_empty());
+        for step in 0..5u64 {
+            fr.record_step(step, step as f64, 1.0, &[span(step)], 0, &[0, 0], &[]);
+        }
+        let frames = fr.frames();
+        let steps: Vec<u64> = frames.iter().map(|f| f.step).collect();
+        assert_eq!(steps, vec![2, 3, 4]);
+        assert_eq!(fr.len(), 3);
+        assert_eq!(frames[0].spans.len(), 1);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_plan_sensitive() {
+        let a = plan_fingerprint(&[16, 16, 32], &[7]);
+        let b = plan_fingerprint(&[16, 16, 32], &[7]);
+        let c = plan_fingerprint(&[16, 32, 16], &[7]);
+        let d = plan_fingerprint(&[16, 16, 32], &[8]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+    }
+
+    static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    #[test]
+    fn dump_writes_a_parseable_bundle() {
+        let mut fr = FlightRecorder::new(2);
+        fr.set_fingerprint(plan_fingerprint(&[8, 8], &[]));
+        for step in 0..3u64 {
+            fr.record_step(step, 2.5, 1.0, &[span(step)], 1, &[0, 2], &[LinkSnap {
+                link: 0,
+                sent: 3,
+                dropped: 0,
+                bytes: 192,
+                mean_delay_ms: 0.1,
+            }]);
+        }
+        let mut timeline = HealthTimeline::default();
+        timeline.entries.push(crate::obs::health::HealthTransition {
+            step: 2,
+            stage: 1,
+            from: HealthState::Healthy,
+            to: HealthState::Unhealthy,
+            reason: crate::obs::health::HealthReason::Fatal,
+        });
+        let dir = std::env::temp_dir().join(format!(
+            "terapipe_flight_test_{}_{}",
+            std::process::id(),
+            DUMP_SEQ.fetch_add(1, Ordering::SeqCst)
+        ));
+        let ctx = DumpContext {
+            reason: "unit test",
+            slicing: &[8, 8],
+            stages: 2,
+            metrics_text: "# HELP x y\n",
+            timeline: &timeline,
+            final_health: &[0, 2],
+            predicted: &[],
+        };
+        let files = fr.dump(&dir, &ctx).unwrap();
+        assert_eq!(files.len(), 5);
+        // trace parses back as a Chrome trace document
+        let trace = std::fs::read_to_string(dir.join("trace.json")).unwrap();
+        let doc = Json::parse(&trace).unwrap();
+        assert!(doc.get("traceEvents").unwrap().as_arr().unwrap().len() > 2);
+        // health.json names the unhealthy stage
+        let health = std::fs::read_to_string(dir.join("health.json")).unwrap();
+        let doc = Json::parse(&health).unwrap();
+        assert_eq!(doc.get("reason").unwrap().as_str(), Some("unit test"));
+        let tl = doc.get("timeline").unwrap().as_arr().unwrap();
+        assert_eq!(tl[0].get("stage").unwrap().as_usize(), Some(1));
+        let report = std::fs::read_to_string(dir.join("report.txt")).unwrap();
+        assert!(report.contains("stage 1: healthy -> unhealthy (fatal)"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

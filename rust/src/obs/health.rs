@@ -1,0 +1,496 @@
+//! Per-stage health: liveness + latency state machines over the
+//! telemetry the driver already sees.
+//!
+//! Two independent evidence tracks feed one three-state machine per
+//! stage:
+//!
+//! * **Liveness** — the trainer calls [`HealthMonitor::on_arrival`] for
+//!   every `DriverMsg` (including heartbeats) and
+//!   [`HealthMonitor::probe_tick`] on a fixed sub-interval of its recv
+//!   deadline. A stage silent across a whole probe interval collects a
+//!   *miss*; consecutive misses escalate Healthy → Suspect → Unhealthy.
+//!   Any arrival clears the track and (absent a `Fatal`) recovers the
+//!   stage.
+//! * **Latency** — per-step mean slice time per stage is compared
+//!   against an EWMA baseline frozen on anomalous samples; a step mean
+//!   above `latency_factor ×` baseline (after warmup) is a latency
+//!   miss, escalating through the same thresholds.
+//!
+//! A worker `Fatal` pins the stage Unhealthy permanently (no half-open
+//! recovery: the thread is gone). Every transition is appended to a
+//! [`HealthTimeline`] — the artifact the flight recorder dumps and the
+//! future circuit-breaker/re-partition PR subscribes to — and the
+//! current states render as `terapipe_stage_health` gauges via
+//! [`health_metrics`].
+
+use super::metrics::MetricsRegistry;
+use super::SpanKind;
+use crate::util::json::Json;
+
+/// Per-stage verdict. Codes are part of the span/JSON schema
+/// ([`SpanKind::HealthVerdict`]'s `a` payload) — append, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Healthy,
+    Suspect,
+    Unhealthy,
+}
+
+impl HealthState {
+    pub fn code(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Suspect => 1,
+            HealthState::Unhealthy => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<HealthState> {
+        match c {
+            0 => Some(HealthState::Healthy),
+            1 => Some(HealthState::Suspect),
+            2 => Some(HealthState::Unhealthy),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Unhealthy => "unhealthy",
+        }
+    }
+}
+
+/// Why a transition happened (the `b` payload of a `HealthVerdict`
+/// span; same append-only contract as the state codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthReason {
+    /// Consecutive probe intervals with no message from the stage.
+    Miss,
+    /// Step mean slice time blew past the EWMA baseline.
+    Latency,
+    /// The worker reported `DriverMsg::Fatal` (or its thread panicked).
+    Fatal,
+    /// Evidence cleared: a message arrived / latency returned to
+    /// baseline.
+    Recovered,
+}
+
+impl HealthReason {
+    pub fn code(self) -> u8 {
+        match self {
+            HealthReason::Miss => 0,
+            HealthReason::Latency => 1,
+            HealthReason::Fatal => 2,
+            HealthReason::Recovered => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthReason::Miss => "miss",
+            HealthReason::Latency => "latency",
+            HealthReason::Fatal => "fatal",
+            HealthReason::Recovered => "recovered",
+        }
+    }
+}
+
+/// Thresholds for both evidence tracks.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthConfig {
+    /// Consecutive misses (either track) before Healthy → Suspect.
+    pub suspect_after: u32,
+    /// Consecutive misses before → Unhealthy.
+    pub unhealthy_after: u32,
+    /// Step mean above `latency_factor × ewma` counts as a latency miss.
+    pub latency_factor: f64,
+    /// EWMA smoothing for the per-stage slice-time baseline.
+    pub ewma_alpha: f64,
+    /// Clean steps absorbed into the baseline before latency verdicts.
+    pub warmup_samples: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            suspect_after: 2,
+            unhealthy_after: 3,
+            latency_factor: 3.0,
+            ewma_alpha: 0.2,
+            warmup_samples: 5,
+        }
+    }
+}
+
+/// One recorded state change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthTransition {
+    pub step: u64,
+    pub stage: usize,
+    pub from: HealthState,
+    pub to: HealthState,
+    pub reason: HealthReason,
+}
+
+impl HealthTransition {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::Num(self.step as f64)),
+            ("stage", Json::Num(self.stage as f64)),
+            ("from", Json::Str(self.from.name().into())),
+            ("to", Json::Str(self.to.name().into())),
+            ("reason", Json::Str(self.reason.name().into())),
+        ])
+    }
+}
+
+/// Append-only record of every per-stage state change — what the
+/// flight recorder dumps as `health.json` and what a circuit breaker
+/// would subscribe to.
+#[derive(Debug, Clone, Default)]
+pub struct HealthTimeline {
+    pub entries: Vec<HealthTransition>,
+}
+
+impl HealthTimeline {
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.entries.iter().map(|t| t.to_json()).collect())
+    }
+
+    /// Transitions touching one stage (tests, postmortem rendering).
+    pub fn for_stage(&self, stage: usize) -> Vec<&HealthTransition> {
+        self.entries.iter().filter(|t| t.stage == stage).collect()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct StageHealth {
+    state: HealthState,
+    fatal: bool,
+    live_misses: u32,
+    lat_misses: u32,
+    seen_since_probe: bool,
+    ewma_ms: f64,
+    ewma_n: u32,
+    step_sum_ms: f64,
+    step_n: u64,
+}
+
+impl StageHealth {
+    fn new() -> StageHealth {
+        StageHealth {
+            state: HealthState::Healthy,
+            fatal: false,
+            live_misses: 0,
+            lat_misses: 0,
+            seen_since_probe: true,
+            ewma_ms: 0.0,
+            ewma_n: 0,
+            step_sum_ms: 0.0,
+            step_n: 0,
+        }
+    }
+}
+
+/// The per-stage health state machines plus their shared timeline.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    step: u64,
+    stages: Vec<StageHealth>,
+    timeline: HealthTimeline,
+}
+
+impl HealthMonitor {
+    pub fn new(num_stages: usize) -> HealthMonitor {
+        HealthMonitor::with_config(num_stages, HealthConfig::default())
+    }
+
+    pub fn with_config(num_stages: usize, cfg: HealthConfig) -> HealthMonitor {
+        HealthMonitor {
+            cfg,
+            step: 0,
+            stages: (0..num_stages).map(|_| StageHealth::new()).collect(),
+            timeline: HealthTimeline::default(),
+        }
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Attribute subsequent transitions to `step`.
+    pub fn begin_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    fn transition(&mut self, stage: usize, to: HealthState, reason: HealthReason) {
+        let from = self.stages[stage].state;
+        if from == to {
+            return;
+        }
+        self.stages[stage].state = to;
+        self.timeline.entries.push(HealthTransition {
+            step: self.step,
+            stage,
+            from,
+            to,
+            reason,
+        });
+        super::instant(
+            SpanKind::HealthVerdict,
+            stage as i32,
+            to.code() as u64,
+            reason.code() as u64,
+        );
+    }
+
+    fn escalate(&mut self, stage: usize, misses: u32, reason: HealthReason) {
+        let s = &self.stages[stage];
+        if s.fatal {
+            return;
+        }
+        let target = if misses >= self.cfg.unhealthy_after {
+            HealthState::Unhealthy
+        } else if misses >= self.cfg.suspect_after {
+            HealthState::Suspect
+        } else {
+            return;
+        };
+        // never downgrade a verdict reached through the other track
+        if target > s.state {
+            self.transition(stage, target, reason);
+        }
+    }
+
+    fn maybe_recover(&mut self, stage: usize) {
+        let s = &self.stages[stage];
+        if s.fatal || s.state == HealthState::Healthy {
+            return;
+        }
+        if s.live_misses < self.cfg.suspect_after && s.lat_misses < self.cfg.suspect_after {
+            self.transition(stage, HealthState::Healthy, HealthReason::Recovered);
+        }
+    }
+
+    /// Any `DriverMsg` (heartbeat included) arrived from `stage`.
+    pub fn on_arrival(&mut self, stage: usize) {
+        if stage >= self.stages.len() {
+            return;
+        }
+        self.stages[stage].seen_since_probe = true;
+        self.stages[stage].live_misses = 0;
+        self.maybe_recover(stage);
+    }
+
+    /// One liveness probe interval elapsed: stages silent since the last
+    /// tick collect a miss.
+    pub fn probe_tick(&mut self) {
+        for i in 0..self.stages.len() {
+            if self.stages[i].seen_since_probe {
+                self.stages[i].seen_since_probe = false;
+                continue;
+            }
+            self.stages[i].live_misses += 1;
+            let m = self.stages[i].live_misses;
+            self.escalate(i, m, HealthReason::Miss);
+        }
+    }
+
+    /// The worker for `stage` died (Fatal / panic). Pins Unhealthy.
+    pub fn on_fatal(&mut self, stage: usize) {
+        if stage >= self.stages.len() {
+            return;
+        }
+        self.transition(stage, HealthState::Unhealthy, HealthReason::Fatal);
+        self.stages[stage].fatal = true;
+    }
+
+    /// Feed one measured slice time (ms) into the step accumulator.
+    pub fn observe_slice_ms(&mut self, stage: usize, ms: f64) {
+        if stage >= self.stages.len() || !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        self.stages[stage].step_sum_ms += ms;
+        self.stages[stage].step_n += 1;
+    }
+
+    /// Close the step's latency track: compare each stage's step mean
+    /// against its EWMA baseline, escalate or recover, then fold clean
+    /// samples into the baseline (anomalous samples are *not* absorbed,
+    /// so a persistent straggler keeps escalating instead of silently
+    /// becoming the new normal).
+    pub fn end_step(&mut self, step: u64) {
+        self.step = step;
+        for i in 0..self.stages.len() {
+            let (sum, n) = (self.stages[i].step_sum_ms, self.stages[i].step_n);
+            self.stages[i].step_sum_ms = 0.0;
+            self.stages[i].step_n = 0;
+            if n == 0 {
+                continue;
+            }
+            let mean = sum / n as f64;
+            let s = &self.stages[i];
+            let warm = s.ewma_n >= self.cfg.warmup_samples;
+            if warm && mean > self.cfg.latency_factor * s.ewma_ms && s.ewma_ms > 0.0 {
+                self.stages[i].lat_misses += 1;
+                let m = self.stages[i].lat_misses;
+                self.escalate(i, m, HealthReason::Latency);
+                continue; // baseline frozen on anomalous samples
+            }
+            let st = &mut self.stages[i];
+            st.lat_misses = 0;
+            st.ewma_ms = if st.ewma_n == 0 {
+                mean
+            } else {
+                self.cfg.ewma_alpha * mean + (1.0 - self.cfg.ewma_alpha) * st.ewma_ms
+            };
+            st.ewma_n += 1;
+            self.maybe_recover(i);
+        }
+    }
+
+    pub fn state(&self, stage: usize) -> HealthState {
+        self.stages[stage].state
+    }
+
+    pub fn states(&self) -> Vec<HealthState> {
+        self.stages.iter().map(|s| s.state).collect()
+    }
+
+    /// Current states as schema codes (the `StepReport` carrier).
+    pub fn codes(&self) -> Vec<u8> {
+        self.stages.iter().map(|s| s.state.code()).collect()
+    }
+
+    pub fn ewma_ms(&self, stage: usize) -> f64 {
+        self.stages[stage].ewma_ms
+    }
+
+    pub fn timeline(&self) -> &HealthTimeline {
+        &self.timeline
+    }
+}
+
+/// Render the monitor's current view as gauges: one
+/// `terapipe_stage_health` per stage (0 healthy / 1 suspect /
+/// 2 unhealthy) plus the EWMA slice-time baseline.
+pub fn health_metrics(reg: &mut MetricsRegistry, hm: &HealthMonitor) {
+    for s in 0..hm.num_stages() {
+        let stage = s.to_string();
+        let labels: [(&str, &str); 1] = [("stage", stage.as_str())];
+        reg.gauge(
+            "terapipe_stage_health",
+            "Stage health state (0 healthy, 1 suspect, 2 unhealthy)",
+            &labels,
+            hm.state(s).code() as f64,
+        );
+        reg.gauge(
+            "terapipe_stage_slice_ms_ewma",
+            "EWMA baseline of per-stage mean slice time (ms)",
+            &labels,
+            hm.ewma_ms(s),
+        );
+    }
+    reg.counter(
+        "terapipe_health_transitions_total",
+        "Health state transitions recorded",
+        &[],
+        hm.timeline().entries.len() as f64,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consecutive_misses_escalate_and_arrival_recovers() {
+        let mut hm = HealthMonitor::new(2);
+        hm.on_arrival(0);
+        hm.on_arrival(1);
+        hm.probe_tick(); // clears seen flags
+        hm.on_arrival(0);
+        hm.probe_tick(); // stage 1 miss 1
+        assert_eq!(hm.state(1), HealthState::Healthy);
+        hm.on_arrival(0);
+        hm.probe_tick(); // stage 1 miss 2 -> suspect
+        assert_eq!(hm.state(1), HealthState::Suspect);
+        assert_eq!(hm.state(0), HealthState::Healthy);
+        hm.on_arrival(0);
+        hm.probe_tick(); // stage 1 miss 3 -> unhealthy
+        assert_eq!(hm.state(1), HealthState::Unhealthy);
+        // the stage comes back: non-fatal unhealthy recovers
+        hm.on_arrival(1);
+        assert_eq!(hm.state(1), HealthState::Healthy);
+        let t = hm.timeline();
+        let stages: Vec<usize> = t.entries.iter().map(|e| e.stage).collect();
+        assert_eq!(stages, vec![1, 1, 1]);
+        assert_eq!(t.entries[0].to, HealthState::Suspect);
+        assert_eq!(t.entries[1].to, HealthState::Unhealthy);
+        assert_eq!(t.entries[2].reason, HealthReason::Recovered);
+    }
+
+    #[test]
+    fn fatal_is_sticky() {
+        let mut hm = HealthMonitor::new(1);
+        hm.on_fatal(0);
+        assert_eq!(hm.state(0), HealthState::Unhealthy);
+        hm.on_arrival(0);
+        hm.end_step(1);
+        assert_eq!(hm.state(0), HealthState::Unhealthy, "fatal must not recover");
+    }
+
+    #[test]
+    fn latency_track_escalates_after_warmup_and_freezes_baseline() {
+        let cfg = HealthConfig { warmup_samples: 3, ..HealthConfig::default() };
+        let mut hm = HealthMonitor::with_config(1, cfg);
+        for step in 0..4u64 {
+            hm.observe_slice_ms(0, 1.0);
+            hm.end_step(step);
+        }
+        assert_eq!(hm.state(0), HealthState::Healthy);
+        let base = hm.ewma_ms(0);
+        assert!((base - 1.0).abs() < 1e-9);
+        // 4x straggler: miss 1, miss 2 (suspect), miss 3 (unhealthy)
+        for step in 4..7u64 {
+            hm.observe_slice_ms(0, 4.0);
+            hm.end_step(step);
+        }
+        assert_eq!(hm.state(0), HealthState::Unhealthy);
+        assert!((hm.ewma_ms(0) - base).abs() < 1e-9, "anomalous steps must not move the baseline");
+        // back to baseline: latency track clears and the stage recovers
+        hm.observe_slice_ms(0, 1.0);
+        hm.end_step(7);
+        assert_eq!(hm.state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn timeline_json_round_trips_through_parser() {
+        let mut hm = HealthMonitor::new(2);
+        hm.begin_step(3);
+        hm.on_fatal(1);
+        let text = hm.timeline().to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("stage").unwrap().as_usize(), Some(1));
+        assert_eq!(arr[0].get("to").unwrap().as_str(), Some("unhealthy"));
+        assert_eq!(arr[0].get("reason").unwrap().as_str(), Some("fatal"));
+        assert_eq!(arr[0].get("step").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn gauges_expose_states() {
+        let mut hm = HealthMonitor::new(2);
+        hm.on_fatal(1);
+        let mut reg = MetricsRegistry::new();
+        health_metrics(&mut reg, &hm);
+        assert_eq!(reg.get("terapipe_stage_health", &[("stage", "0")]), Some(0.0));
+        assert_eq!(reg.get("terapipe_stage_health", &[("stage", "1")]), Some(2.0));
+        assert_eq!(reg.get("terapipe_health_transitions_total", &[]), Some(1.0));
+    }
+}

@@ -246,6 +246,14 @@ pub fn span_metrics(reg: &mut MetricsRegistry, flush: &Flush) {
         &[],
         flush.dropped as f64,
     );
+    // canonical name going forward (the old name is kept for dashboards
+    // already scraping it)
+    reg.counter(
+        "terapipe_obs_spans_dropped_total",
+        "Spans lost to per-thread recorder buffer overflow",
+        &[],
+        flush.dropped as f64,
+    );
     for (code, name) in [(0u64, "warmup"), (1, "stable"), (2, "drifted")] {
         let n = flush
             .spans
@@ -424,6 +432,7 @@ mod tests {
         span_metrics(&mut reg, &flush);
         assert_eq!(reg.get("terapipe_spans_total", &[("kind", "slice_fwd")]), Some(2.0));
         assert_eq!(reg.get("terapipe_spans_dropped_total", &[]), Some(7.0));
+        assert_eq!(reg.get("terapipe_obs_spans_dropped_total", &[]), Some(7.0));
         assert_eq!(reg.get("terapipe_drift_verdicts_total", &[("verdict", "drifted")]), Some(1.0));
         assert_eq!(reg.get("terapipe_plan_switches_total", &[]), Some(1.0));
     }

@@ -29,8 +29,11 @@
 //! it on. See `rust/src/obs/README.md` for the span taxonomy, the
 //! overhead budget, and how to open a trace in Perfetto.
 
+pub mod anomaly;
 pub mod differential;
 pub mod export;
+pub mod flight;
+pub mod health;
 pub mod metrics;
 pub mod recorder;
 
@@ -80,10 +83,18 @@ pub enum SpanKind {
     SimReplay,
     /// The active plan was replaced (instant). `a` = step when known.
     PlanSwitch,
+    /// A stage's health state changed (instant). `stage` = the stage,
+    /// `a` = new [`health::HealthState`] code, `b` =
+    /// [`health::HealthReason`] code.
+    HealthVerdict,
+    /// The anomaly detector named a cause (instant). `stage` = the
+    /// straggler stage ([`DRIVER`] for link/global causes), `a` =
+    /// [`anomaly::Cause`] code, `b` = `f64::to_bits(factor)`.
+    Anomaly,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 12] = [
+    pub const ALL: [SpanKind; 14] = [
         SpanKind::SliceFwd,
         SpanKind::SliceBwd,
         SpanKind::KvRoute,
@@ -96,6 +107,8 @@ impl SpanKind {
         SpanKind::DriftVerdict,
         SpanKind::SimReplay,
         SpanKind::PlanSwitch,
+        SpanKind::HealthVerdict,
+        SpanKind::Anomaly,
     ];
 
     pub fn code(self) -> u8 {
@@ -112,6 +125,8 @@ impl SpanKind {
             SpanKind::DriftVerdict => 9,
             SpanKind::SimReplay => 10,
             SpanKind::PlanSwitch => 11,
+            SpanKind::HealthVerdict => 12,
+            SpanKind::Anomaly => 13,
         }
     }
 
@@ -133,6 +148,8 @@ impl SpanKind {
             SpanKind::DriftVerdict => "drift_verdict",
             SpanKind::SimReplay => "sim_replay",
             SpanKind::PlanSwitch => "plan_switch",
+            SpanKind::HealthVerdict => "health_verdict",
+            SpanKind::Anomaly => "anomaly",
         }
     }
 
@@ -152,6 +169,7 @@ impl SpanKind {
             | SpanKind::DriftVerdict
             | SpanKind::PlanSwitch => "planner",
             SpanKind::SimReplay => "sim",
+            SpanKind::HealthVerdict | SpanKind::Anomaly => "health",
         }
     }
 
@@ -164,6 +182,8 @@ impl SpanKind {
                 | SpanKind::PlannerCacheHit
                 | SpanKind::DriftVerdict
                 | SpanKind::PlanSwitch
+                | SpanKind::HealthVerdict
+                | SpanKind::Anomaly
         )
     }
 }
@@ -257,8 +277,22 @@ pub fn record(rec: SpanRecord) {
 }
 
 /// Drain the global recorder (see [`Recorder::flush`] for the contract).
+/// The first flush of the process that reports dropped spans emits a
+/// one-time stderr warning (the count still lands in
+/// `terapipe_obs_spans_dropped_total` every time).
 pub fn flush() -> Flush {
-    recorder::global().flush()
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    let f = recorder::global().flush();
+    if f.dropped > 0 && !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: span recorder overflowed — {} span(s) dropped this flush; \
+             traces and span-derived metrics are incomplete \
+             (per-thread buffer capacity exceeded; further drops counted silently)",
+            f.dropped
+        );
+    }
+    f
 }
 
 /// Start timestamp for a would-be span: `u64::MAX` when the recorder is

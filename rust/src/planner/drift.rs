@@ -143,6 +143,39 @@ impl DriftDetector {
         DriftVerdict::Drifted { mean_rel_err, factor }
     }
 
+    /// Uniform-vs-shape discriminator: the relative interquartile
+    /// spread `(p75 − p25) / median` of the window's
+    /// observed/predicted ratios. Near 0 means one rescale factor
+    /// explains the whole window (uniform drift — a global slowdown);
+    /// large means the window mixes regimes (a straggler or a degraded
+    /// link inflating only some cells) and [`DriftDetector::refit_ctx`]
+    /// or a named-cause event is the better response. `None` until ≥ 4
+    /// usable ratios exist.
+    pub fn ratio_spread<M: CostModel>(&self, model: &M) -> Option<f64> {
+        let mut ratios: Vec<f64> = self
+            .samples
+            .iter()
+            .filter_map(|s| {
+                let pred = model.t(s.i, s.j) + model.t_comm(s.i);
+                if !pred.is_finite() || pred <= 0.0 || !s.ms.is_finite() {
+                    None
+                } else {
+                    Some(s.ms / pred)
+                }
+            })
+            .collect();
+        if ratios.len() < 4 {
+            return None;
+        }
+        ratios.sort_by(f64::total_cmp);
+        let n = ratios.len();
+        let (p25, med, p75) = (ratios[n / 4], ratios[n / 2], ratios[(3 * n) / 4]);
+        if med <= 0.0 {
+            return None;
+        }
+        Some((p75 - p25) / med)
+    }
+
     /// Shape-drift escape hatch: refit the Eq. 9 context coefficients
     /// from the window's samples (observed minus the base model's
     /// zero-context prediction), via the same least-squares path
@@ -320,6 +353,26 @@ mod tests {
         let fit = d.refit_ctx(&Toy).unwrap();
         assert!((fit.a0 - truth.a0).abs() < 1e-9);
         assert!((fit.a3 - truth.a3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_spread_separates_uniform_from_shape_drift() {
+        // uniform 1.3x slowdown: every ratio identical, spread ~ 0
+        let mut d = DriftDetector::new(DriftConfig::default());
+        fill(&mut d, 1.3);
+        let s = d.ratio_spread(&Toy).unwrap();
+        assert!(s < 1e-9, "uniform drift spread {s}");
+        // mixed regimes: half the window 1x, half 4x — wide spread
+        let mut d = DriftDetector::new(DriftConfig::default());
+        for k in 0..d.config().window {
+            let factor = if k % 2 == 0 { 1.0 } else { 4.0 };
+            d.push(LatencySample { i: 32, j: 0, ms: factor * stage_time(&Toy, 32, 0) });
+        }
+        let s = d.ratio_spread(&Toy).unwrap();
+        assert!(s > 0.5, "shape drift spread {s}");
+        // warmup: too few samples
+        let d = DriftDetector::new(DriftConfig::default());
+        assert_eq!(d.ratio_spread(&Toy), None);
     }
 
     #[test]

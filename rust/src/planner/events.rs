@@ -10,7 +10,9 @@
 //!   { "step": 10, "kind": "stages",    "stages": 48 },
 //!   { "step": 20, "kind": "bandwidth", "factor": 0.5 },
 //!   { "step": 30, "kind": "slowdown",  "factor": 1.25 },
-//!   { "step": 40, "kind": "samples",   "factor": 1.2, "count": 16 }
+//!   { "step": 40, "kind": "samples",   "factor": 1.2, "count": 16 },
+//!   { "step": 50, "kind": "straggler", "stage": 2, "factor": 4.0 },
+//!   { "step": 60, "kind": "link-degraded", "link": 3, "factor": 10.0 }
 //! ] }
 //! ```
 //!
@@ -25,6 +27,9 @@
 //!   samples alone. The factor is relative, so two successive
 //!   `factor: 1.25` events script two successive 25% degradations
 //!   (drift marching on), not a repeat of one absolute state.
+//! * `straggler` / `link-degraded` — *named* causes, the typed form the
+//!   live anomaly detector ([`crate::obs::anomaly`]) emits: one stage's
+//!   compute or one link's delivery delay degraded by `factor`.
 
 use crate::util::json::Json;
 
@@ -41,6 +46,18 @@ pub enum EventKind {
     /// the planner's current model — undisclosed (relative) drift the
     /// planner must detect.
     Samples { true_factor: f64, count: u32 },
+    /// One stage's compute runs `factor` slower — the anomaly
+    /// detector's named compute-straggler cause
+    /// ([`crate::obs::anomaly::Cause::ComputeStraggler`]). The current
+    /// single-dimension cost model has no per-stage term, so the
+    /// planner conservatively folds this into the compute scale; a
+    /// per-stage planner can use `stage` directly.
+    Straggler { stage: u32, factor: f64 },
+    /// One link's delivery delay is inflated by `factor` (`link` is the
+    /// dense [`crate::coordinator::transport::LinkId::index`]) — the
+    /// named comm-degradation cause. Maps onto the bandwidth knob as a
+    /// `1/factor` effective-bandwidth change.
+    LinkDegraded { link: u32, factor: f64 },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -96,6 +113,20 @@ pub fn parse_trace(text: &str) -> Result<Vec<Event>, String> {
                     .unwrap_or(16)
                     .max(1),
             },
+            "straggler" => {
+                let stage = e
+                    .get("stage")
+                    .and_then(|s| s.as_u32())
+                    .ok_or_else(|| ctx("'stage' must be a non-negative integer"))?;
+                EventKind::Straggler { stage, factor: f("factor")? }
+            }
+            "link-degraded" => {
+                let link = e
+                    .get("link")
+                    .and_then(|l| l.as_u32())
+                    .ok_or_else(|| ctx("'link' must be a non-negative integer"))?;
+                EventKind::LinkDegraded { link, factor: f("factor")? }
+            }
             other => return Err(ctx(&format!("unknown kind '{other}'"))),
         };
         out.push(Event { step, kind });
@@ -144,6 +175,30 @@ mod tests {
         assert_eq!(
             evs[4].kind,
             EventKind::Samples { true_factor: 1.0, count: 16 }
+        );
+    }
+
+    #[test]
+    fn parses_named_causes() {
+        let text = r#"{ "events": [
+            { "step": 50, "kind": "straggler", "stage": 2, "factor": 4.0 },
+            { "step": 60, "kind": "link-degraded", "link": 3, "factor": 10.0 }
+        ] }"#;
+        let evs = parse_trace(text).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, EventKind::Straggler { stage: 2, factor: 4.0 });
+        assert_eq!(evs[1].kind, EventKind::LinkDegraded { link: 3, factor: 10.0 });
+        // missing stage/link or non-positive factors are parse errors
+        assert!(parse_trace(r#"{ "events": [ { "kind": "straggler", "factor": 4.0 } ] }"#)
+            .unwrap_err()
+            .contains("stage"));
+        assert!(parse_trace(r#"{ "events": [ { "kind": "link-degraded", "factor": 2.0 } ] }"#)
+            .unwrap_err()
+            .contains("link"));
+        assert!(
+            parse_trace(r#"{ "events": [ { "kind": "straggler", "stage": 1, "factor": -1 } ] }"#)
+                .unwrap_err()
+                .contains("positive")
         );
     }
 

@@ -1,0 +1,279 @@
+//! The pipeline health observatory, pinned end to end:
+//!
+//! 1. **Kill-switch run**: a crash-stopped stage walks
+//!    Healthy → Suspect → Unhealthy on the driver's health timeline
+//!    *before* the recv deadline fails the step — while the surviving
+//!    stage's heartbeats keep it Healthy — and the flight recorder's
+//!    postmortem bundle parses back (Perfetto trace included) and names
+//!    the killed stage.
+//! 2. **Heartbeats are invisible to collect loops**: a healthy
+//!    heartbeat-enabled run trains normally (no "unexpected message"),
+//!    reports all-healthy per-step verdicts, and records no transitions.
+//! 3. **Anomaly attribution properties** on the public detector API:
+//!    stationary streams never alarm; a planted 4× compute straggler is
+//!    named with the right stage; a planted 10 ms link delay is named
+//!    comm degradation with the right link.
+
+use std::time::{Duration, Instant};
+
+use terapipe::backend::NativeSpec;
+use terapipe::coordinator::transport::NetConfig;
+use terapipe::coordinator::{TrainConfig, Trainer, VirtualTransport};
+use terapipe::data::{synthetic_corpus, Batch, Batcher};
+use terapipe::obs::anomaly::{AnomalyDetector, Cause};
+use terapipe::obs::flight::{plan_fingerprint, DumpContext, FlightRecorder};
+use terapipe::obs::health::HealthState;
+use terapipe::runtime::manifest::ModelDims;
+use terapipe::util::json::Json;
+use terapipe::util::Rng;
+
+const STAGES: usize = 2;
+
+fn spec() -> NativeSpec {
+    NativeSpec::new(
+        ModelDims {
+            vocab: 64,
+            hidden: 32,
+            num_heads: 4,
+            layers_per_stage: 1,
+            num_stages: STAGES,
+            seq_len: 32,
+            batch: 2,
+            block_ctx: 8,
+            seed: 9,
+        },
+        4,
+    )
+}
+
+fn one_batch(m: &ModelDims) -> Vec<Batch> {
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut b = Batcher::new(&corpus, m.batch, m.seq_len, 17);
+    vec![b.next_batch()]
+}
+
+// ---------------------------------------------------------------------
+// 1. Kill-switch: Suspect → Unhealthy on the timeline + postmortem bundle
+// ---------------------------------------------------------------------
+
+#[test]
+fn killed_stage_walks_the_timeline_and_the_postmortem_bundle_parses() {
+    terapipe::obs::set_enabled(true);
+
+    // Stage 1's inbox delivers exactly its two step-1 forwards, then the
+    // Update delivery crash-stops it: the whole step-1 data flow
+    // completes deterministically, death lands on the update ack.
+    let net = NetConfig::seeded(0).with_kill_after(1, 2);
+    let vt = VirtualTransport::new(net);
+    let cfg = TrainConfig {
+        slicing: vec![16, 16],
+        steps: 1,
+        seed: 17,
+        trace: true,
+        // 4 probe sub-intervals of 400 ms: three silent probes take the
+        // dead stage to Unhealthy before the deadline fails the step.
+        recv_timeout_ms: Some(1600),
+        heartbeat_ms: Some(50),
+        ..Default::default()
+    };
+    let mut t = Trainer::with_spec_transport(spec(), cfg, &vt).unwrap();
+    let m = t.model.clone();
+    let batches = one_batch(&m);
+
+    let t0 = Instant::now();
+    let msg = format!("{:#}", t.step(&batches).unwrap_err());
+    assert!(msg.contains("update"), "death should land on the update ack: {msg}");
+    assert!(t0.elapsed() < Duration::from_secs(20), "not prompt: {:?}", t0.elapsed());
+
+    // ---- the timeline names the killed stage, and only it ----
+    let tl = t.health_timeline();
+    let s1: Vec<_> = tl.for_stage(1).into_iter().map(|tr| (tr.from, tr.to)).collect();
+    assert_eq!(
+        s1,
+        vec![
+            (HealthState::Healthy, HealthState::Suspect),
+            (HealthState::Suspect, HealthState::Unhealthy),
+        ],
+        "stage 1 must walk Suspect → Unhealthy: {tl:?}"
+    );
+    assert!(
+        tl.for_stage(0).is_empty(),
+        "heartbeats must keep the surviving stage Healthy: {tl:?}"
+    );
+    assert_eq!(t.health().codes(), vec![0, 2]);
+
+    // ---- delivery-evidence bridge: the transport's owner drains ----
+    // per-link samples into the attributor's comm windows
+    let deliveries = vt.take_deliveries();
+    assert!(!deliveries.is_empty(), "a completed step must leave delivery samples");
+    t.observe_deliveries(&deliveries);
+
+    // ---- flight recorder: record what we have, dump, parse back ----
+    let flush = terapipe::obs::flush();
+    let mut flight = FlightRecorder::new(4);
+    flight.set_fingerprint(plan_fingerprint(&t.config().slicing, &[STAGES as u64]));
+    flight.record_step(1, f64::NAN, 0.0, &flush.spans, flush.dropped, &t.health().codes(), &[]);
+
+    let mut reg = terapipe::obs::MetricsRegistry::new();
+    terapipe::obs::health::health_metrics(&mut reg, t.health());
+    let metrics_text = reg.render();
+    let final_health = t.health().codes();
+    let ctx = DumpContext {
+        reason: &format!("training failed: {msg}"),
+        slicing: &t.config().slicing,
+        stages: STAGES,
+        metrics_text: &metrics_text,
+        timeline: t.health_timeline(),
+        final_health: &final_health,
+        predicted: &[],
+    };
+    let dir = std::env::temp_dir().join(format!("terapipe-postmortem-{}", std::process::id()));
+    let files = flight.dump(&dir, &ctx).unwrap();
+    assert_eq!(
+        files,
+        vec!["trace.json", "metrics.prom", "health.json", "report.txt", "manifest.json"]
+    );
+
+    // the Perfetto trace parses back and carries real spans
+    let trace = Json::parse(&std::fs::read_to_string(dir.join("trace.json")).unwrap()).unwrap();
+    let events = trace.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty(), "a traced kill run must retain spans");
+
+    // health.json names the killed stage as unhealthy
+    let health = Json::parse(&std::fs::read_to_string(dir.join("health.json")).unwrap()).unwrap();
+    let timeline = health.get("timeline").and_then(|v| v.as_arr()).expect("timeline array");
+    assert!(
+        timeline.iter().any(|e| {
+            e.get("stage").and_then(|s| s.as_f64()) == Some(1.0)
+                && e.get("to").and_then(|s| s.as_str()) == Some("unhealthy")
+        }),
+        "health.json must name stage 1 unhealthy: {health:?}"
+    );
+    let finals = health.get("final").and_then(|v| v.as_arr()).unwrap();
+    assert_eq!(finals.iter().map(|c| c.as_f64().unwrap() as u8).collect::<Vec<_>>(), vec![0, 2]);
+
+    // the human report carries the transition list and the metrics
+    // snapshot carries the health gauges
+    let report = std::fs::read_to_string(dir.join("report.txt")).unwrap();
+    assert!(report.contains("stage 1: suspect -> unhealthy (miss)"), "report:\n{report}");
+    let prom = std::fs::read_to_string(dir.join("metrics.prom")).unwrap();
+    assert!(prom.contains("terapipe_stage_health"), "metrics:\n{prom}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// 2. Heartbeats never leak into collect loops; healthy runs stay healthy
+// ---------------------------------------------------------------------
+
+#[test]
+fn heartbeat_run_trains_cleanly_and_reports_all_healthy() {
+    let cfg = TrainConfig {
+        slicing: vec![16, 16],
+        steps: 2,
+        seed: 17,
+        heartbeat_ms: Some(20),
+        recv_timeout_ms: Some(30_000),
+        ..Default::default()
+    };
+    let mut t = Trainer::with_spec(spec(), cfg).unwrap();
+    let m = t.model.clone();
+    let corpus = synthetic_corpus(1 << 13, 7);
+    let mut batcher = Batcher::new(&corpus, m.batch, m.seq_len, 17);
+    let mut healths: Vec<Vec<u8>> = Vec::new();
+    let reports = t
+        .train(|| batcher.next_batch(), |r| healths.push(r.stage_health.clone()))
+        .expect("heartbeats must be consumed, not surfaced as 'unexpected message'");
+    assert_eq!(reports.len(), 2);
+    assert!(
+        healths.iter().all(|h| h == &vec![0u8; STAGES]),
+        "healthy run must report all-healthy: {healths:?}"
+    );
+    assert!(t.health_timeline().entries.is_empty(), "{:?}", t.health_timeline());
+    assert!(t.take_anomalies().is_empty());
+}
+
+// ---------------------------------------------------------------------
+// 3. Anomaly attribution properties (public detector API)
+// ---------------------------------------------------------------------
+
+#[test]
+fn stationary_streams_never_alarm() {
+    let mut det = AnomalyDetector::new();
+    let mut rng = Rng::new(11);
+    for step in 1..=60u64 {
+        for stage in 0..4usize {
+            for slice in 0..4u32 {
+                // stable per-stage level + small noise
+                let ms = 5.0 + 0.3 * stage as f64 + 0.2 * rng.f64();
+                det.observe_slice(stage, slice, 0, ms);
+            }
+        }
+        for link in 0..3usize {
+            det.observe_link(link, 0.5 + 0.05 * rng.f64());
+        }
+        let hits = det.end_step(step);
+        assert!(hits.is_empty(), "false alarm at step {step}: {hits:?}");
+    }
+}
+
+#[test]
+fn planted_compute_straggler_is_named_with_stage_and_factor() {
+    let mut det = AnomalyDetector::new();
+    let mut rng = Rng::new(7);
+    let mut caught = Vec::new();
+    for step in 1..=40u64 {
+        for stage in 0..4usize {
+            for slice in 0..4u32 {
+                let base = 4.0 + 0.1 * rng.f64();
+                let ms = if stage == 2 && step > 20 { 4.0 * base } else { base };
+                det.observe_slice(stage, slice, 0, ms);
+            }
+        }
+        caught.extend(det.end_step(step));
+    }
+    assert!(!caught.is_empty(), "a 4x straggler must be detected");
+    assert!(caught.iter().all(|d| d.step > 20), "no detections before the plant: {caught:?}");
+    for d in &caught {
+        match d.cause {
+            Cause::ComputeStraggler { stage, factor } => {
+                assert_eq!(stage, 2, "wrong stage: {d:?}");
+                assert!((3.0..5.5).contains(&factor), "factor should be ~4: {d:?}");
+            }
+            other => panic!("expected a compute straggler, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn planted_link_delay_is_named_comm_degradation() {
+    let mut det = AnomalyDetector::new();
+    let mut rng = Rng::new(13);
+    let mut caught = Vec::new();
+    for step in 1..=40u64 {
+        // healthy compute throughout: the only plant is on link 1
+        for stage in 0..3usize {
+            for slice in 0..4u32 {
+                det.observe_slice(stage, slice, 0, 4.0 + 0.1 * rng.f64());
+            }
+        }
+        for link in 0..3usize {
+            for _ in 0..4 {
+                let base = 0.5 + 0.05 * rng.f64();
+                let ms = if link == 1 && step > 20 { 10.0 } else { base };
+                det.observe_link(link, ms);
+            }
+        }
+        caught.extend(det.end_step(step));
+    }
+    assert!(!caught.is_empty(), "a 10 ms link delay must be detected");
+    for d in &caught {
+        match d.cause {
+            Cause::CommDegradation { link, factor } => {
+                assert_eq!(link, 1, "wrong link: {d:?}");
+                assert!(factor > 5.0, "factor should reflect ~20x delay: {d:?}");
+            }
+            other => panic!("expected comm degradation, got {other:?}"),
+        }
+    }
+}

@@ -76,7 +76,7 @@ fn run_losses<T: Transport>(transport: &T) -> Vec<f64> {
     };
     let mut t = Trainer::with_spec_transport(spec(), cfg, transport).unwrap();
     let m = t.model.clone();
-    batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().0).collect()
+    batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().loss).collect()
 }
 
 #[test]
@@ -91,7 +91,7 @@ fn inproc_and_zero_fault_virtual_losses_are_bit_identical() {
         };
         let mut t = Trainer::with_spec(spec(), cfg).unwrap();
         let m = t.model.clone();
-        batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().0).collect::<Vec<f64>>()
+        batches_for(&m, 3).iter().map(|b| t.step(b).unwrap().loss).collect::<Vec<f64>>()
     };
     let inproc = run_losses(&InProcTransport);
     let virt = run_losses(&VirtualTransport::new(NetConfig::default()));

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Merge every ``BENCH_*.json`` bench report into one trend snapshot.
+
+Each Rust bench (``cargo bench --bench exec`` etc.) writes a
+machine-readable ``BENCH_<name>.json`` at the workspace root: a flat
+object with a ``"bench"`` tag, scalar gate metrics, and (for some
+benches) nested row arrays. This script gathers the scalar metrics from
+all of them into a single table so a run's headline numbers live in one
+place, and optionally diffs against an earlier snapshot to show drift —
+the poor man's continuous-benchmarking dashboard.
+
+Usage::
+
+    python scripts/bench_trend.py                 # scan repo root, print table
+    python scripts/bench_trend.py --out BENCH_trend.json
+    python scripts/bench_trend.py --baseline old_trend.json   # show deltas
+    python scripts/bench_trend.py --dir path/to/reports
+
+Only the standard library is used. Nested arrays/objects inside a bench
+report (per-shape rows and the like) are skipped — the trend table is
+for headline scalars; the per-bench files keep the detail.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_reports(root):
+    """Return {bench_name: {metric: scalar}} for every BENCH_*.json."""
+    merged = {}
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping {path}: {e}", file=sys.stderr)
+            continue
+        if not isinstance(report, dict):
+            print(f"warning: skipping {path}: not an object", file=sys.stderr)
+            continue
+        name = report.get("bench")
+        if not isinstance(name, str):
+            # fall back to the filename stem: BENCH_<name>.json
+            name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        scalars = {
+            k: v
+            for k, v in report.items()
+            if k != "bench" and isinstance(v, (int, float)) and not isinstance(v, bool)
+        }
+        merged[name] = scalars
+    return merged
+
+
+def fmt_num(v):
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.6g}"
+
+
+def print_table(merged, baseline=None):
+    rows = []
+    for bench in sorted(merged):
+        for metric in sorted(merged[bench]):
+            cur = merged[bench][metric]
+            delta = ""
+            if baseline is not None:
+                old = baseline.get(bench, {}).get(metric)
+                if isinstance(old, (int, float)) and old:
+                    delta = f"{100.0 * (cur - old) / abs(old):+.1f}%"
+                elif old is not None:
+                    delta = "new-base" if old == 0 and cur else ""
+                else:
+                    delta = "new"
+            rows.append((bench, metric, fmt_num(cur), delta))
+    if not rows:
+        print("no BENCH_*.json reports found")
+        return
+    widths = [max(len(r[i]) for r in rows + [("bench", "metric", "value", "vs base")])
+              for i in range(4)]
+    header = ("bench", "metric", "value", "vs base" if baseline is not None else "")
+    line = "  ".join(h.ljust(w) for h, w in zip(header, widths)).rstrip()
+    print(line)
+    print("-" * len(line))
+    last_bench = None
+    for bench, metric, value, delta in rows:
+        shown = bench if bench != last_bench else ""
+        last_bench = bench
+        print("  ".join(c.ljust(w) for c, w in
+                        zip((shown, metric, value, delta), widths)).rstrip())
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=None,
+                    help="directory holding BENCH_*.json (default: repo root)")
+    ap.add_argument("--out", default=None,
+                    help="write the merged snapshot to this JSON file")
+    ap.add_argument("--baseline", default=None,
+                    help="earlier merged snapshot to diff against")
+    args = ap.parse_args()
+
+    root = args.dir or os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    merged = load_reports(root)
+
+    baseline = None
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+
+    print_table(merged, baseline)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(merged, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nwrote {args.out}")
+
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
